@@ -1,0 +1,19 @@
+//! Accelerator design-space exploration — the Fig. 10 experiment as a
+//! runnable example: sweep UltraRAM budget × replacement policy over the
+//! four paper datasets (scaled by --scale, default 0.25), reporting
+//! memorization latency and FPGA↔HBM traffic; then the Fig. 8(c)
+//! optimization ablation.
+
+use hdreason::bench::figures;
+
+fn main() -> hdreason::Result<()> {
+    let scale = std::env::args()
+        .skip_while(|a| a != "--scale")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.25);
+    println!("{}", figures::fig10(scale)?);
+    println!("{}", figures::fig8c(scale)?);
+    println!("accelerator_sweep OK");
+    Ok(())
+}

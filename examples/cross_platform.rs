@@ -1,0 +1,20 @@
+//! Cross-model / cross-platform comparison — Fig. 11 + the headline §5.4
+//! claims as a runnable example. FPGA rows come from the cycle simulator;
+//! GPU/CPU rows from the Table-6-calibrated roofline models; comparator
+//! accelerators (GraphACT / HP-GNN / LookHD) from their published-spec
+//! models (DESIGN.md §1).
+
+use hdreason::bench::figures;
+
+fn main() -> hdreason::Result<()> {
+    let scale = std::env::args()
+        .skip_while(|a| a != "--scale")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1.0);
+    println!("{}", figures::fig11(scale)?);
+    println!("{}", figures::table6(scale)?);
+    println!("{}", figures::headline(scale)?);
+    println!("cross_platform OK");
+    Ok(())
+}

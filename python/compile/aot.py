@@ -1,0 +1,114 @@
+"""AOT exporter: lower every HDReason artifact to HLO *text* + manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--presets tiny,small]
+
+Outputs, per preset <p>:
+    artifacts/forward_<p>.hlo.txt      full fwd: embeddings → (B,V) logits
+    artifacts/train_step_<p>.hlo.txt   fwd+bwd: → (loss, ∇e^v, ∇e^r)
+    artifacts/encode_<p>.hlo.txt       Eq. 5 standalone
+    artifacts/memorize_<p>.hlo.txt     Eq. 7 standalone
+    artifacts/score_<p>.hlo.txt        Eq. 10 standalone
+    artifacts/manifest.json            shapes/dtypes/arg-order per artifact
+
+Every artifact is lowered with return_tuple=True, so the rust side unwraps
+with to_tuple{1,3}(). Python never runs on the request path: `make
+artifacts` is the only invocation.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.presets import PRESETS, Preset, get
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(args_list):
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)} for a in args_list
+    ]
+
+
+def artifact_defs(p: Preset):
+    """(name, fn, ordered example args, output arity) per artifact."""
+    a = model.example_args(p)
+    fwd_args = [a[k] for k in
+                ("ev", "er", "hb", "src", "rel", "dst", "mask", "q_subj",
+                 "q_rel", "bias")]
+    ts_args = [a[k] for k in
+               ("ev", "er", "hb", "src", "rel", "dst", "mask", "q_subj",
+                "q_rel", "labels", "bias", "smoothing")]
+    enc_args = [a["ev"], a["hb"]]
+    mem_args = [a[k] for k in ("hv", "hr", "src", "rel", "dst", "mask")]
+    sc_args = [a[k] for k in ("mv", "hr", "q_subj", "q_rel", "bias")]
+    return [
+        ("forward", lambda *xs: (model.forward(*xs, p=p),), fwd_args, 1),
+        ("train_step", lambda *xs: model.train_step(*xs, p=p), ts_args, 3),
+        ("encode", lambda *xs: (model.encode_only(*xs, p=p),), enc_args, 1),
+        ("memorize", lambda *xs: (model.memorize_only(*xs, p=p),), mem_args, 1),
+        ("score", lambda *xs: (model.score_only(*xs, p=p),), sc_args, 1),
+    ]
+
+
+def export_preset(p: Preset, out_dir: str) -> list[dict]:
+    entries = []
+    for name, fn, args, arity in artifact_defs(p):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}_{p.name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "artifact": name,
+                "preset": p.name,
+                "file": fname,
+                "inputs": _spec(args),
+                "num_outputs": arity,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "config": p.to_dict(),
+            }
+        )
+        print(f"  {fname}: {len(text)} chars")
+    return entries
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts")
+    parser.add_argument(
+        "--presets", default=",".join(PRESETS), help="comma-separated preset names"
+    )
+    ns = parser.parse_args()
+    os.makedirs(ns.out, exist_ok=True)
+    manifest = {"format": "hlo-text", "jax": jax.__version__, "artifacts": []}
+    for pname in ns.presets.split(","):
+        p = get(pname.strip())
+        print(f"preset {p.name}: V={p.V} R={p.R} E={p.E} d={p.d} D={p.D} B={p.B}")
+        manifest["artifacts"].extend(export_preset(p, ns.out))
+    with open(os.path.join(ns.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest to {ns.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: HDC binding (paper Eq. 7).
+
+    bound[e] = H^v[src[e]] ∘ H^r[rel[e]]     (Hadamard product per edge)
+
+On the paper's accelerator this is the Memorization Computing IP's CU array
+(Fig. 5(c)): N_c vertices in flight, binding parallelised across computing
+units. On TPU the natural shape is an edge-tiled elementwise kernel over the
+already-gathered (E, D) operand matrices: the gathers (the Dispatcher IP's
+job on the FPGA) stay in XLA where they lower to efficient dynamic-gathers,
+and the bandwidth-bound multiply runs tile-by-tile in VMEM.
+
+Backward (custom VJP): d/da = g ∘ b and d/db = g ∘ a — the same kernel,
+re-invoked. This is the §4.2 observation that the memorization gradient
+(Eq. 13) is computable on the forward path: binding is its own adjoint up to
+operand swap.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bind_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] * b_ref[...]
+
+
+def _bind_impl(a: jax.Array, b: jax.Array, block_e: int, interpret: bool = True):
+    e, d = a.shape
+    assert a.shape == b.shape, (a.shape, b.shape)
+    block_e = min(block_e, e)
+    assert e % block_e == 0, (a.shape, block_e)
+    return pl.pallas_call(
+        _bind_kernel,
+        grid=(e // block_e,),
+        in_specs=[
+            pl.BlockSpec((block_e, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_e, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_e, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, d), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def bind(a: jax.Array, b: jax.Array, block_e: int = 256):
+    """Eq. 7: elementwise Hadamard bind of two (E, D) hypervector matrices."""
+    return _bind_impl(a, b, block_e)
+
+
+def _bind_fwd(a, b, block_e):
+    return _bind_impl(a, b, block_e), (a, b)
+
+
+def _bind_bwd(block_e, res, g):
+    a, b = res
+    return (
+        _bind_impl(g, b, block_e).astype(a.dtype),
+        _bind_impl(g, a, block_e).astype(b.dtype),
+    )
+
+
+bind.defvjp(_bind_fwd, _bind_bwd)

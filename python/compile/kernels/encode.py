@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: hyperdimensional encoding (paper Eqs. 5/6).
+
+    H = tanh(e @ H_B)
+
+Hardware adaptation (DESIGN.md §2): the paper implements this on an FPGA
+systolic array (Fig. 5) with one PE column per hyperspace lane. On TPU the
+same computation is an MXU matmul tile: we grid over (vertex tiles ×
+hyperspace tiles), keep the full contraction dimension d (d ≤ 128 in every
+paper configuration, Table 4) resident in VMEM, and fuse the tanh kernel
+function into the tile epilogue — the FPGA's "kernel function" stage.
+
+The backward pass is a custom VJP mirroring the paper's forward/backward
+co-optimization (§4.2): dH/de = (g · (1 - H²)) @ H_Bᵀ reuses the same tiled
+matmul kernel, and the tanh residual is the forward output itself (no
+recompute), exactly like the accelerator stashing gradients computed on the
+forward path in HBM.
+
+Pallas is lowered with interpret=True: CPU PJRT cannot execute Mosaic
+custom-calls, so interpret mode emits plain HLO that both pytest and the
+rust runtime execute. Real-TPU efficiency is estimated in DESIGN.md §6.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fit_block(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ ``want`` (shape-safe tiling for
+    ragged dimensions like |R| = 240)."""
+    want = min(want, dim)
+    while dim % want != 0:
+        want -= 1
+    return want
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, activation: str):
+    acc = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    if activation == "tanh":
+        acc = jnp.tanh(acc)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    activation: str = "none",
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tiled (M,K)@(K,N) matmul with optional fused tanh epilogue.
+
+    The contraction dimension K stays whole inside each tile (K = d or V in
+    all call sites; VMEM budget documented in DESIGN.md §6).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    block_m = _fit_block(m, block_m)
+    block_n = _fit_block(n, block_n)
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def encode(e: jax.Array, hb: jax.Array, block_v: int = 128, block_do: int = 128):
+    """Eq. 5/6: H = tanh(e @ H_B), Pallas-tiled.
+
+    e:  (V, d) original-space embeddings (trainable)
+    hb: (d, D) base hypervector matrix (fixed Gaussian, Table 2)
+    """
+    return matmul(e, hb, activation="tanh", block_m=block_v, block_n=block_do)
+
+
+def _encode_fwd(e, hb, block_v, block_do):
+    h = encode(e, hb, block_v, block_do)
+    return h, (e, hb, h)
+
+
+def _encode_bwd(block_v, block_do, res, g):
+    e, hb, h = res
+    # d tanh(z)/dz = 1 - tanh(z)^2; h IS tanh(z) — residual reuse, the
+    # paper's forward-path gradient trick.
+    gz = g * (1.0 - h * h)
+    de = matmul(gz, hb.T, block_m=block_v, block_n=min(block_do, hb.shape[0]))
+    # H_B is frozen in HDC training (§3.2), but return its true gradient so
+    # the kernel is a drop-in differentiable primitive for the oracle tests.
+    dhb = matmul(e.T, gz, block_m=min(block_v, e.shape[1]), block_n=block_do)
+    return de.astype(e.dtype), dhb.astype(hb.dtype)
+
+
+encode.defvjp(_encode_fwd, _encode_bwd)

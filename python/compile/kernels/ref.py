@@ -1,0 +1,87 @@
+"""Pure-jnp oracle implementations of every Pallas kernel and the dense
+matrix-form equations of the paper. pytest checks the kernels against these;
+nothing here is ever lowered into an artifact.
+
+Paper equation index:
+  Eq. 5/6  — encode:      H = tanh(e @ H_B)
+  Eq. 7    — bind:        H_j^v ∘ H_r^r (Hadamard)
+  Eq. 1/7  — memorize:    M_i = Σ_{(j,r)∈N(i)} H_j ∘ H_r     (edge-list form)
+  Eq. 8    — memorize:    M = Σ_r (A_r H^v) ∘ E^r            (dense oracle)
+  Eq. 10   — score:       P = σ(bias - ||M_q + H_r - M^v||_1)
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def encode(e: jax.Array, hb: jax.Array) -> jax.Array:
+    """Eq. 5/6: map original-space embeddings into hyperspace."""
+    return jnp.tanh(jnp.matmul(e, hb, preferred_element_type=jnp.float32))
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def bind(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Eq. 7 binding: elementwise Hadamard product."""
+    return a * b
+
+
+def pairwise_l1(q: jax.Array, m: jax.Array) -> jax.Array:
+    """L1 distance between every query object HDV and every memory HDV.
+
+    q: (B, D) object hypervectors (M_q^v + H_k^r, already added)
+    m: (V, D) vertex memory hypervectors
+    returns (B, V) distances.
+    """
+    return jnp.sum(jnp.abs(q[:, None, :] - m[None, :, :]), axis=-1)
+
+
+def memorize_edges(hv, hr, src, rel, dst, mask, num_vertices: int):
+    """Eq. 1/7 in scatter/segment-sum (edge-list) form — the formulation the
+    paper's accelerator actually implements (§4.2.1: "scatter and reduce
+    operations instead of SpMM")."""
+    bound = bind(hv[src], hr[rel]) * mask[:, None]
+    return jax.ops.segment_sum(bound, dst, num_segments=num_vertices)
+
+
+def memorize_dense(hv, hr, adj):
+    """Eq. 8 dense oracle: M = Σ_r (A_r @ H^v) ∘ E^r.
+
+    adj: (R, V, V) 3-D relation adjacency (A_r[i, j] = 1 iff (v_j, r, v_i)).
+    Only usable for tiny graphs; exists to prove the edge-list form equals
+    the paper's matrix form.
+    """
+    R = adj.shape[0]
+
+    def body(r, acc):
+        er = jnp.broadcast_to(hr[r][None, :], hv.shape)  # Eq. 9
+        return acc + matmul(adj[r], hv) * er
+
+    return jax.lax.fori_loop(0, R, body, jnp.zeros_like(hv))
+
+
+def transe_logits(mv, hr, q_subj, q_rel, bias):
+    """Eq. 10 (pre-sigmoid): logits[b, v] = bias - ||M_q[b] + H_r[b] - M_v||_1."""
+    q = mv[q_subj] + hr[q_rel]
+    return bias - pairwise_l1(q, mv)
+
+
+def forward(ev, er, hb, src, rel, dst, mask, q_subj, q_rel, bias):
+    """Full HDReason forward pass, pure-jnp: Eqs. 5-10."""
+    hv = encode(ev, hb)
+    hr = encode(er, hb)
+    mv = memorize_edges(hv, hr, src, rel, dst, mask, ev.shape[0])
+    return transe_logits(mv, hr, q_subj, q_rel, bias)
+
+
+def bce_loss(logits, labels, smoothing: float = 0.0):
+    """Numerically stable binary cross-entropy with logits + label smoothing
+    (1-vs-all KGC training, as in ConvE/CompGCN and the paper's Eq. 11)."""
+    if smoothing > 0.0:
+        labels = labels * (1.0 - smoothing) + smoothing / labels.shape[-1]
+    per = jnp.maximum(logits, 0.0) - logits * labels + jnp.log1p(
+        jnp.exp(-jnp.abs(logits))
+    )
+    return jnp.mean(per)

@@ -1,0 +1,125 @@
+"""L2: the HDReason model compute graph (paper §3), written in JAX on top of
+the Pallas kernels in ``kernels/``. This module is build-time only: aot.py
+lowers the functions below to HLO text once, and the rust coordinator
+executes the compiled artifacts via PJRT forever after.
+
+Dataflow (Fig. 2(b)):
+
+    e^v, e^r  ──encode (Eq. 5/6, kernels.encode)──▶  H^v, H^r
+    H^v, H^r, edges ──bind+aggregate (Eq. 7, kernels.bind + segment_sum)──▶ M^v
+    M^v, queries ──TransE score (Eq. 10, kernels.pairwise_l1)──▶ logits
+    logits, labels ──BCE──▶ loss ──jax.grad (Eq. 11/12)──▶ ∇e^v, ∇e^r
+
+The base hypervector matrix H^B is an *input*, not a constant: it is frozen
+during training (§3.2, "the base hypervector matrix remains fixed") so the
+train step only returns gradients for e^v and e^r, but rust owns the H^B
+buffer and feeds the same one every step.
+
+Static shapes come from presets.py; every function here is shape-polymorphic
+in Python but lowered per-preset by aot.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import bind as bind_k
+from compile.kernels import encode as encode_k
+from compile.kernels import score as score_k
+from compile.presets import Preset
+
+
+def memorize(hv, hr, src, rel, dst, mask, num_vertices: int, block_e: int):
+    """Eq. 1/7: M_i = Σ_{(j,r)∈N(i)} H_j ∘ H_r, edge-list (scatter/reduce)
+    formulation (§4.2.1). Gathers/scatter stay in XLA; the bind runs in the
+    Pallas CU kernel."""
+    bound = bind_k.bind(hv[src], hr[rel], block_e)
+    bound = bound * mask[:, None]
+    return jax.ops.segment_sum(bound, dst, num_segments=num_vertices)
+
+
+def forward(ev, er, hb, src, rel, dst, mask, q_subj, q_rel, bias, *, p: Preset):
+    """Full forward pass: (B,) queries → (B, |V|) link-prediction logits.
+
+    The sigmoid of Eq. 10 is folded into the BCE loss during training and
+    applied host-side (rust) at inference, exactly as the paper's Score
+    Function IP defers the sigmoid to the CPU (Fig. 6 step 9).
+    """
+    hv = encode_k.encode(ev, hb, p.block_v, p.block_do)
+    hr = encode_k.encode(er, hb, min(p.block_v, er.shape[0]), p.block_do)
+    mv = memorize(hv, hr, src, rel, dst, mask, ev.shape[0], p.block_e)
+    q = mv[q_subj] + hr[q_rel]  # object HDV (Fig. 6(b) step 1)
+    dist = score_k.pairwise_l1(q, mv, p.block_b, p.block_v)
+    return bias - dist
+
+
+def loss_fn(ev, er, hb, src, rel, dst, mask, q_subj, q_rel, labels, bias,
+            smoothing, *, p: Preset):
+    logits = forward(ev, er, hb, src, rel, dst, mask, q_subj, q_rel, bias, p=p)
+    # label smoothing applied unconditionally so `smoothing` can stay a
+    # traced runtime scalar (identity at smoothing = 0)
+    labels = labels * (1.0 - smoothing) + smoothing / labels.shape[-1]
+    per = (
+        jnp.maximum(logits, 0.0)
+        - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    return jnp.mean(per)
+
+
+def train_step(ev, er, hb, src, rel, dst, mask, q_subj, q_rel, labels, bias,
+               smoothing, *, p: Preset):
+    """One training step: loss + gradients w.r.t. the original-space
+    embeddings only (Eqs. 11/12 — H^B stays fixed). The optimizer update
+    runs on the rust side (the paper's host-CPU embedding update, Fig. 7
+    step 11)."""
+    loss, (g_ev, g_er) = jax.value_and_grad(
+        lambda a, b: loss_fn(a, b, hb, src, rel, dst, mask, q_subj, q_rel,
+                             labels, bias, smoothing, p=p),
+        argnums=(0, 1),
+    )(ev, er)
+    return loss, g_ev, g_er
+
+
+def encode_only(ev, hb, *, p: Preset):
+    """Standalone Eq. 5 artifact — used by the coordinator when the
+    density-aware scheduler encodes *only* unencoded vertices (§4.2.1
+    computation-reuse path)."""
+    return encode_k.encode(ev, hb, min(p.block_v, ev.shape[0]), p.block_do)
+
+
+def memorize_only(hv, hr, src, rel, dst, mask, *, p: Preset):
+    """Standalone Eq. 7/8 artifact: aggregation given already-encoded
+    hypervectors (the Dispatcher→Memorization IP path, Fig. 5)."""
+    return memorize(hv, hr, src, rel, dst, mask, hv.shape[0], p.block_e)
+
+
+def score_only(mv, hr, q_subj, q_rel, bias, *, p: Preset):
+    """Standalone Eq. 10 artifact: the Score Function IP (Fig. 6)."""
+    q = mv[q_subj] + hr[q_rel]
+    return bias - score_k.pairwise_l1(q, mv, p.block_b, p.block_v)
+
+
+def example_args(p: Preset):
+    """ShapeDtypeStructs for lowering each artifact of preset ``p``."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    s = jax.ShapeDtypeStruct
+    return {
+        "ev": s((p.V, p.d), f32),
+        "er": s((p.R, p.d), f32),
+        "hb": s((p.d, p.D), f32),
+        "hv": s((p.V, p.D), f32),
+        "hr": s((p.R, p.D), f32),
+        "mv": s((p.V, p.D), f32),
+        "src": s((p.E,), i32),
+        "rel": s((p.E,), i32),
+        "dst": s((p.E,), i32),
+        "mask": s((p.E,), f32),
+        "q_subj": s((p.B,), i32),
+        "q_rel": s((p.B,), i32),
+        "labels": s((p.B, p.V), f32),
+        "bias": s((), f32),
+        "smoothing": s((), f32),
+    }

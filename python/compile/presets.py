@@ -1,0 +1,64 @@
+"""Static-shape configuration presets shared by the AOT exporter and tests.
+
+XLA artifacts have fixed shapes; each preset pins every dimension of the
+HDReason model (Table 2 of the paper):
+
+  V  — number of KG vertices (|V|)
+  R  — number of relations (|R|)
+  E  — padded edge count (triples are padded to E with mask=0)
+  d  — original embedding dimension
+  D  — hyperspace dimension
+  B  — training/query batch size
+
+The rust side reads ``artifacts/manifest.json`` (written by aot.py) to know
+which artifact matches which preset. Block sizes for the Pallas kernels are
+chosen so every dimension divides evenly (asserted in ``validate``).
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class Preset:
+    name: str
+    V: int  # vertices
+    R: int  # relations
+    E: int  # padded edges
+    d: int  # original embedding dim
+    D: int  # hyperspace dim
+    B: int  # batch size
+
+    # Pallas block shapes (see kernels/*.py)
+    block_v: int = 128  # vertex tile
+    block_do: int = 128  # hyperspace (output) tile
+    block_e: int = 256  # edge tile
+    block_b: int = 16  # batch tile for the score kernel
+
+    def validate(self) -> None:
+        assert self.V % self.block_v == 0, (self.name, "V % block_v")
+        assert self.D % self.block_do == 0, (self.name, "D % block_do")
+        assert self.E % self.block_e == 0, (self.name, "E % block_e")
+        assert self.B % self.block_b == 0, (self.name, "B % block_b")
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+# `tiny` is the CI/pytest workhorse; `small` is the quickstart training
+# preset; `fb15k_mini` approaches the paper's FB15K-237 shape scaled to fit
+# CPU-PJRT runs (d=96, D=256 match Table 5's accelerator configuration).
+PRESETS: dict[str, Preset] = {
+    p.name: p
+    for p in [
+        Preset(name="tiny", V=256, R=8, E=1024, d=32, D=128, B=32,
+               block_v=64, block_do=64, block_e=128, block_b=8),
+        Preset(name="small", V=2048, R=32, E=8192, d=64, D=256, B=64),
+        Preset(name="fb15k_mini", V=4096, R=240, E=16384, d=96, D=256, B=128),
+    ]
+}
+
+
+def get(name: str) -> Preset:
+    p = PRESETS[name]
+    p.validate()
+    return p

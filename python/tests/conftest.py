@@ -1,0 +1,15 @@
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _jax_x64_off():
+    # artifacts are f32; keep tests on the same numerics
+    jax.config.update("jax_enable_x64", False)
+    yield
+
+
+def rand(key, shape, scale=1.0):
+    import jax.random as jr
+
+    return jr.normal(jr.PRNGKey(key), shape) * scale

@@ -1,0 +1,145 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel (encode / bind /
+pairwise_l1) against the pure-jnp reference, forward AND custom-VJP
+backward, across hypothesis-driven shape sweeps.
+
+This is the CORE correctness signal for the L1 layer: the same kernels are
+what aot.py lowers into the artifacts the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bind as bind_k
+from compile.kernels import encode as encode_k
+from compile.kernels import ref
+from compile.kernels import score as score_k
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(seed, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape) * scale
+
+
+# ---------------------------------------------------------------- encode --
+@settings(**SETTINGS)
+@given(
+    v=st.sampled_from([16, 48, 64, 96, 128]),
+    d=st.sampled_from([8, 32, 96]),
+    dd=st.sampled_from([64, 128, 256]),
+    bv=st.sampled_from([16, 64, 128]),
+    bd=st.sampled_from([64, 128]),
+)
+def test_encode_matches_ref(v, d, dd, bv, bd):
+    e = _rand(0, (v, d))
+    hb = _rand(1, (d, dd))
+    got = encode_k.encode(e, hb, bv, bd)
+    np.testing.assert_allclose(got, ref.encode(e, hb), rtol=1e-5, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(v=st.sampled_from([32, 64]), d=st.sampled_from([16, 32]),
+       dd=st.sampled_from([64, 128]))
+def test_encode_grad_matches_ref(v, d, dd):
+    e = _rand(2, (v, d))
+    hb = _rand(3, (d, dd))
+    w = _rand(4, (v, dd))  # random cotangent
+    ge, ghb = jax.grad(
+        lambda a, b: jnp.sum(encode_k.encode(a, b, 32, 64) * w), argnums=(0, 1)
+    )(e, hb)
+    ger, ghbr = jax.grad(
+        lambda a, b: jnp.sum(ref.encode(a, b) * w), argnums=(0, 1)
+    )(e, hb)
+    np.testing.assert_allclose(ge, ger, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(ghb, ghbr, rtol=1e-4, atol=1e-4)
+
+
+def test_encode_ragged_relation_dim():
+    # |R| = 240 (fb15k_mini) does not divide the default 128 block; the
+    # _fit_block divisor search must handle it
+    e = _rand(5, (240, 96))
+    hb = _rand(6, (96, 256))
+    got = encode_k.encode(e, hb, 128, 128)
+    np.testing.assert_allclose(got, ref.encode(e, hb), rtol=1e-5, atol=1e-5)
+
+
+def test_encode_output_range():
+    # tanh kernel ⇒ hypervectors live in (-1, 1): the HDC holographic range
+    h = encode_k.encode(_rand(7, (64, 32), 10.0), _rand(8, (32, 128)), 32, 64)
+    assert float(jnp.max(jnp.abs(h))) <= 1.0
+
+
+# ------------------------------------------------------------------ bind --
+@settings(**SETTINGS)
+@given(e=st.sampled_from([64, 128, 256, 512]), d=st.sampled_from([32, 128, 256]),
+       be=st.sampled_from([64, 256]))
+def test_bind_matches_ref(e, d, be):
+    a, b = _rand(9, (e, d)), _rand(10, (e, d))
+    np.testing.assert_allclose(bind_k.bind(a, b, be), ref.bind(a, b), rtol=1e-6)
+
+
+def test_bind_grad_is_operand_swap():
+    a, b = _rand(11, (128, 64)), _rand(12, (128, 64))
+    w = _rand(13, (128, 64))
+    ga, gb = jax.grad(
+        lambda x, y: jnp.sum(bind_k.bind(x, y, 64) * w), argnums=(0, 1)
+    )(a, b)
+    np.testing.assert_allclose(ga, w * b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(gb, w * a, rtol=1e-5, atol=1e-6)
+
+
+def test_bind_self_inverse():
+    # binding with ±1 hypervectors is self-inverse: a ∘ s ∘ s = a — the HDC
+    # property that lets memorization be *queried* (paper §2.1)
+    a = _rand(14, (64, 128))
+    s = jnp.sign(_rand(15, (64, 128)))
+    np.testing.assert_allclose(
+        bind_k.bind(bind_k.bind(a, s, 64), s, 64), a, rtol=1e-5, atol=1e-6
+    )
+
+
+# ----------------------------------------------------------------- score --
+@settings(**SETTINGS)
+@given(b=st.sampled_from([8, 16, 32]), v=st.sampled_from([32, 96, 128]),
+       d=st.sampled_from([32, 128]), bb=st.sampled_from([8, 16]),
+       bv=st.sampled_from([32, 128]))
+def test_pairwise_l1_matches_ref(b, v, d, bb, bv):
+    q, m = _rand(16, (b, d)), _rand(17, (v, d))
+    got = score_k.pairwise_l1(q, m, bb, bv)
+    np.testing.assert_allclose(got, ref.pairwise_l1(q, m), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(b=st.sampled_from([8, 16]), v=st.sampled_from([32, 64]),
+       d=st.sampled_from([32, 64]))
+def test_pairwise_l1_grads_match_ref(b, v, d):
+    q, m = _rand(18, (b, d)), _rand(19, (v, d))
+    w = _rand(20, (b, v))
+    gq, gm = jax.grad(
+        lambda a, c: jnp.sum(score_k.pairwise_l1(a, c, 8, 32) * w), argnums=(0, 1)
+    )(q, m)
+    gqr, gmr = jax.grad(
+        lambda a, c: jnp.sum(ref.pairwise_l1(a, c) * w), argnums=(0, 1)
+    )(q, m)
+    np.testing.assert_allclose(gq, gqr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gm, gmr, rtol=1e-4, atol=1e-4)
+
+
+def test_pairwise_l1_zero_distance_diagonal():
+    m = _rand(21, (32, 64))
+    d = score_k.pairwise_l1(m[:8], m, 8, 32)
+    # row b equals vertex b ⇒ distance 0 on the diagonal, > 0 elsewhere
+    np.testing.assert_allclose(jnp.diagonal(d[:, :8]), jnp.zeros(8), atol=1e-6)
+    assert float(jnp.min(d + jnp.eye(8, 32) * 1e9)) > 0.0
+
+
+def test_pairwise_l1_triangle_inequality():
+    # L1 metric property: d(q, m) ≤ d(q, x) + d(x, m) for the same x
+    q, m, x = _rand(22, (4, 32)), _rand(23, (16, 32)), _rand(24, (1, 32))
+    dqm = score_k.pairwise_l1(q, m, 4, 16)
+    dqx = score_k.pairwise_l1(q, x, 4, 1)
+    dxm = score_k.pairwise_l1(jnp.broadcast_to(x, (4, 32)), m, 4, 16)
+    assert bool(jnp.all(dqm <= dqx + dxm + 1e-4))

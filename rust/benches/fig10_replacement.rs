@@ -1,0 +1,20 @@
+//! Bench: Fig. 10 replacement-policy × UltraRAM sweep + raw cache
+//! throughput. Run: cargo bench --bench fig10_replacement
+use hdreason::bench::{bench, figures};
+use hdreason::cache::HvCache;
+use hdreason::config::ReplacementPolicy;
+
+fn main() {
+    println!("{}", figures::fig10(0.1).unwrap());
+    // raw cache throughput per policy (accesses/s)
+    let stream: Vec<u32> = (0..200_000u32).map(|i| (i * 2654435761) % 20_000).collect();
+    for policy in ReplacementPolicy::ALL {
+        let r = bench(&format!("cache/{policy}/200k-accesses"), 1, 7, || {
+            let mut c = HvCache::new(4096, 1024, policy, 0);
+            for &v in &stream {
+                std::hint::black_box(c.access(v));
+            }
+        });
+        println!("{}  ({:.1} M accesses/s)", r.row(), 0.2 / r.median_s);
+    }
+}

@@ -1,0 +1,8 @@
+//! Bench: Fig. 11 cross-model/cross-platform comparison.
+//! Run: cargo bench --bench fig11_cross
+use hdreason::bench::figures;
+
+fn main() {
+    println!("{}", figures::fig11(0.25).unwrap());
+    println!("{}", figures::headline(0.25).unwrap());
+}

@@ -1,0 +1,24 @@
+//! Bench: Fig. 8(c) hardware-optimization ablation. Regenerates the
+//! figure's bars (latency per optimization variant) and times the
+//! simulator itself. Run: cargo bench --bench fig8c_ablation
+use hdreason::bench::{bench, figures};
+use hdreason::config::{accel_preset, Optimizations};
+use hdreason::sim::{simulate_batch, SimOptions, Workload};
+
+fn main() {
+    let scale = 0.25;
+    println!("{}", figures::fig8c(scale).unwrap());
+    // timing: how fast is one ablation cell?
+    let w = Workload::paper("FB15K-237", scale, 0).unwrap();
+    for (name, opts) in [
+        ("sim/all-on", Optimizations::ALL_ON),
+        ("sim/all-off", Optimizations::ALL_OFF),
+    ] {
+        let mut cfg = accel_preset("u50").unwrap();
+        cfg.opts = opts;
+        let r = bench(name, 1, 5, || {
+            std::hint::black_box(simulate_batch(&cfg, &w, SimOptions::default()));
+        });
+        println!("{}", r.row());
+    }
+}

@@ -1,0 +1,7 @@
+//! Bench: Fig. 8(d) execution-time breakdown per dataset.
+//! Run: cargo bench --bench fig8d_breakdown
+use hdreason::bench::figures;
+
+fn main() {
+    println!("{}", figures::fig8d(0.25).unwrap());
+}

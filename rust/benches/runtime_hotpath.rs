@@ -1,0 +1,55 @@
+//! Bench: the L3 hot path — PJRT train_step / forward latency, scheduler
+//! and literal-marshalling throughput. This is the perf-pass target for
+//! the coordinator layer (EXPERIMENTS.md §Perf).
+//! Run: make artifacts && cargo bench --bench runtime_hotpath
+use hdreason::bench::bench;
+use hdreason::config::{model_preset, RunConfig};
+use hdreason::kg::{generator, QueryBatcher};
+use hdreason::model::ModelState;
+use hdreason::runtime::{EdgeArrays, HdrRuntime, Manifest};
+use hdreason::scheduler::Scheduler;
+
+fn main() {
+    let manifest = match Manifest::load(&Manifest::default_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping runtime benches: {e}");
+            return;
+        }
+    };
+    let cfg = model_preset("tiny").unwrap();
+    let rt = HdrRuntime::load(&manifest, &cfg).unwrap();
+    let kg = generator::learnable_for_preset(&cfg, 0.8, 0);
+    let state = ModelState::init(&cfg, 0);
+    let edges = EdgeArrays::from_kg(&kg, &cfg);
+    let mut batcher = QueryBatcher::new(&kg, cfg.batch, 0);
+    let qb = batcher.next_batch();
+
+    let r = bench("pjrt/forward(tiny)", 3, 20, || {
+        std::hint::black_box(
+            rt.forward(&state, &edges, &qb.subj, &qb.rel, 6.0).unwrap(),
+        );
+    });
+    println!("{}", r.row());
+
+    let r = bench("pjrt/train_step(tiny)", 3, 20, || {
+        std::hint::black_box(
+            rt.train_step(&state, &edges, &qb.subj, &qb.rel, &qb.labels, 6.0, 0.1).unwrap(),
+        );
+    });
+    println!("{}", r.row());
+
+    // host-side scheduler throughput (edges/s) at paper scale
+    let big = hdreason::sim::Workload::paper("FB15K-237", 0.5, 0).unwrap();
+    let r = bench("scheduler/epoch(FB15K-237@0.5)", 1, 10, || {
+        let mut s = Scheduler::new(16, 1024, true);
+        std::hint::black_box(s.schedule_epoch(&big.csr, true));
+    });
+    println!("{}  ({:.1} M edges/s)", r.row(), big.num_edges as f64 / 1e6 / r.median_s);
+
+    // query batching throughput
+    let r = bench("batcher/next_batch(tiny)", 5, 50, || {
+        std::hint::black_box(batcher.next_batch());
+    });
+    println!("{}", r.row());
+}

@@ -1,0 +1,17 @@
+//! Bench: Table 6 single-batch latency/energy/memory + simulator speed.
+//! Run: cargo bench --bench table6_latency
+use hdreason::bench::{bench, figures};
+use hdreason::config::accel_preset;
+use hdreason::sim::{AcceleratorSim, SimOptions, Workload};
+
+fn main() {
+    println!("{}", figures::table6(0.25).unwrap());
+    // simulator throughput: batches/s over a persistent sim (warm state)
+    let w = Workload::paper("WN18RR", 0.25, 0).unwrap();
+    let cfg = accel_preset("u50").unwrap();
+    let mut sim = AcceleratorSim::new(&cfg, &w, SimOptions::default());
+    let r = bench("sim/warm-batch", 2, 10, || {
+        std::hint::black_box(sim.run_batch(&w));
+    });
+    println!("{}  ({:.1} simulated batches/s)", r.row(), 1.0 / r.median_s);
+}

@@ -1,0 +1,27 @@
+//! Baseline KGC models the paper compares against (Figs. 8(a), 8(b), 9(b),
+//! 11).
+//!
+//! * [`transe`] / [`distmult`] — embedding baselines (Bordes et al. /
+//!   Yang et al.), trained with margin ranking + negative sampling.
+//! * [`rgcn`] — a one-layer relational GCN with a DistMult decoder: the
+//!   stand-in for the R-GCN/SACN/CompGCN family. Used both for the
+//!   accuracy ordering in Fig. 8(a) and the quantization-fragility
+//!   comparison of Fig. 9(b).
+//! * [`rl_walker`] — a REINFORCE path walker (MINERVA-lite), the
+//!   single-direction RL baseline family of Fig. 8(b).
+//!
+//! All baselines are pure rust and small-scale by design: the paper's
+//! claim we reproduce is the *ordering* (HDR ≈ GCN > TransE; HDR robust to
+//! quantization, GCN not), not absolute benchmark numbers.
+
+pub mod distmult;
+pub mod rgcn;
+pub mod rl_walker;
+pub mod trainer;
+pub mod transe;
+
+pub use distmult::DistMult;
+pub use rgcn::RGcn;
+pub use rl_walker::RlWalker;
+pub use trainer::{train_margin_model, MarginModel, TrainReport};
+pub use transe::TransE;

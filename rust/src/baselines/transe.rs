@@ -1,0 +1,136 @@
+//! TransE (Bordes et al., NeurIPS'13) — the translation-embedding baseline
+//! of Fig. 8(a) and Table 4, and the score function HDReason itself adopts
+//! (Eq. 10). score(s, r, o) = −||e_s + e_r − e_o||_1.
+
+use super::trainer::MarginModel;
+use crate::kg::Triple;
+use crate::util::Rng;
+
+pub struct TransE {
+    pub dim: usize,
+    pub ent: Vec<f32>,
+    pub rel: Vec<f32>,
+}
+
+impl TransE {
+    pub fn new(num_ent: usize, num_rel: usize, dim: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let bound = (6.0 / (dim as f64).sqrt()) as f32;
+        let mut init = |n: usize| -> Vec<f32> {
+            (0..n * dim).map(|_| rng.range_f64(-bound as f64, bound as f64) as f32).collect()
+        };
+        let mut out = Self { dim, ent: init(num_ent), rel: init(num_rel) };
+        out.normalize_entities();
+        out
+    }
+
+    fn e(&self, v: usize) -> &[f32] {
+        &self.ent[v * self.dim..(v + 1) * self.dim]
+    }
+
+    fn r(&self, r: usize) -> &[f32] {
+        &self.rel[r * self.dim..(r + 1) * self.dim]
+    }
+
+    /// Classic TransE constraint: entity vectors on the unit L2 ball.
+    pub fn normalize_entities(&mut self) {
+        let d = self.dim;
+        for v in self.ent.chunks_mut(d) {
+            let n = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if n > 1.0 {
+                v.iter_mut().for_each(|x| *x /= n);
+            }
+        }
+    }
+
+    fn distance(&self, t: &Triple) -> f32 {
+        let (s, r, o) = (self.e(t.src), self.r(t.rel), self.e(t.dst));
+        s.iter().zip(r).zip(o).map(|((a, b), c)| (a + b - c).abs()).sum()
+    }
+}
+
+impl MarginModel for TransE {
+    fn score(&self, t: &Triple) -> f32 {
+        -self.distance(t)
+    }
+
+    fn score_all_objects(&self, s: usize, r: usize) -> Vec<f32> {
+        let d = self.dim;
+        let q: Vec<f32> = self.e(s).iter().zip(self.r(r)).map(|(a, b)| a + b).collect();
+        (0..self.ent.len() / d)
+            .map(|o| {
+                -q.iter()
+                    .zip(&self.ent[o * d..(o + 1) * d])
+                    .map(|(a, c)| (a - c).abs())
+                    .sum::<f32>()
+            })
+            .collect()
+    }
+
+    fn margin_step(&mut self, pos: &Triple, neg: &Triple, lr: f32, margin: f32) {
+        // hinge: only update on violation
+        if margin - self.distance(neg) + self.distance(pos) <= 0.0 {
+            return;
+        }
+        let d = self.dim;
+        // ∂|x|/∂x = sign(x); descend pos distance, ascend neg distance
+        for (t, dir) in [(pos, 1.0f32), (neg, -1.0f32)] {
+            for i in 0..d {
+                let g = (self.ent[t.src * d + i] + self.rel[t.rel * d + i]
+                    - self.ent[t.dst * d + i])
+                    .signum()
+                    * dir
+                    * lr;
+                self.ent[t.src * d + i] -= g;
+                self.rel[t.rel * d + i] -= g;
+                self.ent[t.dst * d + i] += g;
+            }
+        }
+        self.normalize_entities();
+    }
+
+    fn name(&self) -> &'static str {
+        "TransE"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn margin_step_reduces_pos_distance() {
+        let mut m = TransE::new(4, 2, 8, 0);
+        let pos = Triple::new(0, 0, 1);
+        let neg = Triple::new(0, 0, 2);
+        let before = m.distance(&pos);
+        for _ in 0..50 {
+            m.margin_step(&pos, &neg, 0.05, 2.0);
+        }
+        assert!(m.distance(&pos) < before, "pos distance did not shrink");
+        assert!(m.score(&pos) > m.score(&neg));
+    }
+
+    #[test]
+    fn entities_stay_bounded() {
+        let mut m = TransE::new(6, 2, 8, 1);
+        for step in 0..200 {
+            let pos = Triple::new(step % 5, 0, (step + 1) % 5);
+            let neg = Triple::new(step % 5, 0, (step + 2) % 5);
+            m.margin_step(&pos, &neg, 0.1, 1.0);
+        }
+        for v in m.ent.chunks(8) {
+            let n = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!(n <= 1.0 + 1e-5, "norm {n}");
+        }
+    }
+
+    #[test]
+    fn score_all_matches_pointwise() {
+        let m = TransE::new(5, 2, 8, 2);
+        let all = m.score_all_objects(1, 0);
+        for o in 0..5 {
+            assert!((all[o] - m.score(&Triple::new(1, 0, o))).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Minimal benchmarking harness (criterion replacement): fixed warmup,
+//! N timed iterations, median + MAD + min reporting.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub min_s: f64,
+    pub mean_s: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} median {:>10.3} ms  ±{:>7.3}  min {:>10.3} ms  ({} iters)",
+            self.name,
+            self.median_s * 1e3,
+            self.mad_s * 1e3,
+            self.min_s * 1e3,
+            self.iters
+        )
+    }
+
+    /// Throughput helper given items processed per iteration.
+    pub fn per_second(&self, items: f64) -> f64 {
+        items / self.median_s
+    }
+}
+
+/// Time `f` with `warmup` + `iters` runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(f64::total_cmp);
+    let median = samples[samples.len() / 2];
+    let mut devs: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+    devs.sort_by(f64::total_cmp);
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        median_s: median,
+        mad_s: devs[devs.len() / 2],
+        min_s: samples[0],
+        mean_s: samples.iter().sum::<f64>() / samples.len() as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let r = bench("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.median_s > 0.0);
+        assert!(r.min_s <= r.median_s);
+        assert_eq!(r.iters, 5);
+        assert!(r.row().contains("spin"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Benchmark harness + paper figure/table regeneration.
+//!
+//! The criterion crate is unavailable offline, so [`harness`] provides a
+//! small warmup/iteration timer with median/MAD statistics; `cargo bench`
+//! targets in `rust/benches/` and the `hdreason figures` CLI both call
+//! into [`figures`], which regenerates every table and figure of the
+//! paper's evaluation section (the DESIGN.md §5 experiment index).
+
+pub mod figures;
+pub mod harness;
+
+pub use harness::{bench, BenchResult};

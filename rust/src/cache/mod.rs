@@ -1,0 +1,202 @@
+//! On-chip hypervector store model — the Dispatcher IP's CAM-backed
+//! UltraRAM cache (paper §4.2.2, Fig. 5 steps 4-5).
+//!
+//! The FPGA keeps all relation hypervectors plus as many vertex
+//! hypervectors as fit in UltraRAM; misses fetch from HBM and evict a
+//! victim chosen by the replacement policy (LRU / LFU / Random — §5.5,
+//! Fig. 10). This model is exact in behaviour (same hits, same victims, same
+//! HBM traffic) and is consumed by the cycle simulator.
+
+mod policy;
+
+pub use policy::{LfuState, LruState, PolicyState, RandomState};
+
+use crate::config::ReplacementPolicy;
+use crate::util::FxHashMap;
+
+/// Byte-accurate access statistics for one simulation run.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Bytes moved HBM → UltraRAM on misses (Fig. 10's "FPGA-HBM data
+    /// communication").
+    pub bytes_from_hbm: u64,
+}
+
+impl CacheStats {
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses() as f64
+        }
+    }
+}
+
+/// Fixed-capacity hypervector cache keyed by vertex id.
+///
+/// `line_bytes` is the size of one cached hypervector (D × 4 for f32); the
+/// capacity is expressed in *lines* (hypervectors), mirroring the paper's
+/// "UltraRAMs used to store vertex hypervectors" axis in Fig. 10.
+pub struct HvCache {
+    capacity: usize,
+    line_bytes: usize,
+    /// CAM: vertex id → slot (the HashTable of §4.2.2).
+    cam: FxHashMap<u32, u32>,
+    policy: Box<dyn PolicyState>,
+    pub stats: CacheStats,
+}
+
+impl HvCache {
+    pub fn new(capacity: usize, line_bytes: usize, policy: ReplacementPolicy, seed: u64) -> Self {
+        let policy: Box<dyn PolicyState> = match policy {
+            ReplacementPolicy::Lru => Box::new(LruState::new()),
+            ReplacementPolicy::Lfu => Box::new(LfuState::new()),
+            ReplacementPolicy::Random => Box::new(RandomState::new(seed)),
+        };
+        Self {
+            capacity: capacity.max(1),
+            line_bytes,
+            cam: FxHashMap::default(),
+            policy,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.cam.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cam.is_empty()
+    }
+
+    pub fn contains(&self, v: u32) -> bool {
+        self.cam.contains_key(&v)
+    }
+
+    /// Access vertex `v`'s hypervector. Returns `true` on hit. On miss the
+    /// line is fetched from HBM (traffic accounted) and, if full, a victim
+    /// is evicted per policy.
+    pub fn access(&mut self, v: u32) -> bool {
+        // single CAM probe: hit path touches the map exactly once
+        if let std::collections::hash_map::Entry::Occupied(_) = self.cam.entry(v) {
+            self.stats.hits += 1;
+            self.policy.on_hit(v);
+            return true;
+        }
+        self.stats.misses += 1;
+        self.stats.bytes_from_hbm += self.line_bytes as u64;
+        if self.cam.len() >= self.capacity {
+            let victim = self.policy.evict();
+            self.cam.remove(&victim);
+            self.stats.evictions += 1;
+        }
+        self.cam.insert(v, 0);
+        self.policy.on_insert(v);
+        false
+    }
+
+    /// Warm the cache without counting stats (initial bulk load of encoded
+    /// hypervectors, Fig. 5 step 3).
+    pub fn warm(&mut self, vs: impl Iterator<Item = u32>) {
+        for v in vs {
+            if self.cam.len() >= self.capacity {
+                break;
+            }
+            if self.cam.insert(v, 0).is_none() {
+                self.policy.on_insert(v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(policy: ReplacementPolicy, cap: usize) -> HvCache {
+        HvCache::new(cap, 1024, policy, 0)
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut c = cache(ReplacementPolicy::Lru, 2);
+        assert!(!c.access(1)); // miss
+        assert!(c.access(1)); // hit
+        assert!(!c.access(2)); // miss
+        assert!(!c.access(3)); // miss + evict
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.misses, 3);
+        assert_eq!(c.stats.evictions, 1);
+        assert_eq!(c.stats.bytes_from_hbm, 3 * 1024);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut c = cache(ReplacementPolicy::Lru, 2);
+        c.access(1);
+        c.access(2);
+        c.access(1); // 2 is now LRU
+        c.access(3); // evicts 2
+        assert!(c.contains(1) && c.contains(3) && !c.contains(2));
+    }
+
+    #[test]
+    fn lfu_evicts_least_frequent() {
+        let mut c = cache(ReplacementPolicy::Lfu, 2);
+        c.access(1);
+        c.access(1);
+        c.access(1);
+        c.access(2);
+        c.access(3); // evicts 2 (freq 1) not 1 (freq 3)
+        assert!(c.contains(1) && c.contains(3) && !c.contains(2));
+    }
+
+    #[test]
+    fn random_stays_within_capacity_and_is_seeded() {
+        let run = |seed| {
+            let mut c = HvCache::new(4, 64, ReplacementPolicy::Random, seed);
+            let mut hits = 0;
+            for i in 0..200u32 {
+                if c.access(i % 9) {
+                    hits += 1;
+                }
+            }
+            assert!(c.len() <= 4);
+            hits
+        };
+        assert_eq!(run(1), run(1));
+    }
+
+    #[test]
+    fn high_locality_beats_low_locality_hit_rate() {
+        // skewed access streams must produce better hit rates — the premise
+        // of caching hub vertices (Fig. 10 trends)
+        let mut skew = cache(ReplacementPolicy::Lfu, 8);
+        let mut uni = cache(ReplacementPolicy::Lfu, 8);
+        for i in 0..4000u32 {
+            skew.access(if i % 10 < 8 { i % 4 } else { 100 + (i % 50) });
+            uni.access(i % 64);
+        }
+        assert!(skew.stats.hit_rate() > uni.stats.hit_rate());
+    }
+
+    #[test]
+    fn warm_does_not_touch_stats() {
+        let mut c = cache(ReplacementPolicy::Lru, 4);
+        c.warm(0..10u32);
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.stats.accesses(), 0);
+    }
+}

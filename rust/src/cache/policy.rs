@@ -1,0 +1,226 @@
+//! Replacement policy state machines (paper §4.2.2 cites the classic
+//! LRU/LFU spectrum [31] plus random replacement).
+//!
+//! Each policy tracks only resident ids; victim selection is O(log n) or
+//! O(1). The cache front-end owns the CAM; policies own recency/frequency
+//! metadata.
+
+use crate::util::{FxHashMap, Rng};
+use std::collections::{BTreeSet, VecDeque};
+
+pub trait PolicyState: Send {
+    fn on_insert(&mut self, v: u32);
+    fn on_hit(&mut self, v: u32);
+    /// Choose and remove a victim. Panics if empty (cache guards this).
+    fn evict(&mut self) -> u32;
+}
+
+/// Least-recently-used: timestamped BTreeSet ordered by last access.
+pub struct LruState {
+    clock: u64,
+    order: BTreeSet<(u64, u32)>,
+    stamp: FxHashMap<u32, u64>,
+}
+
+impl LruState {
+    pub fn new() -> Self {
+        Self { clock: 0, order: BTreeSet::new(), stamp: FxHashMap::default() }
+    }
+
+    fn touch(&mut self, v: u32) {
+        self.clock += 1;
+        if let Some(old) = self.stamp.insert(v, self.clock) {
+            self.order.remove(&(old, v));
+        }
+        self.order.insert((self.clock, v));
+    }
+}
+
+impl Default for LruState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PolicyState for LruState {
+    fn on_insert(&mut self, v: u32) {
+        self.touch(v);
+    }
+
+    fn on_hit(&mut self, v: u32) {
+        self.touch(v);
+    }
+
+    fn evict(&mut self) -> u32 {
+        let &(stamp, v) = self.order.iter().next().expect("evict from empty LRU");
+        self.order.remove(&(stamp, v));
+        self.stamp.remove(&v);
+        v
+    }
+}
+
+/// Least-frequently-used with LRU tie-break (the paper's best performer on
+/// average, §5.5: "LFU achieves the best performance, 8% better than
+/// Random").
+pub struct LfuState {
+    clock: u64,
+    /// (freq, last_access, v) ordered ascending — victim is the min.
+    order: BTreeSet<(u64, u64, u32)>,
+    meta: FxHashMap<u32, (u64, u64)>,
+}
+
+impl LfuState {
+    pub fn new() -> Self {
+        Self { clock: 0, order: BTreeSet::new(), meta: FxHashMap::default() }
+    }
+
+    fn bump(&mut self, v: u32) {
+        self.clock += 1;
+        let (freq, last) = self.meta.get(&v).copied().unwrap_or((0, 0));
+        if freq > 0 || last > 0 {
+            self.order.remove(&(freq, last, v));
+        }
+        let nf = freq + 1;
+        self.meta.insert(v, (nf, self.clock));
+        self.order.insert((nf, self.clock, v));
+    }
+}
+
+impl Default for LfuState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PolicyState for LfuState {
+    fn on_insert(&mut self, v: u32) {
+        self.bump(v);
+    }
+
+    fn on_hit(&mut self, v: u32) {
+        self.bump(v);
+    }
+
+    fn evict(&mut self) -> u32 {
+        let &(f, l, v) = self.order.iter().next().expect("evict from empty LFU");
+        self.order.remove(&(f, l, v));
+        self.meta.remove(&v);
+        v
+    }
+}
+
+/// Uniform random replacement (seeded for reproducible simulations).
+pub struct RandomState {
+    resident: Vec<u32>,
+    pos: FxHashMap<u32, usize>,
+    rng: Rng,
+}
+
+impl RandomState {
+    pub fn new(seed: u64) -> Self {
+        Self { resident: Vec::new(), pos: FxHashMap::default(), rng: Rng::seed_from_u64(seed) }
+    }
+}
+
+impl PolicyState for RandomState {
+    fn on_insert(&mut self, v: u32) {
+        if !self.pos.contains_key(&v) {
+            self.pos.insert(v, self.resident.len());
+            self.resident.push(v);
+        }
+    }
+
+    fn on_hit(&mut self, _v: u32) {}
+
+    fn evict(&mut self) -> u32 {
+        let i = self.rng.below(self.resident.len());
+        let v = self.resident.swap_remove(i);
+        self.pos.remove(&v);
+        if let Some(&moved) = self.resident.get(i) {
+            self.pos.insert(moved, i);
+        }
+        v
+    }
+}
+
+/// FIFO queue policy — not in the paper; kept for ablation curiosity and as
+/// a lower anchor in tests.
+pub struct FifoState {
+    queue: VecDeque<u32>,
+}
+
+impl FifoState {
+    pub fn new() -> Self {
+        Self { queue: VecDeque::new() }
+    }
+}
+
+impl Default for FifoState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PolicyState for FifoState {
+    fn on_insert(&mut self, v: u32) {
+        self.queue.push_back(v);
+    }
+
+    fn on_hit(&mut self, _v: u32) {}
+
+    fn evict(&mut self) -> u32 {
+        self.queue.pop_front().expect("evict from empty FIFO")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_order() {
+        let mut p = LruState::new();
+        p.on_insert(1);
+        p.on_insert(2);
+        p.on_insert(3);
+        p.on_hit(1);
+        assert_eq!(p.evict(), 2);
+        assert_eq!(p.evict(), 3);
+        assert_eq!(p.evict(), 1);
+    }
+
+    #[test]
+    fn lfu_frequency_then_recency() {
+        let mut p = LfuState::new();
+        p.on_insert(1);
+        p.on_insert(2);
+        p.on_hit(1);
+        p.on_insert(3);
+        // 2 and 3 both freq 1; 2 is older → victim
+        assert_eq!(p.evict(), 2);
+        assert_eq!(p.evict(), 3);
+        assert_eq!(p.evict(), 1);
+    }
+
+    #[test]
+    fn fifo_ignores_hits() {
+        let mut p = FifoState::new();
+        p.on_insert(1);
+        p.on_insert(2);
+        p.on_hit(1);
+        assert_eq!(p.evict(), 1);
+    }
+
+    #[test]
+    fn random_evicts_resident_members() {
+        let mut p = RandomState::new(0);
+        for v in 0..10 {
+            p.on_insert(v);
+        }
+        let mut evicted = std::collections::HashSet::new();
+        for _ in 0..10 {
+            assert!(evicted.insert(p.evict()), "double eviction");
+        }
+        assert_eq!(evicted.len(), 10);
+    }
+}

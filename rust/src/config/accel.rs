@@ -1,0 +1,231 @@
+//! FPGA accelerator configuration (paper §4, Table 5, §5.6).
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+
+/// On-chip hypervector replacement policy for the Dispatcher IP's UltraRAM
+/// store (§4.2.2: "we choose the classic replacement algorithm such as LRU,
+/// LFU, and random replacement policy").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReplacementPolicy {
+    Lru,
+    Lfu,
+    Random,
+}
+
+impl std::fmt::Display for ReplacementPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Lru => write!(f, "LRU"),
+            Self::Lfu => write!(f, "LFU"),
+            Self::Random => write!(f, "Random"),
+        }
+    }
+}
+
+/// The three hardware optimizations of §4 / Fig. 8(c); each can be toggled
+/// for the ablation experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Optimizations {
+    /// Reuse already-encoded hypervectors via the vertex→HBM-address map
+    /// (§4.2.1) instead of re-encoding every triple's endpoints.
+    pub reuse_encoded: bool,
+    /// Density-aware OoO scheduling: group equal-degree vertices into
+    /// balanced N_c-wide batches (§4.2.1, Fig. 4).
+    pub balanced_schedule: bool,
+    /// Forward/backward co-optimization: compute ∂N/∂M and ∂M/∂H on the
+    /// forward path and stash them in HBM (§4.3/§4.4).
+    pub fused_backward: bool,
+}
+
+impl Optimizations {
+    pub const ALL_ON: Self = Self {
+        reuse_encoded: true,
+        balanced_schedule: true,
+        fused_backward: true,
+    };
+    pub const ALL_OFF: Self = Self {
+        reuse_encoded: false,
+        balanced_schedule: false,
+        fused_backward: false,
+    };
+}
+
+/// Parameters of one accelerator instantiation. Defaults mirror the Alveo
+/// U50 configuration of Table 5; `u280()` mirrors the §5.6 scale-up.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AcceleratorConfig {
+    /// Human-readable name, also the key into the platform catalog.
+    pub name: String,
+    /// Kernel clock in MHz (paper: 200 MHz on both U50 and U280).
+    pub freq_mhz: f64,
+    /// N_c — number of Memorization Computing IPs (peak vertex parallelism).
+    pub n_c: usize,
+    /// T — training pipeline chunk size (§4.4: δ is cut into |B|×T chunks).
+    pub chunk_t: usize,
+    /// Number of UltraRAM blocks assigned to vertex hypervector storage
+    /// (each 288 Kb = 36 KB on UltraScale+).
+    pub uram_blocks: usize,
+    /// HBM pseudo-channels in use (U50: 8, U280: 16).
+    pub hbm_pcs: usize,
+    /// AXI data width in bits (U50: 256, U280: 512).
+    pub axi_width_bits: usize,
+    /// Per-PC HBM bandwidth in GB/s (HBM2: ~14.4 GB/s per pseudo-channel).
+    pub hbm_pc_gbps: f64,
+    /// PCIe host link bandwidth in GB/s (Gen3 x16 ≈ 12 GB/s effective).
+    pub pcie_gbps: f64,
+    /// Systolic array shape for the Encoder IP (rows × cols of PEs).
+    pub sa_rows: usize,
+    pub sa_cols: usize,
+    /// Score Engine replication (one per batch member, ≤ |B|).
+    pub score_engines: usize,
+    pub replacement: ReplacementPolicy,
+    pub opts: Optimizations,
+}
+
+
+impl ReplacementPolicy {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "lru" => Ok(Self::Lru),
+            "lfu" => Ok(Self::Lfu),
+            "random" => Ok(Self::Random),
+            other => anyhow::bail!("unknown replacement policy '{other}'"),
+        }
+    }
+
+    pub const ALL: [ReplacementPolicy; 3] = [Self::Lru, Self::Lfu, Self::Random];
+}
+
+impl AcceleratorConfig {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("freq_mhz".into(), Json::Num(self.freq_mhz));
+        m.insert("hbm_pc_gbps".into(), Json::Num(self.hbm_pc_gbps));
+        m.insert("pcie_gbps".into(), Json::Num(self.pcie_gbps));
+        for (k, v) in [
+            ("n_c", self.n_c),
+            ("chunk_t", self.chunk_t),
+            ("uram_blocks", self.uram_blocks),
+            ("hbm_pcs", self.hbm_pcs),
+            ("axi_width_bits", self.axi_width_bits),
+            ("sa_rows", self.sa_rows),
+            ("sa_cols", self.sa_cols),
+            ("score_engines", self.score_engines),
+        ] {
+            m.insert(k.into(), Json::Num(v as f64));
+        }
+        m.insert("replacement".into(), Json::Str(self.replacement.to_string().to_lowercase()));
+        m.insert("reuse_encoded".into(), Json::Bool(self.opts.reuse_encoded));
+        m.insert("balanced_schedule".into(), Json::Bool(self.opts.balanced_schedule));
+        m.insert("fused_backward".into(), Json::Bool(self.opts.fused_backward));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let u = |k: &str| -> crate::Result<usize> {
+            j.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow::anyhow!("accel.{k} missing"))
+        };
+        let f = |k: &str| -> crate::Result<f64> {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow::anyhow!("accel.{k} missing"))
+        };
+        let b = |k: &str| -> bool {
+            matches!(j.get(k), Some(Json::Bool(true)))
+        };
+        Ok(Self {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("accel.name missing"))?
+                .to_string(),
+            freq_mhz: f("freq_mhz")?,
+            n_c: u("n_c")?,
+            chunk_t: u("chunk_t")?,
+            uram_blocks: u("uram_blocks")?,
+            hbm_pcs: u("hbm_pcs")?,
+            axi_width_bits: u("axi_width_bits")?,
+            hbm_pc_gbps: f("hbm_pc_gbps")?,
+            pcie_gbps: f("pcie_gbps")?,
+            sa_rows: u("sa_rows")?,
+            sa_cols: u("sa_cols")?,
+            score_engines: u("score_engines")?,
+            replacement: ReplacementPolicy::parse(
+                j.get("replacement").and_then(Json::as_str).unwrap_or("lfu"),
+            )?,
+            opts: Optimizations {
+                reuse_encoded: b("reuse_encoded"),
+                balanced_schedule: b("balanced_schedule"),
+                fused_backward: b("fused_backward"),
+            },
+        })
+    }
+}
+
+impl AcceleratorConfig {
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.n_c == 0 || self.chunk_t == 0 || self.hbm_pcs == 0 {
+            anyhow::bail!("accelerator parallelism parameters must be positive");
+        }
+        if self.sa_rows == 0 || self.sa_cols == 0 {
+            anyhow::bail!("systolic array must be non-empty");
+        }
+        if !(50.0..=1000.0).contains(&self.freq_mhz) {
+            anyhow::bail!("implausible FPGA clock {} MHz", self.freq_mhz);
+        }
+        Ok(())
+    }
+
+    /// Aggregate HBM bandwidth in bytes/second.
+    pub fn hbm_bw_bytes(&self) -> f64 {
+        self.hbm_pcs as f64 * self.hbm_pc_gbps * 1e9
+    }
+
+    /// UltraRAM capacity in bytes (UltraScale+ URAM288: 36 KB per block).
+    pub fn uram_bytes(&self) -> usize {
+        self.uram_blocks * 36 * 1024
+    }
+
+    /// How many D-dim f32 hypervectors fit on-chip.
+    pub fn uram_hv_capacity(&self, dim_hd: usize) -> usize {
+        self.uram_bytes() / (dim_hd * 4)
+    }
+
+    /// Cycles per second.
+    pub fn cycles_per_sec(&self) -> f64 {
+        self.freq_mhz * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::accel_preset;
+
+    #[test]
+    fn u50_matches_table5_parameters() {
+        let c = accel_preset("u50").unwrap();
+        assert_eq!(c.freq_mhz, 200.0);
+        assert_eq!(c.hbm_pcs, 8);
+        assert_eq!(c.axi_width_bits, 256);
+        assert_eq!(c.n_c, 16);
+        assert_eq!(c.chunk_t, 32);
+    }
+
+    #[test]
+    fn u280_is_the_scaled_up_config() {
+        let u50 = accel_preset("u50").unwrap();
+        let u280 = accel_preset("u280").unwrap();
+        assert_eq!(u280.hbm_pcs, 2 * u50.hbm_pcs);
+        assert_eq!(u280.axi_width_bits, 2 * u50.axi_width_bits);
+        assert_eq!(u280.n_c, 2 * u50.n_c);
+        assert_eq!(u280.chunk_t, 2 * u50.chunk_t);
+    }
+
+    #[test]
+    fn uram_capacity_counts_hypervectors() {
+        let c = accel_preset("u50").unwrap();
+        // 135 URAM blocks × 36 KB = 4860 KB; D=256 f32 HV = 1 KB
+        assert_eq!(c.uram_hv_capacity(256), 135 * 36);
+    }
+}

@@ -1,0 +1,121 @@
+//! Typed configuration for every layer of the stack.
+//!
+//! Three config families, mirroring the paper's parameter tables:
+//! * [`ModelConfig`] — HDReason model shapes (Table 2/4): |V|, |R|, d, D, |B|.
+//!   Must agree exactly with the AOT artifact preset (static XLA shapes);
+//!   [`crate::runtime::artifacts`] cross-checks against `manifest.json`.
+//! * [`AcceleratorConfig`] — the FPGA accelerator parameters (Table 5, §5.6):
+//!   N_c memorization IPs, chunk size T, UltraRAM budget, HBM pseudo-channels,
+//!   AXI width, clock, replacement policy, and the three §4 optimizations.
+//! * [`TrainConfig`] — host-side training loop: epochs, lr, optimizer,
+//!   label smoothing, eval cadence.
+
+mod accel;
+mod model;
+mod presets;
+mod train;
+
+pub use accel::{AcceleratorConfig, Optimizations, ReplacementPolicy};
+pub use model::ModelConfig;
+pub use presets::{accel_preset, model_preset, train_preset, ACCEL_PRESETS, MODEL_PRESETS};
+pub use train::{OptimizerKind, TrainConfig};
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Bundle of all three config families — what a run file on disk contains.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    pub model: ModelConfig,
+    pub accelerator: AcceleratorConfig,
+    pub train: TrainConfig,
+}
+
+impl RunConfig {
+    /// Construct from named presets (`tiny`/`small`/`fb15k_mini` ×
+    /// `u50`/`u280`).
+    pub fn from_presets(model: &str, accel: &str) -> crate::Result<Self> {
+        Ok(Self {
+            model: model_preset(model)?,
+            accelerator: accel_preset(accel)?,
+            train: train_preset(),
+        })
+    }
+
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("model".to_string(), self.model.to_json());
+        m.insert("accelerator".to_string(), self.accelerator.to_json());
+        m.insert("train".to_string(), self.train.to_json());
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        Ok(Self {
+            model: ModelConfig::from_json(
+                j.get("model").ok_or_else(|| anyhow::anyhow!("missing model"))?,
+            )?,
+            accelerator: AcceleratorConfig::from_json(
+                j.get("accelerator").ok_or_else(|| anyhow::anyhow!("missing accelerator"))?,
+            )?,
+            train: TrainConfig::from_json(
+                j.get("train").ok_or_else(|| anyhow::anyhow!("missing train"))?,
+            )?,
+        })
+    }
+
+    /// Validate cross-family invariants (e.g. chunk size divides batch).
+    pub fn validate(&self) -> crate::Result<()> {
+        self.model.validate()?;
+        self.accelerator.validate()?;
+        // Fig. 7: δ (|B| × |V|) is cut along the vertex axis into |B| × T
+        // chunks, so T must not exceed the vertex capacity.
+        if self.accelerator.chunk_t > self.model.num_vertices {
+            anyhow::bail!(
+                "training chunk T {} exceeds vertex capacity {}",
+                self.accelerator.chunk_t,
+                self.model.num_vertices
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_config_round_trips_json() {
+        let rc = RunConfig::from_presets("tiny", "u50").unwrap();
+        let text = rc.to_json().to_string();
+        let back = RunConfig::from_json(&crate::util::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(rc, back);
+    }
+
+    #[test]
+    fn presets_validate() {
+        for m in MODEL_PRESETS {
+            for a in ACCEL_PRESETS {
+                RunConfig::from_presets(m, a).unwrap().validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_preset_is_error() {
+        assert!(RunConfig::from_presets("nope", "u50").is_err());
+        assert!(RunConfig::from_presets("tiny", "nope").is_err());
+    }
+}

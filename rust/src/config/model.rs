@@ -1,0 +1,149 @@
+//! HDReason model shape configuration (paper Table 2 notation).
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+
+/// Static model shapes. These must match an AOT artifact preset exactly —
+/// XLA computations are compiled for fixed shapes, so `num_vertices` here is
+/// the *padded* vertex capacity and `num_edges` the padded edge capacity
+/// (live triples are masked; see `python/compile/model.py`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    /// Preset name; keys the artifact lookup in `artifacts/manifest.json`.
+    pub preset: String,
+    /// |V| — vertex capacity.
+    pub num_vertices: usize,
+    /// |R| — relation capacity.
+    pub num_relations: usize,
+    /// |E| — padded edge (fact triple) capacity.
+    pub num_edges: usize,
+    /// d — original-space embedding dimension.
+    pub dim_in: usize,
+    /// D — hyperspace dimension.
+    pub dim_hd: usize,
+    /// |B| — query/training batch size.
+    pub batch: usize,
+}
+
+
+impl ModelConfig {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("preset".into(), Json::Str(self.preset.clone()));
+        for (k, v) in [
+            ("num_vertices", self.num_vertices),
+            ("num_relations", self.num_relations),
+            ("num_edges", self.num_edges),
+            ("dim_in", self.dim_in),
+            ("dim_hd", self.dim_hd),
+            ("batch", self.batch),
+        ] {
+            m.insert(k.into(), Json::Num(v as f64));
+        }
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let u = |k: &str| -> crate::Result<usize> {
+            j.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow::anyhow!("model.{k} missing"))
+        };
+        Ok(Self {
+            preset: j
+                .get("preset")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("model.preset missing"))?
+                .to_string(),
+            num_vertices: u("num_vertices")?,
+            num_relations: u("num_relations")?,
+            num_edges: u("num_edges")?,
+            dim_in: u("dim_in")?,
+            dim_hd: u("dim_hd")?,
+            batch: u("batch")?,
+        })
+    }
+}
+
+impl ModelConfig {
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.num_vertices == 0 || self.num_relations == 0 {
+            anyhow::bail!("empty graph capacity");
+        }
+        if self.dim_hd < self.dim_in {
+            // hyperspace must not lose information vs the original space
+            anyhow::bail!(
+                "hyperspace dim D={} smaller than original d={}",
+                self.dim_hd,
+                self.dim_in
+            );
+        }
+        if self.batch == 0 || self.num_edges == 0 {
+            anyhow::bail!("batch and edge capacity must be positive");
+        }
+        Ok(())
+    }
+
+    /// Bytes to hold one f32 hypervector.
+    pub fn hv_bytes(&self) -> usize {
+        self.dim_hd * 4
+    }
+
+    /// FLOPs of one full forward pass (encode + bind/aggregate + score) —
+    /// used by the roofline models in [`crate::platform`].
+    pub fn forward_flops(&self) -> f64 {
+        let v = self.num_vertices as f64;
+        let r = self.num_relations as f64;
+        let e = self.num_edges as f64;
+        let d = self.dim_in as f64;
+        let dd = self.dim_hd as f64;
+        let b = self.batch as f64;
+        let encode = 2.0 * (v + r) * d * dd; // Eq. 5/6 matmuls
+        let bind = 2.0 * e * dd; // Eq. 7 hadamard + scatter-add
+        let score = 3.0 * b * v * dd; // Eq. 10: sub, abs, add-reduce
+        encode + bind + score
+    }
+
+    /// FLOPs of one train step ≈ forward + backward (≈ 2× forward for the
+    /// matmul-dominated parts; the paper's fwd/bwd co-optimization computes
+    /// the sign/gradient terms inside the forward pass).
+    pub fn train_step_flops(&self) -> f64 {
+        2.8 * self.forward_flops()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            preset: "t".into(),
+            num_vertices: 256,
+            num_relations: 8,
+            num_edges: 1024,
+            dim_in: 32,
+            dim_hd: 128,
+            batch: 32,
+        }
+    }
+
+    #[test]
+    fn validates() {
+        cfg().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_shrinking_hyperspace() {
+        let mut c = cfg();
+        c.dim_hd = 16;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn flops_scale_with_batch() {
+        let c1 = cfg();
+        let mut c2 = cfg();
+        c2.batch *= 2;
+        assert!(c2.forward_flops() > c1.forward_flops());
+        assert!(c1.train_step_flops() > c1.forward_flops());
+    }
+}

@@ -1,0 +1,130 @@
+//! Named presets.
+//!
+//! Model presets MUST mirror `python/compile/presets.py` — the AOT artifacts
+//! are compiled for exactly these shapes and `runtime::artifacts` refuses a
+//! mismatch. Accelerator presets mirror the paper's two evaluated builds
+//! (Table 5 for U50; §5.6 for the U280 scale-up).
+
+use super::{
+    AcceleratorConfig, ModelConfig, OptimizerKind, Optimizations, ReplacementPolicy, TrainConfig,
+};
+
+pub const MODEL_PRESETS: &[&str] = &["tiny", "small", "fb15k_mini"];
+pub const ACCEL_PRESETS: &[&str] = &["u50", "u280", "kc705"];
+
+/// Model shape preset; must agree with python/compile/presets.py.
+pub fn model_preset(name: &str) -> crate::Result<ModelConfig> {
+    let (v, r, e, d, dd, b) = match name {
+        "tiny" => (256, 8, 1024, 32, 128, 32),
+        "small" => (2048, 32, 8192, 64, 256, 64),
+        "fb15k_mini" => (4096, 240, 16384, 96, 256, 128),
+        other => anyhow::bail!("unknown model preset '{other}' (have {MODEL_PRESETS:?})"),
+    };
+    Ok(ModelConfig {
+        preset: name.to_string(),
+        num_vertices: v,
+        num_relations: r,
+        num_edges: e,
+        dim_in: d,
+        dim_hd: dd,
+        batch: b,
+    })
+}
+
+/// Accelerator preset.
+pub fn accel_preset(name: &str) -> crate::Result<AcceleratorConfig> {
+    let cfg = match name {
+        // Table 5: Alveo U50, 200 MHz, 8 HBM PCs, AXI-256, N_c=16, T=32,
+        // 135 URAM blocks for H^v.
+        "u50" => AcceleratorConfig {
+            name: "Alveo U50".into(),
+            freq_mhz: 200.0,
+            n_c: 16,
+            chunk_t: 32,
+            uram_blocks: 135,
+            hbm_pcs: 8,
+            axi_width_bits: 256,
+            hbm_pc_gbps: 14.4,
+            pcie_gbps: 12.0,
+            sa_rows: 32,
+            sa_cols: 32,
+            score_engines: 128,
+            replacement: ReplacementPolicy::Lfu,
+            opts: Optimizations::ALL_ON,
+        },
+        // §5.6: U280 scale-up — 16 PCs, AXI-512, N_c=32, T=64, 256 URAMs.
+        "u280" => AcceleratorConfig {
+            name: "Alveo U280".into(),
+            freq_mhz: 200.0,
+            n_c: 32,
+            chunk_t: 64,
+            uram_blocks: 256,
+            hbm_pcs: 16,
+            axi_width_bits: 512,
+            hbm_pc_gbps: 14.4,
+            pcie_gbps: 12.0,
+            sa_rows: 32,
+            sa_cols: 64,
+            score_engines: 128,
+            replacement: ReplacementPolicy::Lfu,
+            opts: Optimizations::ALL_ON,
+        },
+        // Kintex-7 KC705: small DDR3 board in the Fig. 11 sweep — no HBM
+        // (model its single DDR3 channel as one 12.8 GB/s PC), no URAM
+        // (BRAM-only caching budget ≈ 32 URAM-equivalents).
+        "kc705" => AcceleratorConfig {
+            name: "Kintex7 KC705".into(),
+            freq_mhz: 150.0,
+            n_c: 4,
+            chunk_t: 16,
+            uram_blocks: 32,
+            hbm_pcs: 1,
+            axi_width_bits: 128,
+            hbm_pc_gbps: 12.8,
+            pcie_gbps: 6.0,
+            sa_rows: 16,
+            sa_cols: 16,
+            score_engines: 32,
+            replacement: ReplacementPolicy::Lru,
+            opts: Optimizations::ALL_ON,
+        },
+        other => anyhow::bail!("unknown accelerator preset '{other}' (have {ACCEL_PRESETS:?})"),
+    };
+    Ok(cfg)
+}
+
+pub fn train_preset() -> TrainConfig {
+    TrainConfig {
+        optimizer: OptimizerKind::Adam,
+        ..TrainConfig::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_presets_mirror_python() {
+        // keep in lock-step with python/compile/presets.py
+        let t = model_preset("tiny").unwrap();
+        assert_eq!(
+            (t.num_vertices, t.num_relations, t.num_edges, t.dim_in, t.dim_hd, t.batch),
+            (256, 8, 1024, 32, 128, 32)
+        );
+        let f = model_preset("fb15k_mini").unwrap();
+        assert_eq!(f.num_relations, 240);
+        assert_eq!(f.dim_in, 96); // Table 5: d = 96
+        assert_eq!(f.dim_hd, 256); // Table 5: D = 256
+    }
+
+    #[test]
+    fn all_presets_exist() {
+        for m in MODEL_PRESETS {
+            model_preset(m).unwrap();
+        }
+        for a in ACCEL_PRESETS {
+            accel_preset(a).unwrap().validate().unwrap();
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Host-side training loop configuration (the paper's CPU component, §4.1).
+
+use crate::util::Json;
+use std::collections::BTreeMap;
+
+/// Optimizer applied to the original-space embeddings on the host (the
+/// paper's Fig. 7 step 11, "updating the T vertex embedding model").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimizerKind {
+    Sgd,
+    Adagrad,
+    Adam,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    /// Steps (batches) per epoch; the scheduler cycles the triple list.
+    pub steps_per_epoch: usize,
+    pub optimizer: OptimizerKind,
+    pub lr: f64,
+    /// BCE label smoothing (CompGCN-style 1-vs-all training).
+    pub label_smoothing: f64,
+    /// Positive-class weight folded into the label rows (1-vs-all BCE has
+    /// a ~1/|V| positive rate; weighting keeps large presets from
+    /// collapsing to the all-negative solution). 0 = auto (|V|/16).
+    pub pos_weight: f64,
+    /// Score-function bias (Eq. 10).
+    pub bias: f64,
+    /// Evaluate filtered MRR/Hits every `eval_every` epochs (0 = only at end).
+    pub eval_every: usize,
+    /// RNG seed for init + sampling, for reproducible runs.
+    pub seed: u64,
+}
+
+
+impl OptimizerKind {
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sgd" => Ok(Self::Sgd),
+            "adagrad" => Ok(Self::Adagrad),
+            "adam" => Ok(Self::Adam),
+            other => anyhow::bail!("unknown optimizer '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Sgd => "sgd",
+            Self::Adagrad => "adagrad",
+            Self::Adam => "adam",
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("epochs".into(), Json::Num(self.epochs as f64));
+        m.insert("steps_per_epoch".into(), Json::Num(self.steps_per_epoch as f64));
+        m.insert("optimizer".into(), Json::Str(self.optimizer.name().into()));
+        m.insert("lr".into(), Json::Num(self.lr));
+        m.insert("label_smoothing".into(), Json::Num(self.label_smoothing));
+        m.insert("pos_weight".into(), Json::Num(self.pos_weight));
+        m.insert("bias".into(), Json::Num(self.bias));
+        m.insert("eval_every".into(), Json::Num(self.eval_every as f64));
+        m.insert("seed".into(), Json::Num(self.seed as f64));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> crate::Result<Self> {
+        let u = |k: &str| -> crate::Result<usize> {
+            j.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow::anyhow!("train.{k} missing"))
+        };
+        let f = |k: &str| -> crate::Result<f64> {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow::anyhow!("train.{k} missing"))
+        };
+        Ok(Self {
+            epochs: u("epochs")?,
+            steps_per_epoch: u("steps_per_epoch")?,
+            optimizer: OptimizerKind::parse(
+                j.get("optimizer").and_then(Json::as_str).unwrap_or("adam"),
+            )?,
+            lr: f("lr")?,
+            label_smoothing: f("label_smoothing")?,
+            pos_weight: j.get("pos_weight").and_then(Json::as_f64).unwrap_or(0.0),
+            bias: f("bias")?,
+            eval_every: u("eval_every")?,
+            seed: f("seed")? as u64,
+        })
+    }
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            epochs: 20,
+            steps_per_epoch: 32,
+            optimizer: OptimizerKind::Adam,
+            lr: 1e-2,
+            label_smoothing: 0.1,
+            pos_weight: 0.0,
+            bias: 6.0,
+            eval_every: 5,
+            seed: 42,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_sane_and_round_trips() {
+        let t = TrainConfig::default();
+        assert!(t.lr > 0.0 && t.epochs > 0);
+        let s = t.to_json().to_string();
+        let back = TrainConfig::from_json(&crate::util::Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+}

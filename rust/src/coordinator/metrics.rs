@@ -1,0 +1,74 @@
+//! Training metrics: loss curve, per-phase timing, eval history.
+
+use crate::model::RankMetrics;
+
+#[derive(Debug, Clone)]
+pub struct EpochLog {
+    pub epoch: usize,
+    pub mean_loss: f32,
+    pub steps: usize,
+    pub secs: f64,
+    pub eval: Option<RankMetrics>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct TrainingLog {
+    pub epochs: Vec<EpochLog>,
+}
+
+impl TrainingLog {
+    pub fn push(&mut self, log: EpochLog) {
+        self.epochs.push(log);
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.epochs.last().map(|e| e.mean_loss)
+    }
+
+    pub fn best_mrr(&self) -> f64 {
+        self.epochs
+            .iter()
+            .filter_map(|e| e.eval.as_ref().map(|m| m.mrr))
+            .fold(0.0, f64::max)
+    }
+
+    /// Loss curve as (epoch, loss) pairs — the quickstart's logged output.
+    pub fn loss_curve(&self) -> Vec<(usize, f32)> {
+        self.epochs.iter().map(|e| (e.epoch, e.mean_loss)).collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for e in &self.epochs {
+            out.push_str(&format!(
+                "epoch {:>3}  loss {:>8.4}  ({} steps, {:.2}s)",
+                e.epoch, e.mean_loss, e.steps, e.secs
+            ));
+            if let Some(m) = &e.eval {
+                out.push_str(&format!(
+                    "  MRR {:.4} H@1 {:.3} H@10 {:.3}",
+                    m.mrr, m.hits1, m.hits10
+                ));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_tracks_best_mrr_and_curve() {
+        let mut log = TrainingLog::default();
+        log.push(EpochLog { epoch: 0, mean_loss: 1.0, steps: 4, secs: 0.1, eval: None });
+        let m = RankMetrics { mrr: 0.4, ..Default::default() };
+        log.push(EpochLog { epoch: 1, mean_loss: 0.5, steps: 4, secs: 0.1, eval: Some(m) });
+        assert_eq!(log.final_loss(), Some(0.5));
+        assert_eq!(log.best_mrr(), 0.4);
+        assert_eq!(log.loss_curve(), vec![(0, 1.0), (1, 0.5)]);
+        assert!(log.render().contains("epoch   1"));
+    }
+}

@@ -1,0 +1,10 @@
+//! The L3 coordinator: drives end-to-end HDReason training and evaluation
+//! through the PJRT artifacts — the software role the paper's host CPU
+//! plays (Fig. 3), with the FPGA kernel replaced by the XLA CPU backend
+//! and mirrored by the cycle simulator for hardware numbers.
+
+mod metrics;
+mod trainer;
+
+pub use metrics::{EpochLog, TrainingLog};
+pub use trainer::HdrTrainer;

@@ -1,0 +1,212 @@
+//! End-to-end HDReason trainer over the PJRT artifacts.
+//!
+//! Division of labour mirrors the paper's CPU/FPGA split (§4.1):
+//!   * "kernel" work — encode/memorize/score/gradients — runs in the
+//!     train_step artifact (one fused XLA computation, the fwd/bwd
+//!     co-optimization realized by jax.vjp);
+//!   * host work — query batching, label rows, sigmoid, optimizer update,
+//!     eval ranking — runs here in rust.
+
+use super::metrics::{EpochLog, TrainingLog};
+use crate::config::RunConfig;
+use crate::kg::{KnowledgeGraph, LabelBatch, QueryBatcher};
+use crate::model::{evaluate_ranking, make_optimizer, ModelState, Optimizer, RankMetrics};
+use crate::runtime::{EdgeArrays, HdrRuntime};
+use std::time::Instant;
+
+pub struct HdrTrainer<'kg> {
+    pub rc: RunConfig,
+    pub state: ModelState,
+    runtime: HdrRuntime,
+    edges: EdgeArrays,
+    kg: &'kg KnowledgeGraph,
+    opt_ev: Box<dyn Optimizer>,
+    opt_er: Box<dyn Optimizer>,
+    pub log: TrainingLog,
+}
+
+impl<'kg> HdrTrainer<'kg> {
+    pub fn new(rc: RunConfig, runtime: HdrRuntime, kg: &'kg KnowledgeGraph) -> crate::Result<Self> {
+        rc.validate()?;
+        anyhow::ensure!(
+            kg.num_vertices <= rc.model.num_vertices
+                && kg.num_relations <= rc.model.num_relations,
+            "graph ({} vertices, {} relations) exceeds preset capacity",
+            kg.num_vertices,
+            kg.num_relations
+        );
+        let state = ModelState::init(&rc.model, rc.train.seed);
+        let edges = EdgeArrays::from_kg(kg, &rc.model);
+        let opt_ev = make_optimizer(rc.train.optimizer, rc.train.lr, state.ev.len());
+        let opt_er = make_optimizer(rc.train.optimizer, rc.train.lr, state.er.len());
+        Ok(Self { rc, state, runtime, edges, kg, opt_ev, opt_er, log: TrainingLog::default() })
+    }
+
+    /// Run one epoch of `steps` train steps; returns the mean loss.
+    ///
+    /// Label rows are padded from the live vertex count up to the
+    /// artifact's |V| capacity (padding vertices never appear as gold
+    /// objects, so their labels are all-zero).
+    pub fn train_epoch(&mut self, batcher: &mut QueryBatcher, steps: usize) -> crate::Result<f32> {
+        let mut total = 0f64;
+        let cap = self.rc.model.num_vertices;
+        let live = self.kg.num_vertices;
+        let b = self.rc.model.batch;
+        let mut padded = vec![0f32; b * cap];
+        for _ in 0..steps {
+            let qb = batcher.next_batch();
+            let labels: &[f32] = if live == cap {
+                &qb.labels
+            } else {
+                padded.iter_mut().for_each(|x| *x = 0.0);
+                for row in 0..b {
+                    padded[row * cap..row * cap + live]
+                        .copy_from_slice(&qb.labels[row * live..(row + 1) * live]);
+                }
+                &padded
+            };
+            let out = self.runtime.train_step(
+                &self.state,
+                &self.edges,
+                &qb.subj,
+                &qb.rel,
+                labels,
+                self.rc.train.bias as f32,
+                self.rc.train.label_smoothing as f32,
+            )?;
+            anyhow::ensure!(out.loss.is_finite(), "loss diverged: {}", out.loss);
+            self.opt_ev.step(&mut self.state.ev, &out.grad_ev);
+            self.opt_er.step(&mut self.state.er, &out.grad_er);
+            total += out.loss as f64;
+        }
+        Ok((total / steps.max(1) as f64) as f32)
+    }
+
+    /// Filtered-ranking evaluation over a triple list, batched through the
+    /// forward artifact (queries padded to |B|).
+    pub fn evaluate(&self, triples: &[crate::kg::Triple]) -> crate::Result<RankMetrics> {
+        let b = self.rc.model.batch;
+        let v = self.rc.model.num_vertices;
+        // rank over the live vertex prefix only: capacity-padding vertices
+        // are structurally impossible objects
+        let live = self.kg.num_vertices;
+        let labels = LabelBatch::full(self.kg);
+        // batch all forward passes first, then rank
+        let mut scores: Vec<Vec<f32>> = Vec::with_capacity(triples.len());
+        for chunk in triples.chunks(b) {
+            let mut qs = vec![0i32; b];
+            let mut qr = vec![0i32; b];
+            for (i, t) in chunk.iter().enumerate() {
+                qs[i] = t.src as i32;
+                qr[i] = t.rel as i32;
+            }
+            let logits =
+                self.runtime.forward(&self.state, &self.edges, &qs, &qr, self.rc.train.bias as f32)?;
+            for i in 0..chunk.len() {
+                scores.push(logits[i * v..i * v + live].to_vec());
+            }
+        }
+        let queries: Vec<(usize, usize, usize)> =
+            triples.iter().map(|t| (t.src, t.rel, t.dst)).collect();
+        let mut it = scores.into_iter();
+        Ok(evaluate_ranking(&queries, &labels, |_s, _r| it.next().expect("score row")))
+    }
+
+
+    /// Double-direction evaluation (§2.2): averages forward `(s, r, ?)`
+    /// ranking (through the PJRT forward artifact) with backward
+    /// `(?, r, o)` ranking (host-side inverse translation over the same
+    /// memory hypervectors) — the protocol behind Fig. 8(a).
+    pub fn evaluate_both(&self, triples: &[crate::kg::Triple]) -> crate::Result<RankMetrics> {
+        let fwd = self.evaluate(triples)?;
+        // backward: build M^v host-side once, rank subjects per query
+        let d = self.rc.model.dim_hd;
+        let live = self.kg.num_vertices;
+        let hv = self.state.encode_vertices_host();
+        let hr = self.state.encode_relations_host();
+        let mem = crate::hdc::memorize(&self.kg.train_csr(), &hv, &hr, d);
+        // subject-side filter: known subjects per (r, o)
+        let mut subj_of: std::collections::HashMap<(u32, u32), Vec<u32>> = Default::default();
+        for t in self.kg.all_triples() {
+            subj_of.entry((t.rel as u32, t.dst as u32)).or_default().push(t.src as u32);
+        }
+        let mut bwd = RankMetrics::default();
+        let mut mrr = 0f64;
+        let (mut h1, mut h3, mut h10) = (0f64, 0f64, 0f64);
+        for t in triples {
+            let scores = crate::model::transe_scores_subjects_host(
+                &mem.data[..live * d],
+                d,
+                mem.vertex(t.dst),
+                &hr[t.rel * d..(t.rel + 1) * d],
+                0.0,
+            );
+            let empty = Vec::new();
+            let filter = subj_of.get(&(t.rel as u32, t.dst as u32)).unwrap_or(&empty);
+            let rank = crate::model::rank_of(&scores, t.src, filter);
+            mrr += 1.0 / rank as f64;
+            h1 += (rank <= 1) as usize as f64;
+            h3 += (rank <= 3) as usize as f64;
+            h10 += (rank <= 10) as usize as f64;
+        }
+        let n = triples.len().max(1) as f64;
+        bwd.mrr = mrr / n;
+        bwd.hits1 = h1 / n;
+        bwd.hits3 = h3 / n;
+        bwd.hits10 = h10 / n;
+        bwd.count = triples.len();
+        // paper protocol: mean of the two directions
+        Ok(RankMetrics {
+            mrr: (fwd.mrr + bwd.mrr) / 2.0,
+            hits1: (fwd.hits1 + bwd.hits1) / 2.0,
+            hits3: (fwd.hits3 + bwd.hits3) / 2.0,
+            hits10: (fwd.hits10 + bwd.hits10) / 2.0,
+            count: fwd.count + bwd.count,
+        })
+    }
+
+    /// Full training run per the TrainConfig; logs every epoch.
+    pub fn fit(&mut self) -> crate::Result<()> {
+        let tc = self.rc.train.clone();
+        let mut batcher = QueryBatcher::new(self.kg, self.rc.model.batch, tc.seed);
+        batcher.pos_weight = self.pos_weight();
+        for epoch in 0..tc.epochs {
+            let start = Instant::now();
+            let mean_loss = self.train_epoch(&mut batcher, tc.steps_per_epoch)?;
+            let eval = if tc.eval_every > 0 && (epoch + 1) % tc.eval_every == 0 {
+                Some(self.evaluate(&self.kg.valid)?)
+            } else {
+                None
+            };
+            self.log.push(EpochLog {
+                epoch,
+                mean_loss,
+                steps: tc.steps_per_epoch,
+                secs: start.elapsed().as_secs_f64(),
+                eval,
+            });
+        }
+        Ok(())
+    }
+
+    /// Effective positive-class label weight (0 in the config = auto).
+    pub fn pos_weight(&self) -> f32 {
+        if self.rc.train.pos_weight > 0.0 {
+            self.rc.train.pos_weight as f32
+        } else if self.kg.num_vertices > 1024 {
+            // large graphs: counteract the ~1/|V| positive rate of
+            // 1-vs-all BCE (scaled to the *live* graph, not the capacity)
+            self.kg.num_vertices as f32 / 16.0
+        } else {
+            1.0
+        }
+    }
+
+    pub fn runtime(&self) -> &HdrRuntime {
+        &self.runtime
+    }
+
+    pub fn edges(&self) -> &EdgeArrays {
+        &self.edges
+    }
+}

@@ -1,0 +1,102 @@
+//! Kernel-based HDC encoder (paper §2.1, Eq. 5/6): H = tanh(e · H^B) with a
+//! fixed Gaussian base hypervector matrix.
+//!
+//! Pure-rust mirror of the L1 Pallas `encode` kernel; used for host-side
+//! interpretability queries and for cross-checking PJRT artifacts in tests.
+
+use crate::util::Rng;
+
+/// The encoder owns the base matrix H^B (d × D, row-major). Elements are
+/// N(0,1) and *stay constant* — HDC trains only the original-space
+/// embeddings (§3.2).
+#[derive(Debug, Clone)]
+pub struct Encoder {
+    pub dim_in: usize,
+    pub dim_hd: usize,
+    /// Row-major (d, D).
+    pub base: Vec<f32>,
+}
+
+impl Encoder {
+    pub fn new(dim_in: usize, dim_hd: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let base = (0..dim_in * dim_hd).map(|_| rng.normal_f32()).collect();
+        Self { dim_in, dim_hd, base }
+    }
+
+    /// Encode one embedding row: tanh(e · H^B).
+    pub fn encode(&self, e: &[f32]) -> Vec<f32> {
+        assert_eq!(e.len(), self.dim_in);
+        let mut out = vec![0f32; self.dim_hd];
+        for (i, &x) in e.iter().enumerate() {
+            let row = &self.base[i * self.dim_hd..(i + 1) * self.dim_hd];
+            for (o, &w) in out.iter_mut().zip(row) {
+                *o += x * w;
+            }
+        }
+        for o in &mut out {
+            *o = o.tanh();
+        }
+        out
+    }
+
+    /// Encode a row-major (n, d) embedding matrix → (n, D).
+    pub fn encode_matrix(&self, e: &[f32]) -> Vec<f32> {
+        assert_eq!(e.len() % self.dim_in, 0);
+        let n = e.len() / self.dim_in;
+        let mut out = Vec::with_capacity(n * self.dim_hd);
+        for r in 0..n {
+            out.extend(self.encode(&e[r * self.dim_in..(r + 1) * self.dim_in]));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_in_tanh_range() {
+        let enc = Encoder::new(16, 64, 0);
+        let e: Vec<f32> = (0..16).map(|i| i as f32).collect();
+        let h = enc.encode(&e);
+        assert_eq!(h.len(), 64);
+        assert!(h.iter().all(|&x| x.abs() <= 1.0));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = Encoder::new(8, 32, 1).encode(&vec![0.5; 8]);
+        let b = Encoder::new(8, 32, 1).encode(&vec![0.5; 8]);
+        assert_eq!(a, b);
+        let c = Encoder::new(8, 32, 2).encode(&vec![0.5; 8]);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn kernel_property_dot_products_track_similarity() {
+        // kernel-trick encoding: similar inputs ⇒ similar hypervectors,
+        // dissimilar inputs ⇒ near-orthogonal (high-D concentration)
+        let enc = Encoder::new(16, 4096, 3);
+        let mut rng = Rng::seed_from_u64(9);
+        let a: Vec<f32> = (0..16).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let mut a2 = a.clone();
+        a2[0] += 0.01; // tiny perturbation
+        let b: Vec<f32> = (0..16).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let (ha, ha2, hb) = (enc.encode(&a), enc.encode(&a2), enc.encode(&b));
+        let near = crate::hdc::cosine(&ha, &ha2);
+        let far = crate::hdc::cosine(&ha, &hb);
+        assert!(near > 0.99, "near {near}");
+        assert!(far < near - 0.1, "far {far} near {near}");
+    }
+
+    #[test]
+    fn matrix_encode_matches_rowwise() {
+        let enc = Encoder::new(4, 16, 5);
+        let e = vec![0.1, 0.2, 0.3, 0.4, -0.1, -0.2, -0.3, -0.4];
+        let m = enc.encode_matrix(&e);
+        assert_eq!(&m[..16], enc.encode(&e[..4]).as_slice());
+        assert_eq!(&m[16..], enc.encode(&e[4..]).as_slice());
+    }
+}

@@ -1,0 +1,132 @@
+//! Entropy-aware dimension dropping (paper Fig. 9(a)).
+//!
+//! HDC is holographic, so dimensions are redundant; the paper shows the
+//! model keeps accuracy when *low-entropy* dimensions are dropped (each
+//! carries little information across the vertex population) but degrades
+//! under random dropping. We measure per-dimension Shannon entropy over a
+//! histogram of values across all vertices, then mask the lowest-entropy
+//! dimensions.
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropStrategy {
+    Random,
+    /// Drop the lowest-entropy dimensions first (paper's "Entropy-Aware").
+    EntropyAware,
+}
+
+/// Shannon entropy (bits) of each hyperspace dimension across a row-major
+/// (n, D) hypervector matrix, using a `bins`-bucket histogram over [-1, 1]
+/// (the tanh range).
+pub fn dimension_entropy(data: &[f32], dim_hd: usize, bins: usize) -> Vec<f64> {
+    assert!(bins >= 2);
+    let n = data.len() / dim_hd;
+    let mut out = Vec::with_capacity(dim_hd);
+    let mut hist = vec![0usize; bins];
+    for d in 0..dim_hd {
+        hist.iter_mut().for_each(|h| *h = 0);
+        for r in 0..n {
+            let x = data[r * dim_hd + d].clamp(-1.0, 1.0);
+            let b = (((x + 1.0) / 2.0) * (bins as f32 - 1e-3)) as usize;
+            hist[b.min(bins - 1)] += 1;
+        }
+        let mut e = 0f64;
+        for &h in &hist {
+            if h > 0 {
+                let p = h as f64 / n as f64;
+                e -= p * p.log2();
+            }
+        }
+        out.push(e);
+    }
+    out
+}
+
+/// Zero out `drop` dimensions of a row-major (n, D) matrix in place,
+/// choosing victims per `strategy`. Returns the dropped dimension indices.
+pub fn drop_dimensions(
+    data: &mut [f32],
+    dim_hd: usize,
+    drop: usize,
+    strategy: DropStrategy,
+    seed: u64,
+) -> Vec<usize> {
+    let drop = drop.min(dim_hd);
+    let victims: Vec<usize> = match strategy {
+        DropStrategy::Random => {
+            let mut dims: Vec<usize> = (0..dim_hd).collect();
+            Rng::seed_from_u64(seed).shuffle(&mut dims);
+            dims.truncate(drop);
+            dims
+        }
+        DropStrategy::EntropyAware => {
+            let ent = dimension_entropy(data, dim_hd, 16);
+            let mut dims: Vec<usize> = (0..dim_hd).collect();
+            dims.sort_by(|&a, &b| ent[a].total_cmp(&ent[b]));
+            dims.truncate(drop);
+            dims
+        }
+    };
+    let n = data.len() / dim_hd;
+    for r in 0..n {
+        for &d in &victims {
+            data[r * dim_hd + d] = 0.0;
+        }
+    }
+    victims
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entropy_flags_constant_dimensions() {
+        // dim 0 constant (entropy 0), dim 1 uniform-ish (high entropy)
+        let n = 256;
+        let mut data = vec![0f32; n * 2];
+        let mut rng = Rng::seed_from_u64(0);
+        for r in 0..n {
+            data[r * 2] = 0.7;
+            data[r * 2 + 1] = rng.range_f64(-1.0, 1.0) as f32;
+        }
+        let e = dimension_entropy(&data, 2, 16);
+        assert!(e[0] < 0.1, "constant dim entropy {}", e[0]);
+        assert!(e[1] > 2.0, "uniform dim entropy {}", e[1]);
+    }
+
+    #[test]
+    fn entropy_aware_drops_the_constant_dim_first() {
+        let n = 128;
+        let mut data = vec![0f32; n * 4];
+        let mut rng = Rng::seed_from_u64(1);
+        for r in 0..n {
+            data[r * 4] = rng.range_f64(-1.0, 1.0) as f32;
+            data[r * 4 + 1] = -0.2; // low entropy
+            data[r * 4 + 2] = rng.range_f64(-1.0, 1.0) as f32;
+            data[r * 4 + 3] = rng.range_f64(-1.0, 1.0) as f32;
+        }
+        let victims = drop_dimensions(&mut data, 4, 1, DropStrategy::EntropyAware, 0);
+        assert_eq!(victims, vec![1]);
+        assert!((0..n).all(|r| data[r * 4 + 1] == 0.0));
+    }
+
+    #[test]
+    fn random_drop_is_seeded() {
+        let mut a = vec![1f32; 64 * 8];
+        let mut b = vec![1f32; 64 * 8];
+        let va = drop_dimensions(&mut a, 8, 3, DropStrategy::Random, 7);
+        let vb = drop_dimensions(&mut b, 8, 3, DropStrategy::Random, 7);
+        assert_eq!(va, vb);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn drop_count_saturates_at_dim() {
+        let mut a = vec![1f32; 4 * 4];
+        let v = drop_dimensions(&mut a, 4, 99, DropStrategy::Random, 0);
+        assert_eq!(v.len(), 4);
+        assert!(a.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,18 @@
+//! Hyperdimensional computing primitives (paper §2.1) in pure rust.
+//!
+//! This is the host-side mirror of the L1 Pallas kernels: the coordinator
+//! uses it for interpretability queries (neighbor reconstruction, Eq. 2),
+//! for the quantization / dimension-drop experiments (Fig. 9), and tests
+//! use it to cross-check the PJRT artifacts. The hot path runs through the
+//! AOT artifacts, not this module.
+
+mod encoder;
+mod entropy;
+mod memory;
+mod ops;
+pub mod quant;
+
+pub use encoder::Encoder;
+pub use entropy::{dimension_entropy, drop_dimensions, DropStrategy};
+pub use memory::{memorize, reconstruct_neighbors, GraphMemory};
+pub use ops::{bind, bundle, bundle_into, cosine, hamming, l1_distance, Hypervector};

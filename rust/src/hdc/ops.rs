@@ -1,0 +1,108 @@
+//! Core hypervector operations (paper §2.1): bundling (+), binding (∘),
+//! and the distance functions δ used by reconstruction and scoring.
+
+/// A dense f32 hypervector. HDC is holographic — information is evenly
+/// spread across dimensions — so plain slices are the right representation;
+/// no sparsity machinery needed.
+pub type Hypervector = Vec<f32>;
+
+/// Binding (element-wise multiplication "∘"): associates two concepts.
+/// Self-inverse for ±1 vectors, which is what makes memorized structure
+/// retrievable (§2.1).
+pub fn bind(a: &[f32], b: &[f32]) -> Hypervector {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).collect()
+}
+
+/// Bundling (element-wise addition "+"): memorizes a set of hypervectors.
+pub fn bundle(vs: &[&[f32]]) -> Hypervector {
+    let d = vs.first().map(|v| v.len()).unwrap_or(0);
+    let mut out = vec![0f32; d];
+    for v in vs {
+        bundle_into(&mut out, v);
+    }
+    out
+}
+
+/// In-place bundling accumulator — the Memorization Computing IP's adder.
+pub fn bundle_into(acc: &mut [f32], v: &[f32]) {
+    debug_assert_eq!(acc.len(), v.len());
+    for (a, x) in acc.iter_mut().zip(v) {
+        *a += x;
+    }
+}
+
+/// Cosine similarity — the δ of Eq. 2 used for neighbor reconstruction.
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let (mut dot, mut na, mut nb) = (0f32, 0f32, 0f32);
+    for (x, y) in a.iter().zip(b) {
+        dot += x * y;
+        na += x * x;
+        nb += y * y;
+    }
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
+/// Hamming distance on sign bits — the δ for binarized models.
+pub fn hamming(a: &[f32], b: &[f32]) -> usize {
+    a.iter().zip(b).filter(|(x, y)| x.is_sign_positive() != y.is_sign_positive()).count()
+}
+
+/// L1 distance — the TransE score metric of Eq. 10.
+pub fn l1_distance(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_is_self_inverse_on_signs() {
+        let a: Vec<f32> = vec![0.5, -0.3, 0.8, -0.9];
+        let s: Vec<f32> = vec![1.0, -1.0, -1.0, 1.0];
+        let back = bind(&bind(&a, &s), &s);
+        for (x, y) in a.iter().zip(&back) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn bundle_preserves_constituent_similarity() {
+        // a bundled set stays similar to each constituent — the HDC
+        // memorization property (Fig. 1(b))
+        let mut rng = crate::util::Rng::seed_from_u64(0);
+        let d = 2048;
+        let vs: Vec<Vec<f32>> =
+            (0..5).map(|_| (0..d).map(|_| if rng.bool(0.5) { 1.0 } else { -1.0 }).collect()).collect();
+        let refs: Vec<&[f32]> = vs.iter().map(|v| v.as_slice()).collect();
+        let m = bundle(&refs);
+        let outsider: Vec<f32> =
+            (0..d).map(|_| if rng.bool(0.5) { 1.0f32 } else { -1.0 }).collect();
+        for v in &vs {
+            assert!(cosine(&m, v) > 3.0 * cosine(&m, &outsider).abs());
+        }
+    }
+
+    #[test]
+    fn distances_agree_on_identity() {
+        let a = vec![1.0, -2.0, 3.0];
+        assert_eq!(l1_distance(&a, &a), 0.0);
+        assert_eq!(hamming(&a, &a), 0);
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn l1_matches_manual() {
+        assert_eq!(l1_distance(&[1.0, 2.0], &[0.0, -1.0]), 4.0);
+    }
+
+    #[test]
+    fn bundle_empty_is_empty() {
+        assert!(bundle(&[]).is_empty());
+    }
+}

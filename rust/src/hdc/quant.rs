@@ -1,0 +1,101 @@
+//! Fixed-point quantization simulation (paper Fig. 9(b), QPyTorch-style).
+//!
+//! fix-N: 1 sign bit + (N-1) fractional/integer bits with a per-tensor
+//! power-of-two scale chosen from the max-abs value, round-to-nearest,
+//! saturating. The paper quantizes HDR and the GCN baseline to fix-8/6/4/2
+//! and compares accuracy retention — HDC's holographic redundancy is the
+//! claimed reason HDR survives fix-4 with ~5% loss while the GNN drops ~45%.
+
+/// A fixed-point format with `bits` total bits (including sign).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FixedPoint {
+    pub bits: u32,
+}
+
+impl FixedPoint {
+    pub fn new(bits: u32) -> Self {
+        assert!((2..=16).contains(&bits), "fix-{bits} unsupported");
+        Self { bits }
+    }
+
+    /// Quantize one value given a pre-computed power-of-two scale.
+    #[inline]
+    pub fn quantize_with_scale(&self, x: f32, scale: f32) -> f32 {
+        let qmax = (1i64 << (self.bits - 1)) - 1;
+        let q = (x / scale).round().clamp(-(qmax as f32) - 1.0, qmax as f32);
+        q * scale
+    }
+
+    /// Power-of-two scale covering `max_abs`.
+    pub fn scale_for(&self, max_abs: f32) -> f32 {
+        if max_abs == 0.0 {
+            return 1.0;
+        }
+        let qmax = ((1i64 << (self.bits - 1)) - 1) as f32;
+        let raw = max_abs / qmax;
+        // round the scale up to a power of two (hardware-friendly shifts)
+        (2.0f32).powi(raw.log2().ceil() as i32)
+    }
+
+    /// Quantize a tensor in place with a per-tensor scale; returns the scale.
+    pub fn quantize_tensor(&self, data: &mut [f32]) -> f32 {
+        let max_abs = data.iter().fold(0f32, |m, &x| m.max(x.abs()));
+        let scale = self.scale_for(max_abs);
+        for x in data.iter_mut() {
+            *x = self.quantize_with_scale(*x, scale);
+        }
+        scale
+    }
+
+    /// Mean absolute quantization error on a copy (diagnostic).
+    pub fn error(&self, data: &[f32]) -> f32 {
+        let mut copy = data.to_vec();
+        self.quantize_tensor(&mut copy);
+        data.iter().zip(&copy).map(|(a, b)| (a - b).abs()).sum::<f32>() / data.len().max(1) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn high_bits_are_near_lossless() {
+        let mut rng = Rng::seed_from_u64(0);
+        let data: Vec<f32> = (0..1024).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let e16 = FixedPoint::new(16).error(&data);
+        let e4 = FixedPoint::new(4).error(&data);
+        let e2 = FixedPoint::new(2).error(&data);
+        assert!(e16 < 1e-3, "fix-16 err {e16}");
+        assert!(e4 > e16 && e2 > e4, "errors must grow as bits shrink: {e16} {e4} {e2}");
+    }
+
+    #[test]
+    fn quantized_values_form_a_grid() {
+        let fp = FixedPoint::new(4);
+        let mut data = vec![0.93f32, -0.41, 0.07, 0.66];
+        let scale = fp.quantize_tensor(&mut data);
+        for &x in &data {
+            let steps = x / scale;
+            assert!((steps - steps.round()).abs() < 1e-5, "{x} not on grid {scale}");
+        }
+    }
+
+    #[test]
+    fn zero_tensor_is_fixed_point() {
+        let fp = FixedPoint::new(8);
+        let mut data = vec![0f32; 16];
+        fp.quantize_tensor(&mut data);
+        assert!(data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn saturation_clamps() {
+        let fp = FixedPoint::new(2); // values in {-2,-1,0,1} × scale
+        let v = fp.quantize_with_scale(100.0, 1.0);
+        assert_eq!(v, 1.0);
+        let v = fp.quantize_with_scale(-100.0, 1.0);
+        assert_eq!(v, -2.0);
+    }
+}

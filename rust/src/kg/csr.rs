@@ -1,0 +1,128 @@
+//! Compressed-sparse-row adjacency over fact triples (paper Fig. 4(c)).
+//!
+//! The CSR is keyed by *destination* vertex: row `i` lists the `(src, rel)`
+//! pairs flowing into `i`, i.e. exactly the neighbor set N(i) that Eq. 1/7
+//! aggregates into the memory hypervector M_i. This is also the traversal
+//! order the accelerator's Memorization Computing IPs consume.
+
+use super::Triple;
+
+/// Destination-keyed CSR.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    /// Row offsets, length |V|+1.
+    pub offsets: Vec<usize>,
+    /// Column entries `(src, rel)`, length |E|.
+    pub entries: Vec<(u32, u32)>,
+}
+
+impl Csr {
+    pub fn from_triples(num_vertices: usize, triples: &[Triple]) -> Self {
+        let mut degree = vec![0usize; num_vertices];
+        for t in triples {
+            degree[t.dst] += 1;
+        }
+        let mut offsets = Vec::with_capacity(num_vertices + 1);
+        let mut acc = 0;
+        offsets.push(0);
+        for d in &degree {
+            acc += d;
+            offsets.push(acc);
+        }
+        let mut cursor = offsets[..num_vertices].to_vec();
+        let mut entries = vec![(0u32, 0u32); triples.len()];
+        for t in triples {
+            entries[cursor[t.dst]] = (t.src as u32, t.rel as u32);
+            cursor[t.dst] += 1;
+        }
+        Self { offsets, entries }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// In-degree of vertex `v` — the aggregation workload of M_v.
+    pub fn degree(&self, v: usize) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    /// Neighbors `(src, rel)` of vertex `v`.
+    pub fn neighbors(&self, v: usize) -> &[(u32, u32)] {
+        &self.entries[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    /// Histogram of in-degrees (Fig. 4(e): the degree-bucketed lists the
+    /// density-aware scheduler builds).
+    pub fn degree_histogram(&self) -> std::collections::BTreeMap<usize, Vec<u32>> {
+        let mut map: std::collections::BTreeMap<usize, Vec<u32>> = Default::default();
+        for v in 0..self.num_vertices() {
+            map.entry(self.degree(v)).or_default().push(v as u32);
+        }
+        map
+    }
+
+    /// Maximum in-degree (the straggler bound for unbalanced scheduling).
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices()).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn csr() -> Csr {
+        Csr::from_triples(
+            4,
+            &[
+                Triple::new(0, 0, 1),
+                Triple::new(2, 1, 1),
+                Triple::new(3, 0, 2),
+                Triple::new(1, 1, 0),
+            ],
+        )
+    }
+
+    #[test]
+    fn offsets_and_degrees_consistent() {
+        let c = csr();
+        assert_eq!(c.num_vertices(), 4);
+        assert_eq!(c.num_edges(), 4);
+        assert_eq!(c.degree(0), 1);
+        assert_eq!(c.degree(1), 2);
+        assert_eq!(c.degree(2), 1);
+        assert_eq!(c.degree(3), 0);
+        let total: usize = (0..4).map(|v| c.degree(v)).sum();
+        assert_eq!(total, c.num_edges());
+    }
+
+    #[test]
+    fn neighbors_carry_src_and_rel() {
+        let c = csr();
+        let n1 = c.neighbors(1);
+        assert!(n1.contains(&(0, 0)) && n1.contains(&(2, 1)));
+        assert!(c.neighbors(3).is_empty());
+    }
+
+    #[test]
+    fn histogram_partitions_vertices() {
+        let c = csr();
+        let h = c.degree_histogram();
+        let count: usize = h.values().map(|v| v.len()).sum();
+        assert_eq!(count, 4);
+        assert_eq!(h[&0], vec![3]);
+        assert_eq!(h[&2], vec![1]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let c = Csr::from_triples(3, &[]);
+        assert_eq!(c.num_edges(), 0);
+        assert_eq!(c.max_degree(), 0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Knowledge-graph substrate: triple store, CSR adjacency, dataset
+//! generation/loading, sampling, splits, and statistics.
+//!
+//! The paper evaluates on FB15K-237, WN18RR, WN18 and YAGO3-10 (Table 3).
+//! Those corpora are not redistributable here, so [`generator`] synthesizes
+//! graphs matched to each dataset's published statistics (|V|, |R|, triple
+//! counts, average degree, and a power-law degree skew) — the properties
+//! that drive both the learning task and the accelerator's load-balance /
+//! cache behaviour. Real TSV dumps load through [`loader`] unchanged.
+
+mod csr;
+pub mod generator;
+pub mod loader;
+mod sampler;
+mod split;
+mod stats;
+mod triple;
+
+pub use csr::Csr;
+pub use generator::{DatasetSpec, KNOWN_DATASETS};
+pub use sampler::{LabelBatch, NegativeSampler, QueryBatch, QueryBatcher};
+pub use split::Split;
+pub use stats::GraphStats;
+pub use triple::{Direction, Triple};
+
+use crate::util::Rng;
+
+/// An in-memory knowledge graph: entity/relation vocabularies plus the
+/// train/valid/test triple splits (each a directed fact list).
+#[derive(Debug, Clone)]
+pub struct KnowledgeGraph {
+    pub name: String,
+    pub num_vertices: usize,
+    pub num_relations: usize,
+    pub train: Vec<Triple>,
+    pub valid: Vec<Triple>,
+    pub test: Vec<Triple>,
+}
+
+impl KnowledgeGraph {
+    pub fn new(name: impl Into<String>, num_vertices: usize, num_relations: usize) -> Self {
+        Self {
+            name: name.into(),
+            num_vertices,
+            num_relations,
+            train: Vec::new(),
+            valid: Vec::new(),
+            test: Vec::new(),
+        }
+    }
+
+    pub fn all_triples(&self) -> impl Iterator<Item = &Triple> {
+        self.train.iter().chain(self.valid.iter()).chain(self.test.iter())
+    }
+
+    /// CSR over the training split (what memorization aggregates, Eq. 1).
+    pub fn train_csr(&self) -> Csr {
+        Csr::from_triples(self.num_vertices, &self.train)
+    }
+
+    /// Graph statistics (Table 3 reproduction).
+    pub fn stats(&self) -> GraphStats {
+        GraphStats::compute(self)
+    }
+
+    /// Deterministically subsample/remap the graph into a capacity box
+    /// (|V| ≤ v_cap etc.) so any dataset can run under any artifact preset.
+    pub fn fit_to(&self, v_cap: usize, r_cap: usize, seed: u64) -> KnowledgeGraph {
+        if self.num_vertices <= v_cap && self.num_relations <= r_cap {
+            return self.clone();
+        }
+        let mut rng = Rng::seed_from_u64(seed);
+        // choose the kept vertices (uniform) and relations (most frequent)
+        let mut verts: Vec<usize> = (0..self.num_vertices).collect();
+        rng.shuffle(&mut verts);
+        verts.truncate(v_cap.min(self.num_vertices));
+        let mut vmap = vec![usize::MAX; self.num_vertices];
+        for (new, &old) in verts.iter().enumerate() {
+            vmap[old] = new;
+        }
+        let mut rel_freq = vec![0usize; self.num_relations];
+        for t in self.all_triples() {
+            rel_freq[t.rel] += 1;
+        }
+        let mut rels: Vec<usize> = (0..self.num_relations).collect();
+        rels.sort_by_key(|&r| std::cmp::Reverse(rel_freq[r]));
+        rels.truncate(r_cap.min(self.num_relations));
+        let mut rmap = vec![usize::MAX; self.num_relations];
+        for (new, &old) in rels.iter().enumerate() {
+            rmap[old] = new;
+        }
+        let remap = |list: &[Triple]| {
+            list.iter()
+                .filter_map(|t| {
+                    let (s, r, o) = (vmap[t.src], rmap[t.rel], vmap[t.dst]);
+                    (s != usize::MAX && r != usize::MAX && o != usize::MAX)
+                        .then_some(Triple::new(s, r, o))
+                })
+                .collect::<Vec<_>>()
+        };
+        KnowledgeGraph {
+            name: format!("{}@{}v", self.name, v_cap),
+            num_vertices: v_cap.min(self.num_vertices),
+            num_relations: r_cap.min(self.num_relations),
+            train: remap(&self.train),
+            valid: remap(&self.valid),
+            test: remap(&self.test),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> KnowledgeGraph {
+        let mut kg = KnowledgeGraph::new("toy", 10, 3);
+        kg.train = vec![
+            Triple::new(0, 0, 1),
+            Triple::new(1, 1, 2),
+            Triple::new(2, 2, 3),
+            Triple::new(3, 0, 4),
+        ];
+        kg.valid = vec![Triple::new(4, 1, 5)];
+        kg.test = vec![Triple::new(5, 2, 6)];
+        kg
+    }
+
+    #[test]
+    fn all_triples_spans_splits() {
+        assert_eq!(toy().all_triples().count(), 6);
+    }
+
+    #[test]
+    fn fit_to_is_identity_when_it_fits() {
+        let kg = toy();
+        let fitted = kg.fit_to(100, 10, 0);
+        assert_eq!(fitted.train.len(), kg.train.len());
+        assert_eq!(fitted.num_vertices, kg.num_vertices);
+    }
+
+    #[test]
+    fn fit_to_respects_caps() {
+        let kg = toy();
+        let fitted = kg.fit_to(5, 2, 0);
+        assert!(fitted.num_vertices <= 5);
+        assert!(fitted.num_relations <= 2);
+        for t in fitted.all_triples() {
+            assert!(t.src < 5 && t.dst < 5 && t.rel < 2);
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! Train/valid/test split identifiers and re-splitting helpers.
+
+use super::KnowledgeGraph;
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Valid,
+    Test,
+}
+
+impl KnowledgeGraph {
+    pub fn split(&self, s: Split) -> &[super::Triple] {
+        match s {
+            Split::Train => &self.train,
+            Split::Valid => &self.valid,
+            Split::Test => &self.test,
+        }
+    }
+
+    /// Re-split all triples with the given fractions (useful after `fit_to`
+    /// shrinks a graph and leaves splits unbalanced).
+    pub fn resplit(&self, valid_frac: f64, test_frac: f64, seed: u64) -> KnowledgeGraph {
+        assert!(valid_frac + test_frac < 1.0);
+        let mut all: Vec<_> = self.all_triples().copied().collect();
+        let mut rng = Rng::seed_from_u64(seed);
+        rng.shuffle(&mut all);
+        let n = all.len();
+        let n_valid = (n as f64 * valid_frac) as usize;
+        let n_test = (n as f64 * test_frac) as usize;
+        let mut kg = self.clone();
+        kg.test = all.split_off(n - n_test);
+        kg.valid = all.split_off(n - n_test - n_valid.min(n - n_test));
+        kg.train = all;
+        kg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kg::generator;
+
+    #[test]
+    fn resplit_preserves_total() {
+        let cfg = crate::config::model_preset("tiny").unwrap();
+        let kg = generator::random_for_preset(&cfg, 0.8, 0);
+        let total = kg.all_triples().count();
+        let re = kg.resplit(0.1, 0.1, 0);
+        assert_eq!(re.all_triples().count(), total);
+        assert!(re.valid.len() > 0 && re.test.len() > 0);
+        assert!(re.train.len() > re.valid.len());
+    }
+
+    #[test]
+    fn split_accessor() {
+        let cfg = crate::config::model_preset("tiny").unwrap();
+        let kg = generator::random_for_preset(&cfg, 0.5, 1);
+        assert_eq!(kg.split(Split::Train).len(), kg.train.len());
+        assert_eq!(kg.split(Split::Test).len(), kg.test.len());
+    }
+}

@@ -1,0 +1,43 @@
+//! Fact triples (paper §2.2): a directed edge `(v, r, u)` stating that
+//! subject `v` relates to object `u` via relation `r`.
+
+/// A single fact triple `(src, rel, dst)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Triple {
+    pub src: usize,
+    pub rel: usize,
+    pub dst: usize,
+}
+
+impl Triple {
+    pub fn new(src: usize, rel: usize, dst: usize) -> Self {
+        Self { src, rel, dst }
+    }
+
+    /// The inverse fact (used for double-direction reasoning, §2.2: the
+    /// `(?, r, u)` query family is answered by reversing edges).
+    pub fn inverse(&self) -> Self {
+        Self { src: self.dst, rel: self.rel, dst: self.src }
+    }
+}
+
+/// Reasoning direction (paper §2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// `(v, r, ?)` — find the object.
+    Forward,
+    /// `(?, r, u)` — find the subject.
+    Backward,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inverse_swaps_endpoints() {
+        let t = Triple::new(1, 2, 3);
+        assert_eq!(t.inverse(), Triple::new(3, 2, 1));
+        assert_eq!(t.inverse().inverse(), t);
+    }
+}

@@ -1,0 +1,40 @@
+//! # HDReason
+//!
+//! Reproduction of *"HDReason: Algorithm-Hardware Codesign for
+//! Hyperdimensional Knowledge Graph Reasoning"* (Chen et al., cs.AR 2024) as
+//! a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: the paper's density-aware OoO
+//!   scheduler (§4.2.1), dispatcher cache with LRU/LFU/Random replacement,
+//!   chunked training pipeline (§4.4), plus a cycle-level simulator of the
+//!   paper's FPGA accelerator and roofline models for the GPU/CPU/FPGA
+//!   platforms it compares against.
+//! * **L2 (python/compile/model.py, build-time)** — the HDReason model
+//!   (Eqs. 5-12) lowered once to HLO text artifacts.
+//! * **L1 (python/compile/kernels, build-time)** — Pallas kernels for
+//!   encoding, binding, and the TransE L1 score.
+//!
+//! Python never runs on the request path: [`runtime`] loads the AOT
+//! artifacts via PJRT (`xla` crate) and [`coordinator`] drives training and
+//! inference entirely from rust.
+//!
+//! See `DESIGN.md` for the substitution table (FPGA → simulator, real KGs →
+//! statistics-matched synthetic KGs) and the experiment index mapping every
+//! paper table/figure to a module and bench target.
+
+pub mod baselines;
+pub mod bench;
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod hdc;
+pub mod kg;
+pub mod model;
+pub mod platform;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type (anyhow for rich error context on the CLI path).
+pub type Result<T> = anyhow::Result<T>;

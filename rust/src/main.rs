@@ -1,0 +1,175 @@
+//! `hdreason` — the L3 coordinator CLI.
+//!
+//! Subcommands (hand-rolled parsing; clap is unavailable offline):
+//!   datasets   print Table-3-style statistics of the synthetic datasets
+//!   train      end-to-end HDReason training through the PJRT artifacts
+//!   simulate   run the FPGA cycle simulator on a dataset
+//!   figures    regenerate paper tables/figures (see `--id all`)
+//!   resources  print the Table 5 resource/power model
+
+use hdreason::bench::figures;
+use hdreason::config::{accel_preset, RunConfig, ACCEL_PRESETS, MODEL_PRESETS};
+use hdreason::coordinator::HdrTrainer;
+use hdreason::kg::generator;
+use hdreason::runtime::{HdrRuntime, Manifest};
+use hdreason::sim::{simulate_batch, SimOptions, Workload};
+
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(raw: &[String]) -> Self {
+        let mut flags = std::collections::HashMap::new();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(name.to_string(), value);
+            }
+        }
+        Self { flags }
+    }
+
+    fn get(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.flags.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() || raw[0] == "--help" || raw[0] == "-h" {
+        print_help();
+        return;
+    }
+    let cmd = raw[0].clone();
+    let args = Args::parse(&raw[1..]);
+    let result = match cmd.as_str() {
+        "datasets" => cmd_datasets(&args),
+        "train" => cmd_train(&args),
+        "simulate" => cmd_simulate(&args),
+        "figures" => cmd_figures(&args),
+        "resources" => {
+            println!("{}", figures::table5());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print_help();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "hdreason — HDC knowledge-graph reasoning (paper reproduction)
+
+USAGE: hdreason <command> [flags]
+
+COMMANDS:
+  datasets   [--scale 0.05]                      Table 3 statistics
+  train      [--model tiny] [--accel u50] [--epochs 20] [--steps 32]
+             [--lr 0.05] [--dataset learnable] [--seed 42]
+             End-to-end training via PJRT artifacts (`make artifacts` first)
+  simulate   [--dataset FB15K-237] [--accel u50] [--scale 1.0]
+             FPGA cycle simulation of one training batch
+  figures    --id <table3|table4|table5|table6|fig8a|fig8b|fig8c|fig8d|
+                   fig9a|fig9b|fig10|fig11|headline|all> [--scale 1.0]
+  resources                                      Table 5 resource model
+
+model presets: {MODEL_PRESETS:?}   accelerators: {ACCEL_PRESETS:?}"
+    );
+}
+
+fn cmd_datasets(args: &Args) -> hdreason::Result<()> {
+    let scale = args.get_f64("scale", 0.05);
+    println!("{}", figures::table3(scale)?);
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> hdreason::Result<()> {
+    let model = args.get("model", "tiny");
+    let accel = args.get("accel", "u50");
+    let mut rc = RunConfig::from_presets(&model, &accel)?;
+    rc.train.epochs = args.get_usize("epochs", rc.train.epochs);
+    rc.train.steps_per_epoch = args.get_usize("steps", rc.train.steps_per_epoch);
+    rc.train.lr = args.get_f64("lr", 0.05);
+    rc.train.seed = args.get_usize("seed", 42) as u64;
+    rc.train.eval_every = args.get_usize("eval-every", 5);
+
+    let dataset = args.get("dataset", "learnable");
+    let kg = match dataset.as_str() {
+        "learnable" => generator::learnable_for_preset(&rc.model, 0.8, rc.train.seed),
+        "random" => generator::random_for_preset(&rc.model, 0.8, rc.train.seed),
+        name => generator::generate_named(name, args.get_f64("scale", 1.0), rc.train.seed)?
+            .fit_to(rc.model.num_vertices, rc.model.num_relations, rc.train.seed)
+            .resplit(0.05, 0.05, rc.train.seed),
+    };
+    println!(
+        "dataset: {} ({} vertices, {} relations, {} train triples)",
+        kg.name,
+        kg.num_vertices,
+        kg.num_relations,
+        kg.train.len()
+    );
+
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let runtime = HdrRuntime::load(&manifest, &rc.model)?;
+    println!("runtime: PJRT {} / preset {}", runtime.platform(), rc.model.preset);
+
+    let mut trainer = HdrTrainer::new(rc, runtime, &kg)?;
+    trainer.fit()?;
+    print!("{}", trainer.log.render());
+    let test = trainer.evaluate(&kg.test)?;
+    println!("{}", test.row("final (test, filtered)"));
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> hdreason::Result<()> {
+    let dataset = args.get("dataset", "FB15K-237");
+    let accel = args.get("accel", "u50");
+    let scale = args.get_f64("scale", 1.0);
+    let cfg = accel_preset(&accel)?;
+    let w = Workload::paper(&dataset, scale, 0)?;
+    let r = simulate_batch(&cfg, &w, SimOptions::default());
+    println!("{}", r.table6_row());
+    println!("{}", r.breakdown_row());
+    println!(
+        "cache: {} hits / {} misses ({:.1}% hit rate), HBM traffic {:.1} MB, power {:.1} W",
+        r.cache.hits,
+        r.cache.misses,
+        r.cache.hit_rate() * 100.0,
+        r.hbm_bytes as f64 / 1e6,
+        r.power_w
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> hdreason::Result<()> {
+    let id = args.get("id", "all");
+    let scale = args.get_f64("scale", 1.0);
+    if id == "all" {
+        for id in figures::ALL_IDS {
+            println!("{}", figures::generate(id, scale)?);
+        }
+    } else {
+        println!("{}", figures::generate(&id, scale)?);
+    }
+    Ok(())
+}

@@ -1,0 +1,114 @@
+//! Trainable model state: the original-space embedding tables (the only
+//! parameters HDC training updates, §3.2) plus the frozen base matrix.
+
+use crate::config::ModelConfig;
+use crate::hdc::Encoder;
+use crate::util::Rng;
+
+/// Host-resident HDReason parameters.
+///
+/// Layouts are row-major and sized exactly for the AOT artifact preset:
+/// `ev` is (|V|, d), `er` is (|R|, d), `hb` is (d, D).
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    pub cfg: ModelConfig,
+    pub ev: Vec<f32>,
+    pub er: Vec<f32>,
+    pub hb: Vec<f32>,
+}
+
+impl ModelState {
+    /// Xavier-style init for the embeddings; N(0,1) for the base matrix
+    /// (paper §2.1: "generated randomly using the standard Gaussian
+    /// distribution and stays constant").
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let scale = (1.0 / cfg.dim_in as f64).sqrt();
+        let ev = (0..cfg.num_vertices * cfg.dim_in)
+            .map(|_| (rng.normal() * scale) as f32)
+            .collect();
+        let er = (0..cfg.num_relations * cfg.dim_in)
+            .map(|_| (rng.normal() * scale) as f32)
+            .collect();
+        let enc = Encoder::new(cfg.dim_in, cfg.dim_hd, seed ^ 0x9E37_79B9);
+        Self { cfg: cfg.clone(), ev, er, hb: enc.base }
+    }
+
+    pub fn vertex_embedding(&self, v: usize) -> &[f32] {
+        &self.ev[v * self.cfg.dim_in..(v + 1) * self.cfg.dim_in]
+    }
+
+    pub fn relation_embedding(&self, r: usize) -> &[f32] {
+        &self.er[r * self.cfg.dim_in..(r + 1) * self.cfg.dim_in]
+    }
+
+    /// Parameter count (embeddings only — H^B is not trainable).
+    pub fn num_params(&self) -> usize {
+        self.ev.len() + self.er.len()
+    }
+
+    /// Bytes of trainable state (the paper's Table 6 "Memory" column
+    /// counts model + gradients; this is the model part).
+    pub fn param_bytes(&self) -> usize {
+        self.num_params() * 4
+    }
+
+    /// Encode all vertex embeddings on the host (test/interpretability
+    /// path; the hot path uses the PJRT encode artifact).
+    pub fn encode_vertices_host(&self) -> Vec<f32> {
+        let enc = Encoder {
+            dim_in: self.cfg.dim_in,
+            dim_hd: self.cfg.dim_hd,
+            base: self.hb.clone(),
+        };
+        enc.encode_matrix(&self.ev)
+    }
+
+    pub fn encode_relations_host(&self) -> Vec<f32> {
+        let enc = Encoder {
+            dim_in: self.cfg.dim_in,
+            dim_hd: self.cfg.dim_hd,
+            base: self.hb.clone(),
+        };
+        enc.encode_matrix(&self.er)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model_preset;
+
+    #[test]
+    fn shapes_match_preset() {
+        let cfg = model_preset("tiny").unwrap();
+        let m = ModelState::init(&cfg, 0);
+        assert_eq!(m.ev.len(), 256 * 32);
+        assert_eq!(m.er.len(), 8 * 32);
+        assert_eq!(m.hb.len(), 32 * 128);
+        assert_eq!(m.num_params(), 256 * 32 + 8 * 32);
+    }
+
+    #[test]
+    fn init_is_seeded_and_scaled() {
+        let cfg = model_preset("tiny").unwrap();
+        let a = ModelState::init(&cfg, 1);
+        let b = ModelState::init(&cfg, 1);
+        assert_eq!(a.ev, b.ev);
+        let c = ModelState::init(&cfg, 2);
+        assert_ne!(a.ev, c.ev);
+        // xavier scale: std ≈ 1/sqrt(d) = 0.177
+        let var: f32 =
+            a.ev.iter().map(|x| x * x).sum::<f32>() / a.ev.len() as f32;
+        assert!((var.sqrt() - 0.177).abs() < 0.02, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn row_accessors() {
+        let cfg = model_preset("tiny").unwrap();
+        let m = ModelState::init(&cfg, 0);
+        assert_eq!(m.vertex_embedding(5).len(), 32);
+        assert_eq!(m.relation_embedding(7).len(), 32);
+        assert_eq!(m.vertex_embedding(0), &m.ev[..32]);
+    }
+}

@@ -1,0 +1,144 @@
+//! Filtered ranking evaluation (paper §5.2 protocol): for each test triple
+//! (s, r, o), rank o's score among all vertices after *filtering out* other
+//! known-true objects of (s, r). Reports MRR and Hits@{1,3,10} — the
+//! metrics behind Fig. 8(a)/(b).
+
+use crate::kg::LabelBatch;
+
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct RankMetrics {
+    pub mrr: f64,
+    pub hits1: f64,
+    pub hits3: f64,
+    pub hits10: f64,
+    pub count: usize,
+}
+
+impl RankMetrics {
+    fn add_rank(&mut self, rank: usize) {
+        self.mrr += 1.0 / rank as f64;
+        self.hits1 += (rank <= 1) as usize as f64;
+        self.hits3 += (rank <= 3) as usize as f64;
+        self.hits10 += (rank <= 10) as usize as f64;
+        self.count += 1;
+    }
+
+    fn finalize(mut self) -> Self {
+        if self.count > 0 {
+            let n = self.count as f64;
+            self.mrr /= n;
+            self.hits1 /= n;
+            self.hits3 /= n;
+            self.hits10 /= n;
+        }
+        self
+    }
+
+    pub fn row(&self, label: &str) -> String {
+        format!(
+            "{:<24} MRR {:>6.4}  H@1 {:>6.4}  H@3 {:>6.4}  H@10 {:>6.4}  (n={})",
+            label, self.mrr, self.hits1, self.hits3, self.hits10, self.count
+        )
+    }
+}
+
+/// Filtered rank of `gold` in `scores` (1-based, optimistic-tie-free: ties
+/// use the mean of best/worst rank, the standard "average" protocol).
+pub fn rank_of(scores: &[f32], gold: usize, filter_out: &[u32]) -> usize {
+    let gs = scores[gold];
+    let mut better = 0usize;
+    let mut equal = 0usize;
+    let mut filtered = vec![false; scores.len()];
+    for &f in filter_out {
+        if (f as usize) != gold {
+            filtered[f as usize] = true;
+        }
+    }
+    for (i, &s) in scores.iter().enumerate() {
+        if i == gold || filtered[i] {
+            continue;
+        }
+        if s > gs {
+            better += 1;
+        } else if s == gs {
+            equal += 1;
+        }
+    }
+    better + equal / 2 + 1
+}
+
+/// Evaluate a set of queries given a score oracle. `score_fn(s, r)` returns
+/// |V| logits; gold objects and filters come from `labels` (built over ALL
+/// splits, the filtered protocol).
+pub fn evaluate_ranking(
+    queries: &[(usize, usize, usize)],
+    labels: &LabelBatch,
+    mut score_fn: impl FnMut(usize, usize) -> Vec<f32>,
+) -> RankMetrics {
+    let mut m = RankMetrics::default();
+    for &(s, r, o) in queries {
+        let scores = score_fn(s, r);
+        let rank = rank_of(&scores, o, labels.objects(s, r));
+        m.add_rank(rank);
+    }
+    m.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kg::{KnowledgeGraph, Triple};
+
+    #[test]
+    fn rank_counts_strictly_better() {
+        let scores = vec![0.9, 0.5, 0.7, 0.1];
+        assert_eq!(rank_of(&scores, 0, &[]), 1);
+        assert_eq!(rank_of(&scores, 2, &[]), 2);
+        assert_eq!(rank_of(&scores, 3, &[]), 4);
+    }
+
+    #[test]
+    fn filtering_removes_known_objects() {
+        let scores = vec![0.9, 0.5, 0.7, 0.1];
+        // gold = 1; unfiltered rank 3. filtering out 0 and 2 → rank 1
+        assert_eq!(rank_of(&scores, 1, &[0, 2]), 1);
+        // filtering the gold itself must be ignored
+        assert_eq!(rank_of(&scores, 1, &[1]), 3);
+    }
+
+    #[test]
+    fn ties_take_mean_rank() {
+        let scores = vec![0.5, 0.5, 0.5];
+        // gold 1: 0 better, 2 equal → 1 + 2/2 = 2
+        assert_eq!(rank_of(&scores, 1, &[]), 2);
+    }
+
+    #[test]
+    fn perfect_oracle_gets_mrr_one() {
+        let mut kg = KnowledgeGraph::new("t", 4, 1);
+        kg.train = vec![Triple::new(0, 0, 1), Triple::new(1, 0, 2)];
+        let labels = LabelBatch::full(&kg);
+        let queries = vec![(0, 0, 1), (1, 0, 2)];
+        let m = evaluate_ranking(&queries, &labels, |s, _r| {
+            let mut v = vec![0f32; 4];
+            v[if s == 0 { 1 } else { 2 }] = 1.0;
+            v
+        });
+        assert_eq!(m.mrr, 1.0);
+        assert_eq!(m.hits1, 1.0);
+        assert_eq!(m.count, 2);
+    }
+
+    #[test]
+    fn random_oracle_mrr_is_low() {
+        let mut kg = KnowledgeGraph::new("t", 100, 1);
+        kg.train = (0..50).map(|i| Triple::new(i, 0, i + 50)).collect();
+        let labels = LabelBatch::full(&kg);
+        let queries: Vec<_> = kg.train.iter().map(|t| (t.src, t.rel, t.dst)).collect();
+        let mut rng = crate::util::Rng::seed_from_u64(0);
+        let m = evaluate_ranking(&queries, &labels, |_s, _r| {
+            (0..100).map(|_| rng.f32()).collect()
+        });
+        assert!(m.mrr < 0.2, "random MRR {}", m.mrr);
+    }
+}

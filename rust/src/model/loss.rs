@@ -1,0 +1,56 @@
+//! Host-side loss helpers. The training loss lives inside the train_step
+//! artifact; these are used for eval-time score post-processing (the
+//! paper applies the sigmoid on the CPU, Fig. 6 step 9) and for baseline
+//! trainers.
+
+#[inline]
+pub fn sigmoid(x: f32) -> f32 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Numerically stable BCE-with-logits, mean over all elements. Mirrors the
+/// L2 model's loss so rust-side baselines train on identical objectives.
+pub fn bce_loss_host(logits: &[f32], labels: &[f32], smoothing: f32) -> f32 {
+    assert_eq!(logits.len(), labels.len());
+    let k = smoothing / labels.len().max(1) as f32;
+    let mut total = 0f64;
+    for (&l, &y) in logits.iter().zip(labels) {
+        let y = y * (1.0 - smoothing) + k;
+        let per = l.max(0.0) - l * y + (-l.abs()).exp().ln_1p();
+        total += per as f64;
+    }
+    (total / logits.len().max(1) as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sigmoid_range_and_symmetry() {
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-6);
+        assert!(sigmoid(30.0) > 0.999);
+        assert!(sigmoid(-30.0) < 0.001);
+        assert!((sigmoid(2.0) + sigmoid(-2.0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bce_is_minimized_by_correct_predictions() {
+        let labels = vec![1.0, 0.0, 1.0, 0.0];
+        let good = bce_loss_host(&[10.0, -10.0, 10.0, -10.0], &labels, 0.0);
+        let bad = bce_loss_host(&[-10.0, 10.0, -10.0, 10.0], &labels, 0.0);
+        assert!(good < 0.01);
+        assert!(bad > 5.0);
+    }
+
+    #[test]
+    fn bce_no_nan_at_extremes() {
+        let l = bce_loss_host(&[1e8, -1e8], &[1.0, 0.0], 0.1);
+        assert!(l.is_finite());
+    }
+}

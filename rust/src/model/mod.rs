@@ -1,0 +1,19 @@
+//! HDReason model state and host-side training mathematics.
+//!
+//! The *compute graph* (Eqs. 5-12) lives in the AOT artifacts; this module
+//! owns what the paper keeps on the host CPU (§4.1): the original-space
+//! embedding tables e^v / e^r, the frozen base matrix H^B, the optimizer
+//! applied to the gradients PJRT returns (Fig. 7 step 11), the sigmoid
+//! post-processing of scores (Fig. 6 step 9), and filtered rank evaluation.
+
+mod embeddings;
+mod eval;
+mod loss;
+mod optimizer;
+mod score;
+
+pub use embeddings::ModelState;
+pub use eval::{evaluate_ranking, rank_of, RankMetrics};
+pub use loss::{bce_loss_host, sigmoid};
+pub use optimizer::{make_optimizer, Adagrad, Adam, Optimizer, Sgd};
+pub use score::{transe_scores_host, transe_scores_subjects_host};

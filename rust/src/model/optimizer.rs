@@ -1,0 +1,153 @@
+//! Embedding optimizers — the host-CPU update of Fig. 7 step 11.
+//!
+//! The paper trains only e^v and e^r (H^B frozen), so optimizers operate on
+//! flat f32 tables with sparse-friendly full-table updates (the gradients
+//! PJRT returns are dense (|V|, d) / (|R|, d) matrices).
+
+use crate::config::OptimizerKind;
+
+pub trait Optimizer: Send {
+    /// In-place parameter update given a same-shaped gradient.
+    fn step(&mut self, params: &mut [f32], grads: &[f32]);
+
+    fn name(&self) -> &'static str;
+}
+
+pub fn make_optimizer(kind: OptimizerKind, lr: f64, n: usize) -> Box<dyn Optimizer> {
+    match kind {
+        OptimizerKind::Sgd => Box::new(Sgd { lr: lr as f32 }),
+        OptimizerKind::Adagrad => Box::new(Adagrad::new(lr as f32, n)),
+        OptimizerKind::Adam => Box::new(Adam::new(lr as f32, n)),
+    }
+}
+
+/// Plain SGD.
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        debug_assert_eq!(params.len(), grads.len());
+        for (p, &g) in params.iter_mut().zip(grads) {
+            *p -= self.lr * g;
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// Adagrad — a common choice for embedding tables (DGL-KE uses it).
+pub struct Adagrad {
+    lr: f32,
+    eps: f32,
+    accum: Vec<f32>,
+}
+
+impl Adagrad {
+    pub fn new(lr: f32, n: usize) -> Self {
+        Self { lr, eps: 1e-10, accum: vec![0f32; n] }
+    }
+}
+
+impl Optimizer for Adagrad {
+    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        debug_assert_eq!(params.len(), grads.len());
+        debug_assert_eq!(params.len(), self.accum.len());
+        for ((p, &g), a) in params.iter_mut().zip(grads).zip(&mut self.accum) {
+            *a += g * g;
+            *p -= self.lr * g / (a.sqrt() + self.eps);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adagrad"
+    }
+}
+
+/// Adam with bias correction.
+pub struct Adam {
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: i32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Adam {
+    pub fn new(lr: f32, n: usize) -> Self {
+        Self { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: vec![0f32; n], v: vec![0f32; n] }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        debug_assert_eq!(params.len(), grads.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t);
+        let bc2 = 1.0 - self.beta2.powi(self.t);
+        for (i, (p, &g)) in params.iter_mut().zip(grads).enumerate() {
+            let m = &mut self.m[i];
+            let v = &mut self.v[i];
+            *m = self.beta1 * *m + (1.0 - self.beta1) * g;
+            *v = self.beta2 * *v + (1.0 - self.beta2) * g * g;
+            let mh = *m / bc1;
+            let vh = *v / bc2;
+            *p -= self.lr * mh / (vh.sqrt() + self.eps);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// All optimizers must descend a simple quadratic f(x) = Σ x².
+    fn descend(opt: &mut dyn Optimizer) -> f32 {
+        let mut x = vec![1.0f32, -2.0, 3.0, -0.5];
+        for _ in 0..200 {
+            let g: Vec<f32> = x.iter().map(|&v| 2.0 * v).collect();
+            opt.step(&mut x, &g);
+        }
+        x.iter().map(|v| v * v).sum()
+    }
+
+    #[test]
+    fn sgd_descends() {
+        assert!(descend(&mut Sgd { lr: 0.1 }) < 1e-6);
+    }
+
+    #[test]
+    fn adagrad_descends() {
+        assert!(descend(&mut Adagrad::new(0.5, 4)) < 1e-2);
+    }
+
+    #[test]
+    fn adam_descends() {
+        assert!(descend(&mut Adam::new(0.05, 4)) < 1e-3);
+    }
+
+    #[test]
+    fn factory_matches_kind() {
+        assert_eq!(make_optimizer(OptimizerKind::Sgd, 0.1, 4).name(), "sgd");
+        assert_eq!(make_optimizer(OptimizerKind::Adam, 0.1, 4).name(), "adam");
+        assert_eq!(make_optimizer(OptimizerKind::Adagrad, 0.1, 4).name(), "adagrad");
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // bias correction makes the first Adam step ≈ lr in magnitude
+        let mut opt = Adam::new(0.01, 1);
+        let mut x = vec![1.0f32];
+        opt.step(&mut x, &[0.5]);
+        assert!((1.0 - x[0] - 0.01).abs() < 1e-4, "step {}", 1.0 - x[0]);
+    }
+}

@@ -1,0 +1,101 @@
+//! Host-side TransE scoring (Eq. 10) — the reference implementation used by
+//! eval on small graphs and by tests to cross-check the PJRT score
+//! artifact. The hot path scores through the artifact.
+
+use crate::hdc::l1_distance;
+
+/// Eq. 10 logits for one query (subject memory HDV + relation HDV) against
+/// all vertex memory hypervectors. Returns (|V|,) logits = bias − L1.
+pub fn transe_scores_host(
+    mv: &[f32],
+    dim_hd: usize,
+    m_subj: &[f32],
+    h_rel: &[f32],
+    bias: f32,
+) -> Vec<f32> {
+    let v = mv.len() / dim_hd;
+    let q: Vec<f32> = m_subj.iter().zip(h_rel).map(|(a, b)| a + b).collect();
+    (0..v)
+        .map(|j| bias - l1_distance(&q, &mv[j * dim_hd..(j + 1) * dim_hd]))
+        .collect()
+}
+
+
+/// Backward-direction scores (§2.2 double-direction reasoning): given the
+/// relation and the *object*, rank candidate subjects. Under the TransE
+/// geometry of Eq. 10 a candidate subject s scores by
+/// ||M_s + H_r − M_o||_1 — the same translation read right-to-left. The
+/// accelerator reuses the Score Engine unchanged (operand roles swap);
+/// host-side this is one pass over the memory matrix.
+pub fn transe_scores_subjects_host(
+    mv: &[f32],
+    dim_hd: usize,
+    m_obj: &[f32],
+    h_rel: &[f32],
+    bias: f32,
+) -> Vec<f32> {
+    let v = mv.len() / dim_hd;
+    // target point for M_s: M_o − H_r
+    let target: Vec<f32> = m_obj.iter().zip(h_rel).map(|(o, r)| o - r).collect();
+    (0..v)
+        .map(|s| bias - l1_distance(&target, &mv[s * dim_hd..(s + 1) * dim_hd]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_translation_scores_highest() {
+        // craft M so that M[2] = M[0] + H_r exactly → vertex 2 wins
+        let d = 4;
+        let m0 = vec![0.1, 0.2, 0.3, 0.4];
+        let hr = vec![0.5, -0.1, 0.0, 0.2];
+        let m2: Vec<f32> = m0.iter().zip(&hr).map(|(a, b)| a + b).collect();
+        let m1 = vec![9.0, 9.0, 9.0, 9.0];
+        let mv: Vec<f32> = [m0.clone(), m1, m2].concat();
+        let scores = transe_scores_host(&mv, d, &m0, &hr, 0.0);
+        assert_eq!(scores.len(), 3);
+        assert_eq!(scores[2], 0.0); // exact translation ⇒ zero distance
+        assert!(scores[2] > scores[0] && scores[2] > scores[1]);
+    }
+
+    #[test]
+    fn backward_direction_inverts_the_translation() {
+        // M_o = M_s + H_r exactly ⇒ backward query (?, r, o) ranks s first
+        let d = 4;
+        let ms = vec![0.1, 0.2, 0.3, 0.4];
+        let hr = vec![0.5, -0.1, 0.0, 0.2];
+        let mo: Vec<f32> = ms.iter().zip(&hr).map(|(a, b)| a + b).collect();
+        let decoy = vec![9.0, 9.0, 9.0, 9.0];
+        let mv: Vec<f32> = [ms.clone(), decoy, mo.clone()].concat();
+        let scores = transe_scores_subjects_host(&mv, d, &mo, &hr, 0.0);
+        assert!(scores[0].abs() < 1e-6, "inverse translation: {}", scores[0]);
+        assert!(scores[0] > scores[1] && scores[0] > scores[2]);
+    }
+
+    #[test]
+    fn forward_and_backward_agree_on_exact_translations() {
+        let d = 8;
+        let mut rng = crate::util::Rng::seed_from_u64(0);
+        let ms: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let hr: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let mo: Vec<f32> = ms.iter().zip(&hr).map(|(a, b)| a + b).collect();
+        let mv: Vec<f32> = [ms.clone(), mo.clone()].concat();
+        let fwd = transe_scores_host(&mv, d, &ms, &hr, 0.0);
+        let bwd = transe_scores_subjects_host(&mv, d, &mo, &hr, 0.0);
+        assert!(fwd[1].abs() < 1e-6, "fwd {}", fwd[1]);
+        assert!(bwd[0].abs() < 1e-6, "bwd {}", bwd[0]);
+    }
+
+    #[test]
+    fn bias_shifts_all_scores() {
+        let mv = vec![0.0f32; 8];
+        let a = transe_scores_host(&mv, 4, &[0.0; 4], &[0.0; 4], 0.0);
+        let b = transe_scores_host(&mv, 4, &[0.0; 4], &[0.0; 4], 3.0);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((y - x - 3.0).abs() < 1e-6);
+        }
+    }
+}

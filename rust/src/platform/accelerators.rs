@@ -1,0 +1,101 @@
+//! Comparator accelerator models: GraphACT (Alveo U200), HP-GNN (U250),
+//! LookHD (HDC-on-FPGA without graph awareness) — the Fig. 11 FPGA rows.
+//!
+//! GraphACT/HP-GNN are GCN *training* platforms on DDR4 boards: modelled
+//! as a dataflow roofline over the 2-layer GCN workload (same cost
+//! formula as the PyG GPU rows, FPGA efficiency, DDR4 bandwidth).
+//! LookHD accelerates plain HDC without the paper's three optimizations:
+//! modelled as the HDReason U50 simulation with `Optimizations::ALL_OFF`
+//! (no encode reuse, no balanced scheduling, no fused backward) — which is
+//! precisely what distinguishes HDReason from prior HDC accelerators
+//! (§2.4, Table 1 "Computation Reuse: No").
+
+use super::roofline::{latency, Efficiency, WorkloadCost};
+use super::{device, Device};
+use crate::config::{accel_preset, Optimizations};
+use crate::sim::{simulate_batch, BatchReport, SimOptions, Workload};
+
+#[derive(Debug, Clone)]
+pub struct AccelEstimate {
+    pub system: String,
+    pub device: &'static str,
+    pub latency_s: f64,
+    pub energy_j: f64,
+}
+
+/// GCN training batch on a GraphACT/HP-GNN-class CPU-FPGA platform.
+fn gcn_fpga(dev: &Device, system: &str, num_vertices: usize, num_edges: usize,
+            dim_in: usize, hidden: usize, batch: usize) -> AccelEstimate {
+    // same GCN workload as platform::gpu, dataflow efficiency, but a CPU-
+    // FPGA platform also pays host sampling/aggregation time (the papers'
+    // own bottleneck analyses): ~35% on top
+    let e_term = 6.0 * (num_edges * hidden) as f64;
+    let v_term = 6.0 * (num_vertices * dim_in * hidden) as f64;
+    let s_term = (batch * 256 * hidden) as f64 * 8.0; // sampled negatives
+    let cost = WorkloadCost {
+        flops: e_term + v_term + s_term,
+        bytes: 4.0
+            * (4.0 * (num_edges * hidden) as f64 + 8.0 * (num_vertices * hidden) as f64),
+    };
+    let t = latency(dev, cost, Efficiency::FPGA_DATAFLOW) * 1.35;
+    AccelEstimate {
+        system: system.to_string(),
+        device: dev.name,
+        latency_s: t,
+        energy_j: dev.tdp_w * t,
+    }
+}
+
+pub fn graphact(w: &Workload) -> AccelEstimate {
+    gcn_fpga(device("Alveo U200").unwrap(), "GraphACT", w.num_vertices, w.num_edges,
+             w.dim_in, w.dim_hd, w.batch)
+}
+
+pub fn hp_gnn(w: &Workload) -> AccelEstimate {
+    gcn_fpga(device("Alveo U250").unwrap(), "HP-GNN", w.num_vertices, w.num_edges,
+             w.dim_in, w.dim_hd, w.batch)
+}
+
+/// LookHD-class HDC accelerator: HDR workload on U50 hardware with every
+/// HDReason-specific optimization disabled.
+pub fn lookhd(w: &Workload) -> crate::Result<BatchReport> {
+    let mut cfg = accel_preset("u50")?;
+    cfg.name = "LookHD (U50)".into();
+    cfg.opts = Optimizations::ALL_OFF;
+    Ok(simulate_batch(&cfg, w, SimOptions::default()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wl() -> Workload {
+        Workload::paper("FB15K-237", 0.25, 0).unwrap()
+    }
+
+    #[test]
+    fn hp_gnn_beats_graphact() {
+        // U250 has more resources than U200 — HP-GNN is the stronger
+        // comparator in the paper too (3.5× vs 9× HDReason advantage)
+        let w = wl();
+        assert!(hp_gnn(&w).latency_s < graphact(&w).latency_s);
+    }
+
+    #[test]
+    fn hdreason_u50_beats_graphact_class_gcn() {
+        // the headline cross-model claim at U50 scale (paper: ~9×)
+        let w = Workload::paper("FB15K-237", 1.0, 0).unwrap();
+        let hdr = simulate_batch(&accel_preset("u50").unwrap(), &w, SimOptions::default());
+        let ga = graphact(&w);
+        let speedup = ga.latency_s / hdr.latency_s;
+        assert!(speedup > 2.0, "speedup only {speedup:.1}×");
+    }
+
+    #[test]
+    fn lookhd_is_slower_than_hdreason() {
+        let w = wl();
+        let hdr = simulate_batch(&accel_preset("u50").unwrap(), &w, SimOptions::default());
+        let lk = lookhd(&w).unwrap();
+        assert!(lk.latency_s > hdr.latency_s, "lookhd {} hdr {}", lk.latency_s, hdr.latency_s);
+    }
+}

@@ -1,0 +1,67 @@
+//! Device catalog: the eight platforms of Fig. 11 plus the FPGA boards
+//! (which are simulated by [`crate::sim`] rather than modelled here).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+    Fpga,
+}
+
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub name: &'static str,
+    pub kind: DeviceKind,
+    /// Peak f32 throughput, TFLOP/s.
+    pub peak_tflops: f64,
+    /// Peak memory bandwidth, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Device memory, GB.
+    pub mem_gb: f64,
+    /// Board/package power under load, W.
+    pub tdp_w: f64,
+}
+
+pub const DEVICES: &[Device] = &[
+    Device { name: "RTX 3090", kind: DeviceKind::Gpu, peak_tflops: 35.6, mem_bw_gbps: 936.2, mem_gb: 24.0, tdp_w: 350.0 },
+    Device { name: "RTX 4090", kind: DeviceKind::Gpu, peak_tflops: 82.6, mem_bw_gbps: 1008.0, mem_gb: 24.0, tdp_w: 450.0 },
+    Device { name: "A100", kind: DeviceKind::Gpu, peak_tflops: 19.5, mem_bw_gbps: 1555.0, mem_gb: 40.0, tdp_w: 400.0 },
+    Device { name: "i9-12900KF", kind: DeviceKind::Cpu, peak_tflops: 0.8, mem_bw_gbps: 76.8, mem_gb: 64.0, tdp_w: 125.0 },
+    Device { name: "TR 5955WX", kind: DeviceKind::Cpu, peak_tflops: 1.3, mem_bw_gbps: 204.8, mem_gb: 128.0, tdp_w: 280.0 },
+    // FPGA board-level envelopes (latency comes from crate::sim or
+    // platform::accelerators; these entries carry power/memory)
+    Device { name: "Alveo U50", kind: DeviceKind::Fpga, peak_tflops: 0.8, mem_bw_gbps: 460.0, mem_gb: 8.0, tdp_w: 36.1 },
+    Device { name: "Alveo U280", kind: DeviceKind::Fpga, peak_tflops: 1.5, mem_bw_gbps: 460.0, mem_gb: 8.0, tdp_w: 48.0 },
+    Device { name: "Alveo U200", kind: DeviceKind::Fpga, peak_tflops: 0.7, mem_bw_gbps: 38.0, mem_gb: 64.0, tdp_w: 45.0 }, // GraphACT uses 2 of 4 DDR4 channels
+    Device { name: "Alveo U250", kind: DeviceKind::Fpga, peak_tflops: 1.0, mem_bw_gbps: 77.0, mem_gb: 64.0, tdp_w: 55.0 },
+    Device { name: "Kintex7 KC705", kind: DeviceKind::Fpga, peak_tflops: 0.1, mem_bw_gbps: 12.8, mem_gb: 1.0, tdp_w: 8.0 },
+];
+
+pub fn device(name: &str) -> crate::Result<&'static Device> {
+    DEVICES
+        .iter()
+        .find(|d| d.name.eq_ignore_ascii_case(name))
+        .ok_or_else(|| anyhow::anyhow!("unknown device '{name}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_has_all_fig11_platforms() {
+        for name in ["RTX 3090", "RTX 4090", "A100", "i9-12900KF", "TR 5955WX",
+                     "Alveo U50", "Alveo U280", "Alveo U200", "Alveo U250",
+                     "Kintex7 KC705"] {
+            device(name).unwrap();
+        }
+        assert!(device("TPU v9").is_err());
+    }
+
+    #[test]
+    fn gpus_out_bandwidth_cpus() {
+        let gpu = device("RTX 3090").unwrap();
+        let cpu = device("i9-12900KF").unwrap();
+        assert!(gpu.mem_bw_gbps > 5.0 * cpu.mem_bw_gbps);
+    }
+}

@@ -1,0 +1,185 @@
+//! GPU latency/energy/memory model for HDR and GCN training batches,
+//! fitted to the paper's Table 6 RTX 3090 measurements.
+//!
+//! The fitted form for one HDR training batch is
+//!
+//!   t = a·B·V·D + b·E·D + c            (seconds)
+//!
+//! where the a-term is the (B × |V| × D) score/broadcast tensor chain
+//! (fwd + bwd, several unfused elementwise passes), the b-term is the
+//! gather/scatter memorization traffic (PyG's scatter kernels are atomics-
+//! bound), and c is fixed framework overhead (kernel launches, optimizer,
+//! python dispatch). Constants fitted on Table 6's four (dataset, latency)
+//! pairs for the 3090 and scaled to other devices by bandwidth/overhead
+//! ratios. A memory-pressure multiplier models the paper's YAGO3-10
+//! situation (22.5 GB on a 24 GB card ⇒ allocator thrashing).
+
+use super::{Device, DeviceKind};
+
+#[derive(Debug, Clone)]
+pub struct GpuEstimate {
+    pub device: &'static str,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub memory_bytes: f64,
+    /// Batch size actually used (may be capped by VRAM, like YAGO on 3090).
+    pub batch: usize,
+}
+
+/// Fitted 3090 constants (see module docs).
+const A_3090: f64 = 1.507e-6 / (128.0 * 256.0); // s per (B·V·D) unit
+const B_3090: f64 = 47.6e-9 / 256.0; // s per (E·D) unit
+const C_3090: f64 = 25.1e-3; // s fixed
+
+/// Activation-graph copies resident during fwd+bwd (fits Table 6 memory).
+const ACT_COPIES: f64 = 4.4;
+
+/// One HDR training batch on a GPU/CPU device.
+pub fn gpu_hdr_batch(
+    dev: &Device,
+    num_vertices: usize,
+    num_edges: usize,
+    num_relations: usize,
+    dim_in: usize,
+    dim_hd: usize,
+    batch: usize,
+) -> GpuEstimate {
+    // VRAM check: activations dominate; shrink batch like the paper did
+    // (YAGO3-10: 128 → 32 on the 3090)
+    let act = |b: usize| b as f64 * num_vertices as f64 * dim_hd as f64 * 4.0 * ACT_COPIES;
+    let fixed = ((num_vertices + num_relations) * dim_in * 4 * 3 // emb + adam
+        + 2 * num_vertices * dim_hd * 4) as f64; // H^v + M^v
+    let mut b = batch;
+    while b > 8 && (act(b) + fixed) > dev.mem_gb * 1e9 {
+        b /= 2;
+    }
+    let memory = act(b) + fixed;
+
+    // scale the fitted 3090 constants to this device
+    let bw_scale = 936.2 / dev.mem_bw_gbps;
+    let (a, bb, c) = match dev.kind {
+        DeviceKind::Gpu => (A_3090 * bw_scale, B_3090 * bw_scale, C_3090),
+        // CPUs: bandwidth-scaled tensor chain, scatter is actually *better*
+        // (no atomics penalty) but compute-bound; overhead smaller
+        DeviceKind::Cpu => (A_3090 * bw_scale * 1.6, B_3090 * bw_scale * 0.8, 8e-3),
+        DeviceKind::Fpga => unreachable!("FPGAs are simulated, not modelled"),
+    };
+    let mut latency = a * (b * num_vertices * dim_hd) as f64
+        + bb * (num_edges * dim_hd) as f64
+        + c;
+    // small batches under-occupy the GPU: the paper's YAGO3-10 run at
+    // batch 32 is ~1.8x slower than the linear model predicts
+    if b < batch {
+        latency *= (batch as f64 / b as f64).powf(0.4);
+    }
+    GpuEstimate {
+        device: dev.name,
+        latency_s: latency,
+        energy_j: dev.tdp_w * latency,
+        memory_bytes: memory,
+        batch: b,
+    }
+}
+
+/// One GCN (R-GCN/CompGCN-class, 2-layer) training batch on a GPU/CPU —
+/// used for the PyG rows of Fig. 11. `hidden` is the GNN hidden width.
+pub fn gpu_gcn_batch(
+    dev: &Device,
+    num_vertices: usize,
+    num_edges: usize,
+    dim_in: usize,
+    hidden: usize,
+    batch: usize,
+) -> GpuEstimate {
+    // message passing: E×h gather/scatter per layer per direction; dense
+    // transforms V×d×h; 2 layers, fwd+bwd ⇒ ~6 passes. Scoring is sampled
+    // (GCN training platforms use negative sampling, not 1-vs-all): B×256
+    // negatives per batch.
+    let e_term = 6.0 * (num_edges * hidden) as f64;
+    let v_term = 6.0 * (num_vertices * dim_in * hidden) as f64;
+    let s_term = (batch * 256 * hidden) as f64 * 8.0;
+    let flops = e_term + v_term + s_term;
+    // bytes: 4 feature passes over the edge list + 8 over the vertex
+    // features (gather + scatter + grads), f32
+    let bytes = 4.0 * (4.0 * (num_edges * hidden) as f64
+        + 8.0 * (num_vertices * hidden) as f64);
+    let eff = match dev.kind {
+        DeviceKind::Gpu => super::roofline::Efficiency::GPU_FRAMEWORK,
+        _ => super::roofline::Efficiency::CPU_FRAMEWORK,
+    };
+    let latency = super::roofline::latency(dev, super::roofline::WorkloadCost { flops, bytes }, eff);
+    let memory = (num_vertices * (dim_in + 2 * hidden)) as f64 * 4.0 * 3.0
+        + (num_edges * hidden) as f64 * 4.0;
+    GpuEstimate {
+        device: dev.name,
+        latency_s: latency,
+        energy_j: dev.tdp_w * latency,
+        memory_bytes: memory,
+        batch,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kg::generator::spec;
+    use crate::platform::device;
+
+    /// The model must land near Table 6's measured 3090 numbers.
+    #[test]
+    fn hdr_3090_latency_matches_table6() {
+        let cases = [
+            ("FB15K-237", 60.01e-3, 9608.0),
+            ("WN18RR", 91.01e-3, 23360.0),
+            ("WN18", 93.62e-3, 18690.0),
+            ("YAGO3-10", 219.6e-3, 22498.0),
+        ];
+        let dev = device("RTX 3090").unwrap();
+        for (name, want_lat, want_mem_mb) in cases {
+            let s = spec(name).unwrap();
+            let est = gpu_hdr_batch(dev, s.entities, s.train, s.relations, 96, 256, 128);
+            let ratio = est.latency_s / want_lat;
+            assert!(
+                (0.5..2.0).contains(&ratio),
+                "{name}: modelled {:.1} ms vs paper {:.1} ms",
+                est.latency_s * 1e3,
+                want_lat * 1e3
+            );
+            let mem_ratio = est.memory_bytes / 1e6 / want_mem_mb;
+            assert!(
+                (0.4..2.5).contains(&mem_ratio),
+                "{name}: modelled {:.0} MB vs paper {want_mem_mb} MB",
+                est.memory_bytes / 1e6
+            );
+        }
+    }
+
+    #[test]
+    fn yago_batch_is_capped_on_24gb_cards() {
+        let s = spec("YAGO3-10").unwrap();
+        let dev = device("RTX 3090").unwrap();
+        let est = gpu_hdr_batch(dev, s.entities, s.train, s.relations, 96, 256, 128);
+        assert!(est.batch < 128, "paper dropped YAGO to batch 32; got {}", est.batch);
+    }
+
+    #[test]
+    fn gpu_beats_cpu_on_hdr() {
+        let s = spec("FB15K-237").unwrap();
+        let gpu = gpu_hdr_batch(device("RTX 3090").unwrap(), s.entities, s.train, s.relations, 96, 256, 128);
+        let cpu = gpu_hdr_batch(device("i9-12900KF").unwrap(), s.entities, s.train, s.relations, 96, 256, 128);
+        assert!(cpu.latency_s > 3.0 * gpu.latency_s);
+    }
+
+    #[test]
+    fn gcn_gpu_batch_is_same_order_as_hdr() {
+        // per-batch GCN (sampled negatives) and HDR (1-vs-all scoring) are
+        // the same order of magnitude on GPU; the paper's end-to-end claim
+        // comes from GCN needing far more epochs + the FPGA side
+        let s = spec("FB15K-237").unwrap();
+        let dev = device("RTX 3090").unwrap();
+        let hdr = gpu_hdr_batch(dev, s.entities, s.train, s.relations, 96, 256, 128);
+        let gcn = gpu_gcn_batch(dev, s.entities, s.train, 96, 256, 128);
+        let ratio = gcn.latency_s / hdr.latency_s;
+        assert!((0.1..10.0).contains(&ratio), "ratio {ratio}");
+    }
+}

@@ -1,0 +1,19 @@
+//! Cross-platform cost models (paper §5.4, §5.6, Fig. 11, Table 6 GPU
+//! column).
+//!
+//! None of the comparison hardware (RTX 3090/4090, A100, two CPUs, the
+//! GraphACT/HP-GNN/LookHD FPGA systems) is available here, so each is a
+//! calibrated analytic model (DESIGN.md §1). GPUs/CPUs use a
+//! launch-overhead + bandwidth roofline fitted to the paper's Table 6 GPU
+//! measurements; comparator accelerators use roofline parameters derived
+//! from their publications — the same approximation method the HDReason
+//! authors state they used ("we approximate the performance ... based on
+//! state-of-the-art works").
+
+pub mod accelerators;
+pub mod catalog;
+pub mod gpu;
+pub mod roofline;
+
+pub use catalog::{device, Device, DeviceKind, DEVICES};
+pub use gpu::{gpu_gcn_batch, gpu_hdr_batch, GpuEstimate};

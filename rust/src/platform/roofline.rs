@@ -1,0 +1,66 @@
+//! Roofline latency estimation: t = max(flops / peak, bytes / bw) with an
+//! efficiency derate, plus a fixed software overhead. Shared by the CPU
+//! and comparator-accelerator models.
+
+use super::Device;
+
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadCost {
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Efficiency {
+    /// Fraction of peak compute achievable (kernel + framework).
+    pub compute: f64,
+    /// Fraction of peak bandwidth achievable.
+    pub bandwidth: f64,
+    /// Fixed per-batch software overhead, seconds.
+    pub overhead_s: f64,
+}
+
+impl Efficiency {
+    pub const GPU_FRAMEWORK: Efficiency =
+        Efficiency { compute: 0.35, bandwidth: 0.55, overhead_s: 20e-3 };
+    pub const CPU_FRAMEWORK: Efficiency =
+        Efficiency { compute: 0.30, bandwidth: 0.60, overhead_s: 4e-3 };
+    pub const FPGA_DATAFLOW: Efficiency =
+        Efficiency { compute: 0.60, bandwidth: 0.75, overhead_s: 1e-3 };
+}
+
+/// Latency in seconds.
+pub fn latency(dev: &Device, cost: WorkloadCost, eff: Efficiency) -> f64 {
+    let t_compute = cost.flops / (dev.peak_tflops * 1e12 * eff.compute);
+    let t_mem = cost.bytes / (dev.mem_bw_gbps * 1e9 * eff.bandwidth);
+    eff.overhead_s + t_compute.max(t_mem)
+}
+
+/// Energy in joules (board power × latency).
+pub fn energy(dev: &Device, latency_s: f64) -> f64 {
+    dev.tdp_w * latency_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::platform::device;
+
+    #[test]
+    fn memory_bound_workloads_track_bandwidth() {
+        let w = WorkloadCost { flops: 1e9, bytes: 10e9 };
+        let d3090 = device("RTX 3090").unwrap();
+        let a100 = device("A100").unwrap();
+        let e = Efficiency { compute: 1.0, bandwidth: 1.0, overhead_s: 0.0 };
+        let t1 = latency(d3090, w, e);
+        let t2 = latency(a100, w, e);
+        assert!(t2 < t1, "A100 HBM should win on memory-bound work");
+    }
+
+    #[test]
+    fn overhead_floors_small_workloads() {
+        let d = device("RTX 3090").unwrap();
+        let t = latency(d, WorkloadCost { flops: 1.0, bytes: 1.0 }, Efficiency::GPU_FRAMEWORK);
+        assert!((t - 20e-3).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,163 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. `artifacts/manifest.json` records, per artifact, the input
+//! shapes/dtypes, output arity, and the full preset configuration; the
+//! loader refuses to run against a mismatched [`crate::config::ModelConfig`]
+//! (XLA would otherwise fail deep inside execution — or worse, silently
+//! mis-slice buffers).
+
+use crate::config::ModelConfig;
+use crate::util::Json;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub artifact: String,
+    pub preset: String,
+    pub file: String,
+    /// (shape, dtype) per positional input.
+    pub inputs: Vec<(Vec<usize>, String)>,
+    pub num_outputs: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub jax_version: String,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> crate::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "{}: {e}. Run `make artifacts` to AOT-compile the python layer first.",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text)?;
+        let mut entries = Vec::new();
+        for a in j.get("artifacts").and_then(Json::as_arr).unwrap_or(&[]) {
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(|i| {
+                    let shape = i
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect();
+                    let dtype =
+                        i.get("dtype").and_then(Json::as_str).unwrap_or("float32").to_string();
+                    (shape, dtype)
+                })
+                .collect();
+            entries.push(ArtifactEntry {
+                artifact: a
+                    .get("artifact")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing name"))?
+                    .to_string(),
+                preset: a.get("preset").and_then(Json::as_str).unwrap_or("").to_string(),
+                file: a.get("file").and_then(Json::as_str).unwrap_or("").to_string(),
+                inputs,
+                num_outputs: a.get("num_outputs").and_then(Json::as_usize).unwrap_or(1),
+            });
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            jax_version: j.get("jax").and_then(Json::as_str).unwrap_or("?").to_string(),
+            entries,
+        })
+    }
+
+    /// Default artifact directory: $HDREASON_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("HDREASON_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn find(&self, artifact: &str, preset: &str) -> crate::Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.artifact == artifact && e.preset == preset)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "artifact '{artifact}' for preset '{preset}' not in manifest ({} entries)",
+                    self.entries.len()
+                )
+            })
+    }
+
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+
+    /// Cross-check an entry's recorded shapes against a model config.
+    pub fn check_config(&self, preset: &str, cfg: &ModelConfig) -> crate::Result<()> {
+        let e = self.find("forward", preset)?;
+        let ev_shape = &e.inputs[0].0;
+        if ev_shape != &[cfg.num_vertices, cfg.dim_in] {
+            anyhow::bail!(
+                "manifest e^v shape {ev_shape:?} != config ({}, {})",
+                cfg.num_vertices,
+                cfg.dim_in
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        let text = r#"{
+          "format": "hlo-text", "jax": "0.8.2",
+          "artifacts": [
+            {"artifact": "forward", "preset": "tiny", "file": "forward_tiny.hlo.txt",
+             "inputs": [{"shape": [256, 32], "dtype": "float32"},
+                        {"shape": [8, 32], "dtype": "float32"}],
+             "num_outputs": 1}
+          ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = crate::util::TempDir::new("man").unwrap();
+        fake_manifest(dir.path());
+        let m = Manifest::load(dir.path()).unwrap();
+        assert_eq!(m.jax_version, "0.8.2");
+        let e = m.find("forward", "tiny").unwrap();
+        assert_eq!(e.inputs[0].0, vec![256, 32]);
+        assert!(m.find("forward", "small").is_err());
+        assert!(m.find("nope", "tiny").is_err());
+    }
+
+    #[test]
+    fn config_check_catches_mismatch() {
+        let dir = crate::util::TempDir::new("man").unwrap();
+        fake_manifest(dir.path());
+        let m = Manifest::load(dir.path()).unwrap();
+        let ok = crate::config::model_preset("tiny").unwrap();
+        m.check_config("tiny", &ok).unwrap();
+        let mut bad = ok.clone();
+        bad.num_vertices = 512;
+        assert!(m.check_config("tiny", &bad).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let dir = crate::util::TempDir::new("man").unwrap();
+        let err = Manifest::load(dir.path()).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,82 @@
+//! Thin PJRT client wrapper: one CPU client, HLO-text loading, compiled-
+//! executable caching. Adapted from /opt/xla-example/load_hlo.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// A compiled computation ready to execute.
+pub struct LoadedComputation {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+    pub num_outputs: usize,
+}
+
+impl LoadedComputation {
+    /// Execute with positional literal inputs; returns the flattened tuple
+    /// outputs (the AOT path lowers with return_tuple=True).
+    pub fn run(&self, inputs: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != self.num_outputs {
+            anyhow::bail!("{}: expected {} outputs, got {}", self.name, self.num_outputs, outs.len());
+        }
+        Ok(outs)
+    }
+}
+
+/// The process-wide PJRT engine: client + executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, Arc<LoadedComputation>>>,
+}
+
+impl Engine {
+    pub fn cpu() -> crate::Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu()?, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    pub fn load_hlo_text(
+        &self,
+        path: &Path,
+        name: &str,
+        num_outputs: usize,
+    ) -> crate::Result<Arc<LoadedComputation>> {
+        let key = path.display().to_string();
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let loaded =
+            Arc::new(LoadedComputation { name: name.to_string(), exe, num_outputs });
+        self.cache.lock().unwrap().insert(key, loaded.clone());
+        Ok(loaded)
+    }
+}
+
+/// f32 row-major matrix → Literal of the given dims.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> crate::Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape {dims:?} != len {}", data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// i32 vector → Literal.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> crate::Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape {dims:?} != len {}", data.len());
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+pub fn literal_scalar_f32(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}

@@ -1,0 +1,236 @@
+//! HDReason artifact executor: marshals model state + graph + query
+//! batches into PJRT literals and runs the five artifacts of one preset.
+
+use super::artifacts::Manifest;
+use super::client::{literal_f32, literal_i32, literal_scalar_f32, Engine, LoadedComputation};
+use crate::config::ModelConfig;
+use crate::kg::KnowledgeGraph;
+use crate::model::ModelState;
+use std::sync::Arc;
+
+/// Padded edge arrays in artifact layout: (src, rel, dst) int32 of length
+/// |E|, plus an f32 validity mask (the static-shape padding contract).
+#[derive(Debug, Clone)]
+pub struct EdgeArrays {
+    pub src: Vec<i32>,
+    pub rel: Vec<i32>,
+    pub dst: Vec<i32>,
+    pub mask: Vec<f32>,
+    pub live: usize,
+}
+
+impl EdgeArrays {
+    /// Build from a KG's training split, padding (or truncating — with a
+    /// warning in the count) to `cfg.num_edges`.
+    pub fn from_kg(kg: &KnowledgeGraph, cfg: &ModelConfig) -> Self {
+        let e = cfg.num_edges;
+        let live = kg.train.len().min(e);
+        let mut out = Self {
+            src: vec![0; e],
+            rel: vec![0; e],
+            dst: vec![0; e],
+            mask: vec![0.0; e],
+            live,
+        };
+        for (i, t) in kg.train.iter().take(live).enumerate() {
+            out.src[i] = t.src as i32;
+            out.rel[i] = t.rel as i32;
+            out.dst[i] = t.dst as i32;
+            out.mask[i] = 1.0;
+        }
+        out
+    }
+}
+
+/// Outputs of one train_step execution.
+#[derive(Debug)]
+pub struct TrainStepOutput {
+    pub loss: f32,
+    pub grad_ev: Vec<f32>,
+    pub grad_er: Vec<f32>,
+}
+
+/// All compiled executables for one preset + the marshalling glue.
+pub struct HdrRuntime {
+    pub cfg: ModelConfig,
+    engine: Engine,
+    forward: Arc<LoadedComputation>,
+    train_step: Arc<LoadedComputation>,
+    encode: Arc<LoadedComputation>,
+    memorize: Arc<LoadedComputation>,
+    score: Arc<LoadedComputation>,
+}
+
+impl HdrRuntime {
+    /// Load every artifact of `cfg.preset` from `manifest`.
+    pub fn load(manifest: &Manifest, cfg: &ModelConfig) -> crate::Result<Self> {
+        manifest.check_config(&cfg.preset, cfg)?;
+        let engine = Engine::cpu()?;
+        let mut get = |name: &str| -> crate::Result<Arc<LoadedComputation>> {
+            let e = manifest.find(name, &cfg.preset)?;
+            engine.load_hlo_text(&manifest.path_of(e), name, e.num_outputs)
+        };
+        let forward = get("forward")?;
+        let train_step = get("train_step")?;
+        let encode = get("encode")?;
+        let memorize = get("memorize")?;
+        let score = get("score")?;
+        Ok(Self { cfg: cfg.clone(), engine, forward, train_step, encode, memorize, score })
+    }
+
+    pub fn platform(&self) -> String {
+        self.engine.platform()
+    }
+
+    fn graph_literals(&self, edges: &EdgeArrays) -> crate::Result<[xla::Literal; 4]> {
+        let e = self.cfg.num_edges as i64;
+        Ok([
+            literal_i32(&edges.src, &[e])?,
+            literal_i32(&edges.rel, &[e])?,
+            literal_i32(&edges.dst, &[e])?,
+            literal_f32(&edges.mask, &[e])?,
+        ])
+    }
+
+    /// Full forward pass: (B,) queries → row-major (B, |V|) logits.
+    pub fn forward(
+        &self,
+        m: &ModelState,
+        edges: &EdgeArrays,
+        q_subj: &[i32],
+        q_rel: &[i32],
+        bias: f32,
+    ) -> crate::Result<Vec<f32>> {
+        let c = &self.cfg;
+        anyhow::ensure!(q_subj.len() == c.batch && q_rel.len() == c.batch, "batch mismatch");
+        let [src, rel, dst, mask] = self.graph_literals(edges)?;
+        let outs = self.forward.run(&[
+            literal_f32(&m.ev, &[c.num_vertices as i64, c.dim_in as i64])?,
+            literal_f32(&m.er, &[c.num_relations as i64, c.dim_in as i64])?,
+            literal_f32(&m.hb, &[c.dim_in as i64, c.dim_hd as i64])?,
+            src,
+            rel,
+            dst,
+            mask,
+            literal_i32(q_subj, &[c.batch as i64])?,
+            literal_i32(q_rel, &[c.batch as i64])?,
+            literal_scalar_f32(bias),
+        ])?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// One training step: loss + embedding gradients (Eqs. 11/12).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        m: &ModelState,
+        edges: &EdgeArrays,
+        q_subj: &[i32],
+        q_rel: &[i32],
+        labels: &[f32],
+        bias: f32,
+        smoothing: f32,
+    ) -> crate::Result<TrainStepOutput> {
+        let c = &self.cfg;
+        anyhow::ensure!(labels.len() == c.batch * c.num_vertices, "labels shape");
+        let [src, rel, dst, mask] = self.graph_literals(edges)?;
+        let outs = self.train_step.run(&[
+            literal_f32(&m.ev, &[c.num_vertices as i64, c.dim_in as i64])?,
+            literal_f32(&m.er, &[c.num_relations as i64, c.dim_in as i64])?,
+            literal_f32(&m.hb, &[c.dim_in as i64, c.dim_hd as i64])?,
+            src,
+            rel,
+            dst,
+            mask,
+            literal_i32(q_subj, &[c.batch as i64])?,
+            literal_i32(q_rel, &[c.batch as i64])?,
+            literal_f32(labels, &[c.batch as i64, c.num_vertices as i64])?,
+            literal_scalar_f32(bias),
+            literal_scalar_f32(smoothing),
+        ])?;
+        Ok(TrainStepOutput {
+            loss: outs[0].get_first_element::<f32>()?,
+            grad_ev: outs[1].to_vec::<f32>()?,
+            grad_er: outs[2].to_vec::<f32>()?,
+        })
+    }
+
+    /// Standalone Eq. 5 encode: (n, d) rows → (n, D) hypervectors. `rows`
+    /// must fill the preset's |V| (pad with zeros for partial batches).
+    pub fn encode_vertices(&self, ev: &[f32], hb: &[f32]) -> crate::Result<Vec<f32>> {
+        let c = &self.cfg;
+        let outs = self.encode.run(&[
+            literal_f32(ev, &[c.num_vertices as i64, c.dim_in as i64])?,
+            literal_f32(hb, &[c.dim_in as i64, c.dim_hd as i64])?,
+        ])?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// Standalone Eq. 7 memorize: hypervectors + edges → M^v.
+    pub fn memorize(
+        &self,
+        hv: &[f32],
+        hr: &[f32],
+        edges: &EdgeArrays,
+    ) -> crate::Result<Vec<f32>> {
+        let c = &self.cfg;
+        let [src, rel, dst, mask] = self.graph_literals(edges)?;
+        let outs = self.memorize.run(&[
+            literal_f32(hv, &[c.num_vertices as i64, c.dim_hd as i64])?,
+            literal_f32(hr, &[c.num_relations as i64, c.dim_hd as i64])?,
+            src,
+            rel,
+            dst,
+            mask,
+        ])?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// Standalone Eq. 10 score: M^v + queries → (B, |V|) logits.
+    pub fn score(
+        &self,
+        mv: &[f32],
+        hr: &[f32],
+        q_subj: &[i32],
+        q_rel: &[i32],
+        bias: f32,
+    ) -> crate::Result<Vec<f32>> {
+        let c = &self.cfg;
+        let outs = self.score.run(&[
+            literal_f32(mv, &[c.num_vertices as i64, c.dim_hd as i64])?,
+            literal_f32(hr, &[c.num_relations as i64, c.dim_hd as i64])?,
+            literal_i32(q_subj, &[c.batch as i64])?,
+            literal_i32(q_rel, &[c.batch as i64])?,
+            literal_scalar_f32(bias),
+        ])?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model_preset;
+    use crate::kg::{generator, Triple};
+
+    #[test]
+    fn edge_arrays_pad_and_mask() {
+        let cfg = model_preset("tiny").unwrap();
+        let mut kg = generator::random_for_preset(&cfg, 0.5, 0);
+        kg.train.truncate(100);
+        let e = EdgeArrays::from_kg(&kg, &cfg);
+        assert_eq!(e.src.len(), 1024);
+        assert_eq!(e.live, 100);
+        assert_eq!(e.mask.iter().filter(|&&m| m == 1.0).count(), 100);
+        assert!(e.mask[100..].iter().all(|&m| m == 0.0));
+    }
+
+    #[test]
+    fn edge_arrays_truncate_overfull() {
+        let cfg = model_preset("tiny").unwrap();
+        let mut kg = crate::kg::KnowledgeGraph::new("big", 256, 8);
+        kg.train = (0..2000).map(|i| Triple::new(i % 256, i % 8, (i + 1) % 256)).collect();
+        let e = EdgeArrays::from_kg(&kg, &cfg);
+        assert_eq!(e.live, 1024);
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
+//! the rust hot path (the architecture's L3 ↔ L2 boundary).
+//!
+//! Python runs only at build time (`make artifacts`); this module makes the
+//! binary self-contained afterwards. The interchange format is HLO *text*:
+//! the bundled xla_extension 0.5.1 rejects jax ≥ 0.5 protos (64-bit
+//! instruction ids), while the text parser reassigns ids cleanly.
+
+mod artifacts;
+mod client;
+mod executor;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use client::{Engine, LoadedComputation};
+pub use executor::{EdgeArrays, HdrRuntime, TrainStepOutput};

@@ -1,0 +1,135 @@
+//! Offload batch structures — the data (B_d) and control (B_c) buffers the
+//! host CPU fills and DMA-transfers to the FPGA kernel (paper §4.2.1).
+
+/// How a vertex's hypervector reaches the kernel: raw embedding to encode,
+/// or an HBM address of an already-encoded hypervector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VertexRef {
+    /// Vertex not yet encoded: its original-space embedding goes into B_d
+    /// and the Encoder IP runs (one systolic-array pass).
+    Raw { vertex: u32, hbm_addr: u64 },
+    /// Already encoded: only the HBM address (f1) travels.
+    Encoded { vertex: u32, hbm_addr: u64 },
+}
+
+impl VertexRef {
+    pub fn vertex(&self) -> u32 {
+        match self {
+            Self::Raw { vertex, .. } | Self::Encoded { vertex, .. } => *vertex,
+        }
+    }
+
+    pub fn hbm_addr(&self) -> u64 {
+        match self {
+            Self::Raw { hbm_addr, .. } | Self::Encoded { hbm_addr, .. } => *hbm_addr,
+        }
+    }
+
+    pub fn needs_encode(&self) -> bool {
+        matches!(self, Self::Raw { .. })
+    }
+}
+
+/// One control word (f2): a neighbor reference to bind with a relation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ControlFlag {
+    pub src: VertexRef,
+    pub rel: u32,
+}
+
+/// One N_c-wide wave of vertex aggregations: the unit of FPGA offload.
+#[derive(Debug, Clone, Default)]
+pub struct OffloadBatch {
+    /// (target vertex, its neighbor control words).
+    pub targets: Vec<(VertexRef, Vec<ControlFlag>)>,
+}
+
+impl OffloadBatch {
+    pub fn with_capacity(n: usize) -> Self {
+        Self { targets: Vec::with_capacity(n) }
+    }
+
+    pub fn push(&mut self, v: VertexRef, flags: Vec<ControlFlag>) {
+        self.targets.push((v, flags));
+    }
+
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.targets.is_empty()
+    }
+
+    /// Degree of the wave = its longest neighbor list (the pipeline depth
+    /// the Memorization IPs run for).
+    pub fn wave_degree(&self) -> usize {
+        self.targets.iter().map(|(_, f)| f.len()).max().unwrap_or(0)
+    }
+
+    /// Total edge work in the wave.
+    pub fn edges(&self) -> usize {
+        self.targets.iter().map(|(_, f)| f.len()).sum()
+    }
+
+    /// Raw embeddings travelling in B_d (each d × 4 bytes on the wire).
+    pub fn raw_count(&self) -> usize {
+        let mut n = 0;
+        for (v, flags) in &self.targets {
+            n += v.needs_encode() as usize;
+            n += flags.iter().filter(|f| f.src.needs_encode()).count();
+        }
+        n
+    }
+
+    /// Every vertex id referenced by the wave, targets first then
+    /// neighbors — the exact access stream the dispatcher cache sees.
+    pub fn access_stream(&self) -> impl Iterator<Item = u32> + '_ {
+        self.targets.iter().flat_map(|(v, flags)| {
+            std::iter::once(v.vertex()).chain(flags.iter().map(|f| f.src.vertex()))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch() -> OffloadBatch {
+        let mut b = OffloadBatch::with_capacity(2);
+        b.push(
+            VertexRef::Raw { vertex: 0, hbm_addr: 0 },
+            vec![
+                ControlFlag { src: VertexRef::Encoded { vertex: 5, hbm_addr: 64 }, rel: 1 },
+                ControlFlag { src: VertexRef::Raw { vertex: 6, hbm_addr: 128 }, rel: 0 },
+            ],
+        );
+        b.push(VertexRef::Encoded { vertex: 1, hbm_addr: 192 }, vec![]);
+        b
+    }
+
+    #[test]
+    fn wave_shape_metrics() {
+        let b = batch();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.wave_degree(), 2);
+        assert_eq!(b.edges(), 2);
+        assert_eq!(b.raw_count(), 2); // target 0 + neighbor 6
+    }
+
+    #[test]
+    fn access_stream_order() {
+        let b = batch();
+        let stream: Vec<u32> = b.access_stream().collect();
+        assert_eq!(stream, vec![0, 5, 6, 1]);
+    }
+
+    #[test]
+    fn vertex_ref_accessors() {
+        let r = VertexRef::Raw { vertex: 3, hbm_addr: 77 };
+        assert_eq!(r.vertex(), 3);
+        assert_eq!(r.hbm_addr(), 77);
+        assert!(r.needs_encode());
+        assert!(!VertexRef::Encoded { vertex: 3, hbm_addr: 77 }.needs_encode());
+    }
+}

@@ -1,0 +1,62 @@
+//! PCIe DMA model for host↔kernel transfers (the Xilinx Vitis PCIe DMA of
+//! §5.1). Fixed per-descriptor latency plus streaming at effective link
+//! bandwidth; the CPU-side time in Fig. 8(d) is dominated by these
+//! transfers plus host compute.
+
+use crate::config::AcceleratorConfig;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DmaStats {
+    pub to_device_bytes: u64,
+    pub from_device_bytes: u64,
+    pub transfers: u64,
+}
+
+pub struct Dma {
+    bytes_per_sec: f64,
+    /// Per-transfer setup latency (descriptor + doorbell), seconds.
+    setup_s: f64,
+    pub stats: DmaStats,
+}
+
+impl Dma {
+    pub fn new(cfg: &AcceleratorConfig) -> Self {
+        Self {
+            bytes_per_sec: cfg.pcie_gbps * 1e9,
+            setup_s: 5e-6, // ~5 µs per DMA descriptor, typical for XDMA
+            stats: DmaStats::default(),
+        }
+    }
+
+    /// Host → device transfer; returns seconds.
+    pub fn to_device(&mut self, bytes: u64) -> f64 {
+        self.stats.to_device_bytes += bytes;
+        self.stats.transfers += 1;
+        self.setup_s + bytes as f64 / self.bytes_per_sec
+    }
+
+    /// Device → host transfer; returns seconds.
+    pub fn from_device(&mut self, bytes: u64) -> f64 {
+        self.stats.from_device_bytes += bytes;
+        self.stats.transfers += 1;
+        self.setup_s + bytes as f64 / self.bytes_per_sec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::accel_preset;
+
+    #[test]
+    fn big_transfers_amortize_setup() {
+        let cfg = accel_preset("u50").unwrap();
+        let mut dma = Dma::new(&cfg);
+        let t_small = dma.to_device(64);
+        let t_big = dma.to_device(64 << 20);
+        // 64 MB at 12 GB/s ≈ 5.6 ms » setup; 64 B ≈ setup only
+        assert!(t_small < 6e-6);
+        assert!(t_big > 5e-3 && t_big < 7e-3, "{t_big}");
+        assert_eq!(dma.stats.transfers, 2);
+    }
+}

@@ -1,0 +1,94 @@
+//! Encoder IP cycle model (paper §4.2.2, Fig. 5(a-b)).
+//!
+//! The Encoder is a `sa_rows × sa_cols` systolic array computing
+//! H = tanh(e · H^B): each vertex embedding (1 × d) streams against the
+//! (d × D) base matrix. One pass produces an `sa_cols`-wide slice of the
+//! output hypervector for `sa_rows` vertices concurrently, so a batch of
+//! `n` vertices costs roughly
+//!
+//!   ceil(n / rows) × ceil(D / cols) × (d + fill)   cycles
+//!
+//! where `fill = rows + cols` is the systolic fill/drain latency. The tanh
+//! kernel stage is pipelined behind the array (adds fill, not throughput).
+
+use crate::config::AcceleratorConfig;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct EncoderStats {
+    pub vertices_encoded: u64,
+    pub cycles: f64,
+}
+
+pub struct EncoderIp {
+    rows: usize,
+    cols: usize,
+    pub stats: EncoderStats,
+}
+
+impl EncoderIp {
+    pub fn new(cfg: &AcceleratorConfig) -> Self {
+        Self { rows: cfg.sa_rows, cols: cfg.sa_cols, stats: EncoderStats::default() }
+    }
+
+    /// Cycles to encode `n` embeddings of shape d → D.
+    pub fn encode(&mut self, n: usize, dim_in: usize, dim_hd: usize) -> f64 {
+        if n == 0 {
+            return 0.0;
+        }
+        let passes = n.div_ceil(self.rows) as f64;
+        let col_tiles = dim_hd.div_ceil(self.cols) as f64;
+        let fill = (self.rows + self.cols) as f64;
+        let cycles = passes * col_tiles * (dim_in as f64 + fill);
+        self.stats.vertices_encoded += n as u64;
+        self.stats.cycles += cycles;
+        cycles
+    }
+
+    /// Peak MACs/cycle of the array (for the resource/power models).
+    pub fn peak_macs(&self) -> usize {
+        self.rows * self.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::accel_preset;
+
+    #[test]
+    fn cycles_scale_linearly_in_vertices() {
+        let cfg = accel_preset("u50").unwrap();
+        let mut ip = EncoderIp::new(&cfg);
+        let c1 = ip.encode(320, 96, 256);
+        let c2 = ip.encode(640, 96, 256);
+        assert!((c2 / c1 - 2.0).abs() < 0.05, "{c1} {c2}");
+    }
+
+    #[test]
+    fn wider_array_is_faster() {
+        let u50 = accel_preset("u50").unwrap();
+        let u280 = accel_preset("u280").unwrap();
+        let c50 = EncoderIp::new(&u50).encode(1000, 96, 256);
+        let c280 = EncoderIp::new(&u280).encode(1000, 96, 256);
+        assert!(c280 < c50, "{c280} vs {c50}");
+    }
+
+    #[test]
+    fn zero_vertices_zero_cycles() {
+        let cfg = accel_preset("u50").unwrap();
+        let mut ip = EncoderIp::new(&cfg);
+        assert_eq!(ip.encode(0, 96, 256), 0.0);
+    }
+
+    #[test]
+    fn utilization_sane_for_full_batches() {
+        // a full wave should hit > 30% MAC utilization (fill overhead only)
+        let cfg = accel_preset("u50").unwrap();
+        let mut ip = EncoderIp::new(&cfg);
+        let n = 4096;
+        let cycles = ip.encode(n, 96, 256);
+        let macs_needed = (n * 96 * 256) as f64;
+        let util = macs_needed / (cycles * ip.peak_macs() as f64);
+        assert!(util > 0.3 && util <= 1.0, "util {util}");
+    }
+}

@@ -1,0 +1,239 @@
+//! The composed accelerator simulation: one full training batch through the
+//! CPU-FPGA platform of Fig. 3.
+//!
+//! Sequence per batch (the paper's end-to-end training step):
+//!   1. CPU: density-aware scheduling + offload buffer construction +
+//!      PCIe DMA of raw embeddings / control words.
+//!   2. FPGA: Encoder IP (only unencoded vertices when reuse is on).
+//!   3. FPGA: Dispatcher + N_c Memorization IPs over the offload waves.
+//!   4. FPGA: Score Function IP over the query batch.
+//!   5. CPU: δ = ∂L/∂N (Eq. 15) + sigmoid post-processing.
+//!   6. FPGA: Training IP chunk pipeline → gradients back to host.
+//!   7. CPU: optimizer update of e^v / e^r.
+//!
+//! The three §4 optimizations are toggled through
+//! [`crate::config::Optimizations`]; the ablation of Fig. 8(c) is exactly
+//! these flags.
+
+use super::dma::Dma;
+use super::encoder_ip::EncoderIp;
+use super::hbm::Hbm;
+use super::memorize_ip::MemorizeIp;
+use super::power;
+use super::report::{BatchReport, PhaseBreakdown};
+use super::score_ip::ScoreIp;
+use super::training_ip::TrainingIp;
+use super::workload::Workload;
+use crate::cache::HvCache;
+use crate::config::AcceleratorConfig;
+use crate::scheduler::Scheduler;
+
+/// Simulation knobs beyond the accelerator config.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    /// Effective host compute throughput for Eq. 15 + updates (GFLOP/s).
+    /// Default 50 ≈ an i9-12900KF with AVX2 across a few cores.
+    pub host_gflops: f64,
+    /// Epoch warm-up: number of *prior* batches already run (a warm
+    /// address map + cache; 0 = cold start, first epoch).
+    pub warm_batches: usize,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        Self { host_gflops: 50.0, warm_batches: 1 }
+    }
+}
+
+/// Simulate one training batch; `sched` and `cache` persist across batches
+/// (encode-reuse and cache warmth live there).
+pub struct AcceleratorSim {
+    pub cfg: AcceleratorConfig,
+    pub sched: Scheduler,
+    pub cache: HvCache,
+    opts: SimOptions,
+}
+
+impl AcceleratorSim {
+    pub fn new(cfg: &AcceleratorConfig, w: &Workload, opts: SimOptions) -> Self {
+        let sched = Scheduler::new(cfg.n_c, w.hv_bytes(), cfg.opts.balanced_schedule);
+        let cache = HvCache::new(
+            cfg.uram_hv_capacity(w.dim_hd).max(1),
+            w.hv_bytes(),
+            cfg.replacement,
+            w.num_vertices as u64, // deterministic but workload-dependent seed
+        );
+        Self { cfg: cfg.clone(), sched, cache, opts }
+    }
+
+    /// Run one training batch, returning the phase breakdown report.
+    pub fn run_batch(&mut self, w: &Workload) -> BatchReport {
+        let cfg = &self.cfg;
+        let cps = cfg.cycles_per_sec();
+        let mut hbm = Hbm::new(cfg);
+        let mut dma = Dma::new(cfg);
+        let mut enc = EncoderIp::new(cfg);
+        let mut mem = MemorizeIp::new(cfg);
+        let mut score = ScoreIp::new(cfg);
+        let mut train = TrainingIp::new(cfg);
+
+        let reuse = cfg.opts.reuse_encoded;
+        let fused = cfg.opts.fused_backward;
+
+        // ---- phase 1+2+3: memorization (scheduler + encode + aggregate)
+        let pre_encoded = self.sched.stats.encoded_vertices;
+        let waves = self.sched.schedule_epoch(&w.csr, reuse);
+        let mut mem_cycles = 0.0;
+        let mut raw_count = 0usize;
+        for wave in &waves {
+            raw_count += wave.raw_count();
+            mem_cycles += mem.process_wave(wave, &mut self.cache, &mut hbm, w.dim_hd, fused);
+        }
+        let newly_encoded = self.sched.stats.encoded_vertices - pre_encoded;
+        let enc_cycles = enc.encode(newly_encoded.max(raw_count.min(1) * 0), w.dim_in, w.dim_hd)
+            + enc.encode(raw_count.saturating_sub(newly_encoded), w.dim_in, w.dim_hd);
+        let mem_s = (mem_cycles + enc_cycles) / cps;
+
+        // ---- phase 4: score
+        let score_cycles = score.score_batch(w.batch, w.num_vertices, w.dim_hd, &mut hbm, fused);
+        let score_s = score_cycles / cps;
+
+        // ---- phase 6: training pipeline
+        let pcie_bpc = cfg.pcie_gbps * 1e9 / cps;
+        let train_cycles =
+            train.backward(w.batch, w.num_vertices, w.dim_in, w.dim_hd, &mut hbm, fused, pcie_bpc);
+        let train_s = train_cycles / cps;
+
+        // ---- CPU phases (1, 5, 7): host compute + DMA
+        let host_flops = {
+            // Eq. 15 δ: sigmoid + BCE grad over B × V scores, ~6 flops each
+            let delta = 6.0 * (w.batch * w.num_vertices) as f64;
+            // optimizer update over touched embeddings (Adam ≈ 10 flops)
+            let update = 10.0 * ((w.num_vertices + w.num_relations) * w.dim_in) as f64;
+            // scheduler bookkeeping ≈ 30 ops per edge
+            let sched_ops = 30.0 * w.num_edges as f64;
+            delta + update + sched_ops
+        };
+        let host_s = host_flops / (self.opts.host_gflops * 1e9);
+        // DMA in the CPU phase: raw embeddings out + scores back. The δ
+        // chunks and returned gradients are *pipelined inside the Training
+        // IP* (Fig. 7 stages 1/5), so they are already counted there.
+        let dma_s = dma.to_device((raw_count * w.emb_bytes()) as u64)
+            + dma.from_device((w.batch * w.num_vertices * 4) as u64);
+        let cpu_s = host_s + dma_s;
+
+        let phases = PhaseBreakdown { cpu_s, mem_s, score_s, train_s };
+        let latency_s = phases.total_s();
+
+        // power: utilization = share of total each IP is active
+        let hbm_gbps = hbm.total_bytes() as f64 / latency_s / 1e9;
+        let p = power::power(
+            cfg,
+            (enc_cycles / cps / latency_s).min(1.0),
+            (mem_cycles / cps / latency_s).min(1.0),
+            (score_s / latency_s).min(1.0),
+            (train_s / latency_s).min(1.0),
+            hbm_gbps.min(cfg.hbm_bw_bytes() / 1e9),
+        );
+        let power_w = p.total();
+
+        // device memory (Table 6 column): embeddings (f32) + M^v (f32) +
+        // H^v (fix-8, the low-bit storage §5.2 enables) + the stashed
+        // forward-path gradients (sign/packed, ~2 bytes per element)
+        let memory_bytes = ((w.num_vertices + w.num_relations) * w.emb_bytes()
+            + w.num_vertices * w.hv_bytes()        // M^v f32
+            + w.num_vertices * w.dim_hd            // H^v fix-8
+            + if fused { 2 * w.num_vertices * w.dim_hd } else { 0 })
+            as u64;
+
+        BatchReport {
+            workload: w.name.clone(),
+            accelerator: cfg.name.clone(),
+            phases,
+            latency_s,
+            power_w,
+            energy_j: power_w * latency_s,
+            memory_bytes,
+            cache: self.cache.stats,
+            hbm_bytes: hbm.total_bytes(),
+            encoded_vertices: newly_encoded,
+        }
+    }
+}
+
+/// Convenience: warm up `opts.warm_batches` then measure one batch.
+pub fn simulate_batch(cfg: &AcceleratorConfig, w: &Workload, opts: SimOptions) -> BatchReport {
+    let mut sim = AcceleratorSim::new(cfg, w, opts);
+    for _ in 0..opts.warm_batches {
+        sim.run_batch(w);
+    }
+    sim.run_batch(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{accel_preset, Optimizations};
+
+    fn small_workload() -> Workload {
+        Workload::paper("WN18RR", 0.05, 0).unwrap()
+    }
+
+    #[test]
+    fn all_optimizations_beat_none() {
+        let w = small_workload();
+        let on = simulate_batch(&accel_preset("u50").unwrap(), &w, SimOptions::default());
+        let mut cfg = accel_preset("u50").unwrap();
+        cfg.opts = Optimizations::ALL_OFF;
+        let off = simulate_batch(&cfg, &w, SimOptions::default());
+        assert!(
+            off.latency_s > 1.5 * on.latency_s,
+            "opts-on {} vs opts-off {}",
+            on.latency_s,
+            off.latency_s
+        );
+    }
+
+    #[test]
+    fn memorization_dominates_breakdown() {
+        // Fig. 8(d): Mem is the largest FPGA phase at paper-like scale
+        let w = Workload::paper("WN18RR", 1.0, 0).unwrap();
+        let r = simulate_batch(
+            &accel_preset("u50").unwrap(),
+            &w,
+            SimOptions { warm_batches: 1, ..Default::default() },
+        );
+        let shares = r.phases.shares();
+        assert!(shares[1] > 0.35, "mem share {:.2} of {:?}", shares[1], shares);
+        // training is small thanks to fwd/bwd co-optimization
+        assert!(shares[3] < shares[1], "train {} mem {}", shares[3], shares[1]);
+    }
+
+    #[test]
+    fn u280_outperforms_u50() {
+        let w = small_workload();
+        let r50 = simulate_batch(&accel_preset("u50").unwrap(), &w, SimOptions::default());
+        let r280 = simulate_batch(&accel_preset("u280").unwrap(), &w, SimOptions::default());
+        assert!(r280.latency_s < r50.latency_s);
+    }
+
+    #[test]
+    fn warm_batches_encode_nothing_new() {
+        let w = small_workload();
+        let cfg = accel_preset("u50").unwrap();
+        let mut sim = AcceleratorSim::new(&cfg, &w, SimOptions::default());
+        let first = sim.run_batch(&w);
+        let second = sim.run_batch(&w);
+        assert!(first.encoded_vertices > 0);
+        assert_eq!(second.encoded_vertices, 0, "reuse failed");
+        assert!(second.latency_s <= first.latency_s);
+    }
+
+    #[test]
+    fn energy_is_power_times_latency() {
+        let w = small_workload();
+        let r = simulate_batch(&accel_preset("u50").unwrap(), &w, SimOptions::default());
+        assert!((r.energy_j - r.power_w * r.latency_s).abs() < 1e-12);
+        assert!(r.power_w > 10.0 && r.power_w < 80.0, "power {}", r.power_w);
+    }
+}

@@ -1,0 +1,142 @@
+//! Memorization Computing IP cycle model (paper §4.2.2, Fig. 5(c)) plus the
+//! Dispatcher's on-chip store behaviour.
+//!
+//! N_c IPs run in lock-step over an offload wave; each IP aggregates one
+//! vertex's neighbor list, one bound neighbor per `ceil(D / cu_lanes)`
+//! cycles (the CU array binds `cu_lanes` hypervector elements per cycle).
+//! A wave therefore takes `wave_degree × ceil(D / cu_lanes)` compute
+//! cycles. Every neighbor reference first goes through the Dispatcher's
+//! UltraRAM cache; misses stall on an HBM fetch of one hypervector (the
+//! traffic Fig. 10 plots against UltraRAM budget and policy).
+//!
+//! When `fused_backward` is on, the CUs emit the Eq. 13 gradient
+//! (Σ_r A_r E^r) in the same pass — zero extra cycles, but gradient
+//! write-back traffic to the gradient PCs (§4.3). When off, the backward
+//! pass must re-run the aggregation (the Fig. 8(c) ablation).
+
+use super::hbm::{Hbm, Purpose};
+use crate::cache::HvCache;
+use crate::config::AcceleratorConfig;
+use crate::scheduler::OffloadBatch;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MemorizeStats {
+    pub waves: u64,
+    pub compute_cycles: f64,
+    pub stall_cycles: f64,
+    pub gradient_writeback_cycles: f64,
+}
+
+pub struct MemorizeIp {
+    n_c: usize,
+    cu_lanes: usize,
+    pub stats: MemorizeStats,
+}
+
+impl MemorizeIp {
+    pub fn new(cfg: &AcceleratorConfig) -> Self {
+        // one CU lane per DSP pair allocated to the IP; the paper's U50
+        // build sustains a full 256-element hypervector bind per cycle per
+        // IP (D=256 ⇒ 1 neighbor/cycle/IP)
+        Self { n_c: cfg.n_c, cu_lanes: 256, stats: MemorizeStats::default() }
+    }
+
+    /// Process one offload wave: dispatcher cache lookups for every
+    /// neighbor reference, then lock-step aggregation. Returns cycles.
+    pub fn process_wave(
+        &mut self,
+        wave: &OffloadBatch,
+        cache: &mut HvCache,
+        hbm: &mut Hbm,
+        dim_hd: usize,
+        fused_backward: bool,
+    ) -> f64 {
+        let hv_bytes = (dim_hd * 4) as u64;
+        let mut stall = 0.0;
+        // every referenced hypervector goes through the Dispatcher CAM
+        for v in wave.access_stream() {
+            if !cache.access(v) {
+                stall += hbm.transfer(Purpose::Hypervectors, hv_bytes);
+            }
+        }
+        let d_cycles = dim_hd.div_ceil(self.cu_lanes) as f64;
+        let compute = wave.wave_degree() as f64 * d_cycles;
+        // write back N_c memory hypervectors (+ gradients if fused)
+        let writeback = hbm.transfer(Purpose::Hypervectors, wave.len() as u64 * hv_bytes);
+        let grad_wb = if fused_backward {
+            let c = hbm.transfer(Purpose::Gradients, wave.len() as u64 * hv_bytes);
+            self.stats.gradient_writeback_cycles += c;
+            c
+        } else {
+            0.0
+        };
+        self.stats.waves += 1;
+        self.stats.compute_cycles += compute;
+        self.stats.stall_cycles += stall;
+        // fetch stalls overlap aggregation only partially: the paper
+        // pipelines neighbor fetch against bind, so charge the max of
+        // compute and stall plus the serial write-back
+        compute.max(stall) + writeback + grad_wb
+    }
+
+    pub fn n_c(&self) -> usize {
+        self.n_c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{accel_preset, ReplacementPolicy};
+    use crate::kg::{Csr, Triple};
+    use crate::scheduler::Scheduler;
+
+    fn setup() -> (AcceleratorConfig, Csr) {
+        let cfg = accel_preset("u50").unwrap();
+        let triples: Vec<Triple> =
+            (0..512).map(|i| Triple::new(i % 64, i % 4, (i * 7 + 1) % 64)).collect();
+        (cfg, Csr::from_triples(64, &triples))
+    }
+
+    #[test]
+    fn bigger_cache_means_fewer_stalls() {
+        let (cfg, csr) = setup();
+        let run = |cap: usize| {
+            let mut ip = MemorizeIp::new(&cfg);
+            let mut cache = HvCache::new(cap, 1024, ReplacementPolicy::Lfu, 0);
+            let mut hbm = Hbm::new(&cfg);
+            let mut sched = Scheduler::new(cfg.n_c, 1024, true);
+            let mut total = 0.0;
+            for _ in 0..3 {
+                // several epochs: reuse patterns emerge
+                for wave in sched.schedule_epoch(&csr, true) {
+                    total += ip.process_wave(&wave, &mut cache, &mut hbm, 256, true);
+                }
+            }
+            (total, hbm.total_bytes())
+        };
+        let (t_small, b_small) = run(4);
+        let (t_big, b_big) = run(64);
+        assert!(t_big < t_small, "{t_big} vs {t_small}");
+        assert!(b_big < b_small, "{b_big} vs {b_small}");
+    }
+
+    #[test]
+    fn fused_backward_adds_gradient_traffic_not_compute() {
+        let (cfg, csr) = setup();
+        let run = |fused: bool| {
+            let mut ip = MemorizeIp::new(&cfg);
+            let mut cache = HvCache::new(32, 1024, ReplacementPolicy::Lfu, 0);
+            let mut hbm = Hbm::new(&cfg);
+            let mut sched = Scheduler::new(cfg.n_c, 1024, true);
+            for wave in sched.schedule_epoch(&csr, true) {
+                ip.process_wave(&wave, &mut cache, &mut hbm, 256, fused);
+            }
+            (ip.stats.compute_cycles, hbm.stats.grad_bytes)
+        };
+        let (c_fused, g_fused) = run(true);
+        let (c_plain, g_plain) = run(false);
+        assert_eq!(c_fused, c_plain);
+        assert!(g_fused > 0 && g_plain == 0);
+    }
+}

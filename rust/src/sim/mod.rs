@@ -1,0 +1,28 @@
+//! Cycle-level simulator of the HDReason FPGA accelerator (paper §4,
+//! Figs. 3/5/6/7).
+//!
+//! The paper's evaluation runs on Alveo U50/U280 boards; this environment
+//! has none, so every IP is modelled analytically at cycle granularity
+//! (DESIGN.md §1 substitution table). The simulator consumes the *same*
+//! scheduling decisions the real coordinator produces — degree-balanced
+//! offload waves from [`crate::scheduler`], hit/miss/victim streams from
+//! [`crate::cache`] — so the performance trends (Figs. 8(c), 8(d), 10,
+//! Table 6) emerge from mechanism, not curve fitting. A single calibration
+//! constant per IP (documented inline) anchors absolute cycle counts to the
+//! paper's Table 6 U50 latencies.
+
+pub mod dma;
+pub mod encoder_ip;
+pub mod engine;
+pub mod hbm;
+pub mod memorize_ip;
+pub mod power;
+pub mod report;
+pub mod resources;
+pub mod score_ip;
+pub mod training_ip;
+pub mod workload;
+
+pub use engine::{simulate_batch, AcceleratorSim, SimOptions};
+pub use report::{BatchReport, PhaseBreakdown};
+pub use workload::Workload;

@@ -1,0 +1,86 @@
+//! Simulation reports: per-phase latency breakdown (Fig. 8(d)), energy and
+//! memory (Table 6), cache/traffic detail (Fig. 10).
+
+use crate::cache::CacheStats;
+
+/// Phase latencies of one training batch, in seconds (Fig. 8(d) categories).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PhaseBreakdown {
+    /// Host: δ computation, embedding update, PCIe DMA.
+    pub cpu_s: f64,
+    /// Encoder + Dispatcher + Memorization IPs.
+    pub mem_s: f64,
+    /// Score Function IP.
+    pub score_s: f64,
+    /// Training IP chunk pipeline.
+    pub train_s: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.cpu_s + self.mem_s + self.score_s + self.train_s
+    }
+
+    /// Percentage shares (CPU, Mem, Score, Train).
+    pub fn shares(&self) -> [f64; 4] {
+        let t = self.total_s().max(1e-30);
+        [self.cpu_s / t, self.mem_s / t, self.score_s / t, self.train_s / t]
+    }
+}
+
+/// Full single-batch training report (one Table 6 cell + Fig. 8(d) bar +
+/// Fig. 10 point).
+#[derive(Debug, Clone)]
+pub struct BatchReport {
+    pub workload: String,
+    pub accelerator: String,
+    pub phases: PhaseBreakdown,
+    pub latency_s: f64,
+    pub power_w: f64,
+    pub energy_j: f64,
+    /// Device memory footprint (embeddings + hypervectors + gradients).
+    pub memory_bytes: u64,
+    pub cache: CacheStats,
+    pub hbm_bytes: u64,
+    /// Vertices encoded this batch (reuse effectiveness).
+    pub encoded_vertices: usize,
+}
+
+impl BatchReport {
+    pub fn table6_row(&self) -> String {
+        format!(
+            "{:<12} {:<12} lat {:>9.2} ms  energy {:>7.3} J  mem {:>7.1} MB",
+            self.accelerator,
+            self.workload,
+            self.latency_s * 1e3,
+            self.energy_j,
+            self.memory_bytes as f64 / 1e6
+        )
+    }
+
+    pub fn breakdown_row(&self) -> String {
+        let s = self.phases.shares();
+        format!(
+            "{:<12} CPU {:>5.1}%  Mem {:>5.1}%  Score {:>5.1}%  Train {:>5.1}%  (total {:.2} ms)",
+            self.workload,
+            s[0] * 100.0,
+            s[1] * 100.0,
+            s[2] * 100.0,
+            s[3] * 100.0,
+            self.latency_s * 1e3
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shares_sum_to_one() {
+        let p = PhaseBreakdown { cpu_s: 1.0, mem_s: 2.0, score_s: 3.0, train_s: 4.0 };
+        let s = p.shares();
+        assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((p.total_s() - 10.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,133 @@
+//! FPGA resource estimator — reproduces Table 5's utilization rows from the
+//! accelerator configuration.
+//!
+//! Per-IP costs are derived from the structure of each IP (Figs. 5/6/7)
+//! with per-unit coefficients anchored to the paper's U50 build:
+//! Encoder 281.6K LUT / 1024 DSP, Score 238.9K LUT (pure fabric), Training
+//! 7.6K LUT / 1536 DSP, 135 UltraRAM for H^v + H^r storage.
+
+use crate::config::AcceleratorConfig;
+
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct Resources {
+    pub lut: f64,
+    pub ff: f64,
+    pub bram: f64,
+    pub uram: f64,
+    pub dsp: f64,
+}
+
+impl Resources {
+    fn add(&mut self, o: Resources) {
+        self.lut += o.lut;
+        self.ff += o.ff;
+        self.bram += o.bram;
+        self.uram += o.uram;
+        self.dsp += o.dsp;
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ResourceReport {
+    pub encoder: Resources,
+    pub score: Resources,
+    pub training: Resources,
+    pub hbm_infra: Resources,
+    pub others: Resources,
+    pub total: Resources,
+}
+
+/// Device capacities for utilization percentages (Table 5 "Available" row
+/// is the U50).
+pub fn device_capacity(name: &str) -> Resources {
+    match name {
+        n if n.contains("U50") => {
+            Resources { lut: 872e3, ff: 1743e3, bram: 1344.0, uram: 640.0, dsp: 5952.0 }
+        }
+        n if n.contains("U280") => {
+            Resources { lut: 1304e3, ff: 2607e3, bram: 2016.0, uram: 960.0, dsp: 9024.0 }
+        }
+        _ => Resources { lut: 326e3, ff: 651e3, bram: 890.0, uram: 0.0, dsp: 840.0 }, // KC705
+    }
+}
+
+pub fn estimate(cfg: &AcceleratorConfig) -> ResourceReport {
+    let sa = (cfg.sa_rows * cfg.sa_cols) as f64;
+    // Encoder IP: 1 DSP per PE, ~275 LUT + 148 FF per PE for the f32
+    // datapath + FIFO + tanh LUT tables, BRAM for stage buffers.
+    let encoder = Resources {
+        lut: 275.0 * sa,
+        ff: 148.0 * sa,
+        bram: 0.18 * sa,
+        uram: cfg.uram_blocks as f64,
+        dsp: sa,
+    };
+    // Score Function IP: |B| engines × D norm units in fabric (abs/sign are
+    // LUT-only, the Tree Adder is LUT+FF): ~7.3 LUT and 12.7 FF per
+    // norm-unit-lane on the U50 build.
+    let lanes = cfg.score_engines as f64 * 256.0;
+    let score = Resources {
+        lut: 7.3 * lanes,
+        ff: 12.7 * lanes,
+        bram: 0.0,
+        uram: 0.0,
+        dsp: 0.0,
+    };
+    // Training IP: two SAs of DSPs time-shared with a thin control shell.
+    let training = Resources {
+        lut: 7.4e3,
+        ff: 8.5e3,
+        bram: 0.0,
+        uram: 0.0,
+        dsp: 1.5 * sa,
+    };
+    let hbm_infra = Resources {
+        lut: 68.0 * cfg.hbm_pcs as f64,
+        ff: 55.0 * cfg.hbm_pcs as f64,
+        bram: 0.25 * cfg.hbm_pcs as f64,
+        uram: 0.0,
+        dsp: 0.0,
+    };
+    // AXI interconnect + PCIe DMA shell (Table 5 "Others")
+    let others = Resources { lut: 91.2e3, ff: 88.9e3, bram: 124.0, uram: 0.0, dsp: 0.0 };
+    let mut total = Resources::default();
+    for r in [encoder, score, training, hbm_infra, others] {
+        total.add(r);
+    }
+    ResourceReport { encoder, score, training, hbm_infra, others, total }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::accel_preset;
+
+    #[test]
+    fn u50_estimate_tracks_table5() {
+        let cfg = accel_preset("u50").unwrap();
+        let r = estimate(&cfg);
+        let cap = device_capacity(&cfg.name);
+        // Table 5: Encoder 281.6K LUT, 1024 DSP; Score 238.9K LUT; total
+        // 620K LUT (71.1%), 2560 DSP (43%)
+        assert!((r.encoder.lut - 281.6e3).abs() / 281.6e3 < 0.05, "enc lut {}", r.encoder.lut);
+        assert_eq!(r.encoder.dsp, 1024.0);
+        assert!((r.score.lut - 238.9e3).abs() / 238.9e3 < 0.05, "score lut {}", r.score.lut);
+        assert_eq!(r.training.dsp, 1536.0);
+        let lut_pct = r.total.lut / cap.lut;
+        assert!((lut_pct - 0.711).abs() < 0.05, "lut pct {lut_pct}");
+        let dsp_pct = r.total.dsp / cap.dsp;
+        assert!((dsp_pct - 0.43).abs() < 0.05, "dsp pct {dsp_pct}");
+    }
+
+    #[test]
+    fn design_fits_its_device() {
+        for name in ["u50", "u280"] {
+            let cfg = accel_preset(name).unwrap();
+            let r = estimate(&cfg);
+            let cap = device_capacity(&cfg.name);
+            assert!(r.total.lut <= cap.lut, "{name} LUT over capacity");
+            assert!(r.total.dsp <= cap.dsp, "{name} DSP over capacity");
+            assert!(r.total.uram <= cap.uram, "{name} URAM over capacity");
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Score Function IP cycle model (paper §4.3, Fig. 6).
+//!
+//! |B| Score Engine units evaluate one memory hypervector M_i per cycle
+//! group against the whole query batch: M_i is loaded once from HBM,
+//! replicated into |B| on-chip buffers, and each engine's D Norm Units +
+//! Tree Adder produce the L1 norm (and, with fused backward, the sign
+//! gradient) in `ceil(D / norm_units)` cycles plus log2(D) adder stages.
+//! The loop over all |V| vertices is pipelined against the HBM stream of
+//! M_v rows, so total time ≈ max(compute, stream) + drain.
+
+use super::hbm::{Hbm, Purpose};
+use crate::config::AcceleratorConfig;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ScoreStats {
+    pub queries: u64,
+    pub vertices_scanned: u64,
+    pub cycles: f64,
+}
+
+pub struct ScoreIp {
+    engines: usize,
+    norm_units: usize,
+    pub stats: ScoreStats,
+}
+
+impl ScoreIp {
+    pub fn new(cfg: &AcceleratorConfig) -> Self {
+        Self {
+            engines: cfg.score_engines,
+            norm_units: 256, // D Norm Units per engine (Table 5 build: D=256)
+            stats: ScoreStats::default(),
+        }
+    }
+
+    /// Cycles to score a batch of `b` queries against all `v` memory
+    /// hypervectors of width `dim_hd`, with gradients emitted on the
+    /// forward path when `fused_backward` (otherwise a second pass runs
+    /// later — see [`super::training_ip`]).
+    pub fn score_batch(
+        &mut self,
+        b: usize,
+        v: usize,
+        dim_hd: usize,
+        hbm: &mut Hbm,
+        fused_backward: bool,
+    ) -> f64 {
+        let hv_bytes = (dim_hd * 4) as u64;
+        // engine groups: if b > engines, the batch is folded
+        let folds = b.div_ceil(self.engines) as f64;
+        let per_vertex = dim_hd.div_ceil(self.norm_units) as f64 + (dim_hd as f64).log2().ceil();
+        let compute = v as f64 * per_vertex * folds;
+        // stream all M_v rows once (replication to engines is on-chip)
+        let stream = hbm.transfer(Purpose::Hypervectors, v as u64 * hv_bytes);
+        // fused backward stashes ∂N/∂M (sign vectors, 1 byte/elem packed 4:1
+        // in the paper's fixed-point build — model as D bytes per (b,v) fold
+        // aggregated per vertex) into the gradient PCs
+        let grad = if fused_backward {
+            hbm.transfer(Purpose::Gradients, v as u64 * dim_hd as u64)
+        } else {
+            0.0
+        };
+        self.stats.queries += b as u64;
+        self.stats.vertices_scanned += v as u64;
+        let cycles = compute.max(stream) + grad + per_vertex; // + drain
+        self.stats.cycles += cycles;
+        cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::accel_preset;
+    use crate::sim::hbm::Hbm;
+
+    #[test]
+    fn cycles_scale_with_vertices() {
+        let cfg = accel_preset("u50").unwrap();
+        let mut ip = ScoreIp::new(&cfg);
+        let mut hbm = Hbm::new(&cfg);
+        let c1 = ip.score_batch(128, 10_000, 256, &mut hbm, true);
+        let c2 = ip.score_batch(128, 40_000, 256, &mut hbm, true);
+        assert!(c2 > 3.0 * c1, "{c1} {c2}");
+    }
+
+    #[test]
+    fn folding_batches_beyond_engine_count_costs_more() {
+        let cfg = accel_preset("u50").unwrap(); // 128 engines
+        let mut hbm = Hbm::new(&cfg);
+        let c128 = ScoreIp::new(&cfg).score_batch(128, 14541, 256, &mut hbm, true);
+        let c256 = ScoreIp::new(&cfg).score_batch(256, 14541, 256, &mut hbm, true);
+        assert!(c256 > 1.5 * c128, "{c128} {c256}");
+    }
+
+    #[test]
+    fn fused_backward_writes_gradient_bytes() {
+        let cfg = accel_preset("u50").unwrap();
+        let mut hbm = Hbm::new(&cfg);
+        ScoreIp::new(&cfg).score_batch(128, 1000, 256, &mut hbm, true);
+        assert!(hbm.stats.grad_bytes > 0);
+        let mut hbm2 = Hbm::new(&cfg);
+        ScoreIp::new(&cfg).score_batch(128, 1000, 256, &mut hbm2, false);
+        assert_eq!(hbm2.stats.grad_bytes, 0);
+    }
+}

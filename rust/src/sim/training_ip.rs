@@ -1,0 +1,139 @@
+//! Training IP cycle model (paper §4.4, Fig. 7): the chunked embedding-
+//! gradient pipeline.
+//!
+//! The host computes δ = ∂L/∂N^p (Eq. 15) per batch, cuts it into
+//! |B| × T chunks, and streams chunks to the kernel. Per chunk the kernel
+//! multiplies three precomputed factors — ∂N^p/∂M (stashed by the Score
+//! IP), ∂M/∂H (stashed by the Memorize IP), and H^Bᵀ — using two systolic
+//! arrays + one elementwise unit, then returns T vertex gradients. Chunks
+//! are pipelined: PCIe-in, SA1, MUL, SA2, PCIe-out overlap, so steady-state
+//! throughput is one chunk per max(stage) and the total is
+//! `fill + chunks × max_stage`.
+//!
+//! Without `fused_backward` the stashed factors don't exist: the kernel
+//! must *recompute* the score-function and memorization gradients first,
+//! which we model as an extra pass of each (the Fig. 8(c) ablation's
+//! biggest term).
+
+use super::hbm::{Hbm, Purpose};
+use crate::config::AcceleratorConfig;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TrainingStats {
+    pub chunks: u64,
+    pub cycles: f64,
+    pub recompute_cycles: f64,
+}
+
+pub struct TrainingIp {
+    chunk_t: usize,
+    sa_macs: usize,
+    pub stats: TrainingStats,
+}
+
+impl TrainingIp {
+    pub fn new(cfg: &AcceleratorConfig) -> Self {
+        Self {
+            chunk_t: cfg.chunk_t,
+            // 1536 DSPs on the U50 build (Table 5), ×4 MACs/DSP from the
+            // fixed-point packing the paper's low-bit design enables (§5.2)
+            sa_macs: cfg.sa_rows * cfg.sa_cols * 6,
+            stats: TrainingStats::default(),
+        }
+    }
+
+    /// Cycles for the backward/update pass over `v` vertices with batch
+    /// `b`, hyperdim D, original dim d.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward(
+        &mut self,
+        b: usize,
+        v: usize,
+        dim_in: usize,
+        dim_hd: usize,
+        hbm: &mut Hbm,
+        fused_backward: bool,
+        pcie_bytes_per_cycle: f64,
+    ) -> f64 {
+        let chunks = v.div_ceil(self.chunk_t);
+        let t = self.chunk_t;
+        // stage 1: stream δ chunk (B × T f32) over PCIe; ~50 cycles of
+        // (buffered) descriptor setup per chunk — what larger T amortizes
+        let s_in = 50.0 + (b * t * 4) as f64 / pcie_bytes_per_cycle;
+        // stage 2: SA1 reduces the δ chunk against the *batch-accumulated*
+        // score gradients the Score IP stashed (Fig. 6 step 8: the Tree
+        // Adder sums all batch members' gradient hypervectors before the
+        // stash, so the stored factor is one D-vector per vertex): a
+        // (T × B) reduction plus a (T × D) scale
+        let s_sa1 = (t * b) as f64 / self.sa_macs as f64 + (t * dim_hd) as f64 / 256.0;
+        // stage 3: elementwise ∘ ∂M/∂H over (T × D)
+        let s_mul = (t * dim_hd) as f64 / 256.0;
+        // stage 4: SA2 · H^Bᵀ: (T×D)·(D×d) MACs
+        let s_sa2 = (t * dim_hd * dim_in) as f64 / self.sa_macs as f64;
+        // stage 5: return T×d gradients over PCIe
+        let s_out = (t * dim_in * 4) as f64 / pcie_bytes_per_cycle;
+        // load the stashed factors from the HBM gradient PCs per chunk:
+        // the batch-accumulated ∂N/∂M rows + the chunk's ∂M/∂H rows (f32)
+        let load = hbm.transfer(Purpose::Gradients, (2 * t * dim_hd * 4) as u64);
+        let stages = [s_in, s_sa1, s_mul, s_sa2, s_out, load];
+        let max_stage = stages.iter().cloned().fold(0.0f64, f64::max);
+        let fill: f64 = stages.iter().sum();
+        let mut cycles = fill + (chunks.saturating_sub(1)) as f64 * max_stage;
+
+        if !fused_backward {
+            // recompute ∂N/∂M (a score-pass) and ∂M/∂H (a memorize-pass)
+            // before the pipeline can run — roughly one extra pass over the
+            // score compute and the full H^v stream
+            let score_recompute =
+                v as f64 * (dim_hd.div_ceil(256) as f64 + (dim_hd as f64).log2());
+            let mem_stream = hbm.transfer(Purpose::Hypervectors, (v * dim_hd * 4) as u64);
+            let rc = score_recompute + mem_stream;
+            self.stats.recompute_cycles += rc;
+            cycles += rc;
+        }
+        self.stats.chunks += chunks as u64;
+        self.stats.cycles += cycles;
+        cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::accel_preset;
+    use crate::sim::hbm::Hbm;
+
+    #[test]
+    fn fused_is_faster_than_recompute() {
+        let cfg = accel_preset("u50").unwrap();
+        let mut hbm = Hbm::new(&cfg);
+        let pcie = cfg.pcie_gbps * 1e9 / cfg.cycles_per_sec();
+        let fused =
+            TrainingIp::new(&cfg).backward(128, 14541, 96, 256, &mut hbm, true, pcie);
+        let mut hbm2 = Hbm::new(&cfg);
+        let plain =
+            TrainingIp::new(&cfg).backward(128, 14541, 96, 256, &mut hbm2, false, pcie);
+        assert!(plain > 1.3 * fused, "fused {fused} plain {plain}");
+    }
+
+    #[test]
+    fn larger_chunks_amortize_fill() {
+        let mut u50 = accel_preset("u50").unwrap();
+        let pcie = u50.pcie_gbps * 1e9 / u50.cycles_per_sec();
+        let mut hbm = Hbm::new(&u50);
+        let c32 = TrainingIp::new(&u50).backward(128, 40960, 96, 256, &mut hbm, true, pcie);
+        u50.chunk_t = 64;
+        let mut hbm2 = Hbm::new(&u50);
+        let c64 = TrainingIp::new(&u50).backward(128, 40960, 96, 256, &mut hbm2, true, pcie);
+        assert!(c64 < c32, "T=64 {c64} vs T=32 {c32}");
+    }
+
+    #[test]
+    fn chunk_count_matches_ceiling() {
+        let cfg = accel_preset("u50").unwrap(); // T = 32
+        let mut ip = TrainingIp::new(&cfg);
+        let mut hbm = Hbm::new(&cfg);
+        ip.backward(128, 100, 96, 256, &mut hbm, true, 100.0);
+        assert_eq!(ip.stats.chunks, 4); // ceil(100/32)
+    }
+}

@@ -1,0 +1,22 @@
+//! Dependency-light utilities.
+//!
+//! The build environment is fully offline (only the `xla` crate closure is
+//! vendored), so the crate carries its own small, well-tested versions of
+//! what would normally come from `rand`, `serde_json`, and `criterion`:
+//!
+//! * [`rng`] — PCG64-based RNG with uniform/normal sampling and shuffling.
+//! * [`json`] — a minimal recursive-descent JSON parser (reads
+//!   `artifacts/manifest.json`) and a writer for report emission.
+//! * [`timer`] — wall-clock measurement helpers used by the bench harness.
+
+pub mod hash;
+pub mod json;
+pub mod rng;
+pub mod timer;
+pub mod tmp;
+
+pub use hash::{FxBuildHasher, FxHashMap};
+pub use json::Json;
+pub use rng::Rng;
+pub use timer::Stopwatch;
+pub use tmp::TempDir;

@@ -1,0 +1,88 @@
+//! Wall-clock measurement helpers shared by the bench harness and the
+//! coordinator's metrics.
+
+use std::time::{Duration, Instant};
+
+/// A resumable stopwatch accumulating named phases — used for the
+//  Fig. 8(d)-style execution-time breakdowns.
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    phases: Vec<(String, Duration)>,
+    current: Option<(String, Instant)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start (or switch to) a named phase.
+    pub fn phase(&mut self, name: &str) {
+        self.stop();
+        self.current = Some((name.to_string(), Instant::now()));
+    }
+
+    /// Stop the current phase, accumulating its duration.
+    pub fn stop(&mut self) {
+        if let Some((name, start)) = self.current.take() {
+            let d = start.elapsed();
+            if let Some((_, acc)) = self.phases.iter_mut().find(|(n, _)| *n == name) {
+                *acc += d;
+            } else {
+                self.phases.push((name, d));
+            }
+        }
+    }
+
+    /// (phase, accumulated duration) in first-seen order.
+    pub fn phases(&self) -> &[(String, Duration)] {
+        &self.phases
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Duration {
+        self.phases
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .unwrap_or(Duration::ZERO)
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_phases() {
+        let mut sw = Stopwatch::new();
+        sw.phase("a");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.phase("b");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.phase("a");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.stop();
+        assert!(sw.get("a") >= Duration::from_millis(4));
+        assert!(sw.get("b") >= Duration::from_millis(2));
+        assert_eq!(sw.phases().len(), 2);
+        assert!(sw.total() >= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn time_it_returns_result() {
+        let (x, secs) = time_it(|| 41 + 1);
+        assert_eq!(x, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,60 @@
+//! Minimal temp-directory helper (the `tempfile` crate is unavailable in
+//! the offline registry). Creates a unique directory under the system temp
+//! dir and removes it on drop. Used by tests only, but compiled always so
+//! integration tests can reach it.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// RAII temporary directory.
+pub struct TempDir {
+    path: PathBuf,
+}
+
+impl TempDir {
+    pub fn new(prefix: &str) -> std::io::Result<Self> {
+        let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "hdreason-{prefix}-{}-{n}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&path)?;
+        Ok(Self { path })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn creates_and_cleans_up() {
+        let kept;
+        {
+            let t = TempDir::new("t").unwrap();
+            kept = t.path().to_path_buf();
+            std::fs::write(t.path().join("x"), "y").unwrap();
+            assert!(kept.exists());
+        }
+        assert!(!kept.exists());
+    }
+
+    #[test]
+    fn unique_paths() {
+        let a = TempDir::new("u").unwrap();
+        let b = TempDir::new("u").unwrap();
+        assert_ne!(a.path(), b.path());
+    }
+}

@@ -1,0 +1,199 @@
+//! Property-style invariant tests. The proptest crate is unavailable
+//! offline, so these sweep seeded random cases with the in-tree RNG —
+//! same spirit: each test asserts an invariant over many generated inputs.
+
+use hdreason::cache::HvCache;
+use hdreason::config::ReplacementPolicy;
+use hdreason::hdc::quant::FixedPoint;
+use hdreason::kg::{Csr, Triple};
+use hdreason::model::rank_of;
+use hdreason::scheduler::Scheduler;
+use hdreason::util::{Json, Rng};
+
+const CASES: u64 = 25;
+
+fn random_triples(rng: &mut Rng, v: usize, r: usize, n: usize) -> Vec<Triple> {
+    (0..n)
+        .map(|_| Triple::new(rng.below(v), rng.below(r), rng.below(v)))
+        .collect()
+}
+
+#[test]
+fn prop_cache_never_exceeds_capacity_and_counts_balance() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let cap = 1 + rng.below(32);
+        let policy = ReplacementPolicy::ALL[rng.below(3)];
+        let mut c = HvCache::new(cap, 64, policy, seed);
+        let accesses = 200 + rng.below(800);
+        for _ in 0..accesses {
+            c.access(rng.below(64) as u32);
+        }
+        assert!(c.len() <= cap, "seed {seed}: {} > cap {cap}", c.len());
+        assert_eq!(c.stats.accesses(), accesses as u64);
+        assert_eq!(c.stats.bytes_from_hbm, c.stats.misses * 64);
+        // evictions can't exceed misses, hits can't exceed accesses
+        assert!(c.stats.evictions <= c.stats.misses);
+    }
+}
+
+#[test]
+fn prop_csr_degree_sum_equals_edge_count() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let v = 4 + rng.below(100);
+        let n = rng.below(500);
+        let triples = random_triples(&mut rng, v, 5, n);
+        let csr = Csr::from_triples(v, &triples);
+        let total: usize = (0..v).map(|x| csr.degree(x)).sum();
+        assert_eq!(total, n);
+        assert_eq!(csr.num_edges(), n);
+        // histogram partitions the vertex set
+        let hist_count: usize = csr.degree_histogram().values().map(|b| b.len()).sum();
+        assert_eq!(hist_count, v);
+    }
+}
+
+#[test]
+fn prop_scheduler_covers_every_vertex_once_and_utilization_bounded() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let v = 8 + rng.below(200);
+        let n = rng.below(600);
+        let triples = random_triples(&mut rng, v, 4, n);
+        let csr = Csr::from_triples(v, &triples);
+        let balanced = rng.bool(0.5);
+        let mut s = Scheduler::new(1 + rng.below(32), 512, balanced);
+        let waves = s.schedule_epoch(&csr, true);
+        let mut seen = vec![false; v];
+        for w in &waves {
+            for (t, _) in &w.targets {
+                assert!(!seen[t.vertex() as usize], "seed {seed}: duplicate");
+                seen[t.vertex() as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "seed {seed}: missing vertex");
+        let u = s.stats.utilization();
+        assert!((0.0..=1.0 + 1e-9).contains(&u), "seed {seed}: util {u}");
+    }
+}
+
+#[test]
+fn prop_balanced_never_worse_than_unbalanced() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed * 7 + 1);
+        let v = 32 + rng.below(300);
+        let n = 100 + rng.below(900);
+        let triples = random_triples(&mut rng, v, 4, n);
+        let csr = Csr::from_triples(v, &triples);
+        let mut bal = Scheduler::new(16, 512, true);
+        bal.schedule_epoch(&csr, true);
+        let mut unbal = Scheduler::new(16, 512, false);
+        unbal.schedule_epoch(&csr, true);
+        assert!(
+            bal.stats.utilization() >= unbal.stats.utilization() - 1e-9,
+            "seed {seed}: balanced {} < unbalanced {}",
+            bal.stats.utilization(),
+            unbal.stats.utilization()
+        );
+    }
+}
+
+#[test]
+fn prop_rank_is_within_bounds_and_filter_only_helps() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let v = 2 + rng.below(200);
+        let scores: Vec<f32> = (0..v).map(|_| rng.f32()).collect();
+        let gold = rng.below(v);
+        let rank = rank_of(&scores, gold, &[]);
+        assert!((1..=v).contains(&rank), "seed {seed}: rank {rank} of {v}");
+        // filtering a random subset never worsens the rank
+        let filter: Vec<u32> =
+            (0..rng.below(v)).map(|_| rng.below(v) as u32).collect();
+        let filtered = rank_of(&scores, gold, &filter);
+        assert!(filtered <= rank, "seed {seed}: filter worsened rank");
+    }
+}
+
+#[test]
+fn prop_quantization_error_monotone_in_bits() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let data: Vec<f32> =
+            (0..256).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect();
+        let mut last = f32::INFINITY;
+        for bits in [2u32, 4, 8, 12, 16] {
+            let err = FixedPoint::new(bits).error(&data);
+            assert!(err <= last + 1e-6, "seed {seed}: error rose at fix-{bits}");
+            last = err;
+        }
+    }
+}
+
+#[test]
+fn prop_quantization_is_idempotent() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let fp = FixedPoint::new(2 + rng.below(10) as u32);
+        let mut a: Vec<f32> = (0..64).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        fp.quantize_tensor(&mut a);
+        let mut b = a.clone();
+        fp.quantize_tensor(&mut b);
+        assert_eq!(a, b, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_json_round_trips_random_documents() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let j = random_json(&mut rng, 3);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(j, back, "seed {seed}");
+    }
+}
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bool(0.5)),
+        2 => Json::Num((rng.range_f64(-1e6, 1e6) * 100.0).round() / 100.0),
+        3 => {
+            let n = rng.below(8);
+            Json::Str((0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect())
+        }
+        4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_memorize_is_linear_in_bundling() {
+    // HDC memorization is a linear operator: memorize(G1 ∪ G2) =
+    // memorize(G1) + memorize(G2) over disjoint edge sets
+    use hdreason::hdc::memorize;
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let (v, d) = (16, 32);
+        let hv: Vec<f32> = (0..v * d).map(|_| rng.normal_f32()).collect();
+        let hr: Vec<f32> = (0..3 * d).map(|_| rng.normal_f32()).collect();
+        let t1 = random_triples(&mut rng, v, 3, 20);
+        let t2 = random_triples(&mut rng, v, 3, 20);
+        let both: Vec<Triple> = t1.iter().chain(t2.iter()).copied().collect();
+        let m1 = memorize(&Csr::from_triples(v, &t1), &hv, &hr, d);
+        let m2 = memorize(&Csr::from_triples(v, &t2), &hv, &hr, d);
+        let mb = memorize(&Csr::from_triples(v, &both), &hv, &hr, d);
+        for i in 0..v * d {
+            assert!(
+                (mb.data[i] - m1.data[i] - m2.data[i]).abs() < 1e-4,
+                "seed {seed} elem {i}"
+            );
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Integration tests over the real AOT artifacts: the python-lowered HLO
+//! executed through PJRT must match the pure-rust host reference bit-for-
+//! bit-ish (f32 tolerance), and end-to-end training must reduce the loss.
+//!
+//! Requires `make artifacts` to have produced artifacts/ for the `tiny`
+//! preset (the Makefile test target guarantees ordering).
+
+use hdreason::config::{model_preset, RunConfig};
+use hdreason::coordinator::HdrTrainer;
+use hdreason::hdc;
+use hdreason::kg::{generator, QueryBatcher};
+use hdreason::model::ModelState;
+use hdreason::runtime::{EdgeArrays, HdrRuntime, Manifest};
+
+fn runtime() -> Option<(HdrRuntime, hdreason::config::ModelConfig)> {
+    let dir = Manifest::default_dir();
+    let manifest = Manifest::load(&dir).ok()?;
+    let cfg = model_preset("tiny").unwrap();
+    Some((HdrRuntime::load(&manifest, &cfg).expect("load tiny artifacts"), cfg))
+}
+
+macro_rules! need_artifacts {
+    ($rt:ident, $cfg:ident) => {
+        let Some(($rt, $cfg)) = runtime() else {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        };
+    };
+}
+
+#[test]
+fn encode_artifact_matches_host_encoder() {
+    need_artifacts!(rt, cfg);
+    let m = ModelState::init(&cfg, 7);
+    let got = rt.encode_vertices(&m.ev, &m.hb).unwrap();
+    let want = m.encode_vertices_host();
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-4, "elem {i}: pjrt {g} vs host {w}");
+    }
+}
+
+#[test]
+fn memorize_artifact_matches_host_memorize() {
+    need_artifacts!(rt, cfg);
+    let kg = generator::random_for_preset(&cfg, 0.8, 3);
+    let m = ModelState::init(&cfg, 3);
+    let edges = EdgeArrays::from_kg(&kg, &cfg);
+    let hv = m.encode_vertices_host();
+    let hr = m.encode_relations_host();
+    let got = rt.memorize(&hv, &hr, &edges).unwrap();
+    let csr = kg.train_csr();
+    let want = hdc::memorize(&csr, &hv, &hr, cfg.dim_hd);
+    for (i, (g, w)) in got.iter().zip(&want.data).enumerate() {
+        assert!((g - w).abs() < 1e-3, "elem {i}: pjrt {g} vs host {w}");
+    }
+}
+
+#[test]
+fn forward_artifact_matches_host_score_pipeline() {
+    need_artifacts!(rt, cfg);
+    let kg = generator::random_for_preset(&cfg, 0.8, 5);
+    let m = ModelState::init(&cfg, 5);
+    let edges = EdgeArrays::from_kg(&kg, &cfg);
+    let qs: Vec<i32> = (0..cfg.batch as i32).collect();
+    let qr: Vec<i32> = (0..cfg.batch).map(|i| (i % cfg.num_relations) as i32).collect();
+    let bias = 2.0f32;
+    let got = rt.forward(&m, &edges, &qs, &qr, bias).unwrap();
+
+    // host pipeline: encode → memorize → TransE score
+    let hv = m.encode_vertices_host();
+    let hr = m.encode_relations_host();
+    let mem = hdc::memorize(&kg.train_csr(), &hv, &hr, cfg.dim_hd);
+    for (b, (&s, &r)) in qs.iter().zip(&qr).enumerate() {
+        let want = hdreason::model::transe_scores_host(
+            &mem.data,
+            cfg.dim_hd,
+            mem.vertex(s as usize),
+            &hr[r as usize * cfg.dim_hd..(r as usize + 1) * cfg.dim_hd],
+            bias,
+        );
+        for v in 0..cfg.num_vertices {
+            let g = got[b * cfg.num_vertices + v];
+            assert!(
+                (g - want[v]).abs() < 2e-2,
+                "query {b} vertex {v}: pjrt {g} vs host {}",
+                want[v]
+            );
+        }
+    }
+}
+
+#[test]
+fn train_step_reduces_loss_end_to_end() {
+    need_artifacts!(rt, cfg);
+    let kg = generator::learnable_for_preset(&cfg, 0.8, 11);
+    let mut rc = RunConfig::from_presets("tiny", "u50").unwrap();
+    rc.train.epochs = 3;
+    rc.train.steps_per_epoch = 8;
+    rc.train.eval_every = 0;
+    rc.train.lr = 5e-2;
+    let mut trainer = HdrTrainer::new(rc, rt, &kg).unwrap();
+    let mut batcher = QueryBatcher::new(&kg, cfg.batch, 0);
+    let first = trainer.train_epoch(&mut batcher, 8).unwrap();
+    let mut last = first;
+    for _ in 0..4 {
+        last = trainer.train_epoch(&mut batcher, 8).unwrap();
+    }
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+}
+
+#[test]
+fn trained_model_beats_untrained_mrr() {
+    need_artifacts!(rt, cfg);
+    let kg = generator::learnable_for_preset(&cfg, 0.8, 13);
+    let mut rc = RunConfig::from_presets("tiny", "u50").unwrap();
+    rc.train.epochs = 10;
+    rc.train.steps_per_epoch = 8;
+    rc.train.eval_every = 0;
+    rc.train.lr = 5e-2;
+    let mut trainer = HdrTrainer::new(rc, rt, &kg).unwrap();
+    let before = trainer.evaluate(&kg.test).unwrap();
+    trainer.fit().unwrap();
+    let after = trainer.evaluate(&kg.test).unwrap();
+    assert!(
+        after.mrr > before.mrr,
+        "MRR did not improve: {:.4} -> {:.4}",
+        before.mrr,
+        after.mrr
+    );
+}

@@ -1,0 +1,137 @@
+//! Cross-module integration tests: scheduler → cache → simulator
+//! consistency, figure generation smoke tests, config persistence, and
+//! loader → trainer compatibility. (PJRT-artifact round trips live in
+//! runtime_roundtrip.rs.)
+
+use hdreason::cache::HvCache;
+use hdreason::config::{accel_preset, ReplacementPolicy, RunConfig};
+use hdreason::kg::{generator, loader};
+use hdreason::scheduler::Scheduler;
+use hdreason::sim::{simulate_batch, SimOptions, Workload};
+use hdreason::util::TempDir;
+
+#[test]
+fn scheduler_cache_sim_agree_on_access_counts() {
+    // the cache must see exactly (targets + neighbor refs) accesses when
+    // the sim replays a schedule
+    let w = Workload::paper("WN18RR", 0.02, 0).unwrap();
+    let cfg = accel_preset("u50").unwrap();
+    let mut sim = hdreason::sim::AcceleratorSim::new(&cfg, &w, SimOptions::default());
+    let r = sim.run_batch(&w);
+    let expected = (w.num_vertices + w.num_edges) as u64;
+    assert_eq!(r.cache.accesses(), expected, "one access per target + per neighbor");
+}
+
+#[test]
+fn sim_is_deterministic() {
+    let w = Workload::paper("FB15K-237", 0.02, 1).unwrap();
+    let cfg = accel_preset("u50").unwrap();
+    let a = simulate_batch(&cfg, &w, SimOptions::default());
+    let b = simulate_batch(&cfg, &w, SimOptions::default());
+    assert_eq!(a.latency_s, b.latency_s);
+    assert_eq!(a.hbm_bytes, b.hbm_bytes);
+    assert_eq!(a.cache.hits, b.cache.hits);
+}
+
+#[test]
+fn lfu_beats_random_on_zipf_workloads() {
+    // §5.5's ordering: LFU caches hub hypervectors better than Random
+    let w = Workload::paper("YAGO3-10", 0.01, 0).unwrap();
+    let run = |policy| {
+        let mut cfg = accel_preset("u50").unwrap();
+        cfg.replacement = policy;
+        cfg.uram_blocks = 32;
+        simulate_batch(&cfg, &w, SimOptions { warm_batches: 2, ..Default::default() })
+    };
+    let lfu = run(ReplacementPolicy::Lfu);
+    let rnd = run(ReplacementPolicy::Random);
+    assert!(
+        lfu.cache.hit_rate() > rnd.cache.hit_rate(),
+        "LFU {:.3} vs Random {:.3}",
+        lfu.cache.hit_rate(),
+        rnd.cache.hit_rate()
+    );
+}
+
+#[test]
+fn hardware_figures_generate_at_small_scale() {
+    // smoke: the simulator-only figures must render without artifacts
+    for id in ["table3", "table4", "table5", "table6", "fig8c", "fig8d", "fig10", "fig11",
+               "headline"] {
+        let out = hdreason::bench::figures::generate(id, 0.01)
+            .unwrap_or_else(|e| panic!("{id}: {e}"));
+        assert!(!out.is_empty(), "{id} rendered empty");
+    }
+}
+
+#[test]
+fn run_config_persists_through_file() {
+    let dir = TempDir::new("cfg").unwrap();
+    let path = dir.path().join("run.json");
+    let rc = RunConfig::from_presets("small", "u280").unwrap();
+    rc.save(&path).unwrap();
+    let back = RunConfig::load(&path).unwrap();
+    assert_eq!(rc, back);
+}
+
+#[test]
+fn tsv_loader_feeds_the_scheduler() {
+    let dir = TempDir::new("kg").unwrap();
+    let mut text = String::new();
+    for i in 0..50 {
+        text.push_str(&format!("e{}\tr{}\te{}\n", i % 10, i % 3, (i + 1) % 10));
+    }
+    std::fs::write(dir.path().join("train.txt"), text).unwrap();
+    let kg = loader::load_dir(dir.path()).unwrap();
+    let csr = kg.train_csr();
+    let mut sched = Scheduler::new(4, 64, true);
+    let waves = sched.schedule_epoch(&csr, true);
+    let scheduled: usize = waves.iter().map(|w| w.len()).sum();
+    assert_eq!(scheduled, kg.num_vertices);
+}
+
+#[test]
+fn generated_datasets_are_self_consistent() {
+    for name in ["FB15K-237", "WN18RR", "WN18", "YAGO3-10"] {
+        let kg = generator::generate_named(name, 0.01, 3).unwrap();
+        for t in kg.all_triples() {
+            assert!(t.src < kg.num_vertices && t.dst < kg.num_vertices);
+            assert!(t.rel < kg.num_relations);
+        }
+        let stats = kg.stats();
+        assert!(stats.degree_gini > 0.2, "{name}: no degree skew ({})", stats.degree_gini);
+    }
+}
+
+#[test]
+fn u280_scales_down_memorization_time_vs_u50() {
+    let w = Workload::paper("WN18RR", 0.1, 0).unwrap();
+    let u50 = simulate_batch(&accel_preset("u50").unwrap(), &w, SimOptions::default());
+    let u280 = simulate_batch(&accel_preset("u280").unwrap(), &w, SimOptions::default());
+    assert!(u280.phases.mem_s < u50.phases.mem_s);
+    assert!(u280.latency_s < u50.latency_s);
+}
+
+#[test]
+fn cache_capacity_drives_hbm_traffic_monotonically() {
+    // Fig. 10 trend as an invariant: more URAM never increases traffic
+    let w = Workload::paper("WN18RR", 0.05, 0).unwrap();
+    let mut last = u64::MAX;
+    for uram in [16usize, 64, 256] {
+        let mut cfg = accel_preset("u50").unwrap();
+        cfg.uram_blocks = uram;
+        let r = simulate_batch(&cfg, &w, SimOptions { warm_batches: 2, ..Default::default() });
+        assert!(r.hbm_bytes <= last, "traffic rose at {uram} URAM");
+        last = r.hbm_bytes;
+    }
+}
+
+#[test]
+fn fused_backward_shrinks_training_phase() {
+    let w = Workload::paper("FB15K-237", 0.1, 0).unwrap();
+    let on = simulate_batch(&accel_preset("u50").unwrap(), &w, SimOptions::default());
+    let mut cfg = accel_preset("u50").unwrap();
+    cfg.opts.fused_backward = false;
+    let off = simulate_batch(&cfg, &w, SimOptions::default());
+    assert!(on.phases.train_s < off.phases.train_s);
+}
