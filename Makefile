@@ -1,0 +1,33 @@
+# HDReason repo targets. Tier-1 verify is `make check`.
+#
+# The rust crate lives under rust/; everything here drives it via
+# --manifest-path so the targets work from the repo root.
+
+CARGO ?= cargo
+MANIFEST := rust/Cargo.toml
+
+.PHONY: check build test bench fmt artifacts
+
+# tier-1: release build + full test suite
+check: build test
+
+build:
+	$(CARGO) build --release --manifest-path $(MANIFEST)
+
+test:
+	$(CARGO) test -q --manifest-path $(MANIFEST)
+
+# hot-path benchmark; appends {name, median_s, iters} JSON-lines rows to
+# BENCH_1.json at the repo root so the perf trajectory accumulates per PR
+bench:
+	$(CARGO) bench --bench runtime_hotpath --manifest-path $(MANIFEST) -- --json
+
+fmt:
+	$(CARGO) fmt --manifest-path $(MANIFEST)
+
+# AOT-compile the python layer to HLO-text artifacts (requires jax; only
+# useful to a `--features pjrt` build — the default stub build skips the
+# artifact-dependent tests/benches). rust/artifacts is where cargo-test's
+# working directory resolves `Manifest::default_dir()`.
+artifacts:
+	cd python && python3 -m compile.aot --out ../rust/artifacts

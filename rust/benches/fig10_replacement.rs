@@ -1,5 +1,6 @@
 //! Bench: Fig. 10 replacement-policy × UltraRAM sweep + raw cache
 //! throughput. Run: cargo bench --bench fig10_replacement
+use hdreason::bench::harness::maybe_append_json;
 use hdreason::bench::{bench, figures};
 use hdreason::cache::HvCache;
 use hdreason::config::ReplacementPolicy;
@@ -8,6 +9,7 @@ fn main() {
     println!("{}", figures::fig10(0.1).unwrap());
     // raw cache throughput per policy (accesses/s)
     let stream: Vec<u32> = (0..200_000u32).map(|i| (i * 2654435761) % 20_000).collect();
+    let mut results = Vec::new();
     for policy in ReplacementPolicy::ALL {
         let r = bench(&format!("cache/{policy}/200k-accesses"), 1, 7, || {
             let mut c = HvCache::new(4096, 1024, policy, 0);
@@ -16,5 +18,7 @@ fn main() {
             }
         });
         println!("{}  ({:.1} M accesses/s)", r.row(), 0.2 / r.median_s);
+        results.push(r);
     }
+    maybe_append_json(&results);
 }

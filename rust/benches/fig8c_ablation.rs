@@ -1,6 +1,7 @@
 //! Bench: Fig. 8(c) hardware-optimization ablation. Regenerates the
 //! figure's bars (latency per optimization variant) and times the
 //! simulator itself. Run: cargo bench --bench fig8c_ablation
+use hdreason::bench::harness::maybe_append_json;
 use hdreason::bench::{bench, figures};
 use hdreason::config::{accel_preset, Optimizations};
 use hdreason::sim::{simulate_batch, SimOptions, Workload};
@@ -10,6 +11,7 @@ fn main() {
     println!("{}", figures::fig8c(scale).unwrap());
     // timing: how fast is one ablation cell?
     let w = Workload::paper("FB15K-237", scale, 0).unwrap();
+    let mut results = Vec::new();
     for (name, opts) in [
         ("sim/all-on", Optimizations::ALL_ON),
         ("sim/all-off", Optimizations::ALL_OFF),
@@ -20,5 +22,7 @@ fn main() {
             std::hint::black_box(simulate_batch(&cfg, &w, SimOptions::default()));
         });
         println!("{}", r.row());
+        results.push(r);
     }
+    maybe_append_json(&results);
 }

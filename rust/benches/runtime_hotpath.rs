@@ -1,55 +1,130 @@
-//! Bench: the L3 hot path — PJRT train_step / forward latency, scheduler
-//! and literal-marshalling throughput. This is the perf-pass target for
-//! the coordinator layer (EXPERIMENTS.md §Perf).
-//! Run: make artifacts && cargo bench --bench runtime_hotpath
-use hdreason::bench::bench;
-use hdreason::config::{model_preset, RunConfig};
+//! Bench: the memorize/score hot path — scalar reference vs the blocked,
+//! multi-threaded kernel layer, plus scheduler / batcher throughput and
+//! (when artifacts exist) PJRT forward/train_step latency.
+//!
+//! The headline number is the batched-scorer speedup: the scalar path
+//! scores one query at a time with a fresh Vec per candidate sweep (the
+//! seed behaviour), the kernel path ranks the whole batch in one tiled
+//! pass over the (|V|, D) memory matrix. Both run in the same process on
+//! the same data, `tiny` preset.
+//!
+//! Run: cargo bench --bench runtime_hotpath [-- --json [PATH]]
+use hdreason::bench::harness::{bench, maybe_append_json, BenchResult};
+use hdreason::config::model_preset;
+use hdreason::hdc::{self, KernelConfig};
 use hdreason::kg::{generator, QueryBatcher};
-use hdreason::model::ModelState;
+use hdreason::model::{self, ModelState};
 use hdreason::runtime::{EdgeArrays, HdrRuntime, Manifest};
 use hdreason::scheduler::Scheduler;
+use std::hint::black_box;
 
 fn main() {
-    let manifest = match Manifest::load(&Manifest::default_dir()) {
-        Ok(m) => m,
-        Err(e) => {
-            eprintln!("skipping runtime benches: {e}");
-            return;
-        }
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut push = |r: BenchResult| -> BenchResult {
+        println!("{}", r.row());
+        results.push(r.clone());
+        r
     };
+
     let cfg = model_preset("tiny").unwrap();
-    let rt = HdrRuntime::load(&manifest, &cfg).unwrap();
     let kg = generator::learnable_for_preset(&cfg, 0.8, 0);
     let state = ModelState::init(&cfg, 0);
-    let edges = EdgeArrays::from_kg(&kg, &cfg);
-    let mut batcher = QueryBatcher::new(&kg, cfg.batch, 0);
-    let qb = batcher.next_batch();
+    let hv = state.encode_vertices_host();
+    let hr = state.encode_relations_host();
+    let csr = kg.train_csr();
+    let d = cfg.dim_hd;
 
-    let r = bench("pjrt/forward(tiny)", 3, 20, || {
-        std::hint::black_box(
-            rt.forward(&state, &edges, &qb.subj, &qb.rel, 6.0).unwrap(),
-        );
-    });
-    println!("{}", r.row());
+    // ---- memorize: scalar reference vs fused row-parallel kernel --------
+    let mem_scalar = push(bench("memorize/scalar(tiny)", 2, 15, || {
+        black_box(hdc::memorize_scalar(&csr, &hv, &hr, d));
+    }));
+    let mem_kernel = push(bench("memorize/kernel(tiny)", 2, 15, || {
+        black_box(hdc::memorize(&csr, &hv, &hr, d));
+    }));
+    println!(
+        "  -> memorize kernel speedup: {:.2}x\n",
+        mem_scalar.median_s / mem_kernel.median_s
+    );
 
-    let r = bench("pjrt/train_step(tiny)", 3, 20, || {
-        std::hint::black_box(
-            rt.train_step(&state, &edges, &qb.subj, &qb.rel, &qb.labels, 6.0, 0.1).unwrap(),
-        );
-    });
-    println!("{}", r.row());
+    // ---- batched scoring: the acceptance-criteria comparison ------------
+    let mem = hdc::memorize(&csr, &hv, &hr, d);
+    let pairs: Vec<(usize, usize)> = (0..cfg.batch)
+        .map(|b| (b % kg.num_vertices, b % kg.num_relations))
+        .collect();
+    let bias = 6.0f32;
 
-    // host-side scheduler throughput (edges/s) at paper scale
+    let scalar = push(bench("score/scalar-per-query(tiny)", 3, 30, || {
+        for &(s, r) in &pairs {
+            black_box(model::transe_scores_host(
+                &mem.data,
+                d,
+                mem.vertex(s),
+                &hr[r * d..(r + 1) * d],
+                bias,
+            ));
+        }
+    }));
+    let mut out = vec![0f32; pairs.len() * kg.num_vertices];
+    let batched = push(bench("score/kernel-batched(tiny)", 3, 30, || {
+        let q = model::pack_forward_queries(&mem.data, &hr, d, &pairs);
+        model::transe_scores_batch_into(&mem.data, d, &q, bias, &mut out, &KernelConfig::default());
+        black_box(&out);
+    }));
+    let speedup = scalar.median_s / batched.median_s;
+    println!(
+        "  -> batched scoring speedup vs scalar: {speedup:.2}x ({} queries x {} vertices, D={d})\n",
+        pairs.len(),
+        kg.num_vertices
+    );
+
+    // ---- neighbor reconstruction (Eq. 2): per-candidate alloc vs fused --
+    let rec_scalar = push(bench("reconstruct/scalar(tiny)", 2, 20, || {
+        black_box(hdc::reconstruct_neighbors_scalar(&mem, &hv, &hr, 0, 0, 10));
+    }));
+    let rec_kernel = push(bench("reconstruct/kernel(tiny)", 2, 20, || {
+        black_box(hdc::reconstruct_neighbors(&mem, &hv, &hr, 0, 0, 10));
+    }));
+    println!(
+        "  -> reconstruction kernel speedup: {:.2}x\n",
+        rec_scalar.median_s / rec_kernel.median_s
+    );
+
+    // ---- host-side scheduler throughput (edges/s) at paper scale --------
     let big = hdreason::sim::Workload::paper("FB15K-237", 0.5, 0).unwrap();
-    let r = bench("scheduler/epoch(FB15K-237@0.5)", 1, 10, || {
+    let r = push(bench("scheduler/epoch(FB15K-237@0.5)", 1, 10, || {
         let mut s = Scheduler::new(16, 1024, true);
-        std::hint::black_box(s.schedule_epoch(&big.csr, true));
-    });
-    println!("{}  ({:.1} M edges/s)", r.row(), big.num_edges as f64 / 1e6 / r.median_s);
+        black_box(s.schedule_epoch(&big.csr, true));
+    }));
+    println!("  -> {:.1} M edges/s\n", big.num_edges as f64 / 1e6 / r.median_s);
 
-    // query batching throughput
-    let r = bench("batcher/next_batch(tiny)", 5, 50, || {
-        std::hint::black_box(batcher.next_batch());
-    });
-    println!("{}", r.row());
+    // ---- query batching throughput --------------------------------------
+    let mut batcher = QueryBatcher::new(&kg, cfg.batch, 0);
+    push(bench("batcher/next_batch(tiny)", 5, 50, || {
+        black_box(batcher.next_batch());
+    }));
+
+    // ---- PJRT artifact latency (skipped when artifacts/ is absent or the
+    // crate was built without the `pjrt` feature) -------------------------
+    match Manifest::load(&Manifest::default_dir()) {
+        Ok(manifest) => match HdrRuntime::load(&manifest, &cfg) {
+            Ok(rt) => {
+                let edges = EdgeArrays::from_kg(&kg, &cfg);
+                let mut b2 = QueryBatcher::new(&kg, cfg.batch, 0);
+                let qb = b2.next_batch();
+                push(bench("pjrt/forward(tiny)", 3, 20, || {
+                    black_box(rt.forward(&state, &edges, &qb.subj, &qb.rel, 6.0).unwrap());
+                }));
+                push(bench("pjrt/train_step(tiny)", 3, 20, || {
+                    black_box(
+                        rt.train_step(&state, &edges, &qb.subj, &qb.rel, &qb.labels, 6.0, 0.1)
+                            .unwrap(),
+                    );
+                }));
+            }
+            Err(e) => eprintln!("skipping pjrt benches: {e}"),
+        },
+        Err(e) => eprintln!("skipping pjrt benches: {e}"),
+    }
+
+    maybe_append_json(&results);
 }

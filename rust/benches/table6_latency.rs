@@ -1,5 +1,6 @@
 //! Bench: Table 6 single-batch latency/energy/memory + simulator speed.
-//! Run: cargo bench --bench table6_latency
+//! Run: cargo bench --bench table6_latency [-- --json [PATH]]
+use hdreason::bench::harness::maybe_append_json;
 use hdreason::bench::{bench, figures};
 use hdreason::config::accel_preset;
 use hdreason::sim::{AcceleratorSim, SimOptions, Workload};
@@ -14,4 +15,5 @@ fn main() {
         std::hint::black_box(sim.run_batch(&w));
     });
     println!("{}  ({:.1} simulated batches/s)", r.row(), 1.0 / r.median_s);
+    maybe_append_json(&[r]);
 }

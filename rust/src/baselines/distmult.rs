@@ -2,6 +2,7 @@
 //! the decoder R-GCN uses (Table 4). score(s, r, o) = Σ_i e_s[i]·w_r[i]·e_o[i].
 
 use super::trainer::MarginModel;
+use crate::hdc::kernels::{self, KernelConfig};
 use crate::kg::Triple;
 use crate::util::Rng;
 
@@ -40,11 +41,13 @@ impl MarginModel for DistMult {
     }
 
     fn score_all_objects(&self, s: usize, r: usize) -> Vec<f32> {
+        // Σ_i e_s[i]·w_r[i]·e_o[i] = dot(e_s ∘ w_r, e_o): blocked
+        // row-parallel matvec over the entity table
         let d = self.dim;
         let q: Vec<f32> = self.e(s).iter().zip(self.r(r)).map(|(a, b)| a * b).collect();
-        (0..self.ent.len() / d)
-            .map(|o| q.iter().zip(&self.ent[o * d..(o + 1) * d]).map(|(a, c)| a * c).sum())
-            .collect()
+        let mut out = vec![0f32; self.ent.len() / d];
+        kernels::dot_scores_into(&self.ent, d, &q, &mut out, &KernelConfig::default());
+        out
     }
 
     fn margin_step(&mut self, pos: &Triple, neg: &Triple, lr: f32, margin: f32) {

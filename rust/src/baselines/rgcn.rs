@@ -13,6 +13,7 @@
 //! the logistic loss over (pos, neg) pairs.
 
 use super::trainer::MarginModel;
+use crate::hdc::kernels::{self, KernelConfig};
 use crate::kg::{Csr, KnowledgeGraph, Triple};
 use crate::model::sigmoid;
 use crate::util::Rng;
@@ -59,55 +60,62 @@ impl RGcn {
         self.ent.len() / self.dim
     }
 
-    /// Aggregated (pre-transform) neighbor message of vertex v:
-    /// (1/c_v) Σ e_u ∘ w_r.
-    fn neighbor_message(&self, v: usize) -> Vec<f32> {
+    /// Aggregated (pre-transform) neighbor message of vertex v into a
+    /// caller scratch buffer: (1/c_v) Σ e_u ∘ w_r.
+    fn neighbor_message_into(&self, v: usize, msg: &mut [f32]) {
         let d = self.dim;
-        let mut msg = vec![0f32; d];
+        msg.fill(0.0);
         let neigh = self.csr.neighbors(v);
         if neigh.is_empty() {
-            return msg;
+            return;
         }
         for &(u, r) in neigh {
             let e = &self.ent[u as usize * d..(u as usize + 1) * d];
             let w = &self.rel_comp[r as usize * d..(r as usize + 1) * d];
-            for i in 0..d {
-                msg[i] += e[i] * w[i];
-            }
+            kernels::bind_bundle_into(msg, e, w);
         }
         let c = neigh.len() as f32;
         msg.iter_mut().for_each(|x| *x /= c);
+    }
+
+    fn neighbor_message(&self, v: usize) -> Vec<f32> {
+        let mut msg = vec![0f32; self.dim];
+        self.neighbor_message_into(v, &mut msg);
         msg
     }
 
-    /// Pre-activation z_v.
-    fn pre_activation(&self, v: usize) -> Vec<f32> {
+    /// Pre-activation z_v into a caller row, `msg` as scratch.
+    fn pre_activation_into(&self, v: usize, z: &mut [f32], msg: &mut [f32]) {
         let d = self.dim;
         let e = &self.ent[v * d..(v + 1) * d];
-        let msg = self.neighbor_message(v);
-        let mut z = vec![0f32; d];
-        for i in 0..d {
-            let (ws_row, wr_row) = (&self.w_self[i * d..(i + 1) * d], &self.w_rel[i * d..(i + 1) * d]);
-            let mut acc = 0f32;
-            for j in 0..d {
-                acc += ws_row[j] * e[j] + wr_row[j] * msg[j];
-            }
-            z[i] = acc;
+        self.neighbor_message_into(v, msg);
+        for (i, zi) in z.iter_mut().enumerate() {
+            *zi = kernels::dot_blocked(&self.w_self[i * d..(i + 1) * d], e)
+                + kernels::dot_blocked(&self.w_rel[i * d..(i + 1) * d], msg);
         }
-        z
     }
 
     /// Recompute all hidden states (called after parameter updates, before
     /// scoring). This is the GCN propagation the paper calls "bulky
-    /// computation" (§1) — and indeed dominates this baseline's runtime.
+    /// computation" (§1) — and indeed dominates this baseline's runtime,
+    /// so vertices shard across the kernel layer's scoped threads, each
+    /// worker carrying one message scratch buffer.
     pub fn refresh_hidden(&mut self) {
         let d = self.dim;
-        for v in 0..self.num_vertices() {
-            let z = self.pre_activation(v);
-            for i in 0..d {
-                self.hidden[v * d + i] = z[i].tanh();
+        let mut hidden = std::mem::take(&mut self.hidden);
+        let threads =
+            KernelConfig::default().plan_threads(self.num_vertices(), 2 * d * d);
+        let this: &RGcn = self;
+        kernels::par_rows(&mut hidden, d, threads, |first, chunk| {
+            let mut msg = vec![0f32; d];
+            for (li, row) in chunk.chunks_mut(d).enumerate() {
+                this.pre_activation_into(first + li, row, &mut msg);
+                for x in row.iter_mut() {
+                    *x = x.tanh();
+                }
             }
-        }
+        });
+        self.hidden = hidden;
         self.dirty = false;
     }
 
@@ -188,12 +196,14 @@ impl MarginModel for RGcn {
     }
 
     fn score_all_objects(&self, s: usize, r: usize) -> Vec<f32> {
+        // DistMult decoder over hidden states: dot(h_s ∘ w_r, h_o) for all
+        // o — one blocked row-parallel matvec over the hidden matrix
         let d = self.dim;
         let w = &self.rel_dec[r * d..(r + 1) * d];
         let q: Vec<f32> = self.h(s).iter().zip(w).map(|(a, b)| a * b).collect();
-        (0..self.num_vertices())
-            .map(|o| q.iter().zip(self.h(o)).map(|(a, c)| a * c).sum())
-            .collect()
+        let mut out = vec![0f32; self.num_vertices()];
+        kernels::dot_scores_into(&self.hidden, d, &q, &mut out, &KernelConfig::default());
+        out
     }
 
     fn margin_step(&mut self, pos: &Triple, neg: &Triple, lr: f32, _margin: f32) {

@@ -3,6 +3,7 @@
 //! (Eq. 10). score(s, r, o) = −||e_s + e_r − e_o||_1.
 
 use super::trainer::MarginModel;
+use crate::hdc::kernels::{self, KernelConfig};
 use crate::kg::Triple;
 use crate::util::Rng;
 
@@ -55,16 +56,13 @@ impl MarginModel for TransE {
     }
 
     fn score_all_objects(&self, s: usize, r: usize) -> Vec<f32> {
+        // score(s, r, o) = −||e_s + e_r − e_o||_1: one blocked row-parallel
+        // pass over the entity table (bias 0 ⇒ the kernel returns −L1)
         let d = self.dim;
         let q: Vec<f32> = self.e(s).iter().zip(self.r(r)).map(|(a, b)| a + b).collect();
-        (0..self.ent.len() / d)
-            .map(|o| {
-                -q.iter()
-                    .zip(&self.ent[o * d..(o + 1) * d])
-                    .map(|(a, c)| (a - c).abs())
-                    .sum::<f32>()
-            })
-            .collect()
+        let mut out = vec![0f32; self.ent.len() / d];
+        kernels::l1_scores_into(&self.ent, d, &q, 0.0, &mut out, &KernelConfig::default());
+        out
     }
 
     fn margin_step(&mut self, pos: &Triple, neg: &Triple, lr: f32, margin: f32) {

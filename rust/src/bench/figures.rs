@@ -10,7 +10,7 @@ use crate::config::{accel_preset, model_preset, Optimizations, ReplacementPolicy
 use crate::coordinator::HdrTrainer;
 use crate::hdc::{self, DropStrategy};
 use crate::kg::{generator, GraphStats, KnowledgeGraph, LabelBatch};
-use crate::model::{evaluate_ranking, RankMetrics};
+use crate::model::{evaluate_ranking, evaluate_ranking_batched, RankMetrics};
 use crate::platform::{self, accelerators, device};
 use crate::runtime::{HdrRuntime, Manifest};
 use crate::sim::{simulate_batch, SimOptions, Workload};
@@ -301,14 +301,11 @@ pub fn fig9a() -> crate::Result<String> {
                 hr2[r * d + dim] = 0.0;
             }
         }
-        let m = evaluate_ranking(&queries, &labels, |s, r| {
-            crate::model::transe_scores_host(
-                &mv,
-                d,
-                &mv[s * d..(s + 1) * d],
-                &hr2[r * d..(r + 1) * d],
-                0.0,
-            )
+        // batched kernel scoring: one tiled pass over mv per query chunk
+        let m = evaluate_ranking_batched(&queries, &labels, 64, |qs| {
+            let pairs: Vec<(usize, usize)> = qs.iter().map(|&(s, r, _)| (s, r)).collect();
+            let q = crate::model::pack_forward_queries(&mv, &hr2, d, &pairs);
+            crate::model::transe_scores_batch(&mv, d, &q, 0.0)
         });
         m.hits10
     };
@@ -350,14 +347,9 @@ pub fn fig9b() -> crate::Result<String> {
             fp.quantize_tensor(&mut hr);
         }
         let mv = hdc::memorize(&csr, &hv, &hr, d);
-        evaluate_ranking(&queries, &labels, |s, r| {
-            crate::model::transe_scores_host(
-                &mv.data,
-                d,
-                mv.vertex(s),
-                &hr[r * d..(r + 1) * d],
-                0.0,
-            )
+        evaluate_ranking_batched(&queries, &labels, 64, |qs| {
+            let pairs: Vec<(usize, usize)> = qs.iter().map(|&(s, r, _)| (s, r)).collect();
+            crate::model::transe_scores_batch_mem(&mv, &hr, &pairs, 0.0)
         })
         .hits10
     };

@@ -1,6 +1,15 @@
 //! Minimal benchmarking harness (criterion replacement): fixed warmup,
 //! N timed iterations, median + MAD + min reporting.
+//!
+//! Machine-readable output: every *timing* bench target (the ones that
+//! call [`bench`]; figure-only targets like fig11_cross/fig8d_breakdown
+//! have no timings to record) passes its results through
+//! [`maybe_append_json`], so `cargo bench --bench <name> -- --json [PATH]`
+//! appends one `{"name", "median_s", "iters"}` object per line to
+//! `BENCH_1.json` (default: at the repo root, next to `rust/`). The file is
+//! append-only JSON-lines so the perf trajectory accumulates across PRs.
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 #[derive(Debug, Clone)]
@@ -28,6 +37,62 @@ impl BenchResult {
     /// Throughput helper given items processed per iteration.
     pub fn per_second(&self, items: f64) -> f64 {
         items / self.median_s
+    }
+
+    /// One JSON-lines row for BENCH_1.json. Names are plain ASCII
+    /// identifiers chosen by the bench targets; quotes/backslashes are
+    /// escaped defensively anyway.
+    pub fn json_row(&self) -> String {
+        let name: String = self
+            .name
+            .chars()
+            .flat_map(|c| match c {
+                '"' | '\\' => vec!['\\', c],
+                c if c.is_control() => vec![' '],
+                c => vec![c],
+            })
+            .collect();
+        format!(
+            "{{\"name\":\"{}\",\"median_s\":{:e},\"iters\":{}}}",
+            name, self.median_s, self.iters
+        )
+    }
+}
+
+/// Parse `--json [PATH]` from the process args (cargo forwards everything
+/// after `--` to the bench binary). A bare `--json` defaults to
+/// `BENCH_1.json` at the repo root (via CARGO_MANIFEST_DIR when cargo sets
+/// it, else the current directory).
+pub fn json_path_from_args() -> Option<PathBuf> {
+    let args: Vec<String> = std::env::args().collect();
+    let i = args.iter().position(|a| a == "--json")?;
+    if let Some(p) = args.get(i + 1).filter(|v| !v.starts_with("--")) {
+        return Some(PathBuf::from(p));
+    }
+    let default = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => Path::new(&dir).join("..").join("BENCH_1.json"),
+        Err(_) => PathBuf::from("BENCH_1.json"),
+    };
+    Some(default)
+}
+
+/// Append results as JSON-lines rows to `path`.
+pub fn append_json(path: &Path, results: &[BenchResult]) -> std::io::Result<()> {
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    for r in results {
+        writeln!(f, "{}", r.json_row())?;
+    }
+    Ok(())
+}
+
+/// The standard tail call of every bench target: honour `--json` if given.
+pub fn maybe_append_json(results: &[BenchResult]) {
+    if let Some(path) = json_path_from_args() {
+        match append_json(&path, results) {
+            Ok(()) => println!("appended {} rows to {}", results.len(), path.display()),
+            Err(e) => eprintln!("--json: cannot write {}: {e}", path.display()),
+        }
     }
 }
 
@@ -73,5 +138,37 @@ mod tests {
         assert!(r.min_s <= r.median_s);
         assert_eq!(r.iters, 5);
         assert!(r.row().contains("spin"));
+    }
+
+    #[test]
+    fn json_rows_parse_back() {
+        let r = BenchResult {
+            name: "score/kernel \"q\"".into(),
+            iters: 7,
+            median_s: 0.00123,
+            mad_s: 0.0,
+            min_s: 0.001,
+            mean_s: 0.0013,
+        };
+        let j = crate::util::Json::parse(&r.json_row()).expect("json_row must be valid JSON");
+        assert_eq!(j.get("iters").and_then(crate::util::Json::as_f64), Some(7.0));
+        let med = j.get("median_s").and_then(crate::util::Json::as_f64).unwrap();
+        assert!((med - 0.00123).abs() < 1e-9);
+    }
+
+    #[test]
+    fn append_json_accumulates_rows() {
+        let dir = crate::util::TempDir::new("bench-json").unwrap();
+        let path = dir.path().join("BENCH_1.json");
+        let r = bench("spin2", 0, 3, || {
+            std::hint::black_box(2 + 2);
+        });
+        append_json(&path, &[r.clone()]).unwrap();
+        append_json(&path, &[r]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            crate::util::Json::parse(line).unwrap();
+        }
     }
 }

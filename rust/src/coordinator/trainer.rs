@@ -119,7 +119,9 @@ impl<'kg> HdrTrainer<'kg> {
     /// memory hypervectors) — the protocol behind Fig. 8(a).
     pub fn evaluate_both(&self, triples: &[crate::kg::Triple]) -> crate::Result<RankMetrics> {
         let fwd = self.evaluate(triples)?;
-        // backward: build M^v host-side once, rank subjects per query
+        // backward: build M^v host-side once, then rank subjects through
+        // the batched kernel scorer — one tiled pass over the memory
+        // matrix per query chunk instead of one full walk per triple
         let d = self.rc.model.dim_hd;
         let live = self.kg.num_vertices;
         let hv = self.state.encode_vertices_host();
@@ -131,30 +133,20 @@ impl<'kg> HdrTrainer<'kg> {
             subj_of.entry((t.rel as u32, t.dst as u32)).or_default().push(t.src as u32);
         }
         let mut bwd = RankMetrics::default();
-        let mut mrr = 0f64;
-        let (mut h1, mut h3, mut h10) = (0f64, 0f64, 0f64);
-        for t in triples {
-            let scores = crate::model::transe_scores_subjects_host(
-                &mem.data[..live * d],
-                d,
-                mem.vertex(t.dst),
-                &hr[t.rel * d..(t.rel + 1) * d],
-                0.0,
-            );
+        let chunk = self.rc.model.batch.max(1);
+        for tc in triples.chunks(chunk) {
+            let pairs: Vec<(usize, usize)> = tc.iter().map(|t| (t.dst, t.rel)).collect();
+            let q = crate::model::pack_backward_queries(&mem.data, &hr, d, &pairs);
+            let scores = crate::model::transe_scores_batch(&mem.data[..live * d], d, &q, 0.0);
             let empty = Vec::new();
-            let filter = subj_of.get(&(t.rel as u32, t.dst as u32)).unwrap_or(&empty);
-            let rank = crate::model::rank_of(&scores, t.src, filter);
-            mrr += 1.0 / rank as f64;
-            h1 += (rank <= 1) as usize as f64;
-            h3 += (rank <= 3) as usize as f64;
-            h10 += (rank <= 10) as usize as f64;
+            for (row, t) in tc.iter().enumerate() {
+                let filter = subj_of.get(&(t.rel as u32, t.dst as u32)).unwrap_or(&empty);
+                let rank =
+                    crate::model::rank_of(&scores[row * live..(row + 1) * live], t.src, filter);
+                bwd.add_rank(rank);
+            }
         }
-        let n = triples.len().max(1) as f64;
-        bwd.mrr = mrr / n;
-        bwd.hits1 = h1 / n;
-        bwd.hits3 = h3 / n;
-        bwd.hits10 = h10 / n;
-        bwd.count = triples.len();
+        let bwd = bwd.finalize();
         // paper protocol: mean of the two directions
         Ok(RankMetrics {
             mrr: (fwd.mrr + bwd.mrr) / 2.0,

@@ -1,0 +1,469 @@
+//! Blocked, multi-threaded host kernels for the memorize/score hot path.
+//!
+//! This is the software mirror of the paper's Memorization Computing IP and
+//! Score Engine (§4.2/§4.3): the accelerator streams tiles of the (|V|, D)
+//! memory matrix through fused bind→bundle and L1-score pipelines, and the
+//! host baseline the simulator compares against should do the same instead
+//! of re-walking the matrix once per query with a fresh allocation per
+//! candidate. Three disciplines, applied uniformly:
+//!
+//! * **zero allocation** — every kernel writes into caller-provided buffers;
+//!   the only transient is one batch-local scratch inside the batched scorer;
+//! * **fixed-width blocking** — reductions keep [`LANES`] independent
+//!   partial accumulators so LLVM can autovectorize loops that a strict
+//!   left-to-right float sum forbids, and the batched scorer amortizes each
+//!   memory-matrix row over [`QUERY_BLOCK`] queries at a time;
+//! * **row parallelism** — [`par_rows`] shards disjoint output rows over
+//!   `std::thread::scope` workers, so no locking and no `'static` bounds.
+//!
+//! The scalar functions in [`super::ops`], [`super::memory`] and
+//! `model::score` are kept as the *reference* implementations; the
+//! `kernel_equivalence` property tests pin these kernels to them bit-for-bit
+//! (binding/bundling/memorize) or within float-reassociation tolerance
+//! (L1/cosine/dot scores) across thread counts and non-multiple-of-[`LANES`]
+//! dimensions.
+
+use super::memory::GraphMemory;
+use crate::kg::Csr;
+
+/// Width of the blocked inner loops (f32 lanes of one AVX2 register). Inner
+/// reductions carry this many independent partial sums.
+pub const LANES: usize = 8;
+
+/// Queries scored per pass over one memory row in the batched scorer: each
+/// loaded row of M^v is reused this many times before eviction.
+pub const QUERY_BLOCK: usize = 4;
+
+/// Minimum element-ops per worker before auto-threading adds another; below
+/// this, thread spawn overhead beats the parallel win on small presets.
+const WORK_PER_THREAD: usize = 1 << 18;
+
+/// Execution policy for the kernel layer.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelConfig {
+    /// Worker threads. `0` = auto: `available_parallelism`, scaled down so
+    /// each worker gets at least [`WORK_PER_THREAD`] element-ops. An
+    /// explicit count is honoured exactly (clamped to the row count) — the
+    /// property tests rely on that to exercise 1/2/max threads.
+    pub threads: usize,
+}
+
+impl Default for KernelConfig {
+    fn default() -> Self {
+        Self { threads: 0 }
+    }
+}
+
+impl KernelConfig {
+    pub fn with_threads(threads: usize) -> Self {
+        Self { threads }
+    }
+
+    /// Resolve the worker count for a job of `rows` rows × `work_per_row`
+    /// element-ops.
+    pub fn plan_threads(&self, rows: usize, work_per_row: usize) -> usize {
+        let requested = if self.threads == 0 {
+            let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            let by_work = (rows.saturating_mul(work_per_row) / WORK_PER_THREAD).max(1);
+            auto.min(by_work)
+        } else {
+            self.threads
+        };
+        requested.clamp(1, rows.max(1))
+    }
+}
+
+// ------------------------------------------------------------ primitives
+
+/// Binding into a caller buffer: `out = a ∘ b`. The zero-allocation form of
+/// [`super::ops::bind`].
+#[inline]
+pub fn bind_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x * y;
+    }
+}
+
+/// Fused bind→bundle: `acc += a ∘ b` with no intermediate bound vector —
+/// the Memorization Computing IP's multiply-accumulate. Element-wise, so
+/// bit-identical to `bind` followed by `bundle_into`.
+#[inline]
+pub fn bind_bundle_into(acc: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(acc.len(), a.len());
+    debug_assert_eq!(acc.len(), b.len());
+    for ((o, &x), &y) in acc.iter_mut().zip(a).zip(b) {
+        *o += x * y;
+    }
+}
+
+/// Blocked L1 distance: [`LANES`] partial accumulators so the abs-diff
+/// reduction vectorizes (the strict-order scalar sum in
+/// [`super::ops::l1_distance`] cannot).
+#[inline]
+pub fn l1_distance_blocked(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let main = a.len() - a.len() % LANES;
+    let mut acc = [0f32; LANES];
+    for (ca, cb) in a[..main].chunks_exact(LANES).zip(b[..main].chunks_exact(LANES)) {
+        for k in 0..LANES {
+            acc[k] += (ca[k] - cb[k]).abs();
+        }
+    }
+    let mut s = 0f32;
+    for &p in &acc {
+        s += p;
+    }
+    for (&x, &y) in a[main..].iter().zip(&b[main..]) {
+        s += (x - y).abs();
+    }
+    s
+}
+
+/// Blocked dot product (DistMult / R-GCN decoder inner loop).
+#[inline]
+pub fn dot_blocked(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let main = a.len() - a.len() % LANES;
+    let mut acc = [0f32; LANES];
+    for (ca, cb) in a[..main].chunks_exact(LANES).zip(b[..main].chunks_exact(LANES)) {
+        for k in 0..LANES {
+            acc[k] += ca[k] * cb[k];
+        }
+    }
+    let mut s = 0f32;
+    for &p in &acc {
+        s += p;
+    }
+    for (&x, &y) in a[main..].iter().zip(&b[main..]) {
+        s += x * y;
+    }
+    s
+}
+
+/// Blocked cosine similarity (three interleaved reductions).
+#[inline]
+pub fn cosine_blocked(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let main = a.len() - a.len() % LANES;
+    let (mut dot_acc, mut na_acc, mut nb_acc) = ([0f32; LANES], [0f32; LANES], [0f32; LANES]);
+    for (ca, cb) in a[..main].chunks_exact(LANES).zip(b[..main].chunks_exact(LANES)) {
+        for k in 0..LANES {
+            dot_acc[k] += ca[k] * cb[k];
+            na_acc[k] += ca[k] * ca[k];
+            nb_acc[k] += cb[k] * cb[k];
+        }
+    }
+    let (mut dot, mut na, mut nb) = (0f32, 0f32, 0f32);
+    for k in 0..LANES {
+        dot += dot_acc[k];
+        na += na_acc[k];
+        nb += nb_acc[k];
+    }
+    for (&x, &y) in a[main..].iter().zip(&b[main..]) {
+        dot += x * y;
+        na += x * x;
+        nb += y * y;
+    }
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
+// -------------------------------------------------------- row parallelism
+
+/// Shard `data` (row-major, `row_len` floats per row) into contiguous row
+/// ranges and run `f(first_row, rows_chunk)` on each, one scoped thread per
+/// range. `threads <= 1` runs inline with zero spawn overhead. Workers own
+/// disjoint `&mut` chunks, so there is no synchronization on the hot path.
+pub fn par_rows<F>(data: &mut [f32], row_len: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    debug_assert!(row_len > 0 && data.len() % row_len == 0);
+    let rows = data.len() / row_len;
+    let threads = threads.clamp(1, rows);
+    if threads <= 1 {
+        f(0, data);
+        return;
+    }
+    let rows_per = (rows + threads - 1) / threads;
+    std::thread::scope(|s| {
+        for (t, chunk) in data.chunks_mut(rows_per * row_len).enumerate() {
+            let f = &f;
+            s.spawn(move || f(t * rows_per, chunk));
+        }
+    });
+}
+
+// -------------------------------------------------------------- memorize
+
+/// Eq. 1/7 memorization into a caller buffer: row `i` of `out` accumulates
+/// Σ_{(j,r)∈N(i)} H_j ∘ H_r via the fused multiply-accumulate, rows
+/// sharded across threads. Per-row accumulation order matches the scalar
+/// reference exactly, so the result is bit-identical to
+/// [`super::memory::memorize_scalar`].
+pub fn memorize_into(
+    csr: &Csr,
+    hv: &[f32],
+    hr: &[f32],
+    dim_hd: usize,
+    out: &mut [f32],
+    cfg: &KernelConfig,
+) {
+    let v = csr.num_vertices();
+    assert_eq!(out.len(), v * dim_hd, "memorize_into: out must be (|V|, D)");
+    let avg_degree = if v == 0 { 0 } else { csr.num_edges() / v.max(1) + 1 };
+    let threads = cfg.plan_threads(v, avg_degree * dim_hd);
+    par_rows(out, dim_hd, threads, |first, chunk| {
+        for (li, row) in chunk.chunks_mut(dim_hd).enumerate() {
+            row.fill(0.0);
+            for &(src, rel) in csr.neighbors(first + li) {
+                let h = &hv[src as usize * dim_hd..(src as usize + 1) * dim_hd];
+                let r = &hr[rel as usize * dim_hd..(rel as usize + 1) * dim_hd];
+                bind_bundle_into(row, h, r);
+            }
+        }
+    });
+}
+
+/// Allocating wrapper over [`memorize_into`].
+pub fn memorize_blocked(csr: &Csr, hv: &[f32], hr: &[f32], dim_hd: usize, cfg: &KernelConfig) -> GraphMemory {
+    let mut data = vec![0f32; csr.num_vertices() * dim_hd];
+    memorize_into(csr, hv, hr, dim_hd, &mut data, cfg);
+    GraphMemory { dim_hd, data }
+}
+
+// ---------------------------------------------------------------- scoring
+
+/// Single-query Eq. 10 scores: `out[j] = bias − ||q − mv_j||_1` for every
+/// row of the (|V|, D) matrix `mv`, rows sharded across threads.
+pub fn l1_scores_into(
+    mv: &[f32],
+    dim_hd: usize,
+    q: &[f32],
+    bias: f32,
+    out: &mut [f32],
+    cfg: &KernelConfig,
+) {
+    debug_assert_eq!(q.len(), dim_hd);
+    let v = mv.len() / dim_hd;
+    assert_eq!(out.len(), v, "l1_scores_into: out must be (|V|,)");
+    let threads = cfg.plan_threads(v, dim_hd);
+    par_rows(out, 1, threads, |first, chunk| {
+        for (lj, o) in chunk.iter_mut().enumerate() {
+            let j = first + lj;
+            *o = bias - l1_distance_blocked(q, &mv[j * dim_hd..(j + 1) * dim_hd]);
+        }
+    });
+}
+
+/// Dot-product scores: `out[j] = q · mat_j` (DistMult / R-GCN decoder
+/// against all vertices).
+pub fn dot_scores_into(mat: &[f32], dim: usize, q: &[f32], out: &mut [f32], cfg: &KernelConfig) {
+    debug_assert_eq!(q.len(), dim);
+    let n = mat.len() / dim;
+    assert_eq!(out.len(), n, "dot_scores_into: out must be (N,)");
+    let threads = cfg.plan_threads(n, dim);
+    par_rows(out, 1, threads, |first, chunk| {
+        for (lj, o) in chunk.iter_mut().enumerate() {
+            let j = first + lj;
+            *o = dot_blocked(q, &mat[j * dim..(j + 1) * dim]);
+        }
+    });
+}
+
+/// Batched Eq. 10 scorer — the Score Engine analogue. Ranks a whole query
+/// batch against all vertex memories in ONE tiled pass over `mv`:
+/// `out[b * |V| + j] = bias − ||q_b − mv_j||_1`.
+///
+/// `q` is the (B, D) row-major matrix of precomputed query points
+/// (`M_s + H_r` forward, `M_o − H_r` backward). Internally the kernel walks
+/// `mv` vertex-major so each memory row is loaded once total (vs once *per
+/// query* on the scalar path) and reused across [`QUERY_BLOCK`] queries per
+/// pass; vertices shard across threads into a vertex-major scratch that is
+/// transposed into `out` at the end (O(VB), negligible next to the O(VBD)
+/// distance work).
+pub fn l1_scores_batch_into(
+    mv: &[f32],
+    dim_hd: usize,
+    q: &[f32],
+    bias: f32,
+    out: &mut [f32],
+    cfg: &KernelConfig,
+) {
+    let v = mv.len() / dim_hd;
+    let b = q.len() / dim_hd;
+    assert_eq!(out.len(), v * b, "l1_scores_batch_into: out must be (B, |V|)");
+    if v == 0 || b == 0 {
+        return;
+    }
+    let threads = cfg.plan_threads(v, b * dim_hd);
+    let main = dim_hd - dim_hd % LANES;
+    let mut scratch = vec![0f32; v * b];
+    par_rows(&mut scratch, b, threads, |first, chunk| {
+        for (lj, srow) in chunk.chunks_mut(b).enumerate() {
+            let j = first + lj;
+            let row = &mv[j * dim_hd..(j + 1) * dim_hd];
+            let mut qi = 0;
+            // QUERY_BLOCK queries share each pass over `row`
+            while qi + QUERY_BLOCK <= b {
+                let mut acc = [[0f32; LANES]; QUERY_BLOCK];
+                for c0 in (0..main).step_by(LANES) {
+                    let rc = &row[c0..c0 + LANES];
+                    for (t, at) in acc.iter_mut().enumerate() {
+                        let qc = &q[(qi + t) * dim_hd + c0..(qi + t) * dim_hd + c0 + LANES];
+                        for k in 0..LANES {
+                            at[k] += (qc[k] - rc[k]).abs();
+                        }
+                    }
+                }
+                for (t, at) in acc.iter().enumerate() {
+                    let mut s = 0f32;
+                    for &p in at {
+                        s += p;
+                    }
+                    let qrow = &q[(qi + t) * dim_hd..(qi + t + 1) * dim_hd];
+                    for k in main..dim_hd {
+                        s += (qrow[k] - row[k]).abs();
+                    }
+                    srow[qi + t] = bias - s;
+                }
+                qi += QUERY_BLOCK;
+            }
+            // remainder queries: plain blocked distance (same lane-wise
+            // association as the block above, so results are identical)
+            while qi < b {
+                srow[qi] = bias - l1_distance_blocked(&q[qi * dim_hd..(qi + 1) * dim_hd], row);
+                qi += 1;
+            }
+        }
+    });
+    for j in 0..v {
+        for bq in 0..b {
+            out[bq * v + j] = scratch[j * b + bq];
+        }
+    }
+}
+
+/// Eq. 2 reconstruction scores without materializing any bound vector:
+/// `out[j] = cosine(m, H_j ∘ r)`, with `dot(m, H_j ∘ r)` and `‖H_j ∘ r‖²`
+/// fused into one pass and `‖m‖²` hoisted out of the vertex loop.
+pub fn cosine_bound_scores_into(
+    m: &[f32],
+    hv: &[f32],
+    r: &[f32],
+    out: &mut [f32],
+    cfg: &KernelConfig,
+) {
+    let d = m.len();
+    debug_assert_eq!(r.len(), d);
+    let nv = hv.len() / d;
+    assert_eq!(out.len(), nv, "cosine_bound_scores_into: out must be (|V|,)");
+    let na = dot_blocked(m, m);
+    let main = d - d % LANES;
+    let threads = cfg.plan_threads(nv, 2 * d);
+    par_rows(out, 1, threads, |first, chunk| {
+        for (lj, o) in chunk.iter_mut().enumerate() {
+            let h = &hv[(first + lj) * d..(first + lj + 1) * d];
+            let (mut dot_acc, mut nb_acc) = ([0f32; LANES], [0f32; LANES]);
+            for c0 in (0..main).step_by(LANES) {
+                for k in 0..LANES {
+                    let p = h[c0 + k] * r[c0 + k];
+                    dot_acc[k] += m[c0 + k] * p;
+                    nb_acc[k] += p * p;
+                }
+            }
+            let (mut dot, mut nb) = (0f32, 0f32);
+            for k in 0..LANES {
+                dot += dot_acc[k];
+                nb += nb_acc[k];
+            }
+            for k in main..d {
+                let p = h[k] * r[k];
+                dot += m[k] * p;
+                nb += p * p;
+            }
+            *o = if na == 0.0 || nb == 0.0 { 0.0 } else { dot / (na.sqrt() * nb.sqrt()) };
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn blocked_l1_matches_scalar_on_awkward_lengths() {
+        let mut rng = Rng::seed_from_u64(0);
+        for d in [1usize, 7, 8, 9, 13, 100, 128] {
+            let a = randv(&mut rng, d);
+            let b = randv(&mut rng, d);
+            let want = crate::hdc::l1_distance(&a, &b);
+            let got = l1_distance_blocked(&a, &b);
+            assert!((want - got).abs() <= 1e-5 * want.max(1.0), "d={d}: {want} vs {got}");
+        }
+    }
+
+    #[test]
+    fn fused_bind_bundle_is_bit_identical() {
+        let mut rng = Rng::seed_from_u64(1);
+        let d = 37;
+        let (a, b) = (randv(&mut rng, d), randv(&mut rng, d));
+        let mut acc1 = randv(&mut rng, d);
+        let mut acc2 = acc1.clone();
+        let bound = crate::hdc::bind(&a, &b);
+        crate::hdc::bundle_into(&mut acc1, &bound);
+        bind_bundle_into(&mut acc2, &a, &b);
+        assert_eq!(acc1, acc2);
+    }
+
+    #[test]
+    fn par_rows_covers_every_row_exactly_once_at_any_thread_count() {
+        for threads in [1usize, 2, 3, 7, 64] {
+            let mut data = vec![0f32; 10 * 4];
+            par_rows(&mut data, 4, threads, |first, chunk| {
+                for (li, row) in chunk.chunks_mut(4).enumerate() {
+                    for x in row.iter_mut() {
+                        *x += (first + li) as f32;
+                    }
+                }
+            });
+            for (i, row) in data.chunks(4).enumerate() {
+                assert!(row.iter().all(|&x| x == i as f32), "threads={threads} row {i}: {row:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_scorer_handles_degenerate_shapes() {
+        // empty batch and empty matrix must not panic
+        let mut out: Vec<f32> = vec![];
+        l1_scores_batch_into(&[], 8, &[], 0.0, &mut out, &KernelConfig::default());
+        let mv = vec![0f32; 3 * 8];
+        let mut out = vec![0f32; 0];
+        l1_scores_batch_into(&mv, 8, &[], 0.0, &mut out, &KernelConfig::default());
+    }
+
+    #[test]
+    fn explicit_thread_counts_are_honoured_and_clamped() {
+        let cfg = KernelConfig::with_threads(16);
+        assert_eq!(cfg.plan_threads(4, 1000), 4); // clamped to rows
+        assert_eq!(cfg.plan_threads(100, 1000), 16);
+        assert_eq!(KernelConfig::with_threads(1).plan_threads(100, 1000), 1);
+        // auto mode never exceeds the work heuristic
+        let auto = KernelConfig::default().plan_threads(2, 4);
+        assert_eq!(auto, 1);
+    }
+}

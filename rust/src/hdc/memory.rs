@@ -6,7 +6,14 @@
 //! δ(M_i, H_j ∘ H_r) estimates whether the edge exists. This is the
 //! transparency claim of §3.3 — the memory hypervector symbolically stores
 //! the neighborhood and can be queried without any learned decoder.
+//!
+//! Layering: the public `memorize` / `reconstruct_neighbors` run on the
+//! blocked multi-threaded [`super::kernels`] layer; the `*_scalar` variants
+//! are the straight-line reference implementations the kernel property
+//! tests compare against (bit-for-bit for memorize, float-tolerance for
+//! the cosine scores).
 
+use super::kernels::{self, KernelConfig};
 use super::ops::{bundle_into, cosine};
 use crate::kg::Csr;
 
@@ -24,8 +31,15 @@ impl GraphMemory {
 }
 
 /// Eq. 1/7: aggregate each vertex's bound neighbor hypervectors.
-/// `hv`/`hr` are row-major (|V|, D) / (|R|, D).
+/// `hv`/`hr` are row-major (|V|, D) / (|R|, D). Runs the fused,
+/// row-parallel kernel; bit-identical to [`memorize_scalar`].
 pub fn memorize(csr: &Csr, hv: &[f32], hr: &[f32], dim_hd: usize) -> GraphMemory {
+    kernels::memorize_blocked(csr, hv, hr, dim_hd, &KernelConfig::default())
+}
+
+/// Scalar reference for [`memorize`]: one vertex at a time, one explicit
+/// bind buffer per edge. Kept for the kernel equivalence tests.
+pub fn memorize_scalar(csr: &Csr, hv: &[f32], hr: &[f32], dim_hd: usize) -> GraphMemory {
     let v = csr.num_vertices();
     let mut data = vec![0f32; v * dim_hd];
     let mut bound = vec![0f32; dim_hd];
@@ -45,8 +59,29 @@ pub fn memorize(csr: &Csr, hv: &[f32], hr: &[f32], dim_hd: usize) -> GraphMemory
 
 /// Eq. 2: score candidate neighbors of vertex `i` by δ(M_i, H_j ∘ H_r).
 /// Returns (vertex, similarity) sorted descending — the paper's vertex
-/// neighbor reconstruction (Fig. 1(c)).
+/// neighbor reconstruction (Fig. 1(c)). Candidate scoring runs the fused
+/// cosine kernel: no bound vector is materialized per candidate.
 pub fn reconstruct_neighbors(
+    mem: &GraphMemory,
+    hv: &[f32],
+    hr: &[f32],
+    i: usize,
+    rel: usize,
+    top_k: usize,
+) -> Vec<(usize, f32)> {
+    let d = mem.dim_hd;
+    let r = &hr[rel * d..(rel + 1) * d];
+    let mut scores = vec![0f32; hv.len() / d];
+    kernels::cosine_bound_scores_into(mem.vertex(i), hv, r, &mut scores, &KernelConfig::default());
+    let mut scored: Vec<(usize, f32)> = scores.into_iter().enumerate().collect();
+    scored.sort_by(|a, b| b.1.total_cmp(&a.1));
+    scored.truncate(top_k);
+    scored
+}
+
+/// Scalar reference for [`reconstruct_neighbors`] (fresh bound vector per
+/// candidate — exactly the per-candidate allocation the kernel removes).
+pub fn reconstruct_neighbors_scalar(
     mem: &GraphMemory,
     hv: &[f32],
     hr: &[f32],
@@ -112,5 +147,17 @@ mod tests {
         let mem = memorize(&csr, &hv, &hr, 8);
         assert!(mem.vertex(3).iter().all(|&x| x == 0.0));
         assert!(mem.vertex(1).iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn kernel_memorize_matches_scalar_reference() {
+        let mut rng = Rng::seed_from_u64(5);
+        let (v, r, d) = (19, 4, 13); // D deliberately not a LANES multiple
+        let hv: Vec<f32> = (0..v * d).map(|_| rng.normal_f32()).collect();
+        let hr: Vec<f32> = (0..r * d).map(|_| rng.normal_f32()).collect();
+        let triples: Vec<Triple> =
+            (0..60).map(|_| Triple::new(rng.below(v), rng.below(r), rng.below(v))).collect();
+        let csr = Csr::from_triples(v, &triples);
+        assert_eq!(memorize(&csr, &hv, &hr, d).data, memorize_scalar(&csr, &hv, &hr, d).data);
     }
 }

@@ -1,18 +1,37 @@
 //! Hyperdimensional computing primitives (paper §2.1) in pure rust.
 //!
-//! This is the host-side mirror of the L1 Pallas kernels: the coordinator
-//! uses it for interpretability queries (neighbor reconstruction, Eq. 2),
-//! for the quantization / dimension-drop experiments (Fig. 9), and tests
-//! use it to cross-check the PJRT artifacts. The hot path runs through the
-//! AOT artifacts, not this module.
+//! Two layers, by design:
+//!
+//! * **Scalar references** — [`ops`] (`bind`/`bundle`/`cosine`/`l1_distance`),
+//!   [`memory::memorize_scalar`], [`memory::reconstruct_neighbors_scalar`]
+//!   and `model::transe_scores_host`: straight-line, allocation-per-step
+//!   implementations whose correctness is easy to audit. These are the
+//!   ground truth that tests (and the PJRT artifact round-trips) check
+//!   against, and the "CPU baseline" the benches compare to.
+//! * **Kernel layer** — [`kernels`]: zero-allocation, cache-blocked,
+//!   `std::thread::scope`-parallel versions of the same math (fused
+//!   bind→bundle, batched tiled L1 scoring, fused cosine reconstruction).
+//!   The public entry points `memorize` / `reconstruct_neighbors` and the
+//!   `model::score` / baseline scorers all route through this layer; the
+//!   `kernel_equivalence` property tests pin it to the scalar references
+//!   across thread counts and awkward dimensions.
+//!
+//! The coordinator uses this module for interpretability queries (neighbor
+//! reconstruction, Eq. 2), for the quantization / dimension-drop
+//! experiments (Fig. 9), and for host-side eval at scale; the accelerated
+//! training path runs through the AOT artifacts.
 
 mod encoder;
 mod entropy;
+pub mod kernels;
 mod memory;
 mod ops;
 pub mod quant;
 
 pub use encoder::Encoder;
 pub use entropy::{dimension_entropy, drop_dimensions, DropStrategy};
-pub use memory::{memorize, reconstruct_neighbors, GraphMemory};
+pub use kernels::KernelConfig;
+pub use memory::{
+    memorize, memorize_scalar, reconstruct_neighbors, reconstruct_neighbors_scalar, GraphMemory,
+};
 pub use ops::{bind, bundle, bundle_into, cosine, hamming, l1_distance, Hypervector};

@@ -1,5 +1,10 @@
 //! Core hypervector operations (paper §2.1): bundling (+), binding (∘),
 //! and the distance functions δ used by reconstruction and scoring.
+//!
+//! These are the *scalar reference* implementations — strict left-to-right
+//! float order, one allocation per op where natural. The hot path runs the
+//! blocked/threaded equivalents in [`super::kernels`], which the
+//! `kernel_equivalence` property tests pin to these functions.
 
 /// A dense f32 hypervector. HDC is holographic — information is evenly
 /// spread across dimensions — so plain slices are the right representation;

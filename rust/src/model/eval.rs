@@ -15,7 +15,7 @@ pub struct RankMetrics {
 }
 
 impl RankMetrics {
-    fn add_rank(&mut self, rank: usize) {
+    pub(crate) fn add_rank(&mut self, rank: usize) {
         self.mrr += 1.0 / rank as f64;
         self.hits1 += (rank <= 1) as usize as f64;
         self.hits3 += (rank <= 3) as usize as f64;
@@ -23,7 +23,7 @@ impl RankMetrics {
         self.count += 1;
     }
 
-    fn finalize(mut self) -> Self {
+    pub(crate) fn finalize(mut self) -> Self {
         if self.count > 0 {
             let n = self.count as f64;
             self.mrr /= n;
@@ -44,18 +44,17 @@ impl RankMetrics {
 
 /// Filtered rank of `gold` in `scores` (1-based, optimistic-tie-free: ties
 /// use the mean of best/worst rank, the standard "average" protocol).
+///
+/// Allocation-free: instead of materializing a `vec![false; |V|]` mask per
+/// query (which dominated eval at FB15K-scale |V|), count better/equal over
+/// all candidates, then discount each distinct filtered id's contribution
+/// directly — filter lists (the known objects of one (s, r)) are short.
 pub fn rank_of(scores: &[f32], gold: usize, filter_out: &[u32]) -> usize {
     let gs = scores[gold];
     let mut better = 0usize;
     let mut equal = 0usize;
-    let mut filtered = vec![false; scores.len()];
-    for &f in filter_out {
-        if (f as usize) != gold {
-            filtered[f as usize] = true;
-        }
-    }
     for (i, &s) in scores.iter().enumerate() {
-        if i == gold || filtered[i] {
+        if i == gold {
             continue;
         }
         if s > gs {
@@ -64,12 +63,60 @@ pub fn rank_of(scores: &[f32], gold: usize, filter_out: &[u32]) -> usize {
             equal += 1;
         }
     }
+    for (k, &f) in filter_out.iter().enumerate() {
+        let fi = f as usize;
+        if fi == gold || fi >= scores.len() {
+            continue;
+        }
+        // each distinct id is discounted once (label lists built across
+        // splits can repeat an object)
+        if filter_out[..k].contains(&f) {
+            continue;
+        }
+        let s = scores[fi];
+        if s > gs {
+            better -= 1;
+        } else if s == gs {
+            equal -= 1;
+        }
+    }
     better + equal / 2 + 1
+}
+
+/// Batched filtered-ranking evaluation — the kernel-layer protocol. Queries
+/// are scored `chunk` at a time: `score_chunk_fn(qs)` receives up to
+/// `chunk` (s, r, o) triples and returns their row-major
+/// (|qs|, |V|) logits in one call, so the scorer can make a single tiled
+/// pass over the memory matrix per chunk (see
+/// `model::transe_scores_batch`) instead of re-walking it per query.
+pub fn evaluate_ranking_batched(
+    queries: &[(usize, usize, usize)],
+    labels: &LabelBatch,
+    chunk: usize,
+    mut score_chunk_fn: impl FnMut(&[(usize, usize, usize)]) -> Vec<f32>,
+) -> RankMetrics {
+    let mut m = RankMetrics::default();
+    for qs in queries.chunks(chunk.max(1)) {
+        let scores = score_chunk_fn(qs);
+        assert!(
+            !qs.is_empty() && scores.len() % qs.len() == 0,
+            "score_chunk_fn returned {} logits for {} queries",
+            scores.len(),
+            qs.len()
+        );
+        let v = scores.len() / qs.len();
+        for (row, &(s, r, o)) in qs.iter().enumerate() {
+            let rank = rank_of(&scores[row * v..(row + 1) * v], o, labels.objects(s, r));
+            m.add_rank(rank);
+        }
+    }
+    m.finalize()
 }
 
 /// Evaluate a set of queries given a score oracle. `score_fn(s, r)` returns
 /// |V| logits; gold objects and filters come from `labels` (built over ALL
-/// splits, the filtered protocol).
+/// splits, the filtered protocol). Per-query convenience wrapper; prefer
+/// [`evaluate_ranking_batched`] on hot paths.
 pub fn evaluate_ranking(
     queries: &[(usize, usize, usize)],
     labels: &LabelBatch,
@@ -127,6 +174,33 @@ mod tests {
         assert_eq!(m.mrr, 1.0);
         assert_eq!(m.hits1, 1.0);
         assert_eq!(m.count, 2);
+    }
+
+    #[test]
+    fn duplicate_filter_ids_are_discounted_once() {
+        let scores = vec![0.9, 0.5, 0.7, 0.1];
+        // gold = 1; filtering 0 twice must behave like filtering it once
+        assert_eq!(rank_of(&scores, 1, &[0, 0]), rank_of(&scores, 1, &[0]));
+        // out-of-range filter ids are ignored rather than panicking
+        assert_eq!(rank_of(&scores, 1, &[9]), rank_of(&scores, 1, &[]));
+    }
+
+    #[test]
+    fn batched_evaluation_matches_per_query() {
+        let mut kg = KnowledgeGraph::new("t", 12, 2);
+        kg.train = (0..10).map(|i| Triple::new(i, i % 2, (i + 1) % 12)).collect();
+        let labels = LabelBatch::full(&kg);
+        let queries: Vec<_> = kg.train.iter().map(|t| (t.src, t.rel, t.dst)).collect();
+        let score = |s: usize, r: usize| -> Vec<f32> {
+            (0..12).map(|j| ((s * 31 + r * 7 + j * 3) % 13) as f32).collect()
+        };
+        let per_query = evaluate_ranking(&queries, &labels, score);
+        for chunk in [1usize, 3, 4, 100] {
+            let batched = evaluate_ranking_batched(&queries, &labels, chunk, |qs| {
+                qs.iter().flat_map(|&(s, r, _)| score(s, r)).collect()
+            });
+            assert_eq!(per_query, batched, "chunk {chunk}");
+        }
     }
 
     #[test]

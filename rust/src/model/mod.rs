@@ -13,7 +13,11 @@ mod optimizer;
 mod score;
 
 pub use embeddings::ModelState;
-pub use eval::{evaluate_ranking, rank_of, RankMetrics};
+pub use eval::{evaluate_ranking, evaluate_ranking_batched, rank_of, RankMetrics};
 pub use loss::{bce_loss_host, sigmoid};
 pub use optimizer::{make_optimizer, Adagrad, Adam, Optimizer, Sgd};
-pub use score::{transe_scores_host, transe_scores_subjects_host};
+pub use score::{
+    pack_backward_queries, pack_forward_queries, transe_scores, transe_scores_batch,
+    transe_scores_batch_into, transe_scores_batch_mem, transe_scores_host,
+    transe_scores_subjects, transe_scores_subjects_host,
+};

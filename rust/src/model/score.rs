@@ -1,11 +1,20 @@
-//! Host-side TransE scoring (Eq. 10) — the reference implementation used by
-//! eval on small graphs and by tests to cross-check the PJRT score
-//! artifact. The hot path scores through the artifact.
+//! Host-side TransE scoring (Eq. 10).
+//!
+//! Layering mirrors `hdc`: the `*_host` functions are the scalar reference
+//! implementations (one fresh Vec per call, strict float order) used by
+//! tests and artifact round-trips; [`transe_scores`],
+//! [`transe_scores_subjects`] and the batched [`transe_scores_batch`]
+//! route through the blocked multi-threaded kernel layer and are what eval
+//! and the benches run. The batched form is the software Score Engine: it
+//! ranks a whole query batch against all vertex memories in one tiled pass
+//! over the (|V|, D) memory matrix.
 
-use crate::hdc::l1_distance;
+use crate::hdc::kernels::{self, KernelConfig};
+use crate::hdc::{l1_distance, GraphMemory};
 
 /// Eq. 10 logits for one query (subject memory HDV + relation HDV) against
 /// all vertex memory hypervectors. Returns (|V|,) logits = bias − L1.
+/// Scalar reference implementation.
 pub fn transe_scores_host(
     mv: &[f32],
     dim_hd: usize,
@@ -20,13 +29,13 @@ pub fn transe_scores_host(
         .collect()
 }
 
-
 /// Backward-direction scores (§2.2 double-direction reasoning): given the
 /// relation and the *object*, rank candidate subjects. Under the TransE
 /// geometry of Eq. 10 a candidate subject s scores by
 /// ||M_s + H_r − M_o||_1 — the same translation read right-to-left. The
 /// accelerator reuses the Score Engine unchanged (operand roles swap);
 /// host-side this is one pass over the memory matrix.
+/// Scalar reference implementation.
 pub fn transe_scores_subjects_host(
     mv: &[f32],
     dim_hd: usize,
@@ -40,6 +49,111 @@ pub fn transe_scores_subjects_host(
     (0..v)
         .map(|s| bias - l1_distance(&target, &mv[s * dim_hd..(s + 1) * dim_hd]))
         .collect()
+}
+
+/// Kernel-layer forward scores: same contract as [`transe_scores_host`],
+/// computed with the blocked row-parallel L1 kernel.
+pub fn transe_scores(
+    mv: &[f32],
+    dim_hd: usize,
+    m_subj: &[f32],
+    h_rel: &[f32],
+    bias: f32,
+) -> Vec<f32> {
+    let q: Vec<f32> = m_subj.iter().zip(h_rel).map(|(a, b)| a + b).collect();
+    let mut out = vec![0f32; mv.len() / dim_hd];
+    kernels::l1_scores_into(mv, dim_hd, &q, bias, &mut out, &KernelConfig::default());
+    out
+}
+
+/// Kernel-layer backward scores: same contract as
+/// [`transe_scores_subjects_host`].
+pub fn transe_scores_subjects(
+    mv: &[f32],
+    dim_hd: usize,
+    m_obj: &[f32],
+    h_rel: &[f32],
+    bias: f32,
+) -> Vec<f32> {
+    let target: Vec<f32> = m_obj.iter().zip(h_rel).map(|(o, r)| o - r).collect();
+    let mut out = vec![0f32; mv.len() / dim_hd];
+    kernels::l1_scores_into(mv, dim_hd, &target, bias, &mut out, &KernelConfig::default());
+    out
+}
+
+/// Pack forward query points `q_b = M_{s_b} + H_{r_b}` into a (B, D)
+/// row-major matrix for the batched scorer. `mv`/`hr` are row-major
+/// (|V|, D) / (|R|, D); `pairs` lists (subject, relation) per query.
+pub fn pack_forward_queries(
+    mv: &[f32],
+    hr: &[f32],
+    dim_hd: usize,
+    pairs: &[(usize, usize)],
+) -> Vec<f32> {
+    let mut q = vec![0f32; pairs.len() * dim_hd];
+    for (row, &(s, r)) in pairs.iter().enumerate() {
+        let m = &mv[s * dim_hd..(s + 1) * dim_hd];
+        let h = &hr[r * dim_hd..(r + 1) * dim_hd];
+        for (k, o) in q[row * dim_hd..(row + 1) * dim_hd].iter_mut().enumerate() {
+            *o = m[k] + h[k];
+        }
+    }
+    q
+}
+
+/// Pack backward query points `q_b = M_{o_b} − H_{r_b}` ((object, relation)
+/// per query) for subject-side ranking through the same batched scorer.
+pub fn pack_backward_queries(
+    mv: &[f32],
+    hr: &[f32],
+    dim_hd: usize,
+    pairs: &[(usize, usize)],
+) -> Vec<f32> {
+    let mut q = vec![0f32; pairs.len() * dim_hd];
+    for (row, &(o, r)) in pairs.iter().enumerate() {
+        let m = &mv[o * dim_hd..(o + 1) * dim_hd];
+        let h = &hr[r * dim_hd..(r + 1) * dim_hd];
+        for (k, out) in q[row * dim_hd..(row + 1) * dim_hd].iter_mut().enumerate() {
+            *out = m[k] - h[k];
+        }
+    }
+    q
+}
+
+/// Batched Eq. 10 scorer into a caller buffer: `q` is the (B, D) packed
+/// query matrix (see [`pack_forward_queries`] / [`pack_backward_queries`]),
+/// `out` is row-major (B, |V|). One tiled pass over `mv` serves the whole
+/// batch — the memory-traffic amortization of the paper's Score Engine.
+pub fn transe_scores_batch_into(
+    mv: &[f32],
+    dim_hd: usize,
+    q: &[f32],
+    bias: f32,
+    out: &mut [f32],
+    cfg: &KernelConfig,
+) {
+    kernels::l1_scores_batch_into(mv, dim_hd, q, bias, out, cfg);
+}
+
+/// Allocating wrapper over [`transe_scores_batch_into`].
+pub fn transe_scores_batch(mv: &[f32], dim_hd: usize, q: &[f32], bias: f32) -> Vec<f32> {
+    let v = mv.len() / dim_hd;
+    let b = q.len() / dim_hd;
+    let mut out = vec![0f32; v * b];
+    transe_scores_batch_into(mv, dim_hd, q, bias, &mut out, &KernelConfig::default());
+    out
+}
+
+/// Batched forward scoring straight from a [`GraphMemory`] — the common
+/// eval call shape: pack the (s, r) queries, run one tiled pass.
+pub fn transe_scores_batch_mem(
+    mem: &GraphMemory,
+    hr: &[f32],
+    pairs: &[(usize, usize)],
+    bias: f32,
+) -> Vec<f32> {
+    let q = pack_forward_queries(&mem.data, hr, mem.dim_hd, pairs);
+    transe_scores_batch(&mem.data, mem.dim_hd, &q, bias)
 }
 
 #[cfg(test)]
@@ -96,6 +210,45 @@ mod tests {
         let b = transe_scores_host(&mv, 4, &[0.0; 4], &[0.0; 4], 3.0);
         for (x, y) in a.iter().zip(&b) {
             assert!((y - x - 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn kernel_paths_match_the_scalar_references() {
+        let mut rng = crate::util::Rng::seed_from_u64(3);
+        let (v, d) = (23, 13); // D not a LANES multiple
+        let mv: Vec<f32> = (0..v * d).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let m_subj = mv[2 * d..3 * d].to_vec();
+        let h_rel: Vec<f32> = (0..d).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let want = transe_scores_host(&mv, d, &m_subj, &h_rel, 1.5);
+        let got = transe_scores(&mv, d, &m_subj, &h_rel, 1.5);
+        for (w, g) in want.iter().zip(&got) {
+            assert!((w - g).abs() <= 1e-5 * w.abs().max(1.0), "{w} vs {g}");
+        }
+        let want_b = transe_scores_subjects_host(&mv, d, &m_subj, &h_rel, 0.0);
+        let got_b = transe_scores_subjects(&mv, d, &m_subj, &h_rel, 0.0);
+        for (w, g) in want_b.iter().zip(&got_b) {
+            assert!((w - g).abs() <= 1e-5 * w.abs().max(1.0), "{w} vs {g}");
+        }
+    }
+
+    #[test]
+    fn batched_scorer_matches_per_query_scoring() {
+        let mut rng = crate::util::Rng::seed_from_u64(4);
+        let (v, r, d, b) = (17, 3, 13, 6); // odd everything
+        let mv: Vec<f32> = (0..v * d).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let hr: Vec<f32> = (0..r * d).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let pairs: Vec<(usize, usize)> = (0..b).map(|i| (i % v, i % r)).collect();
+        let q = pack_forward_queries(&mv, &hr, d, &pairs);
+        let batched = transe_scores_batch(&mv, d, &q, 2.0);
+        assert_eq!(batched.len(), b * v);
+        for (row, &(s, rel)) in pairs.iter().enumerate() {
+            let want =
+                transe_scores_host(&mv, d, &mv[s * d..(s + 1) * d], &hr[rel * d..(rel + 1) * d], 2.0);
+            for (j, w) in want.iter().enumerate() {
+                let g = batched[row * v + j];
+                assert!((w - g).abs() <= 1e-5 * w.abs().max(1.0), "q{row} v{j}: {w} vs {g}");
+            }
         }
     }
 }

@@ -1,82 +1,179 @@
 //! Thin PJRT client wrapper: one CPU client, HLO-text loading, compiled-
 //! executable caching. Adapted from /opt/xla-example/load_hlo.
+//!
+//! The real implementation binds the vendored `xla` crate and only builds
+//! with `--features pjrt` (after adding that crate to Cargo.toml — it is
+//! not on the registry, so the default manifest omits it to keep offline
+//! resolution working). The default build gets an API-identical stub whose
+//! loaders return a clear error at runtime: everything host-side still
+//! compiles, tests that need artifacts skip, and the CLI reports why.
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::{Arc, Mutex};
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::{Arc, Mutex};
 
-/// A compiled computation ready to execute.
-pub struct LoadedComputation {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
-    pub num_outputs: usize,
-}
+    /// Concrete PJRT literal type used by the executor's marshalling.
+    pub type Literal = xla::Literal;
 
-impl LoadedComputation {
-    /// Execute with positional literal inputs; returns the flattened tuple
-    /// outputs (the AOT path lowers with return_tuple=True).
-    pub fn run(&self, inputs: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
-        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        if outs.len() != self.num_outputs {
-            anyhow::bail!("{}: expected {} outputs, got {}", self.name, self.num_outputs, outs.len());
+    /// A compiled computation ready to execute.
+    pub struct LoadedComputation {
+        pub name: String,
+        exe: xla::PjRtLoadedExecutable,
+        pub num_outputs: usize,
+    }
+
+    impl LoadedComputation {
+        /// Execute with positional literal inputs; returns the flattened tuple
+        /// outputs (the AOT path lowers with return_tuple=True).
+        pub fn run(&self, inputs: &[Literal]) -> crate::Result<Vec<Literal>> {
+            let result = self.exe.execute::<Literal>(inputs)?[0][0].to_literal_sync()?;
+            let outs = result.to_tuple()?;
+            if outs.len() != self.num_outputs {
+                anyhow::bail!(
+                    "{}: expected {} outputs, got {}",
+                    self.name,
+                    self.num_outputs,
+                    outs.len()
+                );
+            }
+            Ok(outs)
         }
-        Ok(outs)
-    }
-}
-
-/// The process-wide PJRT engine: client + executable cache.
-pub struct Engine {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, Arc<LoadedComputation>>>,
-}
-
-impl Engine {
-    pub fn cpu() -> crate::Result<Self> {
-        Ok(Self { client: xla::PjRtClient::cpu()?, cache: Mutex::new(HashMap::new()) })
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// The process-wide PJRT engine: client + executable cache.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        cache: Mutex<HashMap<String, Arc<LoadedComputation>>>,
     }
 
-    /// Load + compile an HLO text file (cached by path).
-    pub fn load_hlo_text(
-        &self,
-        path: &Path,
-        name: &str,
-        num_outputs: usize,
-    ) -> crate::Result<Arc<LoadedComputation>> {
-        let key = path.display().to_string();
-        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
-            return Ok(hit.clone());
+    impl Engine {
+        pub fn cpu() -> crate::Result<Self> {
+            Ok(Self { client: xla::PjRtClient::cpu()?, cache: Mutex::new(HashMap::new()) })
         }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let loaded =
-            Arc::new(LoadedComputation { name: name.to_string(), exe, num_outputs });
-        self.cache.lock().unwrap().insert(key, loaded.clone());
-        Ok(loaded)
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO text file (cached by path).
+        pub fn load_hlo_text(
+            &self,
+            path: &Path,
+            name: &str,
+            num_outputs: usize,
+        ) -> crate::Result<Arc<LoadedComputation>> {
+            let key = path.display().to_string();
+            if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+                return Ok(hit.clone());
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let loaded =
+                Arc::new(LoadedComputation { name: name.to_string(), exe, num_outputs });
+            self.cache.lock().unwrap().insert(key, loaded.clone());
+            Ok(loaded)
+        }
+    }
+
+    /// f32 row-major matrix → Literal of the given dims.
+    pub fn literal_f32(data: &[f32], dims: &[i64]) -> crate::Result<Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "literal shape {dims:?} != len {}", data.len());
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    /// i32 vector → Literal.
+    pub fn literal_i32(data: &[i32], dims: &[i64]) -> crate::Result<Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "literal shape {dims:?} != len {}", data.len());
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+
+    pub fn literal_scalar_f32(x: f32) -> Literal {
+        xla::Literal::scalar(x)
     }
 }
 
-/// f32 row-major matrix → Literal of the given dims.
-pub fn literal_f32(data: &[f32], dims: &[i64]) -> crate::Result<xla::Literal> {
-    let n: i64 = dims.iter().product();
-    anyhow::ensure!(n as usize == data.len(), "literal shape {dims:?} != len {}", data.len());
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::Path;
+    use std::sync::Arc;
+
+    const UNAVAILABLE: &str =
+        "PJRT runtime unavailable: built without the `pjrt` feature (add the vendored `xla` \
+         crate to rust/Cargo.toml and build with --features pjrt)";
+
+    /// Inert placeholder literal; carries no data. Constructible (the
+    /// executor marshals inputs before `run`), but every read fails.
+    pub struct Literal;
+
+    impl Literal {
+        pub fn to_vec<T>(&self) -> crate::Result<Vec<T>> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+
+        pub fn get_first_element<T>(&self) -> crate::Result<T> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+    }
+
+    /// Stub computation handle; never actually constructed because
+    /// [`Engine::cpu`] fails first, but the type keeps callers compiling.
+    pub struct LoadedComputation {
+        pub name: String,
+        pub num_outputs: usize,
+    }
+
+    impl LoadedComputation {
+        pub fn run(&self, _inputs: &[Literal]) -> crate::Result<Vec<Literal>> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+    }
+
+    /// Stub engine: construction fails with a actionable message.
+    pub struct Engine {
+        _private: (),
+    }
+
+    impl Engine {
+        pub fn cpu() -> crate::Result<Self> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-stub".to_string()
+        }
+
+        pub fn load_hlo_text(
+            &self,
+            _path: &Path,
+            _name: &str,
+            _num_outputs: usize,
+        ) -> crate::Result<Arc<LoadedComputation>> {
+            anyhow::bail!(UNAVAILABLE)
+        }
+    }
+
+    pub fn literal_f32(data: &[f32], dims: &[i64]) -> crate::Result<Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "literal shape {dims:?} != len {}", data.len());
+        Ok(Literal)
+    }
+
+    pub fn literal_i32(data: &[i32], dims: &[i64]) -> crate::Result<Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "literal shape {dims:?} != len {}", data.len());
+        Ok(Literal)
+    }
+
+    pub fn literal_scalar_f32(_x: f32) -> Literal {
+        Literal
+    }
 }
 
-/// i32 vector → Literal.
-pub fn literal_i32(data: &[i32], dims: &[i64]) -> crate::Result<xla::Literal> {
-    let n: i64 = dims.iter().product();
-    anyhow::ensure!(n as usize == data.len(), "literal shape {dims:?} != len {}", data.len());
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
-}
-
-pub fn literal_scalar_f32(x: f32) -> xla::Literal {
-    xla::Literal::scalar(x)
-}
+pub use imp::{literal_f32, literal_i32, literal_scalar_f32, Engine, Literal, LoadedComputation};

@@ -2,7 +2,7 @@
 //! batches into PJRT literals and runs the five artifacts of one preset.
 
 use super::artifacts::Manifest;
-use super::client::{literal_f32, literal_i32, literal_scalar_f32, Engine, LoadedComputation};
+use super::client::{literal_f32, literal_i32, literal_scalar_f32, Engine, Literal, LoadedComputation};
 use crate::config::ModelConfig;
 use crate::kg::KnowledgeGraph;
 use crate::model::ModelState;
@@ -82,7 +82,7 @@ impl HdrRuntime {
         self.engine.platform()
     }
 
-    fn graph_literals(&self, edges: &EdgeArrays) -> crate::Result<[xla::Literal; 4]> {
+    fn graph_literals(&self, edges: &EdgeArrays) -> crate::Result<[Literal; 4]> {
         let e = self.cfg.num_edges as i64;
         Ok([
             literal_i32(&edges.src, &[e])?,

@@ -1,0 +1,260 @@
+//! Property tests pinning the blocked/threaded kernel layer to the scalar
+//! reference implementations: bit-for-bit for binding/bundling/memorize
+//! (identical per-element op order), and within float-reassociation
+//! tolerance (1e-5 relative) for the L1/cosine/dot reductions. Every
+//! invariant sweeps random graphs over varying |V|, D (including D not
+//! divisible by the kernel lane width) and thread counts {1, 2, max}.
+
+use hdreason::hdc::kernels::{self, KernelConfig, LANES};
+use hdreason::hdc::{self, GraphMemory};
+use hdreason::kg::{Csr, Triple};
+use hdreason::model;
+use hdreason::util::Rng;
+
+const CASES: u64 = 10;
+
+/// Thread counts the issue pins: 1, 2, and the machine maximum.
+fn thread_counts() -> Vec<usize> {
+    let max = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut t = vec![1, 2, max];
+    t.sort_unstable();
+    t.dedup();
+    t
+}
+
+/// Dimensions straddling the lane width: below, non-multiple, exact.
+fn dims() -> [usize; 4] {
+    [LANES - 3, LANES * 2 - 3, LANES * 4, 100]
+}
+
+fn close(a: f32, b: f32) -> bool {
+    (a - b).abs() <= 1e-5 * a.abs().max(b.abs()).max(1.0)
+}
+
+fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect()
+}
+
+fn random_triples(rng: &mut Rng, v: usize, r: usize, n: usize) -> Vec<Triple> {
+    (0..n).map(|_| Triple::new(rng.below(v), rng.below(r), rng.below(v))).collect()
+}
+
+#[test]
+fn prop_bind_into_and_fused_bundle_are_bit_identical() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        for d in dims() {
+            let a = randv(&mut rng, d);
+            let b = randv(&mut rng, d);
+            let mut out = vec![0f32; d];
+            kernels::bind_into(&mut out, &a, &b);
+            assert_eq!(out, hdc::bind(&a, &b), "seed {seed} d {d}");
+
+            let mut acc_ref = randv(&mut rng, d);
+            let mut acc_ker = acc_ref.clone();
+            hdc::bundle_into(&mut acc_ref, &hdc::bind(&a, &b));
+            kernels::bind_bundle_into(&mut acc_ker, &a, &b);
+            assert_eq!(acc_ref, acc_ker, "seed {seed} d {d}");
+        }
+    }
+}
+
+#[test]
+fn prop_memorize_kernel_is_bit_identical_across_thread_counts() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let v = 3 + rng.below(40);
+        let r = 1 + rng.below(5);
+        let d = dims()[rng.below(4)];
+        let hv = randv(&mut rng, v * d);
+        let hr = randv(&mut rng, r * d);
+        let csr = Csr::from_triples(v, &random_triples(&mut rng, v, r, rng.below(120)));
+        let want = hdc::memorize_scalar(&csr, &hv, &hr, d);
+        for threads in thread_counts() {
+            let got =
+                kernels::memorize_blocked(&csr, &hv, &hr, d, &KernelConfig::with_threads(threads));
+            assert_eq!(want.data, got.data, "seed {seed} threads {threads} v {v} d {d}");
+        }
+    }
+}
+
+#[test]
+fn prop_single_query_l1_scores_match_reference() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xA5);
+        let v = 2 + rng.below(60);
+        let d = dims()[rng.below(4)];
+        let mv = randv(&mut rng, v * d);
+        let m_subj = randv(&mut rng, d);
+        let h_rel = randv(&mut rng, d);
+        let bias = rng.range_f64(-2.0, 2.0) as f32;
+        let want = model::transe_scores_host(&mv, d, &m_subj, &h_rel, bias);
+        let q: Vec<f32> = m_subj.iter().zip(&h_rel).map(|(a, b)| a + b).collect();
+        for threads in thread_counts() {
+            let mut got = vec![0f32; v];
+            kernels::l1_scores_into(&mv, d, &q, bias, &mut got, &KernelConfig::with_threads(threads));
+            for (j, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert!(close(*w, *g), "seed {seed} threads {threads} v{j}: {w} vs {g}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batched_scorer_matches_per_query_reference() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x5A);
+        let v = 2 + rng.below(60);
+        let r = 1 + rng.below(4);
+        let d = dims()[rng.below(4)];
+        // batch sizes around the QUERY_BLOCK boundary: 1, partial, exact+rem
+        let b = [1, 3, 4, 5, 11][rng.below(5)];
+        let mv = randv(&mut rng, v * d);
+        let hr = randv(&mut rng, r * d);
+        let pairs: Vec<(usize, usize)> =
+            (0..b).map(|_| (rng.below(v), rng.below(r))).collect();
+        let q = model::pack_forward_queries(&mv, &hr, d, &pairs);
+        for threads in thread_counts() {
+            let mut got = vec![0f32; b * v];
+            kernels::l1_scores_batch_into(
+                &mv,
+                d,
+                &q,
+                1.0,
+                &mut got,
+                &KernelConfig::with_threads(threads),
+            );
+            for (row, &(s, rel)) in pairs.iter().enumerate() {
+                let want = model::transe_scores_host(
+                    &mv,
+                    d,
+                    &mv[s * d..(s + 1) * d],
+                    &hr[rel * d..(rel + 1) * d],
+                    1.0,
+                );
+                for (j, w) in want.iter().enumerate() {
+                    let g = got[row * v + j];
+                    assert!(
+                        close(*w, g),
+                        "seed {seed} threads {threads} b {b} d {d} q{row} v{j}: {w} vs {g}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_backward_scorer_matches_reference() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x77);
+        let v = 2 + rng.below(50);
+        let d = dims()[rng.below(4)];
+        let mv = randv(&mut rng, v * d);
+        let m_obj = randv(&mut rng, d);
+        let h_rel = randv(&mut rng, d);
+        let want = model::transe_scores_subjects_host(&mv, d, &m_obj, &h_rel, 0.5);
+        let got = model::transe_scores_subjects(&mv, d, &m_obj, &h_rel, 0.5);
+        for (j, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert!(close(*w, *g), "seed {seed} v{j}: {w} vs {g}");
+        }
+    }
+}
+
+#[test]
+fn prop_cosine_reconstruction_matches_scalar_reference() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xC0);
+        let v = 2 + rng.below(40);
+        let r = 1 + rng.below(3);
+        let d = dims()[rng.below(4)];
+        let hv = randv(&mut rng, v * d);
+        let hr = randv(&mut rng, r * d);
+        let mem = GraphMemory { dim_hd: d, data: randv(&mut rng, v * d) };
+        let rel = rng.below(r);
+        let i = rng.below(v);
+        // compare raw score vectors (top-k ordering can differ on exact ties)
+        let want: Vec<f32> = hdc::reconstruct_neighbors_scalar(&mem, &hv, &hr, i, rel, v)
+            .into_iter()
+            .map(|(_, s)| s)
+            .collect();
+        for threads in thread_counts() {
+            let mut got = vec![0f32; v];
+            kernels::cosine_bound_scores_into(
+                mem.vertex(i),
+                &hv,
+                &hr[rel * d..(rel + 1) * d],
+                &mut got,
+                &KernelConfig::with_threads(threads),
+            );
+            let mut got_sorted = got.clone();
+            got_sorted.sort_by(|a, b| b.total_cmp(a));
+            for (k, (w, g)) in want.iter().zip(&got_sorted).enumerate() {
+                assert!(close(*w, *g), "seed {seed} threads {threads} rank {k}: {w} vs {g}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_dot_scores_match_scalar_dot() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed ^ 0xD0);
+        let n = 2 + rng.below(60);
+        let d = dims()[rng.below(4)];
+        let mat = randv(&mut rng, n * d);
+        let q = randv(&mut rng, d);
+        for threads in thread_counts() {
+            let mut got = vec![0f32; n];
+            kernels::dot_scores_into(&mat, d, &q, &mut got, &KernelConfig::with_threads(threads));
+            for j in 0..n {
+                let want: f32 =
+                    q.iter().zip(&mat[j * d..(j + 1) * d]).map(|(a, b)| a * b).sum();
+                assert!(close(want, got[j]), "seed {seed} threads {threads} row {j}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_rank_of_matches_mask_reference() {
+    // the scratch-free rank_of must agree with the naive |V|-mask version,
+    // including duplicate and out-of-range filter ids
+    fn rank_of_masked(scores: &[f32], gold: usize, filter_out: &[u32]) -> usize {
+        let gs = scores[gold];
+        let mut filtered = vec![false; scores.len()];
+        for &f in filter_out {
+            if (f as usize) != gold && (f as usize) < scores.len() {
+                filtered[f as usize] = true;
+            }
+        }
+        let (mut better, mut equal) = (0usize, 0usize);
+        for (i, &s) in scores.iter().enumerate() {
+            if i == gold || filtered[i] {
+                continue;
+            }
+            if s > gs {
+                better += 1;
+            } else if s == gs {
+                equal += 1;
+            }
+        }
+        better + equal / 2 + 1
+    }
+
+    for seed in 0..50 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let v = 2 + rng.below(120);
+        // quantized scores force plenty of exact ties
+        let scores: Vec<f32> = (0..v).map(|_| (rng.below(8) as f32) / 4.0).collect();
+        let gold = rng.below(v);
+        let filter: Vec<u32> = (0..rng.below(2 * v))
+            .map(|_| rng.below(v + 4) as u32) // may repeat and overflow |V|
+            .collect();
+        assert_eq!(
+            model::rank_of(&scores, gold, &filter),
+            rank_of_masked(&scores, gold, &filter),
+            "seed {seed} v {v} gold {gold} filter {filter:?}"
+        );
+    }
+}
