@@ -6,7 +6,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: check build test bench fmt artifacts
+.PHONY: check build test bench bench-serving ci fmt artifacts
 
 # tier-1: release build + full test suite
 check: build test
@@ -17,10 +17,21 @@ build:
 test:
 	$(CARGO) test -q --manifest-path $(MANIFEST)
 
+# what .github/workflows/ci.yml runs — keep the two in lock-step
+ci:
+	$(CARGO) fmt --check --manifest-path $(MANIFEST)
+	$(CARGO) clippy --manifest-path $(MANIFEST) --all-targets -- -D warnings
+	$(CARGO) build --release --manifest-path $(MANIFEST)
+	$(CARGO) test -q --manifest-path $(MANIFEST)
+
 # hot-path benchmark; appends {name, median_s, iters} JSON-lines rows to
-# BENCH_1.json at the repo root so the perf trajectory accumulates per PR
+# BENCH_2.json at the repo root so the perf trajectory accumulates per PR
 bench:
 	$(CARGO) bench --bench runtime_hotpath --manifest-path $(MANIFEST) -- --json
+
+# KgcEngine::submit serving throughput at batch 1/8/64 (same JSON sink)
+bench-serving:
+	$(CARGO) bench --bench engine_serving --manifest-path $(MANIFEST) -- --json
 
 fmt:
 	$(CARGO) fmt --manifest-path $(MANIFEST)

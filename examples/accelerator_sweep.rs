@@ -2,9 +2,13 @@
 //! runnable example: sweep UltraRAM budget × replacement policy over the
 //! four paper datasets (scaled by --scale, default 0.25), reporting
 //! memorization latency and FPGA↔HBM traffic; then the Fig. 8(c)
-//! optimization ablation.
+//! optimization ablation. Closes with a live serving sweep through the
+//! [`hdreason::engine::KgcEngine`] micro-batcher — the software knob
+//! (batch capacity) that mirrors the hardware's batch amortization.
 
 use hdreason::bench::figures;
+use hdreason::engine::{BackendKind, EngineBuilder, QueryRequest};
+use std::time::{Duration, Instant};
 
 fn main() -> hdreason::Result<()> {
     let scale = std::env::args()
@@ -14,6 +18,35 @@ fn main() -> hdreason::Result<()> {
         .unwrap_or(0.25);
     println!("{}", figures::fig10(scale)?);
     println!("{}", figures::fig8c(scale)?);
-    println!("accelerator_sweep OK");
+
+    // serving-batch sweep: same engine, same queries, different coalescing
+    println!("engine serving sweep (tiny preset, kernel backend, measured live):");
+    for capacity in [1usize, 8, 32] {
+        let engine = EngineBuilder::new("tiny")
+            .seed(0)
+            .backend(BackendKind::Kernel)
+            .batch_capacity(capacity)
+            .deadline(Duration::from_micros(200))
+            .build()?;
+        let kg = engine.kg();
+        let reqs: Vec<QueryRequest> = (0..256)
+            .map(|i| {
+                let t = kg.train[i % kg.train.len()];
+                QueryRequest::forward(t.src, t.rel)
+            })
+            .collect();
+        // one client per serving slot so full batches actually form
+        let start = Instant::now();
+        engine.serve_all(&reqs, capacity);
+        let elapsed = start.elapsed().as_secs_f64().max(1e-9);
+        println!(
+            "  batch {:>3}: {:>7.1} ms for {} queries  ({:.0} queries/s)",
+            capacity,
+            elapsed * 1e3,
+            reqs.len(),
+            reqs.len() as f64 / elapsed
+        );
+    }
+    println!("\naccelerator_sweep OK");
     Ok(())
 }

@@ -2,9 +2,13 @@
 //! claims as a runnable example. FPGA rows come from the cycle simulator;
 //! GPU/CPU rows from the Table-6-calibrated roofline models; comparator
 //! accelerators (GraphACT / HP-GNN / LookHD) from their published-spec
-//! models (DESIGN.md §1).
+//! models (DESIGN.md §1). A host-CPU serving row measured live through the
+//! [`hdreason::engine::KgcEngine`] anchors the modelled platforms to real
+//! silicon in this process.
 
 use hdreason::bench::figures;
+use hdreason::engine::{BackendKind, EngineBuilder, QueryRequest};
+use std::time::Instant;
 
 fn main() -> hdreason::Result<()> {
     let scale = std::env::args()
@@ -15,6 +19,36 @@ fn main() -> hdreason::Result<()> {
     println!("{}", figures::fig11(scale)?);
     println!("{}", figures::table6(scale)?);
     println!("{}", figures::headline(scale)?);
-    println!("cross_platform OK");
+
+    // measured host reference: the engine's batched score path on this CPU
+    // (tiny preset), per scoring backend
+    println!("host engine serving reference (tiny preset, measured live):");
+    for kind in [BackendKind::Scalar, BackendKind::Kernel] {
+        let engine = EngineBuilder::new("tiny").seed(0).backend(kind).build()?;
+        let kg = engine.kg();
+        let reqs: Vec<QueryRequest> = (0..engine.batch_capacity())
+            .map(|i| {
+                let t = kg.train[i % kg.train.len()];
+                QueryRequest::forward(t.src, t.rel)
+            })
+            .collect();
+        // one warm pass, then measure a few batches
+        let pairs: Vec<(usize, usize)> = reqs.iter().map(|r| (r.node, r.rel)).collect();
+        std::hint::black_box(engine.score_batch(&pairs));
+        let iters = 20;
+        let start = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(engine.score_batch(&pairs));
+        }
+        let per_batch = start.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "  {:<8} backend: {:>8.3} ms / {}-query batch  ({:.0} queries/s)",
+            engine.backend_name(),
+            per_batch * 1e3,
+            pairs.len(),
+            pairs.len() as f64 / per_batch.max(1e-9)
+        );
+    }
+    println!("\ncross_platform OK");
     Ok(())
 }

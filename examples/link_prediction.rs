@@ -1,14 +1,18 @@
-//! Link prediction + interpretability demo: train on a Table-3-matched
-//! synthetic FB15K-237 (scaled into the fb15k_mini preset box), answer
-//! (subject, relation, ?) queries, and compare HDReason against the
-//! TransE / DistMult / R-GCN baselines on identical data — the Fig. 8(a)
-//! experiment at example scale.
+//! Link prediction + serving demo: train HDReason through the PJRT
+//! artifacts, hand the trained state to a [`hdreason::engine::KgcEngine`],
+//! answer (subject, relation, ?) queries through the engine's serving
+//! path, and compare HDReason against the TransE / DistMult baselines on
+//! identical data through the one generic `KgcModel` eval path — the
+//! Fig. 8(a) experiment at example scale.
+//!
+//! Requires PJRT artifacts (`make artifacts` + `--features pjrt`) for the
+//! training half; the engine itself is artifact-free.
 
 use hdreason::baselines::{self, train_margin_model};
 use hdreason::config::RunConfig;
 use hdreason::coordinator::HdrTrainer;
+use hdreason::engine::{evaluate_forward, BackendKind, EngineBuilder, KgcModel, QueryRequest};
 use hdreason::kg::{generator, LabelBatch};
-use hdreason::model::{evaluate_ranking, sigmoid};
 use hdreason::runtime::{HdrRuntime, Manifest};
 
 fn main() -> hdreason::Result<()> {
@@ -18,52 +22,56 @@ fn main() -> hdreason::Result<()> {
     rc.train.lr = 2e-2;
     rc.train.eval_every = 0;
     let kg = generator::learnable_for_preset(&rc.model, 0.8, 7);
-    println!("KG: {} vertices, {} relations, {} train triples",
-             kg.num_vertices, kg.num_relations, kg.train.len());
+    println!(
+        "KG: {} vertices, {} relations, {} train triples",
+        kg.num_vertices,
+        kg.num_relations,
+        kg.train.len()
+    );
 
     let manifest = Manifest::load(&Manifest::default_dir())?;
     let runtime = HdrRuntime::load(&manifest, &rc.model)?;
-    let batch = rc.model.batch;
     let mut trainer = HdrTrainer::new(rc, runtime, &kg)?;
     trainer.fit()?;
 
-    // ---- answer a handful of test queries ------------------------------
-    println!("\nlink prediction on test triples (top-3 candidates):");
-    let v = trainer.state.cfg.num_vertices;
-    let show = kg.test.iter().take(4).collect::<Vec<_>>();
-    let mut qs = vec![0i32; batch];
-    let mut qr = vec![0i32; batch];
-    for (i, t) in show.iter().enumerate() {
-        qs[i] = t.src as i32;
-        qr[i] = t.rel as i32;
-    }
-    let logits = trainer.runtime().forward(&trainer.state, trainer.edges(), &qs, &qr, 6.0)?;
-    for (i, t) in show.iter().enumerate() {
-        let row = &logits[i * v..(i + 1) * v];
-        let mut idx: Vec<usize> = (0..v).collect();
-        idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]));
-        let rank = idx.iter().position(|&x| x == t.dst).unwrap() + 1;
-        println!(
-            "  ({}, r{}, ?) -> top3 {:?} (gold {} at rank {}, p={:.3})",
-            t.src, t.rel, &idx[..3], t.dst, rank, sigmoid(row[t.dst])
-        );
+    // ---- serve the trained model through the engine ---------------------
+    let engine = EngineBuilder::new("tiny")
+        .graph(kg.clone())
+        .state(trainer.state.clone())
+        .backend(BackendKind::Kernel)
+        .build()?;
+    println!(
+        "\nengine: backend {}, serving batch {} — link prediction on test triples:",
+        engine.backend_name(),
+        engine.batch_capacity()
+    );
+    for t in kg.test.iter().take(4) {
+        let r = engine.submit(QueryRequest::forward(t.src, t.rel));
+        let top3: Vec<usize> = r.top.iter().take(3).map(|&(v, _)| v).collect();
+        let rank = r
+            .top
+            .iter()
+            .position(|&(v, _)| v == t.dst)
+            .map(|p| (p + 1).to_string())
+            .unwrap_or_else(|| format!(">{}", r.top.len()));
+        println!("  ({}, r{}, ?) -> top3 {:?} (gold {} at rank {})", t.src, t.rel, top3, t.dst, rank);
     }
 
-    // ---- baselines on the same graph ------------------------------------
+    // ---- accuracy comparison: one generic KgcModel eval path ------------
     println!("\naccuracy comparison (filtered test metrics):");
     println!("{}", trainer.evaluate(&kg.test)?.row("HDReason (PJRT)"));
+    println!("{}", engine.evaluate(&kg.test)?.row("HDReason (engine)"));
+
     let labels = LabelBatch::full(&kg);
     let queries: Vec<_> = kg.test.iter().map(|t| (t.src, t.rel, t.dst)).collect();
     let mut transe = baselines::TransE::new(kg.num_vertices, kg.num_relations, 32, 0);
     train_margin_model(&mut transe, &kg, 30, 0.05, 1.0, 0);
-    println!("{}", evaluate_ranking(&queries, &labels, |s, r| {
-        baselines::MarginModel::score_all_objects(&transe, s, r)
-    }).row("TransE"));
     let mut dm = baselines::DistMult::new(kg.num_vertices, kg.num_relations, 32, 0);
     train_margin_model(&mut dm, &kg, 30, 0.05, 1.0, 0);
-    println!("{}", evaluate_ranking(&queries, &labels, |s, r| {
-        baselines::MarginModel::score_all_objects(&dm, s, r)
-    }).row("DistMult"));
+    let rows: [(&dyn KgcModel, &str); 2] = [(&transe, "TransE"), (&dm, "DistMult")];
+    for (model, label) in rows {
+        println!("{}", evaluate_forward(model, &queries, &labels, 64)?.row(label));
+    }
     println!("\nlink_prediction OK");
     Ok(())
 }

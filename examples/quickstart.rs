@@ -1,61 +1,97 @@
-//! Quickstart: the end-to-end driver (DESIGN.md §5).
+//! Quickstart: the engine is the front door.
 //!
-//! Trains HDReason on a small learnable synthetic KG for a few hundred
-//! steps *through the AOT-compiled PJRT artifacts* (python never runs),
-//! logs the loss curve, evaluates filtered MRR/Hits, demonstrates the
-//! interpretability query of §3.3, and runs the FPGA cycle simulator on
-//! the same workload to report what the accelerator would do.
+//! Builds a [`hdreason::engine::KgcEngine`] over a small learnable
+//! synthetic KG — no AOT artifacts required — and walks the serving
+//! surface: single-query ranking, the micro-batched `submit` path,
+//! filtered double-direction evaluation, and the §3.3 interpretability
+//! query. If PJRT artifacts are present (`make artifacts` +
+//! `--features pjrt`), it additionally trains end-to-end through the
+//! artifacts and rebuilds the engine from the trained state to show the
+//! accuracy moving; otherwise that section is skipped with a note.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 
-use hdreason::config::{accel_preset, RunConfig};
+use hdreason::config::accel_preset;
 use hdreason::coordinator::HdrTrainer;
+use hdreason::engine::{BackendKind, EngineBuilder, QueryRequest};
 use hdreason::hdc;
-use hdreason::kg::generator;
 use hdreason::runtime::{HdrRuntime, Manifest};
 use hdreason::sim::{simulate_batch, SimOptions, Workload};
+use std::time::{Duration, Instant};
 
 fn main() -> hdreason::Result<()> {
-    // ---- configuration: `tiny` preset (CPU-PJRT-friendly; use --model
-    // small via the CLI for the 2048-vertex variant) -----------------
-    let mut rc = RunConfig::from_presets("tiny", "u50")?;
-    rc.train.epochs = 48;
-    rc.train.steps_per_epoch = 16; // 768 train steps end-to-end
-    rc.train.lr = 2e-2;
-    rc.train.eval_every = 10;
-    rc.validate()?;
-
-    // ---- data: learnable synthetic KG sized for the preset -------------
-    let kg = generator::learnable_for_preset(&rc.model, 0.8, rc.train.seed);
+    // ---- the engine: preset + dataset + backend, one builder ------------
+    let engine = EngineBuilder::new("tiny")
+        .dataset("learnable")
+        .seed(42)
+        .backend(BackendKind::Kernel)
+        .deadline(Duration::from_micros(500))
+        .build()?;
+    let kg = engine.kg().clone();
     println!(
         "KG '{}': {} vertices, {} relations, {} train / {} valid / {} test triples",
-        kg.name, kg.num_vertices, kg.num_relations,
-        kg.train.len(), kg.valid.len(), kg.test.len()
+        kg.name,
+        kg.num_vertices,
+        kg.num_relations,
+        kg.train.len(),
+        kg.valid.len(),
+        kg.test.len()
+    );
+    println!(
+        "engine: backend {}, serving batch {}, {} candidates per ranking",
+        engine.backend_name(),
+        engine.batch_capacity(),
+        engine.num_candidates()
     );
 
-    // ---- runtime: load the AOT artifacts (HLO text → PJRT) -------------
-    let manifest = Manifest::load(&Manifest::default_dir())?;
-    let runtime = HdrRuntime::load(&manifest, &rc.model)?;
-    println!("PJRT platform: {} (jax {} artifacts)", runtime.platform(), manifest.jax_version);
+    // ---- serve queries ---------------------------------------------------
+    let t = kg.test[0];
+    let ranking = engine.rank(QueryRequest::forward(t.src, t.rel));
+    let top3: Vec<usize> = ranking.top.iter().take(3).map(|&(v, _)| v).collect();
+    println!("\nquery ({}, r{}, ?) -> top3 {:?} (gold {})", t.src, t.rel, top3, t.dst);
 
-    // ---- train ----------------------------------------------------------
-    let mut trainer = HdrTrainer::new(rc, runtime, &kg)?;
-    let before = trainer.evaluate(&kg.test)?;
-    trainer.fit()?;
-    println!("\nloss curve:");
-    print!("{}", trainer.log.render());
-    let after = trainer.evaluate(&kg.test)?;
-    println!("{}", before.row("untrained (test)"));
-    println!("{}", after.row("trained   (test)"));
-    assert!(after.mrr > before.mrr, "training must beat the untrained model");
+    // micro-batched serving: concurrent submitters coalesce into full
+    // batches; compare throughput against one-at-a-time ranking
+    let stream: Vec<QueryRequest> =
+        (0..256).map(|i| {
+            let t = kg.test[i % kg.test.len()];
+            QueryRequest::forward(t.src, t.rel)
+        })
+        .collect();
+    let start = Instant::now();
+    // one client per serving slot so full batches actually form
+    engine.serve_all(&stream, engine.batch_capacity());
+    let batched_s = start.elapsed().as_secs_f64();
+    println!(
+        "served {} queries through submit() in {:.1} ms ({:.0} q/s)",
+        stream.len(),
+        batched_s * 1e3,
+        stream.len() as f64 / batched_s.max(1e-9)
+    );
 
-    // ---- interpretability (§3.3): reconstruct a vertex's neighbors -----
-    let hv = trainer.state.encode_vertices_host();
-    let hr = trainer.state.encode_relations_host();
+    // ---- filtered evaluation (untrained baseline) ------------------------
+    let before = engine.evaluate(&kg.test)?;
+    println!("\n{}", before.row("engine untrained (test)"));
+    let both = engine.evaluate_both(&kg.test)?;
+    println!("{}", both.row("engine untrained (2-dir)"));
+
+    // ---- optional: PJRT training, then serve the trained state -----------
+    match pjrt_training(&kg) {
+        Ok(after) => {
+            println!("{}", after.row("engine trained   (test)"));
+            assert!(after.mrr > before.mrr, "training must beat the untrained engine");
+        }
+        Err(e) => println!("\n(skipping PJRT training section: {e})"),
+    }
+
+    // ---- interpretability (§3.3): reconstruct a vertex's neighbors -------
+    let state = engine.state();
+    let hv = state.encode_vertices_host();
+    let hr = state.encode_relations_host();
     let csr = kg.train_csr();
-    let mem = hdc::memorize(&csr, &hv, &hr, trainer.state.cfg.dim_hd);
+    let mem = hdc::memorize(&csr, &hv, &hr, state.cfg.dim_hd);
     let probe = (0..kg.num_vertices).max_by_key(|&v| csr.degree(v)).unwrap();
-    let (src0, rel0) = csr.neighbors(probe)[0];
+    let (_, rel0) = csr.neighbors(probe)[0];
     let top = hdc::reconstruct_neighbors(&mem, &hv, &hr, probe, rel0 as usize, 5);
     println!("\nneighbor reconstruction for hub vertex {probe} via relation {rel0}:");
     for (v, sim) in &top {
@@ -66,15 +102,40 @@ fn main() -> hdreason::Result<()> {
         };
         println!("  vertex {v:>5}  cos {sim:.3}{marker}");
     }
-    let _ = src0;
 
-    // ---- accelerator view: what the U50 would do with this workload ----
-    let w = Workload::from_kg(&kg, trainer.state.cfg.batch, trainer.state.cfg.dim_in,
-                              trainer.state.cfg.dim_hd);
+    // ---- accelerator view: what the U50 would do with this workload ------
+    let w = Workload::from_kg(&kg, state.cfg.batch, state.cfg.dim_in, state.cfg.dim_hd);
     let r = simulate_batch(&accel_preset("u50")?, &w, SimOptions::default());
     println!("\nU50 accelerator simulation of this workload:");
     println!("  {}", r.table6_row());
     println!("  {}", r.breakdown_row());
     println!("\nquickstart OK");
     Ok(())
+}
+
+/// Train through the PJRT artifacts and re-evaluate through a fresh engine
+/// built from the trained state. Fails (gracefully, at the call site) when
+/// artifacts are absent or the crate was built without `--features pjrt`.
+fn pjrt_training(
+    kg: &hdreason::kg::KnowledgeGraph,
+) -> hdreason::Result<hdreason::model::RankMetrics> {
+    let mut rc = hdreason::config::RunConfig::from_presets("tiny", "u50")?;
+    rc.train.epochs = 48;
+    rc.train.steps_per_epoch = 16; // 768 train steps end-to-end
+    rc.train.lr = 2e-2;
+    rc.train.eval_every = 10;
+    rc.validate()?;
+    let manifest = Manifest::load(&Manifest::default_dir())?;
+    let runtime = HdrRuntime::load(&manifest, &rc.model)?;
+    println!("\nPJRT platform: {} (jax {} artifacts)", runtime.platform(), manifest.jax_version);
+    let mut trainer = HdrTrainer::new(rc, runtime, kg)?;
+    trainer.fit()?;
+    print!("{}", trainer.log.render());
+    // the engine serves whatever state you hand it — here, the trained one
+    let trained = EngineBuilder::new("tiny")
+        .graph(kg.clone())
+        .state(trainer.state.clone())
+        .backend(BackendKind::Kernel)
+        .build()?;
+    trained.evaluate(&kg.test)
 }

@@ -1,0 +1,85 @@
+//! Bench: end-to-end serving throughput through `KgcEngine::submit`.
+//!
+//! The acceptance comparison for the engine's micro-batcher: the same
+//! 256-query stream is served at batch capacities 1 / 8 / 64, with the
+//! offered load scaled to capacity (one client thread per serving slot,
+//! exactly like the CLI `query` command's default). Capacity 1 is the
+//! unbatched baseline — one sequential submitter, one kernel call, one
+//! scratch allocation and one lock round-trip per query; capacity 64
+//! keeps full batches forming so each flush walks the memory matrix once
+//! for 64 queries. Target: the coalesced path ≥ 2x queries/sec over
+//! batch-size-1 submission at the `tiny` preset.
+//!
+//! Run: cargo bench --bench engine_serving [-- --json [PATH]]
+//! (`--json` appends rows to BENCH_2.json at the repo root by default.)
+
+use hdreason::bench::harness::{bench, maybe_append_json, BenchResult};
+use hdreason::engine::{BackendKind, EngineBuilder, KgcEngine, QueryRequest};
+use std::time::Duration;
+
+const QUERIES: usize = 256;
+
+fn engine_with_capacity(capacity: usize) -> KgcEngine {
+    EngineBuilder::new("tiny")
+        .dataset("learnable")
+        .seed(0)
+        .backend(BackendKind::Kernel)
+        .batch_capacity(capacity)
+        .deadline(Duration::from_micros(200))
+        .build()
+        .expect("tiny engine builds")
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut per_capacity_qps: Vec<(usize, f64)> = Vec::new();
+
+    for capacity in [1usize, 8, 64] {
+        let engine = engine_with_capacity(capacity);
+        let kg = engine.kg();
+        let requests: Vec<QueryRequest> = (0..QUERIES)
+            .map(|i| {
+                let t = kg.train[i % kg.train.len()];
+                QueryRequest::forward(t.src, t.rel)
+            })
+            .collect();
+        // one client per serving slot, so full batches can actually form
+        let clients = capacity;
+        let r = bench(&format!("engine/submit(tiny,b={capacity})"), 3, 15, || {
+            engine.serve_all(&requests, clients);
+        });
+        println!("{}", r.row());
+        let qps = r.per_second(QUERIES as f64);
+        println!("  -> {qps:.0} queries/s at serving batch {capacity} ({clients} clients)\n");
+        per_capacity_qps.push((capacity, qps));
+        results.push(r);
+    }
+
+    if let (Some(&(_, base)), Some(&(_, best))) =
+        (per_capacity_qps.first(), per_capacity_qps.last())
+    {
+        println!(
+            "  -> coalescing speedup (b=64 vs b=1): {:.2}x  (target >= 2x)",
+            best / base.max(1e-12)
+        );
+    }
+
+    // context row: the raw batched score path without the serving queue,
+    // an upper bound on what submit() coalescing can reach
+    let engine = engine_with_capacity(64);
+    let kg = engine.kg();
+    let pairs: Vec<(usize, usize)> = (0..64)
+        .map(|i| {
+            let t = kg.train[i % kg.train.len()];
+            (t.src, t.rel)
+        })
+        .collect();
+    let r = bench("engine/score_batch(tiny,b=64)", 3, 20, || {
+        std::hint::black_box(engine.score_batch(&pairs));
+    });
+    println!("{}", r.row());
+    println!("  -> {:.0} queries/s raw batched scoring (no queue)\n", r.per_second(64.0));
+    results.push(r);
+
+    maybe_append_json(&results);
+}

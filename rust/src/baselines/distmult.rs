@@ -2,7 +2,7 @@
 //! the decoder R-GCN uses (Table 4). score(s, r, o) = Σ_i e_s[i]·w_r[i]·e_o[i].
 
 use super::trainer::MarginModel;
-use crate::hdc::kernels::{self, KernelConfig};
+use crate::engine::{KernelBackend, ScoreBackend};
 use crate::kg::Triple;
 use crate::util::Rng;
 
@@ -10,6 +10,8 @@ pub struct DistMult {
     pub dim: usize,
     pub ent: Vec<f32>,
     pub rel: Vec<f32>,
+    /// Execution backend for the all-objects decoder sweep.
+    backend: Box<dyn ScoreBackend>,
 }
 
 impl DistMult {
@@ -18,7 +20,17 @@ impl DistMult {
         let scale = (1.0 / (dim as f64).sqrt()) as f32;
         let mut init =
             |n: usize| (0..n * dim).map(|_| rng.normal_f32() * scale).collect::<Vec<_>>();
-        Self { dim, ent: init(num_ent), rel: init(num_rel) }
+        Self {
+            dim,
+            ent: init(num_ent),
+            rel: init(num_rel),
+            backend: Box::new(KernelBackend::default()),
+        }
+    }
+
+    /// Swap the score-execution backend (see [`crate::engine::ScoreBackend`]).
+    pub fn set_backend(&mut self, backend: Box<dyn ScoreBackend>) {
+        self.backend = backend;
     }
 
     fn e(&self, v: usize) -> &[f32] {
@@ -41,12 +53,12 @@ impl MarginModel for DistMult {
     }
 
     fn score_all_objects(&self, s: usize, r: usize) -> Vec<f32> {
-        // Σ_i e_s[i]·w_r[i]·e_o[i] = dot(e_s ∘ w_r, e_o): blocked
-        // row-parallel matvec over the entity table
+        // Σ_i e_s[i]·w_r[i]·e_o[i] = dot(e_s ∘ w_r, e_o): one backend
+        // matvec over the entity table
         let d = self.dim;
         let q: Vec<f32> = self.e(s).iter().zip(self.r(r)).map(|(a, b)| a * b).collect();
         let mut out = vec![0f32; self.ent.len() / d];
-        kernels::dot_scores_into(&self.ent, d, &q, &mut out, &KernelConfig::default());
+        self.backend.dot_scores_into(&self.ent, d, &q, &mut out);
         out
     }
 

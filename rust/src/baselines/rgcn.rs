@@ -13,6 +13,7 @@
 //! the logistic loss over (pos, neg) pairs.
 
 use super::trainer::MarginModel;
+use crate::engine::{KernelBackend, ScoreBackend};
 use crate::hdc::kernels::{self, KernelConfig};
 use crate::kg::{Csr, KnowledgeGraph, Triple};
 use crate::model::sigmoid;
@@ -34,6 +35,9 @@ pub struct RGcn {
     /// Cached hidden states (|V|, d); refreshed by `refresh_hidden`.
     hidden: Vec<f32>,
     dirty: bool,
+    /// Execution backend for the all-objects decoder sweep (the GCN
+    /// propagation itself stays on the kernel layer's `par_rows`).
+    backend: Box<dyn ScoreBackend>,
 }
 
 impl RGcn {
@@ -51,9 +55,15 @@ impl RGcn {
             csr: kg.train_csr(),
             hidden: vec![0f32; kg.num_vertices * dim],
             dirty: true,
+            backend: Box::new(KernelBackend::default()),
         };
         m.refresh_hidden();
         m
+    }
+
+    /// Swap the score-execution backend (see [`crate::engine::ScoreBackend`]).
+    pub fn set_backend(&mut self, backend: Box<dyn ScoreBackend>) {
+        self.backend = backend;
     }
 
     fn num_vertices(&self) -> usize {
@@ -197,12 +207,12 @@ impl MarginModel for RGcn {
 
     fn score_all_objects(&self, s: usize, r: usize) -> Vec<f32> {
         // DistMult decoder over hidden states: dot(h_s ∘ w_r, h_o) for all
-        // o — one blocked row-parallel matvec over the hidden matrix
+        // o — one backend matvec over the hidden matrix
         let d = self.dim;
         let w = &self.rel_dec[r * d..(r + 1) * d];
         let q: Vec<f32> = self.h(s).iter().zip(w).map(|(a, b)| a * b).collect();
         let mut out = vec![0f32; self.num_vertices()];
-        kernels::dot_scores_into(&self.hidden, d, &q, &mut out, &KernelConfig::default());
+        self.backend.dot_scores_into(&self.hidden, d, &q, &mut out);
         out
     }
 

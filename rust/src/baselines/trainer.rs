@@ -2,7 +2,7 @@
 //! TransE recipe: uniform negative sampling, max-margin, SGD).
 
 use crate::kg::{KnowledgeGraph, LabelBatch, NegativeSampler, Triple};
-use crate::model::{evaluate_ranking, RankMetrics};
+use crate::model::RankMetrics;
 use crate::util::Rng;
 
 /// A KGE model trainable with (positive, negative) margin steps.
@@ -59,7 +59,9 @@ pub fn train_margin_model<M: MarginModel>(
     }
     let labels = LabelBatch::full(kg);
     let queries: Vec<_> = kg.test.iter().map(|t| (t.src, t.rel, t.dst)).collect();
-    let metrics = evaluate_ranking(&queries, &labels, |s, r| model.score_all_objects(s, r));
+    // generic KgcModel eval path (blanket MarginModel → KgcModel impl)
+    let metrics = crate::engine::evaluate_forward(&*model, &queries, &labels, 64)
+        .expect("margin models are infallible scorers");
     TrainReport {
         model: model.name(),
         epochs,
@@ -84,7 +86,9 @@ mod tests {
         let untrained = TransE::new(kg.num_vertices, kg.num_relations, 16, 0);
         let labels = LabelBatch::full(&kg);
         let queries: Vec<_> = kg.test.iter().map(|t| (t.src, t.rel, t.dst)).collect();
-        let base = evaluate_ranking(&queries, &labels, |s, r| untrained.score_all_objects(s, r));
+        let base = crate::model::evaluate_ranking(&queries, &labels, |s, r| {
+            untrained.score_all_objects(s, r)
+        });
 
         assert!(
             rep.metrics.mrr > 1.2 * base.mrr,

@@ -3,7 +3,7 @@
 //! (Eq. 10). score(s, r, o) = −||e_s + e_r − e_o||_1.
 
 use super::trainer::MarginModel;
-use crate::hdc::kernels::{self, KernelConfig};
+use crate::engine::{KernelBackend, ScoreBackend};
 use crate::kg::Triple;
 use crate::util::Rng;
 
@@ -11,6 +11,9 @@ pub struct TransE {
     pub dim: usize,
     pub ent: Vec<f32>,
     pub rel: Vec<f32>,
+    /// Execution backend for the all-objects score sweep (kernel layer by
+    /// default; swappable for parity tests / scalar reference runs).
+    backend: Box<dyn ScoreBackend>,
 }
 
 impl TransE {
@@ -20,9 +23,19 @@ impl TransE {
         let mut init = |n: usize| -> Vec<f32> {
             (0..n * dim).map(|_| rng.range_f64(-bound as f64, bound as f64) as f32).collect()
         };
-        let mut out = Self { dim, ent: init(num_ent), rel: init(num_rel) };
+        let mut out = Self {
+            dim,
+            ent: init(num_ent),
+            rel: init(num_rel),
+            backend: Box::new(KernelBackend::default()),
+        };
         out.normalize_entities();
         out
+    }
+
+    /// Swap the score-execution backend (see [`crate::engine::ScoreBackend`]).
+    pub fn set_backend(&mut self, backend: Box<dyn ScoreBackend>) {
+        self.backend = backend;
     }
 
     fn e(&self, v: usize) -> &[f32] {
@@ -56,12 +69,12 @@ impl MarginModel for TransE {
     }
 
     fn score_all_objects(&self, s: usize, r: usize) -> Vec<f32> {
-        // score(s, r, o) = −||e_s + e_r − e_o||_1: one blocked row-parallel
-        // pass over the entity table (bias 0 ⇒ the kernel returns −L1)
+        // score(s, r, o) = −||e_s + e_r − e_o||_1: one backend pass over
+        // the entity table (bias 0 ⇒ the scorer returns −L1)
         let d = self.dim;
         let q: Vec<f32> = self.e(s).iter().zip(self.r(r)).map(|(a, b)| a + b).collect();
         let mut out = vec![0f32; self.ent.len() / d];
-        kernels::l1_scores_into(&self.ent, d, &q, 0.0, &mut out, &KernelConfig::default());
+        self.backend.score_batch_into(&self.ent, d, &q, 0.0, &mut out);
         out
     }
 

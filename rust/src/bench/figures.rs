@@ -5,12 +5,13 @@
 //! for the hardware figures; accuracy figures always run on preset-sized
 //! learnable graphs since that is what the artifacts were compiled for).
 
-use crate::baselines::{self, train_margin_model, MarginModel};
+use crate::baselines::{self, train_margin_model};
 use crate::config::{accel_preset, model_preset, Optimizations, ReplacementPolicy, RunConfig};
 use crate::coordinator::HdrTrainer;
+use crate::engine::{evaluate_forward, KernelBackend, KgcModel, ScoreBackend};
 use crate::hdc::{self, DropStrategy};
 use crate::kg::{generator, GraphStats, KnowledgeGraph, LabelBatch};
-use crate::model::{evaluate_ranking, evaluate_ranking_batched, RankMetrics};
+use crate::model::{evaluate_ranking_batched, RankMetrics};
 use crate::platform::{self, accelerators, device};
 use crate::runtime::{HdrRuntime, Manifest};
 use crate::sim::{simulate_batch, SimOptions, Workload};
@@ -67,10 +68,13 @@ fn eval_triples(kg: &KnowledgeGraph) -> Vec<crate::kg::Triple> {
     kg.valid.iter().chain(kg.test.iter()).copied().collect()
 }
 
-fn eval_margin<M: MarginModel>(m: &M, kg: &KnowledgeGraph) -> RankMetrics {
+/// Forward filtered eval of any [`KgcModel`] (the margin baselines come in
+/// through the blanket `MarginModel → KgcModel` impl) — one generic code
+/// path for every cross-model row.
+fn eval_model<M: KgcModel + ?Sized>(m: &M, kg: &KnowledgeGraph) -> RankMetrics {
     let labels = LabelBatch::full(kg);
     let q: Vec<_> = eval_triples(kg).iter().map(|t| (t.src, t.rel, t.dst)).collect();
-    evaluate_ranking(&q, &labels, |s, r| m.score_all_objects(s, r))
+    evaluate_forward(m, &q, &labels, m.eval_chunk()).expect("host models are infallible scorers")
 }
 
 const DATASETS: &[&str] = &["FB15K-237", "WN18RR", "WN18", "YAGO3-10"];
@@ -195,17 +199,18 @@ pub fn fig8a() -> crate::Result<String> {
     let hdr = trainer.evaluate_both(&eval_triples(&kg))?;
     writeln!(out, "{}", hdr.row("HDR (D=128, PJRT, 2-dir)")).ok();
 
+    // baselines: one generic `KgcModel` eval loop over the trained models
     let mut transe = baselines::TransE::new(kg.num_vertices, kg.num_relations, 32, 0);
     train_margin_model(&mut transe, &kg, 30, 0.05, 1.0, 0);
-    writeln!(out, "{}", eval_margin(&transe, &kg).row("TransE")).ok();
-
     let mut dm = baselines::DistMult::new(kg.num_vertices, kg.num_relations, 32, 0);
     train_margin_model(&mut dm, &kg, 30, 0.05, 1.0, 0);
-    writeln!(out, "{}", eval_margin(&dm, &kg).row("DistMult")).ok();
-
     let mut rgcn = baselines::RGcn::new(&kg, 16, 0);
     train_margin_model(&mut rgcn, &kg, 10, 0.05, 1.0, 0);
-    writeln!(out, "{}", eval_margin(&rgcn, &kg).row("R-GCN (1-layer)")).ok();
+    let rows: [(&dyn KgcModel, &str); 3] =
+        [(&transe, "TransE"), (&dm, "DistMult"), (&rgcn, "R-GCN (1-layer)")];
+    for (model, label) in rows {
+        writeln!(out, "{}", eval_model(model, &kg).row(label)).ok();
+    }
 
     writeln!(out, "paper ordering: HDR ≈ CompGCN/SACN > R-GCN > TransE on FB15K-237/WN18RR").ok();
     Ok(out)
@@ -289,6 +294,7 @@ pub fn fig9a() -> crate::Result<String> {
         eval_triples(&kg).iter().map(|t| (t.src, t.rel, t.dst)).collect();
     let d = cfg.dim_hd;
 
+    let backend = KernelBackend::default();
     let eval_with_drop = |drop: usize, strat: DropStrategy, seed: u64| -> f64 {
         let mem = hdc::memorize(&csr, &hv, &hr, d);
         let mut mv = mem.data.clone();
@@ -301,11 +307,12 @@ pub fn fig9a() -> crate::Result<String> {
                 hr2[r * d + dim] = 0.0;
             }
         }
-        // batched kernel scoring: one tiled pass over mv per query chunk
+        // backend scoring: one tiled pass over mv per query chunk
         let m = evaluate_ranking_batched(&queries, &labels, 64, |qs| {
             let pairs: Vec<(usize, usize)> = qs.iter().map(|&(s, r, _)| (s, r)).collect();
-            let q = crate::model::pack_forward_queries(&mv, &hr2, d, &pairs);
-            crate::model::transe_scores_batch(&mv, d, &q, 0.0)
+            let mut out = vec![0f32; pairs.len() * (mv.len() / d)];
+            backend.score_pairs_into(&mv, &hr2, d, &pairs, 0.0, &mut out);
+            out
         });
         m.hits10
     };
@@ -338,6 +345,7 @@ pub fn fig9b() -> crate::Result<String> {
     let csr = kg.train_csr();
 
     // HDR at fix-N: quantize the *hypervectors* entering the score function
+    let backend = KernelBackend::default();
     let eval_hdr = |bits: Option<u32>| -> f64 {
         let mut hv = trainer.state.encode_vertices_host();
         let mut hr = trainer.state.encode_relations_host();
@@ -349,7 +357,9 @@ pub fn fig9b() -> crate::Result<String> {
         let mv = hdc::memorize(&csr, &hv, &hr, d);
         evaluate_ranking_batched(&queries, &labels, 64, |qs| {
             let pairs: Vec<(usize, usize)> = qs.iter().map(|&(s, r, _)| (s, r)).collect();
-            crate::model::transe_scores_batch_mem(&mv, &hr, &pairs, 0.0)
+            let mut out = vec![0f32; pairs.len() * (mv.data.len() / d)];
+            backend.score_pairs_into(&mv.data, &hr, d, &pairs, 0.0, &mut out);
+            out
         })
         .hits10
     };
@@ -357,12 +367,12 @@ pub fn fig9b() -> crate::Result<String> {
     // GCN at fix-N
     let mut rgcn = baselines::RGcn::new(&kg, 16, 0);
     train_margin_model(&mut rgcn, &kg, 10, 0.05, 1.0, 0);
-    let gcn_float = eval_margin(&rgcn, &kg).hits10;
+    let gcn_float = eval_model(&rgcn, &kg).hits10;
     let eval_gcn = |bits: u32| -> f64 {
         let mut q = baselines::RGcn::new(&kg, 16, 0);
         train_margin_model(&mut q, &kg, 10, 0.05, 1.0, 0);
         q.quantize(bits);
-        eval_margin(&q, &kg).hits10
+        eval_model(&q, &kg).hits10
     };
 
     let hdr_float = eval_hdr(None);

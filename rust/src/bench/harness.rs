@@ -6,8 +6,10 @@
 //! have no timings to record) passes its results through
 //! [`maybe_append_json`], so `cargo bench --bench <name> -- --json [PATH]`
 //! appends one `{"name", "median_s", "iters"}` object per line to
-//! `BENCH_1.json` (default: at the repo root, next to `rust/`). The file is
-//! append-only JSON-lines so the perf trajectory accumulates across PRs.
+//! `BENCH_2.json` (default: at the repo root, next to `rust/`; PR 1's rows
+//! live in `BENCH_1.json`). The files are append-only JSON-lines so the
+//! perf trajectory accumulates across PRs — the default file name bumps
+//! with the PR sequence so each PR's hotpath + serving rows land together.
 
 use std::path::{Path, PathBuf};
 use std::time::Instant;
@@ -59,10 +61,13 @@ impl BenchResult {
     }
 }
 
+/// Default JSON-lines sink at the repo root; bumps with the PR sequence.
+pub const DEFAULT_JSON_FILE: &str = "BENCH_2.json";
+
 /// Parse `--json [PATH]` from the process args (cargo forwards everything
 /// after `--` to the bench binary). A bare `--json` defaults to
-/// `BENCH_1.json` at the repo root (via CARGO_MANIFEST_DIR when cargo sets
-/// it, else the current directory).
+/// [`DEFAULT_JSON_FILE`] at the repo root (via CARGO_MANIFEST_DIR when
+/// cargo sets it, else the current directory).
 pub fn json_path_from_args() -> Option<PathBuf> {
     let args: Vec<String> = std::env::args().collect();
     let i = args.iter().position(|a| a == "--json")?;
@@ -70,8 +75,8 @@ pub fn json_path_from_args() -> Option<PathBuf> {
         return Some(PathBuf::from(p));
     }
     let default = match std::env::var("CARGO_MANIFEST_DIR") {
-        Ok(dir) => Path::new(&dir).join("..").join("BENCH_1.json"),
-        Err(_) => PathBuf::from("BENCH_1.json"),
+        Ok(dir) => Path::new(&dir).join("..").join(DEFAULT_JSON_FILE),
+        Err(_) => PathBuf::from(DEFAULT_JSON_FILE),
     };
     Some(default)
 }

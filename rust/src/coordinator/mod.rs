@@ -7,4 +7,4 @@ mod metrics;
 mod trainer;
 
 pub use metrics::{EpochLog, TrainingLog};
-pub use trainer::HdrTrainer;
+pub use trainer::{HdrTrainer, TrainerModel};

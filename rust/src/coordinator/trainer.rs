@@ -9,8 +9,10 @@
 
 use super::metrics::{EpochLog, TrainingLog};
 use crate::config::RunConfig;
-use crate::kg::{KnowledgeGraph, LabelBatch, QueryBatcher};
-use crate::model::{evaluate_ranking, make_optimizer, ModelState, Optimizer, RankMetrics};
+use crate::engine::{evaluate_double, evaluate_forward, KernelBackend, KgcModel, ScoreBackend};
+use crate::hdc::GraphMemory;
+use crate::kg::{KnowledgeGraph, LabelBatch, QueryBatcher, SubjectIndex};
+use crate::model::{make_optimizer, ModelState, Optimizer, RankMetrics};
 use crate::runtime::{EdgeArrays, HdrRuntime};
 use std::time::Instant;
 
@@ -82,79 +84,33 @@ impl<'kg> HdrTrainer<'kg> {
         Ok((total / steps.max(1) as f64) as f32)
     }
 
-    /// Filtered-ranking evaluation over a triple list, batched through the
-    /// forward artifact (queries padded to |B|).
-    pub fn evaluate(&self, triples: &[crate::kg::Triple]) -> crate::Result<RankMetrics> {
-        let b = self.rc.model.batch;
-        let v = self.rc.model.num_vertices;
-        // rank over the live vertex prefix only: capacity-padding vertices
-        // are structurally impossible objects
-        let live = self.kg.num_vertices;
-        let labels = LabelBatch::full(self.kg);
-        // batch all forward passes first, then rank
-        let mut scores: Vec<Vec<f32>> = Vec::with_capacity(triples.len());
-        for chunk in triples.chunks(b) {
-            let mut qs = vec![0i32; b];
-            let mut qr = vec![0i32; b];
-            for (i, t) in chunk.iter().enumerate() {
-                qs[i] = t.src as i32;
-                qr[i] = t.rel as i32;
-            }
-            let logits =
-                self.runtime.forward(&self.state, &self.edges, &qs, &qr, self.rc.train.bias as f32)?;
-            for i in 0..chunk.len() {
-                scores.push(logits[i * v..i * v + live].to_vec());
-            }
-        }
-        let queries: Vec<(usize, usize, usize)> =
-            triples.iter().map(|t| (t.src, t.rel, t.dst)).collect();
-        let mut it = scores.into_iter();
-        Ok(evaluate_ranking(&queries, &labels, |_s, _r| it.next().expect("score row")))
+    /// Eval-time [`KgcModel`] view of this trainer: forward queries run
+    /// the PJRT forward artifact, backward queries run a lazily-memorized
+    /// host memory snapshot through the kernel backend. The generic
+    /// `engine::evaluate_*` protocol does the ranking.
+    pub fn model(&self) -> TrainerModel<'_, 'kg> {
+        TrainerModel { trainer: self, backend: KernelBackend::default(), host: Default::default() }
     }
 
+    /// Filtered-ranking evaluation over a triple list, batched through the
+    /// forward artifact (queries padded to |B|) — the generic
+    /// [`evaluate_forward`] protocol over [`Self::model`].
+    pub fn evaluate(&self, triples: &[crate::kg::Triple]) -> crate::Result<RankMetrics> {
+        let labels = LabelBatch::full(self.kg);
+        let queries: Vec<(usize, usize, usize)> =
+            triples.iter().map(|t| (t.src, t.rel, t.dst)).collect();
+        evaluate_forward(&self.model(), &queries, &labels, self.rc.model.batch)
+    }
 
     /// Double-direction evaluation (§2.2): averages forward `(s, r, ?)`
     /// ranking (through the PJRT forward artifact) with backward
     /// `(?, r, o)` ranking (host-side inverse translation over the same
-    /// memory hypervectors) — the protocol behind Fig. 8(a).
+    /// memory hypervectors) — the protocol behind Fig. 8(a), via the
+    /// generic [`evaluate_double`] code path.
     pub fn evaluate_both(&self, triples: &[crate::kg::Triple]) -> crate::Result<RankMetrics> {
-        let fwd = self.evaluate(triples)?;
-        // backward: build M^v host-side once, then rank subjects through
-        // the batched kernel scorer — one tiled pass over the memory
-        // matrix per query chunk instead of one full walk per triple
-        let d = self.rc.model.dim_hd;
-        let live = self.kg.num_vertices;
-        let hv = self.state.encode_vertices_host();
-        let hr = self.state.encode_relations_host();
-        let mem = crate::hdc::memorize(&self.kg.train_csr(), &hv, &hr, d);
-        // subject-side filter: known subjects per (r, o)
-        let mut subj_of: std::collections::HashMap<(u32, u32), Vec<u32>> = Default::default();
-        for t in self.kg.all_triples() {
-            subj_of.entry((t.rel as u32, t.dst as u32)).or_default().push(t.src as u32);
-        }
-        let mut bwd = RankMetrics::default();
-        let chunk = self.rc.model.batch.max(1);
-        for tc in triples.chunks(chunk) {
-            let pairs: Vec<(usize, usize)> = tc.iter().map(|t| (t.dst, t.rel)).collect();
-            let q = crate::model::pack_backward_queries(&mem.data, &hr, d, &pairs);
-            let scores = crate::model::transe_scores_batch(&mem.data[..live * d], d, &q, 0.0);
-            let empty = Vec::new();
-            for (row, t) in tc.iter().enumerate() {
-                let filter = subj_of.get(&(t.rel as u32, t.dst as u32)).unwrap_or(&empty);
-                let rank =
-                    crate::model::rank_of(&scores[row * live..(row + 1) * live], t.src, filter);
-                bwd.add_rank(rank);
-            }
-        }
-        let bwd = bwd.finalize();
-        // paper protocol: mean of the two directions
-        Ok(RankMetrics {
-            mrr: (fwd.mrr + bwd.mrr) / 2.0,
-            hits1: (fwd.hits1 + bwd.hits1) / 2.0,
-            hits3: (fwd.hits3 + bwd.hits3) / 2.0,
-            hits10: (fwd.hits10 + bwd.hits10) / 2.0,
-            count: fwd.count + bwd.count,
-        })
+        let labels = LabelBatch::full(self.kg);
+        let subjects = SubjectIndex::full(self.kg);
+        evaluate_double(&self.model(), triples, &labels, &subjects, self.rc.model.batch)
     }
 
     /// Full training run per the TrainConfig; logs every epoch.
@@ -200,5 +156,75 @@ impl<'kg> HdrTrainer<'kg> {
 
     pub fn edges(&self) -> &EdgeArrays {
         &self.edges
+    }
+}
+
+/// Borrowed eval view of an [`HdrTrainer`] implementing the crate-wide
+/// [`KgcModel`] interface (see [`HdrTrainer::model`]).
+///
+/// The backward direction needs the encoded relation hypervectors and the
+/// memorized (|V|, D) matrix; both are built lazily on first use so
+/// forward-only evaluation (the per-epoch `fit` cadence) never pays for
+/// them.
+pub struct TrainerModel<'a, 'kg> {
+    trainer: &'a HdrTrainer<'kg>,
+    backend: KernelBackend,
+    /// Lazily-built `(H^r, M^v)` host snapshot for the backward direction.
+    host: std::cell::OnceCell<(Vec<f32>, GraphMemory)>,
+}
+
+impl TrainerModel<'_, '_> {
+    fn host_snapshot(&self) -> &(Vec<f32>, GraphMemory) {
+        self.host.get_or_init(|| {
+            let t = self.trainer;
+            let d = t.rc.model.dim_hd;
+            let hv = t.state.encode_vertices_host();
+            let hr = t.state.encode_relations_host();
+            let mem = crate::hdc::memorize(&t.kg.train_csr(), &hv, &hr, d);
+            (hr, mem)
+        })
+    }
+}
+
+impl KgcModel for TrainerModel<'_, '_> {
+    fn model_name(&self) -> String {
+        format!("HDR ({}, PJRT)", self.trainer.rc.model.preset)
+    }
+
+    fn forward_chunk(&self, pairs: &[(usize, usize)]) -> crate::Result<Vec<f32>> {
+        let t = self.trainer;
+        let b = t.rc.model.batch;
+        let v = t.rc.model.num_vertices;
+        // rank over the live vertex prefix only: capacity-padding vertices
+        // are structurally impossible objects
+        let live = t.kg.num_vertices;
+        anyhow::ensure!(pairs.len() <= b, "chunk {} exceeds artifact batch {b}", pairs.len());
+        let mut qs = vec![0i32; b];
+        let mut qr = vec![0i32; b];
+        for (i, &(s, r)) in pairs.iter().enumerate() {
+            qs[i] = s as i32;
+            qr[i] = r as i32;
+        }
+        let logits = t.runtime.forward(&t.state, &t.edges, &qs, &qr, t.rc.train.bias as f32)?;
+        let mut out = Vec::with_capacity(pairs.len() * live);
+        for i in 0..pairs.len() {
+            out.extend_from_slice(&logits[i * v..i * v + live]);
+        }
+        Ok(out)
+    }
+
+    fn backward_chunk(&self, pairs: &[(usize, usize)]) -> crate::Result<Option<Vec<f32>>> {
+        let t = self.trainer;
+        let d = t.rc.model.dim_hd;
+        let live = t.kg.num_vertices;
+        let (hr, mem) = self.host_snapshot();
+        let q = crate::model::pack_backward_queries(&mem.data, hr, d, pairs);
+        let mut out = vec![0f32; pairs.len() * live];
+        self.backend.score_batch_into(&mem.data, d, &q, 0.0, &mut out);
+        Ok(Some(out))
+    }
+
+    fn eval_chunk(&self) -> usize {
+        self.trainer.rc.model.batch
     }
 }

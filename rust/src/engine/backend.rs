@@ -1,0 +1,320 @@
+//! Pluggable score-execution backends — the software interface over
+//! heterogeneous scoring hardware that the KG-accelerator survey (arXiv
+//! 2408.12173) argues a system like HDReason lives or dies by.
+//!
+//! A [`ScoreBackend`] executes the crate's one scoring primitive (Eq. 10:
+//! `bias − ||q − M_j||₁` against every row of the (|V|, D) memory matrix)
+//! plus the dot-product decoder the DistMult-family baselines use. Three
+//! implementations:
+//!
+//! * [`ScalarBackend`] — the strict-order scalar reference (one row at a
+//!   time, left-to-right float sums). Slow, auditably correct; what the
+//!   backend-parity tests pin the others against.
+//! * [`KernelBackend`] — the blocked, `std::thread::scope`-parallel host
+//!   kernels of [`crate::hdc::kernels`]; the production default.
+//! * [`PjrtBackend`] — the AOT score artifact via the PJRT runtime. Only
+//!   constructible from a successfully loaded [`crate::runtime::HdrRuntime`],
+//!   which the default build's pjrt stub refuses — so it is effectively
+//!   feature-gated behind `--features pjrt` without needing a `cfg` fork of
+//!   the engine API.
+//!
+//! Consumers hold a `Box<dyn ScoreBackend>` (the [`super::KgcEngine`]
+//! facade, the baselines) instead of calling `model::score` /
+//! `hdc::kernels` free functions directly; those free functions remain as
+//! `#[doc(hidden)]` delegating wrappers for the transition.
+
+use crate::hdc::kernels::{self, KernelConfig};
+use crate::hdc::l1_distance;
+
+/// Execution strategy for the Eq. 10 score sweep and the dot-product
+/// decoder. Implementations must be callable from multiple serving threads
+/// at once (`Send + Sync`, `&self` methods only).
+pub trait ScoreBackend: Send + Sync {
+    /// Human-readable backend name (CLI/bench reporting).
+    fn name(&self) -> &'static str;
+
+    /// Batched Eq. 10 scorer: `q` is a row-major (B, D) matrix of packed
+    /// query points (`M_s + H_r` forward, `M_o − H_r` backward; see
+    /// [`crate::model::pack_forward_queries`]), `mv` the row-major (|V|, D)
+    /// memory matrix, `out` row-major (B, |V|):
+    /// `out[b·|V| + j] = bias − ||q_b − mv_j||₁`.
+    fn score_batch_into(&self, mv: &[f32], dim_hd: usize, q: &[f32], bias: f32, out: &mut [f32]);
+
+    /// Dot-product scores `out[j] = q · mat_j` (DistMult / R-GCN decoder
+    /// against all vertices).
+    fn dot_scores_into(&self, mat: &[f32], dim: usize, q: &[f32], out: &mut [f32]);
+
+    /// Score (subject, relation) index pairs against every vertex:
+    /// packs `q_b = M_{s_b} + H_{r_b}` host-side and runs
+    /// [`Self::score_batch_into`]. Backends with a fused gather+score path
+    /// (the PJRT score artifact) override this to skip the host packing.
+    /// `out` is row-major (|pairs|, |V|).
+    fn score_pairs_into(
+        &self,
+        mv: &[f32],
+        hr: &[f32],
+        dim_hd: usize,
+        pairs: &[(usize, usize)],
+        bias: f32,
+        out: &mut [f32],
+    ) {
+        let q = crate::model::pack_forward_queries(mv, hr, dim_hd, pairs);
+        self.score_batch_into(mv, dim_hd, &q, bias, out);
+    }
+
+    /// Allocating convenience over [`Self::score_batch_into`].
+    fn score_batch(&self, mv: &[f32], dim_hd: usize, q: &[f32], bias: f32) -> Vec<f32> {
+        let v = mv.len() / dim_hd.max(1);
+        let b = q.len() / dim_hd.max(1);
+        let mut out = vec![0f32; v * b];
+        self.score_batch_into(mv, dim_hd, q, bias, &mut out);
+        out
+    }
+}
+
+/// Named backend selection, e.g. from a `--backend` CLI flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Scalar,
+    Kernel,
+}
+
+impl BackendKind {
+    pub const ALL: &'static [&'static str] = &["scalar", "kernel"];
+
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Ok(Self::Scalar),
+            "kernel" => Ok(Self::Kernel),
+            other => anyhow::bail!("unknown backend '{other}' (have {:?})", Self::ALL),
+        }
+    }
+
+    /// Instantiate with an explicit worker-thread count (`0` = auto; the
+    /// scalar backend is single-threaded by definition and ignores it).
+    pub fn instantiate(self, threads: usize) -> Box<dyn ScoreBackend> {
+        match self {
+            Self::Scalar => Box::new(ScalarBackend),
+            Self::Kernel => Box::new(KernelBackend::with_threads(threads)),
+        }
+    }
+}
+
+/// Strict-order scalar reference backend: per-row allocation-free loops
+/// with left-to-right float summation, matching
+/// `model::transe_scores_host` bit-for-bit per row.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScalarBackend;
+
+impl ScoreBackend for ScalarBackend {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn score_batch_into(&self, mv: &[f32], dim_hd: usize, q: &[f32], bias: f32, out: &mut [f32]) {
+        let v = mv.len() / dim_hd.max(1);
+        let b = q.len() / dim_hd.max(1);
+        assert_eq!(out.len(), v * b, "score_batch_into: out must be (B, |V|)");
+        for row in 0..b {
+            let qr = &q[row * dim_hd..(row + 1) * dim_hd];
+            for j in 0..v {
+                out[row * v + j] = bias - l1_distance(qr, &mv[j * dim_hd..(j + 1) * dim_hd]);
+            }
+        }
+    }
+
+    fn dot_scores_into(&self, mat: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+        let n = mat.len() / dim.max(1);
+        assert_eq!(out.len(), n, "dot_scores_into: out must be (N,)");
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = q.iter().zip(&mat[j * dim..(j + 1) * dim]).map(|(a, b)| a * b).sum();
+        }
+    }
+}
+
+/// The blocked multi-threaded kernel layer as a backend — the production
+/// default. `threads = 0` auto-sizes by work (see
+/// [`KernelConfig::plan_threads`]); an explicit count is honoured exactly,
+/// which the parity tests use to pin thread counts 1/2/max.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelBackend {
+    pub cfg: KernelConfig,
+}
+
+impl KernelBackend {
+    pub fn with_threads(threads: usize) -> Self {
+        Self { cfg: KernelConfig::with_threads(threads) }
+    }
+}
+
+impl Default for KernelBackend {
+    fn default() -> Self {
+        Self { cfg: KernelConfig::default() }
+    }
+}
+
+impl ScoreBackend for KernelBackend {
+    fn name(&self) -> &'static str {
+        "kernel"
+    }
+
+    fn score_batch_into(&self, mv: &[f32], dim_hd: usize, q: &[f32], bias: f32, out: &mut [f32]) {
+        kernels::l1_scores_batch_into(mv, dim_hd, q, bias, out, &self.cfg);
+    }
+
+    fn dot_scores_into(&self, mat: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+        kernels::dot_scores_into(mat, dim, q, out, &self.cfg);
+    }
+}
+
+/// Eq. 10 scoring through the AOT score artifact. Construction requires a
+/// loaded [`crate::runtime::HdrRuntime`], which only a `--features pjrt`
+/// build with artifacts on disk can produce — the default stub build fails
+/// the load with an actionable error long before this type exists.
+///
+/// The score artifact is compiled for the preset's static (|V|, |R|, |B|)
+/// shapes and gathers query points on-device from (subject, relation)
+/// index pairs, so [`ScoreBackend::score_pairs_into`] is the accelerated
+/// path; the packed-`q` [`ScoreBackend::score_batch_into`] form has no
+/// artifact equivalent and falls back to the host kernel layer.
+pub struct PjrtBackend {
+    runtime: std::sync::Arc<crate::runtime::HdrRuntime>,
+    host: KernelBackend,
+}
+
+impl PjrtBackend {
+    pub fn new(runtime: std::sync::Arc<crate::runtime::HdrRuntime>) -> Self {
+        Self { runtime, host: KernelBackend::default() }
+    }
+}
+
+impl ScoreBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn score_batch_into(&self, mv: &[f32], dim_hd: usize, q: &[f32], bias: f32, out: &mut [f32]) {
+        // no packed-q artifact; host kernel fallback (documented above)
+        self.host.score_batch_into(mv, dim_hd, q, bias, out);
+    }
+
+    fn dot_scores_into(&self, mat: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+        self.host.dot_scores_into(mat, dim, q, out);
+    }
+
+    fn score_pairs_into(
+        &self,
+        mv: &[f32],
+        hr: &[f32],
+        dim_hd: usize,
+        pairs: &[(usize, usize)],
+        bias: f32,
+        out: &mut [f32],
+    ) {
+        let c = &self.runtime.cfg;
+        assert_eq!(dim_hd, c.dim_hd, "memory matrix D does not match the artifact preset");
+        let live_v = mv.len() / dim_hd.max(1);
+        assert_eq!(out.len(), pairs.len() * live_v, "score_pairs_into: out must be (B, |V|)");
+        // pad the live tensors up to the artifact's static shapes
+        let mut mv_pad = vec![0f32; c.num_vertices * c.dim_hd];
+        mv_pad[..mv.len()].copy_from_slice(mv);
+        let mut hr_pad = vec![0f32; c.num_relations * c.dim_hd];
+        hr_pad[..hr.len()].copy_from_slice(hr);
+        let mut done = 0usize;
+        for chunk in pairs.chunks(c.batch) {
+            let mut qs = vec![0i32; c.batch];
+            let mut qr = vec![0i32; c.batch];
+            for (i, &(s, r)) in chunk.iter().enumerate() {
+                qs[i] = s as i32;
+                qr[i] = r as i32;
+            }
+            // artifact loads were checked at construction; an execute
+            // failure here is a hard runtime fault, not a recoverable path
+            let logits = self
+                .runtime
+                .score(&mv_pad, &hr_pad, &qs, &qr, bias)
+                .expect("pjrt score artifact execution failed");
+            for i in 0..chunk.len() {
+                out[(done + i) * live_v..(done + i + 1) * live_v]
+                    .copy_from_slice(&logits[i * c.num_vertices..i * c.num_vertices + live_v]);
+            }
+            done += chunk.len();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn kind_parses_and_instantiates() {
+        assert_eq!(BackendKind::parse("scalar").unwrap(), BackendKind::Scalar);
+        assert_eq!(BackendKind::parse("KERNEL").unwrap(), BackendKind::Kernel);
+        assert!(BackendKind::parse("fpga").is_err());
+        assert_eq!(BackendKind::Scalar.instantiate(0).name(), "scalar");
+        assert_eq!(BackendKind::Kernel.instantiate(2).name(), "kernel");
+    }
+
+    #[test]
+    fn scalar_and_kernel_agree_on_batched_scores() {
+        let mut rng = Rng::seed_from_u64(9);
+        let (v, d, b) = (21, 13, 5); // D not a lane multiple, odd batch
+        let mv = randv(&mut rng, v * d);
+        let q = randv(&mut rng, b * d);
+        let scalar = ScalarBackend.score_batch(&mv, d, &q, 1.5);
+        for threads in [1usize, 2, 8] {
+            let kernel = KernelBackend::with_threads(threads).score_batch(&mv, d, &q, 1.5);
+            for (i, (a, k)) in scalar.iter().zip(&kernel).enumerate() {
+                assert!(
+                    (a - k).abs() <= 1e-5 * a.abs().max(1.0),
+                    "threads {threads} idx {i}: {a} vs {k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_backends_agree() {
+        let mut rng = Rng::seed_from_u64(10);
+        let (n, d) = (17, 13);
+        let mat = randv(&mut rng, n * d);
+        let q = randv(&mut rng, d);
+        let mut a = vec![0f32; n];
+        let mut b = vec![0f32; n];
+        ScalarBackend.dot_scores_into(&mat, d, &q, &mut a);
+        KernelBackend::default().dot_scores_into(&mat, d, &q, &mut b);
+        for i in 0..n {
+            assert!((a[i] - b[i]).abs() <= 1e-5 * a[i].abs().max(1.0), "{i}");
+        }
+    }
+
+    #[test]
+    fn score_pairs_default_packs_forward_queries() {
+        let mut rng = Rng::seed_from_u64(11);
+        let (v, r, d) = (9, 3, 8);
+        let mv = randv(&mut rng, v * d);
+        let hr = randv(&mut rng, r * d);
+        let pairs = [(0usize, 1usize), (4, 2), (8, 0)];
+        let mut out = vec![0f32; pairs.len() * v];
+        KernelBackend::default().score_pairs_into(&mv, &hr, d, &pairs, 0.5, &mut out);
+        for (row, &(s, rel)) in pairs.iter().enumerate() {
+            let want = crate::model::transe_scores_host(
+                &mv,
+                d,
+                &mv[s * d..(s + 1) * d],
+                &hr[rel * d..(rel + 1) * d],
+                0.5,
+            );
+            for (j, w) in want.iter().enumerate() {
+                let g = out[row * v + j];
+                assert!((w - g).abs() <= 1e-5 * w.abs().max(1.0), "q{row} v{j}: {w} vs {g}");
+            }
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Micro-batching policy for the query serving path.
+//!
+//! The accelerator's Score Engine (and its host mirror,
+//! `hdc::kernels::l1_scores_batch_into`) amortizes each load of a memory
+//! row over a whole query batch, so serving throughput depends on handing
+//! it *full* (B, D) batches. Incoming queries arrive one at a time; the
+//! [`MicroBatcher`] coalesces them, flushing when either
+//!
+//! * the batch reaches `capacity` queries (a full batch), or
+//! * the *oldest* pending query has waited `deadline` (bounded latency for
+//!   partial batches under light traffic).
+//!
+//! This type is pure policy — no threads, no scoring — so its invariants
+//! (FIFO order, size/deadline flush) are directly unit-testable. The
+//! blocking [`super::KgcEngine::submit`] path wraps it in a mutex +
+//! condvar: whichever waiting caller first observes a flush condition
+//! drains the batch, scores it, and publishes results by sequence number.
+
+use crate::kg::Direction;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One serving query: rank all candidate vertices for
+/// `(node, rel, ?)` (forward) or `(?, rel, node)` (backward).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueryRequest {
+    /// The known endpoint: the subject (forward) or the object (backward).
+    pub node: usize,
+    pub rel: usize,
+    pub direction: Direction,
+}
+
+impl QueryRequest {
+    /// `(subject, rel, ?)` — rank candidate objects.
+    pub fn forward(subject: usize, rel: usize) -> Self {
+        Self { node: subject, rel, direction: Direction::Forward }
+    }
+
+    /// `(?, rel, object)` — rank candidate subjects (§2.2 double-direction
+    /// reasoning; the score geometry reads the translation right-to-left).
+    pub fn backward(object: usize, rel: usize) -> Self {
+        Self { node: object, rel, direction: Direction::Backward }
+    }
+}
+
+/// Ranked answer to one [`QueryRequest`]: the top-k candidate vertices,
+/// best first, with their Eq. 10 logits. Ties break by ascending vertex id
+/// so rankings are deterministic across backends and batch compositions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ranking {
+    pub request: QueryRequest,
+    pub top: Vec<(usize, f32)>,
+}
+
+/// Size-or-deadline coalescing queue (see module docs). All mutation is
+/// `&mut`; time is passed in explicitly so tests can pin it.
+#[derive(Debug)]
+pub struct MicroBatcher {
+    capacity: usize,
+    deadline: Duration,
+    next_seq: u64,
+    pending: VecDeque<(u64, QueryRequest, Instant)>,
+}
+
+impl MicroBatcher {
+    pub fn new(capacity: usize, deadline: Duration) -> Self {
+        Self { capacity: capacity.max(1), deadline, next_seq: 0, pending: VecDeque::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn deadline(&self) -> Duration {
+        self.deadline
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Enqueue a request now; returns its sequence number (monotonic, and
+    /// the order batches preserve).
+    pub fn push(&mut self, req: QueryRequest) -> u64 {
+        self.push_at(req, Instant::now())
+    }
+
+    /// Enqueue with an explicit arrival time (deadline tests pin this).
+    pub fn push_at(&mut self, req: QueryRequest, now: Instant) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.pending.push_back((seq, req, now));
+        seq
+    }
+
+    /// A full batch is waiting.
+    pub fn is_full(&self) -> bool {
+        self.pending.len() >= self.capacity
+    }
+
+    /// The oldest pending request has waited at least `deadline`.
+    pub fn deadline_expired(&self, now: Instant) -> bool {
+        self.pending
+            .front()
+            .is_some_and(|&(_, _, t)| now.saturating_duration_since(t) >= self.deadline)
+    }
+
+    /// Flush condition: full batch, or deadline hit on a partial one.
+    pub fn should_flush(&self, now: Instant) -> bool {
+        self.is_full() || self.deadline_expired(now)
+    }
+
+    /// Time until the oldest pending request hits its deadline (`None` when
+    /// the queue is empty; zero when already expired).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.pending.front().map(|&(_, _, t)| (t + self.deadline).saturating_duration_since(now))
+    }
+
+    /// Drain up to one `capacity`-sized batch, FIFO. Requests beyond the
+    /// capacity stay queued with their original arrival times.
+    pub fn take_batch(&mut self) -> Vec<(u64, QueryRequest)> {
+        let n = self.pending.len().min(self.capacity);
+        self.pending.drain(..n).map(|(seq, req, _)| (seq, req)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(i: usize) -> QueryRequest {
+        QueryRequest::forward(i, 0)
+    }
+
+    #[test]
+    fn preserves_fifo_order_and_sequence_numbers() {
+        let mut b = MicroBatcher::new(8, Duration::from_millis(10));
+        let seqs: Vec<u64> = (0..5).map(|i| b.push(req(i))).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 5);
+        for (i, &(seq, r)) in batch.iter().enumerate() {
+            assert_eq!(seq, i as u64);
+            assert_eq!(r, req(i));
+        }
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_size() {
+        let mut b = MicroBatcher::new(3, Duration::from_secs(3600));
+        let now = Instant::now();
+        b.push_at(req(0), now);
+        b.push_at(req(1), now);
+        assert!(!b.should_flush(now), "partial batch, deadline far away");
+        b.push_at(req(2), now);
+        assert!(b.is_full());
+        assert!(b.should_flush(now));
+    }
+
+    #[test]
+    fn partial_batch_flushes_on_deadline() {
+        let mut b = MicroBatcher::new(64, Duration::from_millis(5));
+        let t0 = Instant::now();
+        b.push_at(req(0), t0);
+        assert!(!b.should_flush(t0));
+        let later = t0 + Duration::from_millis(5);
+        assert!(b.deadline_expired(later));
+        assert!(b.should_flush(later), "partial batch must flush once the deadline passes");
+        assert_eq!(b.take_batch().len(), 1);
+    }
+
+    #[test]
+    fn overfull_queue_drains_in_capacity_chunks() {
+        let mut b = MicroBatcher::new(2, Duration::from_millis(1));
+        for i in 0..5 {
+            b.push(req(i));
+        }
+        assert_eq!(b.take_batch().len(), 2);
+        assert_eq!(b.take_batch().len(), 2);
+        let last = b.take_batch();
+        assert_eq!(last.len(), 1);
+        assert_eq!(last[0].0, 4); // sequence numbers survive partial drains
+        assert!(b.take_batch().is_empty());
+    }
+
+    #[test]
+    fn time_to_deadline_counts_down_from_oldest() {
+        let mut b = MicroBatcher::new(8, Duration::from_millis(10));
+        let t0 = Instant::now();
+        assert_eq!(b.time_to_deadline(t0), None);
+        b.push_at(req(0), t0);
+        let at3 = t0 + Duration::from_millis(3);
+        b.push_at(req(1), at3); // newer request must not extend the deadline
+        let rem = b.time_to_deadline(at3).unwrap();
+        assert_eq!(rem, Duration::from_millis(7));
+        assert_eq!(b.time_to_deadline(t0 + Duration::from_millis(30)), Some(Duration::ZERO));
+    }
+}

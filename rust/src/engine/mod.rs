@@ -1,0 +1,653 @@
+//! The `KgcEngine` facade — the crate's front door for knowledge-graph
+//! reasoning.
+//!
+//! HDReason's pitch (§1) is that *one* acceleration-friendly scoring
+//! primitive serves training and inference across platforms; this module
+//! is that pitch as an API. A [`KgcEngine`] owns everything a reasoning
+//! request needs — the model state, the memorized (|V|, D) graph memory,
+//! the relation hypervectors, and the filtered-protocol label/subject
+//! filter sets — and exposes four entry points:
+//!
+//! * [`KgcEngine::score_batch`] — raw Eq. 10 logits for a chunk of
+//!   `(subject, relation)` queries;
+//! * [`KgcEngine::rank`] — one query, scored and ranked immediately (the
+//!   unbatched reference path);
+//! * [`KgcEngine::submit`] — the serving path: blocks until the query's
+//!   [`Ranking`] is ready, while a [`MicroBatcher`] coalesces concurrent
+//!   submissions into full `(B, D)` batches (flush on size or deadline)
+//!   so the kernel layer amortizes every memory-matrix pass;
+//! * [`KgcEngine::evaluate`] / [`KgcEngine::evaluate_both`] — the §5.2
+//!   filtered ranking protocol via the generic [`KgcModel`] code path.
+//!
+//! Execution strategy is pluggable through [`ScoreBackend`]
+//! (`--backend scalar|kernel` on the CLI, [`PjrtBackend`] from a loaded
+//! runtime), and every other scorer in the crate — the PJRT trainer view,
+//! the TransE/DistMult/R-GCN baselines — speaks the same [`KgcModel`]
+//! trait, so cross-model tables and the CLI run one generic path.
+//!
+//! Construction goes through [`EngineBuilder`]:
+//!
+//! ```no_run
+//! use hdreason::engine::{BackendKind, EngineBuilder, QueryRequest};
+//!
+//! let engine = EngineBuilder::new("tiny")
+//!     .dataset("learnable")
+//!     .seed(42)
+//!     .backend(BackendKind::Kernel)
+//!     .build()?;
+//! let ranking = engine.submit(QueryRequest::forward(3, 1));
+//! println!("top candidate: {:?}", ranking.top[0]);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+mod backend;
+mod batcher;
+mod model;
+
+pub use backend::{BackendKind, KernelBackend, PjrtBackend, ScalarBackend, ScoreBackend};
+pub use batcher::{MicroBatcher, QueryRequest, Ranking};
+pub use model::{evaluate_double, evaluate_forward, KgcModel};
+
+use crate::config::{model_preset, ModelConfig};
+use crate::hdc::{self, GraphMemory};
+use crate::kg::{generator, Direction, KnowledgeGraph, LabelBatch, SubjectIndex, Triple};
+use crate::model::{ModelState, RankMetrics};
+use std::collections::HashMap;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Shared serving queue behind [`KgcEngine::submit`].
+struct ServeState {
+    batcher: MicroBatcher,
+    results: HashMap<u64, Ranking>,
+}
+
+/// The unified reasoning engine (see module docs). Cheap to share across
+/// serving threads: all scoring state is immutable after construction and
+/// the only interior mutability is the micro-batch queue.
+pub struct KgcEngine {
+    cfg: ModelConfig,
+    kg: KnowledgeGraph,
+    state: ModelState,
+    /// Encoded relation hypervectors, row-major (|R|_preset, D).
+    hr: Vec<f32>,
+    /// Memorized graph memory, row-major (|V|_kg, D).
+    mem: GraphMemory,
+    labels: LabelBatch,
+    subjects: SubjectIndex,
+    backend: Box<dyn ScoreBackend>,
+    bias: f32,
+    top_k: usize,
+    batch_capacity: usize,
+    deadline: Duration,
+    serve: Mutex<ServeState>,
+    serve_cv: Condvar,
+}
+
+impl KgcEngine {
+    /// Start configuring an engine for a model preset.
+    pub fn builder(preset: &str) -> EngineBuilder {
+        EngineBuilder::new(preset)
+    }
+
+    pub fn kg(&self) -> &KnowledgeGraph {
+        &self.kg
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn state(&self) -> &ModelState {
+        &self.state
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Serving batch capacity (the micro-batcher's flush size).
+    pub fn batch_capacity(&self) -> usize {
+        self.batch_capacity
+    }
+
+    /// Candidate count every ranking is over (the live vertex count).
+    pub fn num_candidates(&self) -> usize {
+        self.kg.num_vertices
+    }
+
+    /// Raw forward logits, row-major (|pairs|, |V|): Eq. 10 scores of each
+    /// `(subject, relation)` query against every candidate object, through
+    /// the configured backend.
+    pub fn score_batch(&self, pairs: &[(usize, usize)]) -> Vec<f32> {
+        let mut out = vec![0f32; pairs.len() * self.kg.num_vertices];
+        self.backend.score_pairs_into(
+            &self.mem.data,
+            &self.hr,
+            self.cfg.dim_hd,
+            pairs,
+            self.bias,
+            &mut out,
+        );
+        out
+    }
+
+    /// Panic early — in the requesting thread, before the query can join a
+    /// batch — on out-of-range requests. A panic inside the batch leader
+    /// would strand every coalesced batch-mate (their results would never
+    /// be published), and a relation in `[kg.num_relations,
+    /// preset capacity)` would silently rank against a meaningless padding
+    /// hypervector instead of failing.
+    fn validate_request(&self, req: QueryRequest) {
+        assert!(
+            req.node < self.kg.num_vertices,
+            "query node {} out of range for graph with {} vertices",
+            req.node,
+            self.kg.num_vertices
+        );
+        assert!(
+            req.rel < self.kg.num_relations,
+            "query relation {} out of range for graph with {} relations",
+            req.rel,
+            self.kg.num_relations
+        );
+    }
+
+    /// Score and rank one query immediately — the unbatched reference path
+    /// the micro-batcher tests pin [`Self::submit`] against. Runs the same
+    /// packing + scoring code as a batch of one.
+    ///
+    /// # Panics
+    /// If the request's node or relation is out of range for the served
+    /// graph.
+    pub fn rank(&self, req: QueryRequest) -> Ranking {
+        self.validate_request(req);
+        self.rank_requests(&[(0, req)]).pop().expect("one ranking per request").1
+    }
+
+    /// Submit a query to the serving path and block until its ranking is
+    /// ready. Concurrent submitters are coalesced: the request joins the
+    /// micro-batch queue, and whichever waiter first observes a flush
+    /// condition (queue reached `batch_capacity`, or the oldest request
+    /// hit the deadline) drains one batch, scores it through the backend
+    /// in a single tiled pass, and publishes every ranking it produced.
+    ///
+    /// A lone submitter therefore waits at most ~`deadline` before its
+    /// partial batch of one is flushed; under load, batches fill and flush
+    /// immediately.
+    ///
+    /// # Panics
+    /// If the request's node or relation is out of range for the served
+    /// graph — raised in the calling thread before the request is
+    /// enqueued, so a bad request can never take down a batch leader.
+    pub fn submit(&self, req: QueryRequest) -> Ranking {
+        self.validate_request(req);
+        let seq = self.serve.lock().unwrap().batcher.push(req);
+        loop {
+            let mut st = self.serve.lock().unwrap();
+            if let Some(r) = st.results.remove(&seq) {
+                return r;
+            }
+            if st.batcher.should_flush(Instant::now()) {
+                // become the leader: drain one batch and score it with the
+                // lock released so other submitters keep queueing
+                let batch = st.batcher.take_batch();
+                drop(st);
+                let ranked = self.rank_requests(&batch);
+                let mut st = self.serve.lock().unwrap();
+                for (s, r) in ranked {
+                    st.results.insert(s, r);
+                }
+                drop(st);
+                self.serve_cv.notify_all();
+                continue;
+            }
+            // Wait for a leader to deliver our result or for the oldest
+            // pending deadline; the timeout bounds any missed wakeup.
+            let wait = st
+                .batcher
+                .time_to_deadline(Instant::now())
+                .unwrap_or(self.deadline)
+                .max(Duration::from_micros(50));
+            let (_guard, _timeout) = self.serve_cv.wait_timeout(st, wait).unwrap();
+        }
+    }
+
+    /// Drive a whole request stream through [`Self::submit`] from
+    /// `clients` concurrent scoped threads (round-robin sharding; one
+    /// client per serving slot keeps full batches forming). Blocks until
+    /// every request is answered and returns the number served; rankings
+    /// are discarded — call [`Self::submit`] directly when the results
+    /// matter. This is the load-driver the CLI `query` command, the
+    /// serving bench, and the examples share.
+    ///
+    /// # Panics
+    /// If any request is out of range for the served graph (validated
+    /// up front, before anything is enqueued).
+    pub fn serve_all(&self, requests: &[QueryRequest], clients: usize) -> usize {
+        for &req in requests {
+            self.validate_request(req);
+        }
+        let clients = clients.max(1);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..clients)
+                .map(|c| {
+                    let mine: Vec<QueryRequest> =
+                        requests.iter().skip(c).step_by(clients).copied().collect();
+                    s.spawn(move || {
+                        let mut served = 0usize;
+                        for req in mine {
+                            let _ = self.submit(req);
+                            served += 1;
+                        }
+                        served
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("serving client thread")).sum()
+        })
+    }
+
+    /// Filtered forward-direction evaluation of a triple list through the
+    /// generic [`KgcModel`] path (chunk = the serving batch capacity).
+    pub fn evaluate(&self, triples: &[Triple]) -> crate::Result<RankMetrics> {
+        let queries: Vec<(usize, usize, usize)> =
+            triples.iter().map(|t| (t.src, t.rel, t.dst)).collect();
+        evaluate_forward(self, &queries, &self.labels, self.batch_capacity)
+    }
+
+    /// Double-direction filtered evaluation (§2.2): mean of object and
+    /// subject ranking, both through the configured backend.
+    pub fn evaluate_both(&self, triples: &[Triple]) -> crate::Result<RankMetrics> {
+        evaluate_double(self, triples, &self.labels, &self.subjects, self.batch_capacity)
+    }
+
+    /// Backward-direction scoring (`M_node − H_rel` packed queries) into
+    /// `out`, row-major (|pairs|, |V|) — the one copy of the backward
+    /// recipe, shared by the serving path and [`KgcModel::backward_chunk`].
+    fn score_backward_into(&self, pairs: &[(usize, usize)], out: &mut [f32]) {
+        let d = self.cfg.dim_hd;
+        let q = crate::model::pack_backward_queries(&self.mem.data, &self.hr, d, pairs);
+        self.backend.score_batch_into(&self.mem.data, d, &q, self.bias, out);
+    }
+
+    /// Score and rank one drained micro-batch. Forward requests go through
+    /// [`ScoreBackend::score_pairs_into`] — the entry point backends with a
+    /// fused gather+score path (the PJRT score artifact) accelerate —
+    /// while backward requests take the packed-`q` path (`M_node − H_rel`),
+    /// which has no artifact equivalent. For the scalar/kernel backends
+    /// both routes are the same math on the same kernel, so a query's
+    /// logits are identical regardless of batch composition (the
+    /// batched-vs-unbatched parity tests rely on that).
+    ///
+    /// Single-direction batches (the common serving case) score straight
+    /// into the result buffer; only mixed batches pay a staging copy.
+    fn rank_requests(&self, batch: &[(u64, QueryRequest)]) -> Vec<(u64, Ranking)> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let d = self.cfg.dim_hd;
+        let v = self.kg.num_vertices;
+        let mut scores = vec![0f32; batch.len() * v];
+
+        let fwd_rows: Vec<usize> = (0..batch.len())
+            .filter(|&i| batch[i].1.direction == Direction::Forward)
+            .collect();
+        let all_pairs =
+            || batch.iter().map(|&(_, r)| (r.node, r.rel)).collect::<Vec<(usize, usize)>>();
+        if fwd_rows.len() == batch.len() {
+            self.backend.score_pairs_into(
+                &self.mem.data,
+                &self.hr,
+                d,
+                &all_pairs(),
+                self.bias,
+                &mut scores,
+            );
+        } else if fwd_rows.is_empty() {
+            self.score_backward_into(&all_pairs(), &mut scores);
+        } else {
+            // mixed directions: score each side into a staging buffer and
+            // scatter rows back to their submission positions
+            let pairs_of = |rows: &[usize]| {
+                rows.iter().map(|&i| (batch[i].1.node, batch[i].1.rel)).collect::<Vec<_>>()
+            };
+            let mut scatter = |rows: &[usize], out: &[f32]| {
+                for (k, &i) in rows.iter().enumerate() {
+                    scores[i * v..(i + 1) * v].copy_from_slice(&out[k * v..(k + 1) * v]);
+                }
+            };
+            let fwd_pairs = pairs_of(&fwd_rows);
+            let mut out = vec![0f32; fwd_pairs.len() * v];
+            self.backend.score_pairs_into(
+                &self.mem.data,
+                &self.hr,
+                d,
+                &fwd_pairs,
+                self.bias,
+                &mut out,
+            );
+            scatter(&fwd_rows, &out);
+            let bwd_rows: Vec<usize> = (0..batch.len())
+                .filter(|&i| batch[i].1.direction == Direction::Backward)
+                .collect();
+            let bwd_pairs = pairs_of(&bwd_rows);
+            let mut out = vec![0f32; bwd_pairs.len() * v];
+            self.score_backward_into(&bwd_pairs, &mut out);
+            scatter(&bwd_rows, &out);
+        }
+
+        batch
+            .iter()
+            .enumerate()
+            .map(|(row, &(seq, req))| {
+                let top = top_k_of(&scores[row * v..(row + 1) * v], self.top_k);
+                (seq, Ranking { request: req, top })
+            })
+            .collect()
+    }
+}
+
+/// Deterministic top-k: score descending, ties by ascending vertex id.
+/// (Full sort — |V| at preset scale is small; swap for a selection pass if
+/// a future preset makes this the serving bottleneck.)
+fn top_k_of(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+    idx.truncate(k);
+    idx.into_iter().map(|i| (i, scores[i])).collect()
+}
+
+impl KgcModel for KgcEngine {
+    fn model_name(&self) -> String {
+        format!("HDR engine ({})", self.backend.name())
+    }
+
+    fn forward_chunk(&self, pairs: &[(usize, usize)]) -> crate::Result<Vec<f32>> {
+        Ok(self.score_batch(pairs))
+    }
+
+    fn backward_chunk(&self, pairs: &[(usize, usize)]) -> crate::Result<Option<Vec<f32>>> {
+        let mut out = vec![0f32; pairs.len() * self.kg.num_vertices];
+        self.score_backward_into(pairs, &mut out);
+        Ok(Some(out))
+    }
+
+    fn eval_chunk(&self) -> usize {
+        self.batch_capacity
+    }
+}
+
+/// Builder for [`KgcEngine`]: preset + dataset + seed + backend + serving
+/// knobs. Defaults: learnable dataset, fresh seeded model state, kernel
+/// backend with auto threads, batch capacity = the preset batch, 500 µs
+/// micro-batch deadline, top-10 rankings, Eq. 10 bias 6.0.
+pub struct EngineBuilder {
+    preset: String,
+    dataset: String,
+    scale: f64,
+    seed: u64,
+    backend_kind: BackendKind,
+    threads: usize,
+    custom_backend: Option<Box<dyn ScoreBackend>>,
+    bias: f32,
+    top_k: usize,
+    batch_capacity: usize,
+    deadline: Duration,
+    kg: Option<KnowledgeGraph>,
+    state: Option<ModelState>,
+}
+
+impl EngineBuilder {
+    pub fn new(preset: &str) -> Self {
+        Self {
+            preset: preset.to_string(),
+            dataset: "learnable".to_string(),
+            scale: 1.0,
+            seed: 42,
+            backend_kind: BackendKind::Kernel,
+            threads: 0,
+            custom_backend: None,
+            bias: 6.0,
+            top_k: 10,
+            batch_capacity: 0,
+            deadline: Duration::from_micros(500),
+            kg: None,
+            state: None,
+        }
+    }
+
+    /// Dataset to generate when no explicit graph is given: `learnable`,
+    /// `random`, or a Table 3 name (`FB15K-237`, `WN18RR`, `WN18`,
+    /// `YAGO3-10`) which is scaled and fitted into the preset's capacity.
+    pub fn dataset(mut self, name: &str) -> Self {
+        self.dataset = name.to_string();
+        self
+    }
+
+    /// Scale factor for named Table 3 datasets (ignored otherwise).
+    pub fn scale(mut self, scale: f64) -> Self {
+        self.scale = scale;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.backend_kind = kind;
+        self
+    }
+
+    /// Worker threads for the kernel backend (`0` = auto by work size).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// Install a caller-built backend (e.g. a [`PjrtBackend`] wrapping a
+    /// loaded runtime); overrides [`Self::backend`]/[`Self::threads`].
+    pub fn custom_backend(mut self, backend: Box<dyn ScoreBackend>) -> Self {
+        self.custom_backend = Some(backend);
+        self
+    }
+
+    /// Eq. 10 score bias (shifts all logits; rankings are invariant).
+    pub fn bias(mut self, bias: f32) -> Self {
+        self.bias = bias;
+        self
+    }
+
+    /// Entries kept per [`Ranking`].
+    pub fn top_k(mut self, k: usize) -> Self {
+        self.top_k = k.max(1);
+        self
+    }
+
+    /// Micro-batch flush size (`0` = the preset's batch).
+    pub fn batch_capacity(mut self, capacity: usize) -> Self {
+        self.batch_capacity = capacity;
+        self
+    }
+
+    /// Micro-batch flush deadline for partial batches.
+    pub fn deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = deadline;
+        self
+    }
+
+    /// Serve an explicit graph instead of generating one.
+    pub fn graph(mut self, kg: KnowledgeGraph) -> Self {
+        self.kg = Some(kg);
+        self
+    }
+
+    /// Serve a trained [`ModelState`] (e.g. from `coordinator::HdrTrainer`)
+    /// instead of a fresh seeded one. Must match the builder's preset.
+    pub fn state(mut self, state: ModelState) -> Self {
+        self.state = Some(state);
+        self
+    }
+
+    /// Materialize the engine: resolve the dataset, encode the model state
+    /// into hypervectors, memorize the graph (Eq. 1/7), build the filter
+    /// sets, and wire the backend + micro-batcher.
+    pub fn build(self) -> crate::Result<KgcEngine> {
+        let cfg = model_preset(&self.preset)?;
+        let kg = match self.kg {
+            Some(kg) => kg,
+            None => match self.dataset.as_str() {
+                "learnable" => generator::learnable_for_preset(&cfg, 0.8, self.seed),
+                "random" => generator::random_for_preset(&cfg, 0.8, self.seed),
+                name => generator::generate_named(name, self.scale, self.seed)?
+                    .fit_to(cfg.num_vertices, cfg.num_relations, self.seed)
+                    .resplit(0.05, 0.05, self.seed),
+            },
+        };
+        anyhow::ensure!(
+            kg.num_vertices <= cfg.num_vertices && kg.num_relations <= cfg.num_relations,
+            "graph ({} vertices, {} relations) exceeds preset '{}' capacity",
+            kg.num_vertices,
+            kg.num_relations,
+            cfg.preset
+        );
+        anyhow::ensure!(kg.num_vertices > 0, "cannot serve an empty graph");
+        let state = match self.state {
+            Some(state) => {
+                anyhow::ensure!(
+                    state.cfg == cfg,
+                    "model state preset '{}' does not match engine preset '{}'",
+                    state.cfg.preset,
+                    cfg.preset
+                );
+                state
+            }
+            None => ModelState::init(&cfg, self.seed),
+        };
+        let hv = state.encode_vertices_host();
+        let hr = state.encode_relations_host();
+        let mem = hdc::memorize(&kg.train_csr(), &hv, &hr, cfg.dim_hd);
+        let labels = LabelBatch::full(&kg);
+        let subjects = SubjectIndex::full(&kg);
+        let backend = match self.custom_backend {
+            Some(b) => b,
+            None => self.backend_kind.instantiate(self.threads),
+        };
+        let batch_capacity =
+            if self.batch_capacity == 0 { cfg.batch } else { self.batch_capacity };
+        Ok(KgcEngine {
+            serve: Mutex::new(ServeState {
+                batcher: MicroBatcher::new(batch_capacity, self.deadline),
+                results: HashMap::new(),
+            }),
+            serve_cv: Condvar::new(),
+            cfg,
+            kg,
+            state,
+            hr,
+            mem,
+            labels,
+            subjects,
+            backend,
+            bias: self.bias,
+            top_k: self.top_k,
+            batch_capacity,
+            deadline: self.deadline,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_engine(kind: BackendKind) -> KgcEngine {
+        EngineBuilder::new("tiny")
+            .seed(7)
+            .backend(kind)
+            .batch_capacity(4)
+            .deadline(Duration::from_millis(1))
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn builder_defaults_produce_a_consistent_engine() {
+        let e = EngineBuilder::new("tiny").seed(1).build().unwrap();
+        assert_eq!(e.batch_capacity(), e.config().batch);
+        assert_eq!(e.backend_name(), "kernel");
+        assert!(e.num_candidates() > 0);
+        assert!(!e.kg().train.is_empty());
+    }
+
+    #[test]
+    fn unknown_preset_and_dataset_are_errors() {
+        assert!(EngineBuilder::new("nope").build().is_err());
+        assert!(EngineBuilder::new("tiny").dataset("no-such-kg").build().is_err());
+    }
+
+    #[test]
+    fn mismatched_state_preset_is_rejected() {
+        let other = ModelState::init(&model_preset("small").unwrap(), 0);
+        assert!(EngineBuilder::new("tiny").state(other).build().is_err());
+    }
+
+    #[test]
+    fn rank_is_deterministic_and_topk_sorted() {
+        let e = tiny_engine(BackendKind::Kernel);
+        let req = QueryRequest::forward(3, 1);
+        let a = e.rank(req);
+        let b = e.rank(req);
+        assert_eq!(a, b);
+        assert_eq!(a.top.len(), 10);
+        for w in a.top.windows(2) {
+            assert!(w[0].1 >= w[1].1, "top-k not sorted: {:?}", a.top);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_node_panics_in_the_calling_thread() {
+        let e = tiny_engine(BackendKind::Kernel);
+        // must fail fast at validation, before the request can join a
+        // batch and strand coalesced batch-mates
+        let _ = e.submit(QueryRequest::forward(e.num_candidates(), 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_relation_panics_instead_of_scoring_padding() {
+        let e = tiny_engine(BackendKind::Kernel);
+        let _ = e.rank(QueryRequest::forward(0, e.kg().num_relations));
+    }
+
+    #[test]
+    fn submit_matches_unbatched_rank() {
+        let e = tiny_engine(BackendKind::Kernel);
+        for i in 0..8 {
+            let req = QueryRequest::forward(i % e.num_candidates(), i % e.kg().num_relations);
+            assert_eq!(e.submit(req), e.rank(req), "request {i}");
+        }
+    }
+
+    #[test]
+    fn forward_and_backward_chunks_have_engine_shapes() {
+        let e = tiny_engine(BackendKind::Kernel);
+        let pairs = [(0usize, 0usize), (5, 1)];
+        let v = e.num_candidates();
+        assert_eq!(e.forward_chunk(&pairs).unwrap().len(), 2 * v);
+        assert_eq!(e.backward_chunk(&pairs).unwrap().unwrap().len(), 2 * v);
+    }
+
+    #[test]
+    fn evaluate_runs_the_filtered_protocol() {
+        let e = tiny_engine(BackendKind::Kernel);
+        let m = e.evaluate(&e.kg().test).unwrap();
+        assert_eq!(m.count, e.kg().test.len());
+        assert!(m.mrr > 0.0 && m.mrr <= 1.0);
+        let both = e.evaluate_both(&e.kg().test).unwrap();
+        assert_eq!(both.count, 2 * e.kg().test.len());
+    }
+}

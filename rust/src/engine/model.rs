@@ -1,0 +1,156 @@
+//! One model interface for every KGC scorer in the crate.
+//!
+//! Before this trait existed, filtered-ranking evaluation was copied four
+//! ways: `HdrTrainer::evaluate` (PJRT forward artifact), its
+//! `evaluate_both` backward half (host memory matrix), the margin-baseline
+//! eval in `baselines::trainer`, and per-figure loops in `bench::figures`.
+//! [`KgcModel`] is the seam they now share: a model exposes chunked
+//! forward (and optionally backward) logits, and [`evaluate_forward`] /
+//! [`evaluate_double`] implement the §5.2 filtered protocol once.
+//!
+//! Implementors:
+//! * [`super::KgcEngine`] — the host engine (memory matrix × backend);
+//! * `coordinator::TrainerModel` — PJRT forward artifact + host backward;
+//! * every [`crate::baselines::MarginModel`] (TransE / DistMult / R-GCN)
+//!   via the blanket impl below.
+
+use crate::baselines::MarginModel;
+use crate::kg::{LabelBatch, SubjectIndex, Triple};
+use crate::model::{rank_of, try_evaluate_ranking_batched, RankMetrics};
+
+/// A knowledge-graph completion model that can score queries against every
+/// candidate vertex, chunk-at-a-time.
+pub trait KgcModel {
+    /// Display name for report rows.
+    fn model_name(&self) -> String;
+
+    /// Row-major (|pairs|, |V|) logits for forward queries: `pairs[b]` is
+    /// the `(subject, relation)` of query b, row b scores every candidate
+    /// object.
+    fn forward_chunk(&self, pairs: &[(usize, usize)]) -> crate::Result<Vec<f32>>;
+
+    /// Row-major (|pairs|, |V|) logits for backward queries: `pairs[b]` is
+    /// the `(object, relation)` of query b, row b scores every candidate
+    /// *subject*. `Ok(None)` marks a single-direction model (the RL-walker
+    /// family; margin baselines as trained here).
+    fn backward_chunk(&self, _pairs: &[(usize, usize)]) -> crate::Result<Option<Vec<f32>>> {
+        Ok(None)
+    }
+
+    /// Preferred scoring chunk size (static-batch runtimes return their
+    /// artifact batch so no padding is wasted).
+    fn eval_chunk(&self) -> usize {
+        64
+    }
+}
+
+/// Every margin-trained baseline is a forward-direction [`KgcModel`] for
+/// free: one `score_all_objects` sweep per query. (Blanket impl — the
+/// Fig. 8(a) cross-model table iterates `&dyn KgcModel` over HDReason and
+/// the baselines alike.)
+impl<M: MarginModel> KgcModel for M {
+    fn model_name(&self) -> String {
+        self.name().to_string()
+    }
+
+    fn forward_chunk(&self, pairs: &[(usize, usize)]) -> crate::Result<Vec<f32>> {
+        let mut out = Vec::new();
+        for &(s, r) in pairs {
+            out.extend(self.score_all_objects(s, r));
+        }
+        Ok(out)
+    }
+}
+
+/// Filtered forward-direction ranking (§5.2 protocol) over any
+/// [`KgcModel`]: score `chunk` queries per call, rank each gold object
+/// after filtering the other known objects of its `(s, r)`.
+pub fn evaluate_forward<M: KgcModel + ?Sized>(
+    model: &M,
+    queries: &[(usize, usize, usize)],
+    labels: &LabelBatch,
+    chunk: usize,
+) -> crate::Result<RankMetrics> {
+    try_evaluate_ranking_batched(queries, labels, chunk, |qs| {
+        let pairs: Vec<(usize, usize)> = qs.iter().map(|&(s, r, _)| (s, r)).collect();
+        model.forward_chunk(&pairs)
+    })
+}
+
+/// Double-direction evaluation (§2.2, the Fig. 8(a) protocol): the mean of
+/// forward `(s, r, ?)` object ranking and backward `(?, r, o)` subject
+/// ranking, both filtered. Falls back to forward-only when the model has
+/// no backward path.
+pub fn evaluate_double<M: KgcModel + ?Sized>(
+    model: &M,
+    triples: &[Triple],
+    labels: &LabelBatch,
+    subjects: &SubjectIndex,
+    chunk: usize,
+) -> crate::Result<RankMetrics> {
+    let queries: Vec<(usize, usize, usize)> =
+        triples.iter().map(|t| (t.src, t.rel, t.dst)).collect();
+    let fwd = evaluate_forward(model, &queries, labels, chunk)?;
+    let mut bwd = RankMetrics::default();
+    for tc in triples.chunks(chunk.max(1)) {
+        let pairs: Vec<(usize, usize)> = tc.iter().map(|t| (t.dst, t.rel)).collect();
+        let scores = match model.backward_chunk(&pairs)? {
+            Some(s) => s,
+            None => return Ok(fwd), // single-direction model
+        };
+        anyhow::ensure!(
+            !pairs.is_empty() && scores.len() % pairs.len() == 0,
+            "backward_chunk returned {} logits for {} queries",
+            scores.len(),
+            pairs.len()
+        );
+        let v = scores.len() / pairs.len();
+        for (row, t) in tc.iter().enumerate() {
+            let rank = rank_of(
+                &scores[row * v..(row + 1) * v],
+                t.src,
+                subjects.subjects(t.rel, t.dst),
+            );
+            bwd.add_rank(rank);
+        }
+    }
+    Ok(RankMetrics::mean_of(&fwd, &bwd.finalize()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::TransE;
+    use crate::kg::{generator, KnowledgeGraph};
+    use crate::model::evaluate_ranking;
+
+    fn kg() -> KnowledgeGraph {
+        let cfg = crate::config::model_preset("tiny").unwrap();
+        generator::learnable_for_preset(&cfg, 0.8, 3)
+    }
+
+    #[test]
+    fn blanket_margin_impl_matches_direct_eval() {
+        let kg = kg();
+        let m = TransE::new(kg.num_vertices, kg.num_relations, 16, 0);
+        let labels = LabelBatch::full(&kg);
+        let queries: Vec<_> = kg.test.iter().map(|t| (t.src, t.rel, t.dst)).collect();
+        let direct = evaluate_ranking(&queries, &labels, |s, r| m.score_all_objects(s, r));
+        for chunk in [1usize, 7, 64] {
+            let generic = evaluate_forward(&m, &queries, &labels, chunk).unwrap();
+            assert_eq!(direct, generic, "chunk {chunk}");
+        }
+    }
+
+    #[test]
+    fn double_direction_falls_back_to_forward_for_margin_models() {
+        let kg = kg();
+        let m = TransE::new(kg.num_vertices, kg.num_relations, 16, 0);
+        let labels = LabelBatch::full(&kg);
+        let subjects = SubjectIndex::full(&kg);
+        let queries: Vec<_> = kg.test.iter().map(|t| (t.src, t.rel, t.dst)).collect();
+        let fwd = evaluate_forward(&m, &queries, &labels, 32).unwrap();
+        let both = evaluate_double(&m, &kg.test, &labels, &subjects, 32).unwrap();
+        assert_eq!(fwd, both);
+    }
+}

@@ -18,7 +18,7 @@ mod triple;
 
 pub use csr::Csr;
 pub use generator::{DatasetSpec, KNOWN_DATASETS};
-pub use sampler::{LabelBatch, NegativeSampler, QueryBatch, QueryBatcher};
+pub use sampler::{LabelBatch, NegativeSampler, QueryBatch, QueryBatcher, SubjectIndex};
 pub use split::Split;
 pub use stats::GraphStats;
 pub use triple::{Direction, Triple};

@@ -50,6 +50,35 @@ impl LabelBatch {
     }
 }
 
+/// Backward-direction filter index: `(relation, object)` → all known
+/// subjects, across the given splits. The subject-side mirror of
+/// [`LabelBatch`], used by the §5.2 filtered protocol when ranking
+/// `(?, r, o)` queries (double-direction reasoning, §2.2).
+#[derive(Debug, Default, Clone)]
+pub struct SubjectIndex {
+    map: HashMap<(u32, u32), Vec<u32>>,
+}
+
+impl SubjectIndex {
+    pub fn from_triples<'a>(triples: impl Iterator<Item = &'a Triple>) -> Self {
+        let mut map: HashMap<(u32, u32), Vec<u32>> = HashMap::new();
+        for t in triples {
+            map.entry((t.rel as u32, t.dst as u32)).or_default().push(t.src as u32);
+        }
+        Self { map }
+    }
+
+    /// All splits of `kg` (the filtered protocol indexes every known fact).
+    pub fn full(kg: &KnowledgeGraph) -> Self {
+        Self::from_triples(kg.all_triples())
+    }
+
+    /// Known subjects of `(r, o)`.
+    pub fn subjects(&self, r: usize, o: usize) -> &[u32] {
+        self.map.get(&(r as u32, o as u32)).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
 /// Cyclic batcher over training triples, emitting fixed-size query batches
 /// (padded static batch size = the artifact's |B|).
 pub struct QueryBatcher<'a> {
@@ -198,5 +227,16 @@ mod tests {
         let li = LabelBatch::full(&kg);
         let t = kg.train[0];
         assert!(li.objects(t.src, t.rel).contains(&(t.dst as u32)));
+    }
+
+    #[test]
+    fn subject_index_mirrors_label_batch() {
+        let kg = kg();
+        let si = SubjectIndex::full(&kg);
+        for t in kg.all_triples().take(100) {
+            assert!(si.subjects(t.rel, t.dst).contains(&(t.src as u32)), "{t:?}");
+        }
+        // unknown (r, o) pairs filter nothing
+        assert!(si.subjects(kg.num_relations + 1, 0).is_empty());
     }
 }

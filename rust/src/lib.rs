@@ -1,8 +1,36 @@
 //! # HDReason
 //!
 //! Reproduction of *"HDReason: Algorithm-Hardware Codesign for
-//! Hyperdimensional Knowledge Graph Reasoning"* (Chen et al., cs.AR 2024) as
-//! a three-layer Rust + JAX + Pallas stack:
+//! Hyperdimensional Knowledge Graph Reasoning"* (Chen et al., cs.AR 2024).
+//!
+//! ## Front door: the [`engine`]
+//!
+//! All reasoning goes through one facade, [`engine::KgcEngine`]: it owns
+//! the model state, the memorized (|V|, D) graph memory, and the filtered
+//! protocol's filter sets, and serves scoring ([`engine::KgcEngine::score_batch`]),
+//! single-query ranking ([`engine::KgcEngine::rank`]), micro-batched query
+//! serving ([`engine::KgcEngine::submit`] — concurrent submissions coalesce
+//! into full `(B, D)` batches, flushed on size or deadline), and filtered
+//! evaluation. Two traits make the stack pluggable:
+//!
+//! * [`engine::ScoreBackend`] — the execution strategy for the Eq. 10
+//!   score sweep: strict scalar reference, blocked multi-threaded host
+//!   kernels, or the PJRT score artifact (`--features pjrt`);
+//! * [`engine::KgcModel`] — the model interface shared by the HDReason
+//!   engine, the PJRT-trained `coordinator` view, and the
+//!   TransE/DistMult/R-GCN baselines, so every cross-model table and eval
+//!   loop runs one generic code path.
+//!
+//! ```no_run
+//! use hdreason::engine::{BackendKind, EngineBuilder, QueryRequest};
+//!
+//! let engine = EngineBuilder::new("tiny").backend(BackendKind::Kernel).build()?;
+//! let ranking = engine.submit(QueryRequest::forward(3, 1));
+//! println!("top candidates: {:?}", ranking.top);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+//!
+//! ## The three-layer stack
 //!
 //! * **L3 (this crate)** — the coordinator: the paper's density-aware OoO
 //!   scheduler (§4.2.1), dispatcher cache with LRU/LFU/Random replacement,
@@ -27,6 +55,7 @@ pub mod bench;
 pub mod cache;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod hdc;
 pub mod kg;
 pub mod model;

@@ -3,6 +3,7 @@
 //! Subcommands (hand-rolled parsing; clap is unavailable offline):
 //!   datasets   print Table-3-style statistics of the synthetic datasets
 //!   train      end-to-end HDReason training through the PJRT artifacts
+//!   query      serve a ranked-query stream through the KgcEngine
 //!   simulate   run the FPGA cycle simulator on a dataset
 //!   figures    regenerate paper tables/figures (see `--id all`)
 //!   resources  print the Table 5 resource/power model
@@ -10,6 +11,7 @@
 use hdreason::bench::figures;
 use hdreason::config::{accel_preset, RunConfig, ACCEL_PRESETS, MODEL_PRESETS};
 use hdreason::coordinator::HdrTrainer;
+use hdreason::engine::{BackendKind, EngineBuilder, QueryRequest};
 use hdreason::kg::generator;
 use hdreason::runtime::{HdrRuntime, Manifest};
 use hdreason::sim::{simulate_batch, SimOptions, Workload};
@@ -25,13 +27,20 @@ impl Args {
         while let Some(a) = it.next() {
             if let Some(name) = a.strip_prefix("--") {
                 let value = match it.peek() {
-                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    Some(v) if Self::is_value(v) => it.next().unwrap().clone(),
                     _ => "true".to_string(),
                 };
                 flags.insert(name.to_string(), value);
             }
         }
         Self { flags }
+    }
+
+    /// A token is a flag *value* (not the next flag) when it doesn't look
+    /// like a flag — or when it parses as a number, so negative values
+    /// (`--lr -0.05`, `--bias -2`) are never mistaken for flags.
+    fn is_value(tok: &str) -> bool {
+        !tok.starts_with('-') || tok.parse::<f64>().is_ok()
     }
 
     fn get(&self, name: &str, default: &str) -> String {
@@ -58,6 +67,7 @@ fn main() {
     let result = match cmd.as_str() {
         "datasets" => cmd_datasets(&args),
         "train" => cmd_train(&args),
+        "query" => cmd_query(&args),
         "simulate" => cmd_simulate(&args),
         "figures" => cmd_figures(&args),
         "resources" => {
@@ -85,8 +95,14 @@ USAGE: hdreason <command> [flags]
 COMMANDS:
   datasets   [--scale 0.05]                      Table 3 statistics
   train      [--model tiny] [--accel u50] [--epochs 20] [--steps 32]
-             [--lr 0.05] [--dataset learnable] [--seed 42]
+             [--lr <preset>] [--dataset learnable] [--seed 42]
              End-to-end training via PJRT artifacts (`make artifacts` first)
+  query      [--model tiny] [--dataset learnable] [--scale 1.0]
+             [--backend kernel|scalar] [--threads 0] [--queries 256]
+             [--batch <preset|B>] [--deadline-us 500] [--clients <batch>]
+             [--seed 42]
+             Rank a query stream through the KgcEngine micro-batched
+             serving path; prints throughput and filtered accuracy
   simulate   [--dataset FB15K-237] [--accel u50] [--scale 1.0]
              FPGA cycle simulation of one training batch
   figures    --id <table3|table4|table5|table6|fig8a|fig8b|fig8c|fig8d|
@@ -109,9 +125,11 @@ fn cmd_train(args: &Args) -> hdreason::Result<()> {
     let mut rc = RunConfig::from_presets(&model, &accel)?;
     rc.train.epochs = args.get_usize("epochs", rc.train.epochs);
     rc.train.steps_per_epoch = args.get_usize("steps", rc.train.steps_per_epoch);
-    rc.train.lr = args.get_f64("lr", 0.05);
-    rc.train.seed = args.get_usize("seed", 42) as u64;
-    rc.train.eval_every = args.get_usize("eval-every", 5);
+    // flags override the preset; absent flags keep the preset's values
+    // (these defaults used to be hard-coded, silently clobbering presets)
+    rc.train.lr = args.get_f64("lr", rc.train.lr);
+    rc.train.seed = args.get_usize("seed", rc.train.seed as usize) as u64;
+    rc.train.eval_every = args.get_usize("eval-every", rc.train.eval_every);
 
     let dataset = args.get("dataset", "learnable");
     let kg = match dataset.as_str() {
@@ -138,6 +156,74 @@ fn cmd_train(args: &Args) -> hdreason::Result<()> {
     print!("{}", trainer.log.render());
     let test = trainer.evaluate(&kg.test)?;
     println!("{}", test.row("final (test, filtered)"));
+    Ok(())
+}
+
+/// Serve a ranked-query stream through the [`hdreason::engine::KgcEngine`]
+/// micro-batched `submit` path and report throughput + filtered accuracy.
+fn cmd_query(args: &Args) -> hdreason::Result<()> {
+    let model = args.get("model", "tiny");
+    let dataset = args.get("dataset", "learnable");
+    let backend = BackendKind::parse(&args.get("backend", "kernel"))?;
+    let deadline_us = args.get_usize("deadline-us", 500);
+    let num_queries = args.get_usize("queries", 256);
+
+    let engine = EngineBuilder::new(&model)
+        .dataset(&dataset)
+        .scale(args.get_f64("scale", 1.0))
+        .seed(args.get_usize("seed", 42) as u64)
+        .backend(backend)
+        .threads(args.get_usize("threads", 0))
+        .batch_capacity(args.get_usize("batch", 0))
+        .deadline(std::time::Duration::from_micros(deadline_us as u64))
+        .build()?;
+    let kg = engine.kg();
+    println!(
+        "engine: preset {}, backend {}, serving batch {} (deadline {} us)",
+        model,
+        engine.backend_name(),
+        engine.batch_capacity(),
+        deadline_us
+    );
+    println!(
+        "dataset: {} ({} vertices, {} relations, {} train triples)",
+        kg.name,
+        kg.num_vertices,
+        kg.num_relations,
+        kg.train.len()
+    );
+
+    // query stream: test triples cycled up to the requested count
+    let triples = if kg.test.is_empty() { kg.train.clone() } else { kg.test.clone() };
+    anyhow::ensure!(!triples.is_empty(), "dataset has no triples to query");
+    let requests: Vec<QueryRequest> = (0..num_queries.max(1))
+        .map(|i| {
+            let t = triples[i % triples.len()];
+            QueryRequest::forward(t.src, t.rel)
+        })
+        .collect();
+
+    // concurrent submitters keep the micro-batcher's batches full; default
+    // one client per serving slot
+    let clients = args.get_usize("clients", engine.batch_capacity()).max(1);
+    let start = std::time::Instant::now();
+    let served = engine.serve_all(&requests, clients);
+    let elapsed = start.elapsed().as_secs_f64().max(1e-9);
+    println!(
+        "served {} queries from {} clients in {:.1} ms  ->  {:.0} queries/s",
+        served,
+        clients,
+        elapsed * 1e3,
+        served as f64 / elapsed
+    );
+
+    println!("\nsample rankings:");
+    for t in triples.iter().take(3) {
+        let r = engine.rank(QueryRequest::forward(t.src, t.rel));
+        let ids: Vec<usize> = r.top.iter().take(3).map(|&(v, _)| v).collect();
+        println!("  ({}, r{}, ?) -> top3 {:?} (gold {})", t.src, t.rel, ids, t.dst);
+    }
+    println!("{}", engine.evaluate(&triples)?.row("engine (filtered)"));
     Ok(())
 }
 
@@ -172,4 +258,53 @@ fn cmd_figures(args: &Args) -> hdreason::Result<()> {
         println!("{}", figures::generate(&id, scale)?);
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::Args;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(&tokens.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn values_and_boolean_flags() {
+        let a = parse(&["--model", "tiny", "--verbose", "--epochs", "12"]);
+        assert_eq!(a.get("model", "x"), "tiny");
+        assert_eq!(a.get("verbose", "false"), "true");
+        assert_eq!(a.get_usize("epochs", 0), 12);
+        assert_eq!(a.get("absent", "fallback"), "fallback");
+    }
+
+    #[test]
+    fn negative_numbers_are_values_not_flags() {
+        let a = parse(&["--lr", "-0.05", "--bias", "-2", "--model", "tiny"]);
+        assert_eq!(a.get_f64("lr", 9.9), -0.05);
+        assert_eq!(a.get_f64("bias", 9.9), -2.0);
+        assert_eq!(a.get("model", "x"), "tiny");
+        // neither "-0.05" nor "-2" may appear as a spurious boolean flag
+        assert_eq!(a.flags.len(), 3);
+    }
+
+    #[test]
+    fn flag_followed_by_flag_is_boolean() {
+        let a = parse(&["--eval", "--lr", "0.5"]);
+        assert_eq!(a.get("eval", "false"), "true");
+        assert_eq!(a.get_f64("lr", 0.0), 0.5);
+    }
+
+    #[test]
+    fn non_numeric_dash_tokens_stay_flags() {
+        // "-x" is not a number, so it must not be consumed as a value
+        let a = parse(&["--mode", "-x"]);
+        assert_eq!(a.get("mode", "none"), "true");
+    }
+
+    #[test]
+    fn typed_getters_fall_back_on_parse_failure() {
+        let a = parse(&["--epochs", "many"]);
+        assert_eq!(a.get_usize("epochs", 7), 7);
+        assert_eq!(a.get_f64("epochs", 1.5), 1.5);
+    }
 }

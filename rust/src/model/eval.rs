@@ -40,6 +40,19 @@ impl RankMetrics {
             label, self.mrr, self.hits1, self.hits3, self.hits10, self.count
         )
     }
+
+    /// Double-direction combination (paper §2.2 / Fig. 8(a) protocol):
+    /// the unweighted mean of two directions' metrics, with query counts
+    /// summed.
+    pub fn mean_of(a: &RankMetrics, b: &RankMetrics) -> RankMetrics {
+        RankMetrics {
+            mrr: (a.mrr + b.mrr) / 2.0,
+            hits1: (a.hits1 + b.hits1) / 2.0,
+            hits3: (a.hits3 + b.hits3) / 2.0,
+            hits10: (a.hits10 + b.hits10) / 2.0,
+            count: a.count + b.count,
+        }
+    }
 }
 
 /// Filtered rank of `gold` in `scores` (1-based, optimistic-tie-free: ties
@@ -95,10 +108,24 @@ pub fn evaluate_ranking_batched(
     chunk: usize,
     mut score_chunk_fn: impl FnMut(&[(usize, usize, usize)]) -> Vec<f32>,
 ) -> RankMetrics {
+    try_evaluate_ranking_batched(queries, labels, chunk, |qs| Ok(score_chunk_fn(qs)))
+        .expect("infallible scorer")
+}
+
+/// Fallible form of [`evaluate_ranking_batched`] — the code path the
+/// generic `engine::KgcModel` evaluation runs, where a scorer may fail
+/// (e.g. a PJRT artifact execution error) and the error must surface
+/// instead of panicking mid-eval.
+pub fn try_evaluate_ranking_batched(
+    queries: &[(usize, usize, usize)],
+    labels: &LabelBatch,
+    chunk: usize,
+    mut score_chunk_fn: impl FnMut(&[(usize, usize, usize)]) -> crate::Result<Vec<f32>>,
+) -> crate::Result<RankMetrics> {
     let mut m = RankMetrics::default();
     for qs in queries.chunks(chunk.max(1)) {
-        let scores = score_chunk_fn(qs);
-        assert!(
+        let scores = score_chunk_fn(qs)?;
+        anyhow::ensure!(
             !qs.is_empty() && scores.len() % qs.len() == 0,
             "score_chunk_fn returned {} logits for {} queries",
             scores.len(),
@@ -110,7 +137,7 @@ pub fn evaluate_ranking_batched(
             m.add_rank(rank);
         }
     }
-    m.finalize()
+    Ok(m.finalize())
 }
 
 /// Evaluate a set of queries given a score oracle. `score_fn(s, r)` returns

@@ -13,7 +13,9 @@ mod optimizer;
 mod score;
 
 pub use embeddings::ModelState;
-pub use eval::{evaluate_ranking, evaluate_ranking_batched, rank_of, RankMetrics};
+pub use eval::{
+    evaluate_ranking, evaluate_ranking_batched, rank_of, try_evaluate_ranking_batched, RankMetrics,
+};
 pub use loss::{bce_loss_host, sigmoid};
 pub use optimizer::{make_optimizer, Adagrad, Adam, Optimizer, Sgd};
 pub use score::{

@@ -1,13 +1,18 @@
 //! Host-side TransE scoring (Eq. 10).
 //!
-//! Layering mirrors `hdc`: the `*_host` functions are the scalar reference
-//! implementations (one fresh Vec per call, strict float order) used by
-//! tests and artifact round-trips; [`transe_scores`],
-//! [`transe_scores_subjects`] and the batched [`transe_scores_batch`]
-//! route through the blocked multi-threaded kernel layer and are what eval
-//! and the benches run. The batched form is the software Score Engine: it
-//! ranks a whole query batch against all vertex memories in one tiled pass
-//! over the (|V|, D) memory matrix.
+//! **The execution seam moved to [`crate::engine::ScoreBackend`]** — new
+//! code should score through a backend (or the [`crate::engine::KgcEngine`]
+//! facade) rather than these free functions. What remains here:
+//!
+//! * the `*_host` scalar references (one fresh Vec per call, strict float
+//!   order) that tests, artifact round-trips, and the
+//!   `engine::ScalarBackend` parity checks are pinned against — still
+//!   fully documented;
+//! * the query-packing helpers [`pack_forward_queries`] /
+//!   [`pack_backward_queries`] the backends share;
+//! * the old kernel-path entry points (`transe_scores`,
+//!   `transe_scores_batch`, …), kept as thin `#[doc(hidden)]` delegating
+//!   wrappers so existing callers keep compiling while they migrate.
 
 use crate::hdc::kernels::{self, KernelConfig};
 use crate::hdc::{l1_distance, GraphMemory};
@@ -53,6 +58,9 @@ pub fn transe_scores_subjects_host(
 
 /// Kernel-layer forward scores: same contract as [`transe_scores_host`],
 /// computed with the blocked row-parallel L1 kernel.
+/// Superseded by [`crate::engine::ScoreBackend`]; kept as a delegating
+/// wrapper.
+#[doc(hidden)]
 pub fn transe_scores(
     mv: &[f32],
     dim_hd: usize,
@@ -68,6 +76,9 @@ pub fn transe_scores(
 
 /// Kernel-layer backward scores: same contract as
 /// [`transe_scores_subjects_host`].
+/// Superseded by [`crate::engine::ScoreBackend`]; kept as a delegating
+/// wrapper.
+#[doc(hidden)]
 pub fn transe_scores_subjects(
     mv: &[f32],
     dim_hd: usize,
@@ -124,6 +135,9 @@ pub fn pack_backward_queries(
 /// query matrix (see [`pack_forward_queries`] / [`pack_backward_queries`]),
 /// `out` is row-major (B, |V|). One tiled pass over `mv` serves the whole
 /// batch — the memory-traffic amortization of the paper's Score Engine.
+/// Superseded by [`crate::engine::ScoreBackend::score_batch_into`]; kept as
+/// a delegating wrapper.
+#[doc(hidden)]
 pub fn transe_scores_batch_into(
     mv: &[f32],
     dim_hd: usize,
@@ -135,25 +149,37 @@ pub fn transe_scores_batch_into(
     kernels::l1_scores_batch_into(mv, dim_hd, q, bias, out, cfg);
 }
 
-/// Allocating wrapper over [`transe_scores_batch_into`].
+/// Allocating wrapper over [`transe_scores_batch_into`]. Superseded by
+/// [`crate::engine::ScoreBackend::score_batch`]; kept as a delegating
+/// wrapper.
+#[doc(hidden)]
 pub fn transe_scores_batch(mv: &[f32], dim_hd: usize, q: &[f32], bias: f32) -> Vec<f32> {
-    let v = mv.len() / dim_hd;
-    let b = q.len() / dim_hd;
-    let mut out = vec![0f32; v * b];
-    transe_scores_batch_into(mv, dim_hd, q, bias, &mut out, &KernelConfig::default());
-    out
+    use crate::engine::ScoreBackend as _;
+    crate::engine::KernelBackend::default().score_batch(mv, dim_hd, q, bias)
 }
 
 /// Batched forward scoring straight from a [`GraphMemory`] — the common
 /// eval call shape: pack the (s, r) queries, run one tiled pass.
+/// Superseded by [`crate::engine::ScoreBackend::score_pairs_into`]; kept as
+/// a delegating wrapper.
+#[doc(hidden)]
 pub fn transe_scores_batch_mem(
     mem: &GraphMemory,
     hr: &[f32],
     pairs: &[(usize, usize)],
     bias: f32,
 ) -> Vec<f32> {
-    let q = pack_forward_queries(&mem.data, hr, mem.dim_hd, pairs);
-    transe_scores_batch(&mem.data, mem.dim_hd, &q, bias)
+    use crate::engine::ScoreBackend as _;
+    let mut out = vec![0f32; pairs.len() * (mem.data.len() / mem.dim_hd.max(1))];
+    crate::engine::KernelBackend::default().score_pairs_into(
+        &mem.data,
+        hr,
+        mem.dim_hd,
+        pairs,
+        bias,
+        &mut out,
+    );
+    out
 }
 
 #[cfg(test)]

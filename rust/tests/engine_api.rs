@@ -1,0 +1,195 @@
+//! Integration tests for the `engine` facade: backend parity through the
+//! public `KgcEngine` API (scalar vs kernel at thread counts 1/2/max), and
+//! the micro-batched serving path (identical to the unbatched path,
+//! partial-batch deadline flush, FIFO order).
+
+use hdreason::baselines::{DistMult, MarginModel, TransE};
+use hdreason::engine::{
+    BackendKind, EngineBuilder, KgcEngine, MicroBatcher, QueryRequest, ScalarBackend,
+};
+use hdreason::model::{evaluate_ranking_batched, RankMetrics};
+use std::time::{Duration, Instant};
+
+fn close(a: f32, b: f32) -> bool {
+    (a - b).abs() <= 1e-5 * a.abs().max(b.abs()).max(1.0)
+}
+
+fn thread_counts() -> Vec<usize> {
+    let max = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut t = vec![1, 2, max];
+    t.sort_unstable();
+    t.dedup();
+    t
+}
+
+fn engine(kind: BackendKind, threads: usize, capacity: usize) -> KgcEngine {
+    EngineBuilder::new("tiny")
+        .dataset("learnable")
+        .seed(11)
+        .backend(kind)
+        .threads(threads)
+        .batch_capacity(capacity)
+        .deadline(Duration::from_millis(1))
+        .build()
+        .expect("tiny engine builds")
+}
+
+/// The pairs every parity test scores: a mix of repeated and distinct
+/// (subject, relation) queries spanning the vertex/relation ranges.
+fn query_pairs(e: &KgcEngine, n: usize) -> Vec<(usize, usize)> {
+    let v = e.num_candidates();
+    let r = e.kg().num_relations;
+    (0..n).map(|i| ((i * 7) % v, i % r)).collect()
+}
+
+#[test]
+fn backend_parity_scalar_vs_kernel_through_engine() {
+    let scalar = engine(BackendKind::Scalar, 0, 8);
+    let pairs = query_pairs(&scalar, 19);
+    let want = scalar.score_batch(&pairs);
+    for threads in thread_counts() {
+        let kernel = engine(BackendKind::Kernel, threads, 8);
+        let got = kernel.score_batch(&pairs);
+        assert_eq!(want.len(), got.len());
+        for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+            assert!(close(*w, *g), "threads {threads} logit {i}: {w} vs {g}");
+        }
+    }
+}
+
+#[test]
+fn backend_parity_holds_on_the_serving_path() {
+    // same query through rank() on a scalar engine and every kernel thread
+    // count: the top-1 candidate must agree (scores within tolerance)
+    let scalar = engine(BackendKind::Scalar, 0, 4);
+    let reqs: Vec<QueryRequest> = query_pairs(&scalar, 6)
+        .into_iter()
+        .map(|(s, r)| QueryRequest::forward(s, r))
+        .collect();
+    for threads in thread_counts() {
+        let kernel = engine(BackendKind::Kernel, threads, 4);
+        for &req in &reqs {
+            let a = scalar.rank(req);
+            let b = kernel.rank(req);
+            assert_eq!(a.top.len(), b.top.len());
+            for (&(_, sa), &(_, sb)) in a.top.iter().zip(&b.top) {
+                assert!(close(sa, sb), "threads {threads} req {req:?}: {sa} vs {sb}");
+            }
+        }
+    }
+}
+
+#[test]
+fn baseline_backends_are_swappable_and_agree() {
+    // the baselines' set_backend seam: scalar vs default-kernel sweeps
+    // must agree within float-reassociation tolerance
+    let (v, r, dim) = (37, 3, 24);
+    let kernel_te = TransE::new(v, r, dim, 5);
+    let mut scalar_te = TransE::new(v, r, dim, 5); // same seed = same tables
+    scalar_te.set_backend(Box::new(ScalarBackend));
+    let kernel_dm = DistMult::new(v, r, dim, 5);
+    let mut scalar_dm = DistMult::new(v, r, dim, 5);
+    scalar_dm.set_backend(Box::new(ScalarBackend));
+    for s in [0usize, 7, 36] {
+        for rel in 0..r {
+            let a = kernel_te.score_all_objects(s, rel);
+            let b = scalar_te.score_all_objects(s, rel);
+            let c = kernel_dm.score_all_objects(s, rel);
+            let d = scalar_dm.score_all_objects(s, rel);
+            for j in 0..v {
+                assert!(close(a[j], b[j]), "TransE s{s} r{rel} v{j}: {} vs {}", a[j], b[j]);
+                assert!(close(c[j], d[j]), "DistMult s{s} r{rel} v{j}: {} vs {}", c[j], d[j]);
+            }
+        }
+    }
+}
+
+#[test]
+fn custom_backend_installs_through_the_builder() {
+    let e = EngineBuilder::new("tiny")
+        .seed(11)
+        .custom_backend(Box::new(ScalarBackend))
+        .build()
+        .unwrap();
+    assert_eq!(e.backend_name(), "scalar");
+}
+
+#[test]
+fn submitted_rankings_match_the_unbatched_path() {
+    // concurrent submitters at capacity 8: every result must be exactly
+    // what the unbatched rank() path produces for that request
+    let e = engine(BackendKind::Kernel, 0, 8);
+    let v = e.num_candidates();
+    let r = e.kg().num_relations;
+    std::thread::scope(|s| {
+        let e = &e;
+        for c in 0..4usize {
+            s.spawn(move || {
+                for i in 0..16usize {
+                    let req = QueryRequest::forward((c * 31 + i * 5) % v, (c + i) % r);
+                    assert_eq!(e.submit(req), e.rank(req), "client {c} query {i}");
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn backward_requests_serve_through_the_same_batcher() {
+    let e = engine(BackendKind::Kernel, 0, 4);
+    let t = e.kg().test[0];
+    let req = QueryRequest::backward(t.dst, t.rel);
+    assert_eq!(e.submit(req), e.rank(req));
+}
+
+#[test]
+fn partial_batch_flushes_on_deadline() {
+    // capacity far above the stream size: every submit can only complete
+    // via the deadline flush, and must still be correct
+    let e = engine(BackendKind::Kernel, 0, 1024);
+    let start = Instant::now();
+    for i in 0..3usize {
+        let req = QueryRequest::forward(i, 0);
+        assert_eq!(e.submit(req), e.rank(req), "query {i}");
+    }
+    // 3 sequential deadline flushes at 1 ms each, plus scoring slack
+    assert!(
+        start.elapsed() < Duration::from_secs(10),
+        "deadline flush took implausibly long: {:?}",
+        start.elapsed()
+    );
+}
+
+#[test]
+fn micro_batcher_preserves_request_order() {
+    let mut b = MicroBatcher::new(4, Duration::from_millis(5));
+    let reqs: Vec<QueryRequest> = (0..10).map(|i| QueryRequest::forward(i, 0)).collect();
+    let seqs: Vec<u64> = reqs.iter().map(|&r| b.push(r)).collect();
+    assert_eq!(seqs, (0..10).collect::<Vec<u64>>());
+    let mut drained: Vec<(u64, QueryRequest)> = Vec::new();
+    while !b.is_empty() {
+        let batch = b.take_batch();
+        assert!(batch.len() <= 4);
+        drained.extend(batch);
+    }
+    // FIFO across batch boundaries, matched to the original requests
+    for (i, &(seq, req)) in drained.iter().enumerate() {
+        assert_eq!(seq, i as u64);
+        assert_eq!(req, reqs[i]);
+    }
+}
+
+#[test]
+fn engine_evaluate_matches_direct_batched_evaluation() {
+    let e = engine(BackendKind::Kernel, 0, 8);
+    let kg = e.kg();
+    let labels = hdreason::kg::LabelBatch::full(kg);
+    let queries: Vec<(usize, usize, usize)> =
+        kg.test.iter().map(|t| (t.src, t.rel, t.dst)).collect();
+    let direct: RankMetrics = evaluate_ranking_batched(&queries, &labels, 8, |qs| {
+        let pairs: Vec<(usize, usize)> = qs.iter().map(|&(s, r, _)| (s, r)).collect();
+        e.score_batch(&pairs)
+    });
+    let via_engine = e.evaluate(&kg.test).unwrap();
+    assert_eq!(direct, via_engine);
+}
