@@ -17,19 +17,25 @@ build:
 test:
 	$(CARGO) test -q --manifest-path $(MANIFEST)
 
-# what .github/workflows/ci.yml runs — keep the two in lock-step
+# what .github/workflows/ci.yml runs — keep the two in lock-step.
+# The HDR_THREADS matrix pins the kernel layer's auto-threading to explicit
+# worker counts so shard/batcher races can't hide behind a single-core (or
+# many-core) runner; the default run keeps auto-threading covered too.
 ci:
 	$(CARGO) fmt --check --manifest-path $(MANIFEST)
 	$(CARGO) clippy --manifest-path $(MANIFEST) --all-targets -- -D warnings
 	$(CARGO) build --release --manifest-path $(MANIFEST)
 	$(CARGO) test -q --manifest-path $(MANIFEST)
+	HDR_THREADS=1 $(CARGO) test -q --manifest-path $(MANIFEST)
+	HDR_THREADS=2 $(CARGO) test -q --manifest-path $(MANIFEST)
 
 # hot-path benchmark; appends {name, median_s, iters} JSON-lines rows to
-# BENCH_2.json at the repo root so the perf trajectory accumulates per PR
+# BENCH_3.json at the repo root so the perf trajectory accumulates per PR
 bench:
 	$(CARGO) bench --bench runtime_hotpath --manifest-path $(MANIFEST) -- --json
 
-# KgcEngine::submit serving throughput at batch 1/8/64 (same JSON sink)
+# KgcEngine serving throughput: submit at batch 1/8/64, sharded/quant
+# score backends, and the submit_async pipeline (same JSON sink)
 bench-serving:
 	$(CARGO) bench --bench engine_serving --manifest-path $(MANIFEST) -- --json
 

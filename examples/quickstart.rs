@@ -13,7 +13,7 @@
 
 use hdreason::config::accel_preset;
 use hdreason::coordinator::HdrTrainer;
-use hdreason::engine::{BackendKind, EngineBuilder, QueryRequest};
+use hdreason::engine::{BackendKind, EngineBuilder, QuantBackend, QueryRequest, ShardedBackend};
 use hdreason::hdc;
 use hdreason::runtime::{HdrRuntime, Manifest};
 use hdreason::sim::{simulate_batch, SimOptions, Workload};
@@ -67,6 +67,48 @@ fn main() -> hdreason::Result<()> {
         stream.len(),
         batched_s * 1e3,
         stream.len() as f64 / batched_s.max(1e-9)
+    );
+
+    // ---- async serving: one client, the whole stream in flight -----------
+    // submit_async returns a handle immediately; poll() or wait() collects.
+    // Same rankings as submit(), no thread-per-query.
+    let start = Instant::now();
+    let handles: Vec<_> = stream.iter().map(|&q| engine.submit_async(q)).collect();
+    let served = handles.len();
+    for h in handles {
+        let _ = h.wait();
+    }
+    let async_s = start.elapsed().as_secs_f64();
+    println!(
+        "pipelined {} queries through submit_async() in {:.1} ms ({:.0} q/s, one client)",
+        served,
+        async_s * 1e3,
+        served as f64 / async_s.max(1e-9)
+    );
+
+    // ---- alternative score backends (CLI: --backend sharded:N|quant:N) ---
+    // sharded: fan the (|V|, D) memory-matrix scan across N workers;
+    // scores are byte-identical to the kernel backend
+    let sharded = EngineBuilder::new("tiny")
+        .dataset("learnable")
+        .seed(42)
+        .custom_backend(Box::new(ShardedBackend::with_shards(4)))
+        .build()?;
+    // quant: score on the fix-8 grid through the fused quantize-and-score
+    // kernel — Fig. 9(b)'s robustness experiment at kernel speed
+    let quant = EngineBuilder::new("tiny")
+        .dataset("learnable")
+        .seed(42)
+        .custom_backend(Box::new(QuantBackend::new(8, 0)))
+        .build()?;
+    let req = QueryRequest::forward(t.src, t.rel);
+    println!(
+        "backends on ({}, r{}, ?): kernel top1 {:?}, sharded top1 {:?}, fix-8 top1 {:?}",
+        t.src,
+        t.rel,
+        engine.rank(req).top[0],
+        sharded.rank(req).top[0],
+        quant.rank(req).top[0]
     );
 
     // ---- filtered evaluation (untrained baseline) ------------------------

@@ -1,20 +1,29 @@
-//! Bench: end-to-end serving throughput through `KgcEngine::submit`.
+//! Bench: end-to-end serving throughput through `KgcEngine::submit` /
+//! `submit_async`, plus the sharded and quantized score backends.
 //!
-//! The acceptance comparison for the engine's micro-batcher: the same
-//! 256-query stream is served at batch capacities 1 / 8 / 64, with the
-//! offered load scaled to capacity (one client thread per serving slot,
-//! exactly like the CLI `query` command's default). Capacity 1 is the
-//! unbatched baseline — one sequential submitter, one kernel call, one
-//! scratch allocation and one lock round-trip per query; capacity 64
-//! keeps full batches forming so each flush walks the memory matrix once
-//! for 64 queries. Target: the coalesced path ≥ 2x queries/sec over
-//! batch-size-1 submission at the `tiny` preset.
+//! Four sections, all on the `tiny` preset with the same query stream:
+//!
+//! 1. **Micro-batcher coalescing** — `submit` at batch capacities 1/8/64,
+//!    offered load scaled to capacity (one client per serving slot, like
+//!    the CLI `query` default). Capacity 1 is the unbatched baseline.
+//!    Target: coalesced ≥ 2x queries/sec over batch-size-1 submission.
+//! 2. **Sharded memory-matrix scan** — raw `score_batch` through
+//!    `ShardedBackend` at 1 shard vs one shard per core, each shard a
+//!    single-threaded kernel so shard workers are the only parallelism.
+//!    Target: ≥ 1.5x single-worker throughput at max threads.
+//! 3. **Quantized scoring** — `score_batch` through `QuantBackend` fix-8
+//!    (the fused quantize-and-score kernel, Fig. 9(b) at speed).
+//! 4. **Async pipelining** — one client keeps the whole stream in flight
+//!    via `submit_async` handles, then collects; no thread-per-query.
 //!
 //! Run: cargo bench --bench engine_serving [-- --json [PATH]]
-//! (`--json` appends rows to BENCH_2.json at the repo root by default.)
+//! (`--json` appends rows to BENCH_3.json at the repo root by default.)
 
 use hdreason::bench::harness::{bench, maybe_append_json, BenchResult};
-use hdreason::engine::{BackendKind, EngineBuilder, KgcEngine, QueryRequest};
+use hdreason::engine::{
+    BackendKind, EngineBuilder, KernelBackend, KgcEngine, QuantBackend, QueryRequest,
+    ScoreBackend, ShardedBackend,
+};
 use std::time::Duration;
 
 const QUERIES: usize = 256;
@@ -30,19 +39,39 @@ fn engine_with_capacity(capacity: usize) -> KgcEngine {
         .expect("tiny engine builds")
 }
 
+fn engine_with_backend(backend: Box<dyn ScoreBackend>) -> KgcEngine {
+    EngineBuilder::new("tiny")
+        .dataset("learnable")
+        .seed(0)
+        .custom_backend(backend)
+        .batch_capacity(64)
+        .deadline(Duration::from_micros(200))
+        .build()
+        .expect("tiny engine builds")
+}
+
+fn request_stream(engine: &KgcEngine, n: usize) -> Vec<QueryRequest> {
+    let kg = engine.kg();
+    (0..n)
+        .map(|i| {
+            let t = kg.train[i % kg.train.len()];
+            QueryRequest::forward(t.src, t.rel)
+        })
+        .collect()
+}
+
+fn pair_stream(engine: &KgcEngine, n: usize) -> Vec<(usize, usize)> {
+    request_stream(engine, n).into_iter().map(|r| (r.node, r.rel)).collect()
+}
+
 fn main() {
     let mut results: Vec<BenchResult> = Vec::new();
-    let mut per_capacity_qps: Vec<(usize, f64)> = Vec::new();
 
+    // ---- 1. micro-batcher coalescing: submit at capacity 1/8/64 ---------
+    let mut per_capacity_qps: Vec<(usize, f64)> = Vec::new();
     for capacity in [1usize, 8, 64] {
         let engine = engine_with_capacity(capacity);
-        let kg = engine.kg();
-        let requests: Vec<QueryRequest> = (0..QUERIES)
-            .map(|i| {
-                let t = kg.train[i % kg.train.len()];
-                QueryRequest::forward(t.src, t.rel)
-            })
-            .collect();
+        let requests = request_stream(&engine, QUERIES);
         // one client per serving slot, so full batches can actually form
         let clients = capacity;
         let r = bench(&format!("engine/submit(tiny,b={capacity})"), 3, 15, || {
@@ -54,7 +83,6 @@ fn main() {
         per_capacity_qps.push((capacity, qps));
         results.push(r);
     }
-
     if let (Some(&(_, base)), Some(&(_, best))) =
         (per_capacity_qps.first(), per_capacity_qps.last())
     {
@@ -63,6 +91,61 @@ fn main() {
             best / base.max(1e-12)
         );
     }
+
+    // ---- 2. sharded scan: 1 shard vs one shard per core -----------------
+    let max_workers =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).max(2);
+    let mut sharded_qps: Vec<(usize, f64)> = Vec::new();
+    for shards in [1usize, max_workers] {
+        let engine = engine_with_backend(Box::new(ShardedBackend::new(
+            shards,
+            Box::new(KernelBackend::with_threads(1)),
+        )));
+        let pairs = pair_stream(&engine, QUERIES);
+        let r = bench(&format!("engine/score_batch(tiny,sharded={shards})"), 3, 15, || {
+            std::hint::black_box(engine.score_batch(&pairs));
+        });
+        println!("{}", r.row());
+        let qps = r.per_second(QUERIES as f64);
+        println!("  -> {qps:.0} queries/s with {shards} shard worker(s)\n");
+        sharded_qps.push((shards, qps));
+        results.push(r);
+    }
+    if let (Some(&(_, single)), Some(&(_, fanned))) =
+        (sharded_qps.first(), sharded_qps.last())
+    {
+        println!(
+            "  -> sharded fan-out speedup ({max_workers} vs 1 workers): {:.2}x  (target >= 1.5x)",
+            fanned / single.max(1e-12)
+        );
+    }
+
+    // ---- 3. quantized scoring: fused fix-8 kernel ------------------------
+    let engine = engine_with_backend(Box::new(QuantBackend::new(8, 0)));
+    let pairs = pair_stream(&engine, QUERIES);
+    let r = bench("engine/score_batch(tiny,quant=8)", 3, 15, || {
+        std::hint::black_box(engine.score_batch(&pairs));
+    });
+    println!("{}", r.row());
+    let qps = r.per_second(QUERIES as f64);
+    println!("  -> {qps:.0} queries/s on the fix-8 grid (fused kernel)\n");
+    results.push(r);
+
+    // ---- 4. async pipelining: one client, whole stream in flight ---------
+    let engine = engine_with_capacity(64);
+    let requests = request_stream(&engine, QUERIES);
+    let r = bench("engine/submit_async(tiny,b=64,pipelined)", 3, 15, || {
+        let handles: Vec<_> = requests.iter().map(|&q| engine.submit_async(q)).collect();
+        for h in handles {
+            std::hint::black_box(h.wait());
+        }
+    });
+    println!("{}", r.row());
+    println!(
+        "  -> {:.0} queries/s from ONE client pipelining {QUERIES} in-flight handles\n",
+        r.per_second(QUERIES as f64)
+    );
+    results.push(r);
 
     // context row: the raw batched score path without the serving queue,
     // an upper bound on what submit() coalescing can reach

@@ -4,7 +4,7 @@
 //!
 //! A [`ScoreBackend`] executes the crate's one scoring primitive (Eq. 10:
 //! `bias − ||q − M_j||₁` against every row of the (|V|, D) memory matrix)
-//! plus the dot-product decoder the DistMult-family baselines use. Three
+//! plus the dot-product decoder the DistMult-family baselines use. Five
 //! implementations:
 //!
 //! * [`ScalarBackend`] — the strict-order scalar reference (one row at a
@@ -12,6 +12,14 @@
 //!   backend-parity tests pin the others against.
 //! * [`KernelBackend`] — the blocked, `std::thread::scope`-parallel host
 //!   kernels of [`crate::hdc::kernels`]; the production default.
+//! * [`ShardedBackend`] — splits the (|V|, D) memory matrix into
+//!   contiguous row ranges and fans each batch out across one scoped
+//!   worker per shard (the multi-socket scale-out direction of the KG
+//!   accelerator survey). Per-candidate math is unchanged, so scores are
+//!   byte-identical to the inner backend's.
+//! * [`QuantBackend`] — fix-N quantized scoring through the fused
+//!   quantize-and-score kernels (Fig. 9(b)'s robustness experiment at
+//!   kernel speed, no per-query tensor copies).
 //! * [`PjrtBackend`] — the AOT score artifact via the PJRT runtime. Only
 //!   constructible from a successfully loaded [`crate::runtime::HdrRuntime`],
 //!   which the default build's pjrt stub refuses — so it is effectively
@@ -25,6 +33,7 @@
 
 use crate::hdc::kernels::{self, KernelConfig};
 use crate::hdc::l1_distance;
+use crate::hdc::quant::FixedPoint;
 
 /// Execution strategy for the Eq. 10 score sweep and the dot-product
 /// decoder. Implementations must be callable from multiple serving threads
@@ -72,30 +81,55 @@ pub trait ScoreBackend: Send + Sync {
     }
 }
 
-/// Named backend selection, e.g. from a `--backend` CLI flag.
+/// Named backend selection, e.g. from a `--backend` CLI flag. The sharded
+/// and quantized forms carry their parameter: `sharded:4`, `quant:8`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
     Scalar,
     Kernel,
+    /// Memory-matrix row sharding over this many workers (`0` = auto).
+    Sharded(usize),
+    /// Fix-N quantized scoring (`quant:8` = fix-8).
+    Quant(u32),
 }
 
 impl BackendKind {
-    pub const ALL: &'static [&'static str] = &["scalar", "kernel"];
+    pub const ALL: &'static [&'static str] = &["scalar", "kernel", "sharded:N", "quant:N"];
 
     pub fn parse(s: &str) -> crate::Result<Self> {
-        match s.to_ascii_lowercase().as_str() {
-            "scalar" => Ok(Self::Scalar),
-            "kernel" => Ok(Self::Kernel),
-            other => anyhow::bail!("unknown backend '{other}' (have {:?})", Self::ALL),
+        let s = s.to_ascii_lowercase();
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s.as_str(), None),
+        };
+        match (head, arg) {
+            ("scalar", None) => Ok(Self::Scalar),
+            ("kernel", None) => Ok(Self::Kernel),
+            // bare `sharded` auto-sizes to the machine at instantiation
+            ("sharded", None) => Ok(Self::Sharded(0)),
+            ("sharded", Some(a)) => match a.parse::<usize>() {
+                Ok(n) if n > 0 => Ok(Self::Sharded(n)),
+                _ => anyhow::bail!("bad shard count '{a}' (want sharded:N, N >= 1)"),
+            },
+            ("quant", Some(a)) => match a.parse::<u32>() {
+                Ok(bits) if (2..=16).contains(&bits) => Ok(Self::Quant(bits)),
+                _ => anyhow::bail!("bad bit width '{a}' (want quant:N, N in 2..=16)"),
+            },
+            ("quant", None) => anyhow::bail!("backend 'quant' needs a bit width, e.g. 'quant:8'"),
+            _ => anyhow::bail!("unknown backend '{s}' (have {:?})", Self::ALL),
         }
     }
 
     /// Instantiate with an explicit worker-thread count (`0` = auto; the
     /// scalar backend is single-threaded by definition and ignores it).
+    /// `Sharded` puts its parallelism in the shard fan-out — each shard
+    /// runs a single-threaded kernel — so `threads` is ignored there too.
     pub fn instantiate(self, threads: usize) -> Box<dyn ScoreBackend> {
         match self {
             Self::Scalar => Box::new(ScalarBackend),
             Self::Kernel => Box::new(KernelBackend::with_threads(threads)),
+            Self::Sharded(shards) => Box::new(ShardedBackend::with_shards(shards)),
+            Self::Quant(bits) => Box::new(QuantBackend::new(bits, threads)),
         }
     }
 }
@@ -164,6 +198,196 @@ impl ScoreBackend for KernelBackend {
 
     fn dot_scores_into(&self, mat: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
         kernels::dot_scores_into(mat, dim, q, out, &self.cfg);
+    }
+}
+
+/// Split `n` rows into at most `shards` contiguous ranges whose sizes
+/// differ by at most one (the first `n % shards` ranges take the extra
+/// row), never emitting an empty range.
+fn shard_ranges(n: usize, shards: usize) -> Vec<(usize, usize)> {
+    let shards = shards.clamp(1, n.max(1));
+    let base = n / shards;
+    let extra = n % shards;
+    let mut ranges = Vec::with_capacity(shards);
+    let mut lo = 0usize;
+    for i in 0..shards {
+        let hi = lo + base + usize::from(i < extra);
+        if hi > lo {
+            ranges.push((lo, hi));
+        }
+        lo = hi;
+    }
+    ranges
+}
+
+/// Shards the (|V|, D) memory-matrix scan across `std::thread::scope`
+/// workers: each worker scores the whole query batch against one
+/// contiguous row range of the matrix through the inner backend, and the
+/// per-shard score blocks are merged back into the (B, |V|) output by
+/// column range. When `|V| % shards != 0` the first shards absorb the
+/// remainder row each, so every vertex is covered exactly once.
+///
+/// Per-candidate math is untouched — sharding only changes *which worker*
+/// walks a row — so scores (and therefore rankings) are byte-identical to
+/// running the inner backend unsharded for every in-tree inner backend
+/// (scalar, kernel, and quant, whose per-row scales make its math
+/// slice-local too); the parity tests pin that at shard counts that do
+/// and do not divide |V|.
+pub struct ShardedBackend {
+    shards: usize,
+    /// Auto-sized (`shards = 0` at construction): per call, the fan-out is
+    /// additionally capped by the kernel layer's work-size heuristic so a
+    /// single tiny query never pays one thread spawn per core. Explicit
+    /// shard counts are honoured exactly, like explicit kernel threads —
+    /// the parity tests rely on that.
+    auto: bool,
+    inner: Box<dyn ScoreBackend>,
+}
+
+impl ShardedBackend {
+    /// `shards = 0` auto-sizes to the machine (the `HDR_THREADS` override,
+    /// then `available_parallelism`), with a per-call work-size cap.
+    pub fn new(shards: usize, inner: Box<dyn ScoreBackend>) -> Self {
+        let auto = shards == 0;
+        let shards = if auto {
+            kernels::env_threads().unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+        } else {
+            shards
+        };
+        Self { shards: shards.max(1), auto, inner }
+    }
+
+    /// The shard count one call actually fans out to: auto mode never
+    /// spawns more workers than the job can keep busy.
+    fn plan_shards(&self, rows: usize, work_per_row: usize) -> usize {
+        if self.auto {
+            self.shards.min(kernels::workers_by_work(rows, work_per_row))
+        } else {
+            self.shards
+        }
+    }
+
+    /// The CLI form `sharded:N`: shard workers over a single-threaded
+    /// kernel backend, so the shard fan-out is the only parallelism and an
+    /// explicit `N` maps one-to-one onto worker threads.
+    pub fn with_shards(shards: usize) -> Self {
+        Self::new(shards, Box::new(KernelBackend::with_threads(1)))
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+}
+
+impl ScoreBackend for ShardedBackend {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn score_batch_into(&self, mv: &[f32], dim_hd: usize, q: &[f32], bias: f32, out: &mut [f32]) {
+        let d = dim_hd.max(1);
+        let v = mv.len() / d;
+        let b = q.len() / d;
+        assert_eq!(out.len(), v * b, "score_batch_into: out must be (B, |V|)");
+        let ranges = shard_ranges(v, self.plan_shards(v, b * d));
+        if ranges.len() <= 1 {
+            self.inner.score_batch_into(mv, dim_hd, q, bias, out);
+            return;
+        }
+        let inner = &self.inner;
+        // each worker scores its row slice into a private (B, shard) block;
+        // merging scatters those column blocks back into the (B, |V|) out
+        let parts: Vec<(usize, Vec<f32>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|&(lo, hi)| {
+                    s.spawn(move || {
+                        let mut part = vec![0f32; (hi - lo) * b];
+                        inner.score_batch_into(&mv[lo * d..hi * d], dim_hd, q, bias, &mut part);
+                        (lo, part)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+        });
+        for (lo, part) in parts {
+            let sv = part.len() / b.max(1);
+            for row in 0..b {
+                let dst = row * v + lo;
+                out[dst..dst + sv].copy_from_slice(&part[row * sv..(row + 1) * sv]);
+            }
+        }
+    }
+
+    fn dot_scores_into(&self, mat: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+        let d = dim.max(1);
+        let n = mat.len() / d;
+        assert_eq!(out.len(), n, "dot_scores_into: out must be (N,)");
+        let ranges = shard_ranges(n, self.plan_shards(n, d));
+        if ranges.len() <= 1 {
+            self.inner.dot_scores_into(mat, dim, q, out);
+            return;
+        }
+        let inner = &self.inner;
+        // same worker shape as the batch scorer; the (N,) merge is one
+        // contiguous copy per shard
+        let parts: Vec<(usize, Vec<f32>)> = std::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|&(lo, hi)| {
+                    s.spawn(move || {
+                        let mut part = vec![0f32; hi - lo];
+                        inner.dot_scores_into(&mat[lo * d..hi * d], dim, q, &mut part);
+                        (lo, part)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+        });
+        for (lo, part) in parts {
+            out[lo..lo + part.len()].copy_from_slice(&part);
+        }
+    }
+}
+
+/// Fix-N quantized scoring: routes the Eq. 10 sweep and the dot decoder
+/// through the fused quantize-and-score kernels, which snap both operands
+/// onto the [`FixedPoint`] grid inside the tiled pass — no quantized
+/// tensor copy, no per-query work. Scales are per-row (per-hypervector)
+/// powers of two, which keeps the quantized path composable: micro-batch
+/// composition cannot change a query's logits (`submit` == `rank`), and
+/// wrapping this backend in [`ShardedBackend`] stays byte-identical
+/// because each memory row's grid depends only on that row. This is the
+/// serving-path mirror of the paper's Fig. 9(b) fix-N experiment: HDC's
+/// holographic redundancy keeps rankings near-intact down to fix-4 while
+/// a GNN collapses, and the quantization-trend test pins that curve
+/// end-to-end through the engine.
+#[derive(Debug, Clone, Copy)]
+pub struct QuantBackend {
+    pub fp: FixedPoint,
+    cfg: KernelConfig,
+}
+
+impl QuantBackend {
+    /// `threads = 0` = auto, as for [`KernelBackend`].
+    pub fn new(bits: u32, threads: usize) -> Self {
+        Self { fp: FixedPoint::new(bits), cfg: KernelConfig::with_threads(threads) }
+    }
+}
+
+impl ScoreBackend for QuantBackend {
+    fn name(&self) -> &'static str {
+        "quant"
+    }
+
+    fn score_batch_into(&self, mv: &[f32], dim_hd: usize, q: &[f32], bias: f32, out: &mut [f32]) {
+        kernels::l1_scores_batch_quant_into(mv, dim_hd, q, bias, self.fp, out, &self.cfg);
+    }
+
+    fn dot_scores_into(&self, mat: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+        kernels::dot_scores_quant_into(mat, dim, q, self.fp, out, &self.cfg);
     }
 }
 
@@ -259,6 +483,103 @@ mod tests {
         assert!(BackendKind::parse("fpga").is_err());
         assert_eq!(BackendKind::Scalar.instantiate(0).name(), "scalar");
         assert_eq!(BackendKind::Kernel.instantiate(2).name(), "kernel");
+    }
+
+    #[test]
+    fn parameterized_kinds_parse_and_instantiate() {
+        assert_eq!(BackendKind::parse("sharded:4").unwrap(), BackendKind::Sharded(4));
+        assert_eq!(BackendKind::parse("Sharded:7").unwrap(), BackendKind::Sharded(7));
+        assert_eq!(BackendKind::parse("sharded").unwrap(), BackendKind::Sharded(0));
+        assert_eq!(BackendKind::parse("quant:8").unwrap(), BackendKind::Quant(8));
+        assert_eq!(BackendKind::parse("QUANT:16").unwrap(), BackendKind::Quant(16));
+        // bad parameters are CLI errors, not panics
+        assert!(BackendKind::parse("sharded:0").is_err());
+        assert!(BackendKind::parse("sharded:x").is_err());
+        assert!(BackendKind::parse("quant").is_err());
+        assert!(BackendKind::parse("quant:1").is_err());
+        assert!(BackendKind::parse("quant:17").is_err());
+        assert!(BackendKind::parse("scalar:2").is_err());
+        assert_eq!(BackendKind::Sharded(3).instantiate(0).name(), "sharded");
+        assert_eq!(BackendKind::Quant(8).instantiate(0).name(), "quant");
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly_with_remainders() {
+        for (n, shards) in [(10usize, 3usize), (256, 7), (5, 8), (1, 1), (12, 4)] {
+            let ranges = shard_ranges(n, shards);
+            assert!(ranges.len() <= shards, "n={n} shards={shards}");
+            let mut next = 0usize;
+            for &(lo, hi) in &ranges {
+                assert_eq!(lo, next, "contiguous: n={n} shards={shards}");
+                assert!(hi > lo, "non-empty: n={n} shards={shards}");
+                next = hi;
+            }
+            assert_eq!(next, n, "covers all rows: n={n} shards={shards}");
+            let sizes: Vec<usize> = ranges.iter().map(|&(lo, hi)| hi - lo).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "balanced: n={n} shards={shards} sizes {sizes:?}");
+        }
+        assert!(shard_ranges(0, 4).is_empty());
+    }
+
+    #[test]
+    fn sharded_scores_are_byte_identical_to_inner() {
+        let mut rng = Rng::seed_from_u64(12);
+        let (v, d, b) = (23, 13, 5); // |V| prime: never divisible by shards
+        let mv = randv(&mut rng, v * d);
+        let q = randv(&mut rng, b * d);
+        let want = KernelBackend::with_threads(1).score_batch(&mv, d, &q, 1.5);
+        for shards in [1usize, 2, 7, 23, 64] {
+            let sharded = ShardedBackend::with_shards(shards);
+            assert_eq!(sharded.shards(), shards.max(1));
+            let got = sharded.score_batch(&mv, d, &q, 1.5);
+            assert_eq!(want, got, "shards {shards}");
+        }
+        // dot path: disjoint out slices, same per-row math
+        let qd = randv(&mut rng, d);
+        let mut a = vec![0f32; v];
+        let mut bb = vec![0f32; v];
+        KernelBackend::with_threads(1).dot_scores_into(&mv, d, &qd, &mut a);
+        ShardedBackend::with_shards(7).dot_scores_into(&mv, d, &qd, &mut bb);
+        assert_eq!(a, bb);
+    }
+
+    #[test]
+    fn quant_backend_matches_quantize_then_kernel() {
+        let mut rng = Rng::seed_from_u64(13);
+        let (v, d, b) = (21, 13, 3);
+        let mv = randv(&mut rng, v * d);
+        let q = randv(&mut rng, b * d);
+        for bits in [2u32, 8, 16] {
+            let fp = crate::hdc::quant::FixedPoint::new(bits);
+            // reference: per-row quantized copies through the float kernel
+            let mut mvq = mv.clone();
+            let mut qq = q.clone();
+            for row in mvq.chunks_mut(d) {
+                fp.quantize_tensor(row);
+            }
+            for row in qq.chunks_mut(d) {
+                fp.quantize_tensor(row);
+            }
+            let want = KernelBackend::with_threads(1).score_batch(&mvq, d, &qq, 0.5);
+            let got = QuantBackend::new(bits, 2).score_batch(&mv, d, &q, 0.5);
+            assert_eq!(want, got, "fix-{bits}");
+        }
+    }
+
+    #[test]
+    fn sharded_over_quant_is_byte_identical() {
+        // per-row quant scales are slice-local, so the composition the
+        // ROADMAP points at must already hold exactly
+        let mut rng = Rng::seed_from_u64(14);
+        let (v, d, b) = (23, 13, 4);
+        let mv = randv(&mut rng, v * d);
+        let q = randv(&mut rng, b * d);
+        let want = QuantBackend::new(8, 1).score_batch(&mv, d, &q, 0.5);
+        for shards in [2usize, 7] {
+            let composed = ShardedBackend::new(shards, Box::new(QuantBackend::new(8, 1)));
+            assert_eq!(want, composed.score_batch(&mv, d, &q, 0.5), "shards {shards}");
+        }
     }
 
     #[test]

@@ -11,10 +11,14 @@
 //!   partial batches under light traffic).
 //!
 //! This type is pure policy — no threads, no scoring — so its invariants
-//! (FIFO order, size/deadline flush) are directly unit-testable. The
-//! blocking [`super::KgcEngine::submit`] path wraps it in a mutex +
-//! condvar: whichever waiting caller first observes a flush condition
-//! drains the batch, scores it, and publishes results by sequence number.
+//! (FIFO order, size/deadline flush, cancellation) are directly
+//! unit-testable. The serving paths — blocking
+//! [`super::KgcEngine::submit`] and the non-blocking
+//! [`super::KgcEngine::submit_async`] handles — wrap it in a mutex +
+//! condvar: whichever waiting (or polling) caller first observes a flush
+//! condition drains the batch, scores it, and publishes results by
+//! sequence number; a [`super::QueryHandle`] dropped unresolved cancels
+//! its still-queued request via [`MicroBatcher::remove`].
 
 use crate::kg::Direction;
 use std::collections::VecDeque;
@@ -126,6 +130,17 @@ impl MicroBatcher {
         let n = self.pending.len().min(self.capacity);
         self.pending.drain(..n).map(|(seq, req, _)| (seq, req)).collect()
     }
+
+    /// Remove a still-queued request by sequence number — an async
+    /// [`super::QueryHandle`] dropped before its batch was drained cancels
+    /// its work here instead of being scored for nobody. Returns whether
+    /// the request was still pending (false once a leader has taken it).
+    pub fn remove(&mut self, seq: u64) -> bool {
+        match self.pending.iter().position(|&(s, _, _)| s == seq) {
+            Some(i) => self.pending.remove(i).is_some(),
+            None => false,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -186,6 +201,28 @@ mod tests {
         assert_eq!(last.len(), 1);
         assert_eq!(last[0].0, 4); // sequence numbers survive partial drains
         assert!(b.take_batch().is_empty());
+    }
+
+    #[test]
+    fn remove_cancels_only_pending_requests() {
+        let mut b = MicroBatcher::new(2, Duration::from_millis(1));
+        let s0 = b.push(req(0));
+        let s1 = b.push(req(1));
+        let s2 = b.push(req(2));
+        assert!(b.remove(s1), "queued request cancels");
+        assert!(!b.remove(s1), "second cancel is a no-op");
+        // the survivors drain in order, skipping the cancelled seq
+        let batch = b.take_batch();
+        assert_eq!(batch.iter().map(|&(s, _)| s).collect::<Vec<_>>(), vec![s0, s2]);
+        assert!(!b.remove(s0), "drained requests are no longer cancellable");
+        // deadline bookkeeping survives removal of the oldest entry
+        let mut b = MicroBatcher::new(8, Duration::from_millis(5));
+        let t0 = Instant::now();
+        let s0 = b.push_at(req(0), t0);
+        b.push_at(req(1), t0 + Duration::from_millis(3));
+        b.remove(s0);
+        let rem = b.time_to_deadline(t0 + Duration::from_millis(3));
+        assert_eq!(rem, Some(Duration::from_millis(5)));
     }
 
     #[test]

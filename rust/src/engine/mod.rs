@@ -16,11 +16,19 @@
 //!   [`Ranking`] is ready, while a [`MicroBatcher`] coalesces concurrent
 //!   submissions into full `(B, D)` batches (flush on size or deadline)
 //!   so the kernel layer amortizes every memory-matrix pass;
+//! * [`KgcEngine::submit_async`] — the non-blocking form: returns a
+//!   [`QueryHandle`] immediately, so one client can keep thousands of
+//!   queries in flight and poll ([`QueryHandle::poll`]) or block
+//!   ([`QueryHandle::wait`]) per handle; results are identical to
+//!   [`KgcEngine::submit`], and a handle dropped unresolved cancels its
+//!   work instead of leaking it;
 //! * [`KgcEngine::evaluate`] / [`KgcEngine::evaluate_both`] — the §5.2
 //!   filtered ranking protocol via the generic [`KgcModel`] code path.
 //!
 //! Execution strategy is pluggable through [`ScoreBackend`]
-//! (`--backend scalar|kernel` on the CLI, [`PjrtBackend`] from a loaded
+//! (`--backend scalar|kernel|sharded:N|quant:N` on the CLI — the sharded
+//! form fans the (|V|, D) memory-matrix scan across N workers, the quant
+//! form scores on the fix-N grid; [`PjrtBackend`] comes from a loaded
 //! runtime), and every other scorer in the crate — the PJRT trainer view,
 //! the TransE/DistMult/R-GCN baselines — speaks the same [`KgcModel`]
 //! trait, so cross-model tables and the CLI run one generic path.
@@ -44,7 +52,10 @@ mod backend;
 mod batcher;
 mod model;
 
-pub use backend::{BackendKind, KernelBackend, PjrtBackend, ScalarBackend, ScoreBackend};
+pub use backend::{
+    BackendKind, KernelBackend, PjrtBackend, QuantBackend, ScalarBackend, ScoreBackend,
+    ShardedBackend,
+};
 pub use batcher::{MicroBatcher, QueryRequest, Ranking};
 pub use model::{evaluate_double, evaluate_forward, KgcModel};
 
@@ -52,14 +63,20 @@ use crate::config::{model_preset, ModelConfig};
 use crate::hdc::{self, GraphMemory};
 use crate::kg::{generator, Direction, KnowledgeGraph, LabelBatch, SubjectIndex, Triple};
 use crate::model::{ModelState, RankMetrics};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// Shared serving queue behind [`KgcEngine::submit`].
+/// Shared serving queue behind [`KgcEngine::submit`] /
+/// [`KgcEngine::submit_async`].
 struct ServeState {
     batcher: MicroBatcher,
     results: HashMap<u64, Ranking>,
+    /// Sequence numbers whose [`QueryHandle`] was dropped unresolved while
+    /// a leader was already scoring them (too late for
+    /// [`MicroBatcher::remove`]): publication discards these instead of
+    /// leaking an unclaimable ranking in `results`.
+    abandoned: HashSet<u64>,
 }
 
 /// The unified reasoning engine (see module docs). Cheap to share across
@@ -174,15 +191,40 @@ impl KgcEngine {
     ///
     /// A lone submitter therefore waits at most ~`deadline` before its
     /// partial batch of one is flushed; under load, batches fill and flush
-    /// immediately.
+    /// immediately. Equivalent to `submit_async(req).wait()`.
     ///
     /// # Panics
     /// If the request's node or relation is out of range for the served
     /// graph — raised in the calling thread before the request is
     /// enqueued, so a bad request can never take down a batch leader.
     pub fn submit(&self, req: QueryRequest) -> Ranking {
+        self.submit_async(req).wait()
+    }
+
+    /// Non-blocking submit: enqueue the query and return a [`QueryHandle`]
+    /// immediately, so one client can pipeline thousands of in-flight
+    /// queries and collect rankings via [`QueryHandle::poll`] /
+    /// [`QueryHandle::wait`]. The handle resolves to exactly what
+    /// [`Self::submit`] would have returned for the same request —
+    /// batching composition never changes a query's logits.
+    ///
+    /// Dropping a handle unresolved is safe and non-leaking: a request
+    /// still queued is cancelled before it is ever scored, and one already
+    /// in flight has its result discarded at publication.
+    ///
+    /// # Panics
+    /// If the request's node or relation is out of range for the served
+    /// graph — raised here, in the submitting thread, before the request
+    /// can join a batch.
+    pub fn submit_async(&self, req: QueryRequest) -> QueryHandle<'_> {
         self.validate_request(req);
         let seq = self.serve.lock().unwrap().batcher.push(req);
+        QueryHandle { engine: self, seq, request: req, resolved: false }
+    }
+
+    /// Block until `seq`'s ranking is published, leading flushes whenever
+    /// this thread is the first to observe a flush condition.
+    fn await_result(&self, seq: u64) -> Ranking {
         loop {
             let mut st = self.serve.lock().unwrap();
             if let Some(r) = st.results.remove(&seq) {
@@ -193,13 +235,7 @@ impl KgcEngine {
                 // lock released so other submitters keep queueing
                 let batch = st.batcher.take_batch();
                 drop(st);
-                let ranked = self.rank_requests(&batch);
-                let mut st = self.serve.lock().unwrap();
-                for (s, r) in ranked {
-                    st.results.insert(s, r);
-                }
-                drop(st);
-                self.serve_cv.notify_all();
+                self.lead(batch);
                 continue;
             }
             // Wait for a leader to deliver our result or for the oldest
@@ -211,6 +247,34 @@ impl KgcEngine {
                 .max(Duration::from_micros(50));
             let (_guard, _timeout) = self.serve_cv.wait_timeout(st, wait).unwrap();
         }
+    }
+
+    /// Score one drained batch and publish its rankings (discarding any
+    /// whose handle was abandoned mid-flight), then wake every waiter.
+    fn lead(&self, batch: Vec<(u64, QueryRequest)>) {
+        if batch.is_empty() {
+            return;
+        }
+        let ranked = self.rank_requests(&batch);
+        let mut st = self.serve.lock().unwrap();
+        for (s, r) in ranked {
+            if !st.abandoned.remove(&s) {
+                st.results.insert(s, r);
+            }
+        }
+        drop(st);
+        self.serve_cv.notify_all();
+    }
+
+    /// Queued-but-unscored serving requests (diagnostics).
+    pub fn pending_queries(&self) -> usize {
+        self.serve.lock().unwrap().batcher.len()
+    }
+
+    /// Published rankings no handle has claimed yet (diagnostics; the
+    /// abandoned-handle tests pin that this drains back to zero).
+    pub fn unclaimed_results(&self) -> usize {
+        self.serve.lock().unwrap().results.len()
     }
 
     /// Drive a whole request stream through [`Self::submit`] from
@@ -345,6 +409,87 @@ impl KgcEngine {
                 (seq, Ranking { request: req, top })
             })
             .collect()
+    }
+}
+
+/// An in-flight query on the [`KgcEngine::submit_async`] serving path.
+///
+/// The handle is the claim ticket for one ranking: exactly one of
+/// [`Self::poll`] / [`Self::wait`] resolves it. Holding many handles keeps
+/// many queries in flight through the same micro-batcher that the blocking
+/// path uses, so a single client saturates full `(B, D)` batches without
+/// spawning a thread per query.
+///
+/// Dropping an unresolved handle cancels the query: still-queued requests
+/// are removed before ever being scored, and requests a leader already
+/// took are discarded at publication, so abandoned work cannot leak into
+/// the results table or deadlock waiters behind it.
+#[must_use = "a QueryHandle is the only claim on its ranking; poll() or wait() it"]
+pub struct QueryHandle<'e> {
+    engine: &'e KgcEngine,
+    seq: u64,
+    request: QueryRequest,
+    resolved: bool,
+}
+
+impl QueryHandle<'_> {
+    /// The request this handle tracks.
+    pub fn request(&self) -> QueryRequest {
+        self.request
+    }
+
+    /// Non-blocking check: `Some(ranking)` once the result is published,
+    /// `None` otherwise. Never sleeps, but a poll that observes a due
+    /// flush (full batch, or deadline expired) leads that flush itself —
+    /// doing the scoring work inline — so a poll-only client still makes
+    /// progress without any serving thread.
+    ///
+    /// A `Some` return resolves the handle: the ranking has been handed
+    /// over, and a subsequent [`Self::wait`] panics rather than waiting
+    /// for a result that can never be republished.
+    pub fn poll(&mut self) -> Option<Ranking> {
+        let mut st = self.engine.serve.lock().unwrap();
+        if let Some(r) = st.results.remove(&self.seq) {
+            self.resolved = true;
+            return Some(r);
+        }
+        if st.batcher.should_flush(Instant::now()) {
+            let batch = st.batcher.take_batch();
+            drop(st);
+            self.engine.lead(batch);
+            let mut st = self.engine.serve.lock().unwrap();
+            if let Some(r) = st.results.remove(&self.seq) {
+                self.resolved = true;
+                return Some(r);
+            }
+        }
+        None
+    }
+
+    /// Block until the ranking is ready (leading flushes as needed — the
+    /// same loop the blocking [`KgcEngine::submit`] runs).
+    ///
+    /// # Panics
+    /// If a previous [`Self::poll`] already resolved this handle — the
+    /// ranking was handed over then, so waiting would hang forever.
+    pub fn wait(mut self) -> Ranking {
+        assert!(!self.resolved, "QueryHandle::wait after poll() already resolved this handle");
+        self.resolved = true;
+        self.engine.await_result(self.seq)
+    }
+}
+
+impl Drop for QueryHandle<'_> {
+    fn drop(&mut self) {
+        if self.resolved {
+            return;
+        }
+        let mut st = self.engine.serve.lock().unwrap();
+        if st.batcher.remove(self.seq) || st.results.remove(&self.seq).is_some() {
+            return; // cancelled before scoring, or claimed-and-discarded
+        }
+        // a leader is scoring it right now: discard at publication
+        st.abandoned.insert(self.seq);
     }
 }
 
@@ -541,6 +686,7 @@ impl EngineBuilder {
             serve: Mutex::new(ServeState {
                 batcher: MicroBatcher::new(batch_capacity, self.deadline),
                 results: HashMap::new(),
+                abandoned: HashSet::new(),
             }),
             serve_cv: Condvar::new(),
             cfg,
@@ -630,6 +776,59 @@ mod tests {
             let req = QueryRequest::forward(i % e.num_candidates(), i % e.kg().num_relations);
             assert_eq!(e.submit(req), e.rank(req), "request {i}");
         }
+    }
+
+    #[test]
+    fn submit_async_wait_matches_rank() {
+        let e = tiny_engine(BackendKind::Kernel);
+        let reqs: Vec<QueryRequest> =
+            (0..6).map(|i| QueryRequest::forward(i * 3 % e.num_candidates(), i % 2)).collect();
+        // pipeline all handles before collecting any result
+        let handles: Vec<QueryHandle> = reqs.iter().map(|&r| e.submit_async(r)).collect();
+        for (h, &r) in handles.into_iter().zip(&reqs) {
+            assert_eq!(h.request(), r);
+            assert_eq!(h.wait(), e.rank(r));
+        }
+        assert_eq!(e.pending_queries(), 0);
+        assert_eq!(e.unclaimed_results(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "already resolved")]
+    fn wait_after_successful_poll_panics_instead_of_hanging() {
+        let e = tiny_engine(BackendKind::Kernel);
+        let mut h = e.submit_async(QueryRequest::forward(1, 1));
+        // poll until the deadline flush publishes the ranking
+        while h.poll().is_none() {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let _ = h.wait(); // the ranking was already handed over: must panic
+    }
+
+    #[test]
+    fn dropped_handle_cancels_queued_request() {
+        let e = tiny_engine(BackendKind::Kernel);
+        {
+            let _h = e.submit_async(QueryRequest::forward(1, 1));
+        } // dropped unresolved while still queued
+        assert_eq!(e.pending_queries(), 0, "cancelled before scoring");
+        let req = QueryRequest::forward(2, 0);
+        assert_eq!(e.submit(req), e.rank(req), "serving continues normally");
+        assert_eq!(e.unclaimed_results(), 0);
+    }
+
+    #[test]
+    fn abandoned_mid_flight_results_are_discarded() {
+        let e = tiny_engine(BackendKind::Kernel);
+        let h = e.submit_async(QueryRequest::forward(1, 1));
+        // steal the batch exactly as a leader would, so the request is in
+        // flight: neither queued nor published when the handle drops
+        let batch = e.serve.lock().unwrap().batcher.take_batch();
+        assert_eq!(batch.len(), 1);
+        drop(h);
+        e.lead(batch);
+        assert_eq!(e.unclaimed_results(), 0, "abandoned ranking must not leak");
+        assert!(e.serve.lock().unwrap().abandoned.is_empty(), "marker consumed");
     }
 
     #[test]

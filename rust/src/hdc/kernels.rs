@@ -24,6 +24,7 @@
 //! dimensions.
 
 use super::memory::GraphMemory;
+use super::quant::FixedPoint;
 use crate::kg::Csr;
 
 /// Width of the blocked inner loops (f32 lanes of one AVX2 register). Inner
@@ -37,6 +38,29 @@ pub const QUERY_BLOCK: usize = 4;
 /// Minimum element-ops per worker before auto-threading adds another; below
 /// this, thread spawn overhead beats the parallel win on small presets.
 const WORK_PER_THREAD: usize = 1 << 18;
+
+/// `HDR_THREADS` environment override for auto-threading (`threads = 0`
+/// configs only — an explicit [`KernelConfig::with_threads`] count still
+/// wins). CI runs the test suite under `HDR_THREADS=1` and `HDR_THREADS=2`
+/// so shard/batcher races cannot hide behind whatever core count the
+/// runner happens to have; the override is honoured exactly, bypassing the
+/// work-size heuristic, for the same reason explicit counts are. Read once
+/// per process (the CI matrix sets it at spawn), so the serving hot path
+/// never touches the environment lock.
+pub fn env_threads() -> Option<usize> {
+    static ENV_THREADS: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    *ENV_THREADS.get_or_init(|| {
+        std::env::var("HDR_THREADS").ok().and_then(|s| s.trim().parse().ok()).filter(|&n| n > 0)
+    })
+}
+
+/// Work-size cap used by auto mode: how many workers a job of `rows` ×
+/// `work_per_row` element-ops can keep usefully busy (at least 1). Shared
+/// by [`KernelConfig::plan_threads`] and the sharded backend's auto
+/// fan-out, so "auto" means the same thing at both layers.
+pub fn workers_by_work(rows: usize, work_per_row: usize) -> usize {
+    (rows.saturating_mul(work_per_row) / WORK_PER_THREAD).max(1)
+}
 
 /// Execution policy for the kernel layer.
 #[derive(Debug, Clone, Copy)]
@@ -60,12 +84,18 @@ impl KernelConfig {
     }
 
     /// Resolve the worker count for a job of `rows` rows × `work_per_row`
-    /// element-ops.
+    /// element-ops. Auto mode (`threads = 0`) honours the [`env_threads`]
+    /// `HDR_THREADS` override exactly when set; otherwise it takes
+    /// `available_parallelism`, scaled down by the work heuristic.
     pub fn plan_threads(&self, rows: usize, work_per_row: usize) -> usize {
         let requested = if self.threads == 0 {
-            let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-            let by_work = (rows.saturating_mul(work_per_row) / WORK_PER_THREAD).max(1);
-            auto.min(by_work)
+            match env_threads() {
+                Some(n) => n,
+                None => {
+                    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+                    auto.min(workers_by_work(rows, work_per_row))
+                }
+            }
         } else {
             self.threads
         };
@@ -352,6 +382,128 @@ pub fn l1_scores_batch_into(
     }
 }
 
+// ------------------------------------------------------ quantized scoring
+
+/// Max |x| over a slice, blocked like the other reductions (max is
+/// associative, so lane order does not matter — this is exact).
+pub fn max_abs_blocked(a: &[f32]) -> f32 {
+    let main = a.len() - a.len() % LANES;
+    let mut acc = [0f32; LANES];
+    for c in a[..main].chunks_exact(LANES) {
+        for k in 0..LANES {
+            acc[k] = acc[k].max(c[k].abs());
+        }
+    }
+    let mut m = 0f32;
+    for &p in &acc {
+        m = m.max(p);
+    }
+    for &x in &a[main..] {
+        m = m.max(x.abs());
+    }
+    m
+}
+
+/// Quantize one row in place with its own max-abs-derived scale; returns
+/// nothing — the scale is recomputed wherever the row is revisited, which
+/// is exactly what makes per-row quantization slice-local.
+#[inline]
+fn quantize_row_into(out: &mut [f32], row: &[f32], fp: FixedPoint) {
+    let scale = fp.scale_for(max_abs_blocked(row));
+    for (o, &x) in out.iter_mut().zip(row) {
+        *o = fp.quantize_with_scale(x, scale);
+    }
+}
+
+/// Fused fix-N quantize-and-score — Fig. 9(b)'s experiment at kernel speed.
+/// Same contract as [`l1_scores_batch_into`], but both operands pass
+/// through [`FixedPoint`] quantization before the distance, with a
+/// **per-row** (per-hypervector) power-of-two scale from each row's
+/// max-abs. Per-row scaling is what makes the quantized path composable:
+/// a query's grid never depends on which other queries share its batch
+/// (micro-batch composition cannot change logits), and a memory row's
+/// grid never depends on the rest of the matrix (a sharded scan over row
+/// slices is byte-identical to the unsharded one).
+///
+/// The (B, D) query block is quantized once into a batch-local scratch;
+/// each memory row is quantized into a worker-local D-float buffer as the
+/// tile streams through. No quantized copy of `mv` is ever materialized,
+/// so the quantization cost is one grid-snap per element per call — not
+/// per query.
+///
+/// Scores are bit-identical to quantizing each row of copies of `mv`/`q`
+/// with [`FixedPoint::quantize_tensor`] and running
+/// [`l1_scores_batch_into`] (the per-pair distance uses the same
+/// lane-wise association); the backend-parity tests pin that.
+pub fn l1_scores_batch_quant_into(
+    mv: &[f32],
+    dim_hd: usize,
+    q: &[f32],
+    bias: f32,
+    fp: FixedPoint,
+    out: &mut [f32],
+    cfg: &KernelConfig,
+) {
+    let v = mv.len() / dim_hd.max(1);
+    let b = q.len() / dim_hd.max(1);
+    assert_eq!(out.len(), v * b, "l1_scores_batch_quant_into: out must be (B, |V|)");
+    if v == 0 || b == 0 {
+        return;
+    }
+    let mut qq = vec![0f32; q.len()];
+    for (qrow, row) in qq.chunks_mut(dim_hd).zip(q.chunks(dim_hd)) {
+        quantize_row_into(qrow, row, fp);
+    }
+    let threads = cfg.plan_threads(v, b * dim_hd);
+    let mut scratch = vec![0f32; v * b];
+    par_rows(&mut scratch, b, threads, |first, chunk| {
+        let mut rowq = vec![0f32; dim_hd];
+        for (lj, srow) in chunk.chunks_mut(b).enumerate() {
+            let j = first + lj;
+            quantize_row_into(&mut rowq, &mv[j * dim_hd..(j + 1) * dim_hd], fp);
+            for (qi, o) in srow.iter_mut().enumerate() {
+                *o = bias - l1_distance_blocked(&qq[qi * dim_hd..(qi + 1) * dim_hd], &rowq);
+            }
+        }
+    });
+    for j in 0..v {
+        for bq in 0..b {
+            out[bq * v + j] = scratch[j * b + bq];
+        }
+    }
+}
+
+/// Quantized dot-product decoder: the DistMult-family mirror of
+/// [`l1_scores_batch_quant_into`] — both operands snap to the fix-N grid
+/// (per-row scales, same slice-locality argument) before the multiply,
+/// memory rows quantizing in a worker-local buffer on the fly.
+pub fn dot_scores_quant_into(
+    mat: &[f32],
+    dim: usize,
+    q: &[f32],
+    fp: FixedPoint,
+    out: &mut [f32],
+    cfg: &KernelConfig,
+) {
+    debug_assert_eq!(q.len(), dim);
+    let n = mat.len() / dim.max(1);
+    assert_eq!(out.len(), n, "dot_scores_quant_into: out must be (N,)");
+    if n == 0 {
+        return;
+    }
+    let mut qq = vec![0f32; dim];
+    quantize_row_into(&mut qq, q, fp);
+    let threads = cfg.plan_threads(n, dim);
+    par_rows(out, 1, threads, |first, chunk| {
+        let mut rowq = vec![0f32; dim];
+        for (lj, o) in chunk.iter_mut().enumerate() {
+            let j = first + lj;
+            quantize_row_into(&mut rowq, &mat[j * dim..(j + 1) * dim], fp);
+            *o = dot_blocked(&qq, &rowq);
+        }
+    });
+}
+
 /// Eq. 2 reconstruction scores without materializing any bound vector:
 /// `out[j] = cosine(m, H_j ∘ r)`, with `dot(m, H_j ∘ r)` and `‖H_j ∘ r‖²`
 /// fused into one pass and `‖m‖²` hoisted out of the vertex loop.
@@ -457,13 +609,96 @@ mod tests {
     }
 
     #[test]
+    fn max_abs_blocked_matches_fold_on_awkward_lengths() {
+        let mut rng = Rng::seed_from_u64(3);
+        for n in [0usize, 1, 7, 8, 9, 100] {
+            let a = randv(&mut rng, n);
+            let want = a.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            assert_eq!(max_abs_blocked(&a), want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn fused_quant_scorer_matches_quantize_then_score() {
+        let mut rng = Rng::seed_from_u64(4);
+        let (v, d, b) = (21, 13, 5); // D not a lane multiple, odd batch
+        let mv = randv(&mut rng, v * d);
+        let q = randv(&mut rng, b * d);
+        for bits in [2u32, 4, 8, 16] {
+            let fp = FixedPoint::new(bits);
+            // reference: quantize each row of the copies independently
+            // (per-row scales), then the float batch scorer
+            let mut mvq = mv.clone();
+            let mut qq = q.clone();
+            for row in mvq.chunks_mut(d) {
+                fp.quantize_tensor(row);
+            }
+            for row in qq.chunks_mut(d) {
+                fp.quantize_tensor(row);
+            }
+            let mut want = vec![0f32; v * b];
+            l1_scores_batch_into(&mvq, d, &qq, 1.5, &mut want, &KernelConfig::default());
+            for threads in [1usize, 2, 8] {
+                let mut got = vec![0f32; v * b];
+                let cfg = KernelConfig::with_threads(threads);
+                l1_scores_batch_quant_into(&mv, d, &q, 1.5, fp, &mut got, &cfg);
+                assert_eq!(want, got, "fix-{bits} threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_quant_scorer_is_batch_composition_independent() {
+        // per-row query scales: a query's quantized logits must not depend
+        // on which other queries share its batch (the serving-path
+        // submit == rank invariant for the quant backend)
+        let mut rng = Rng::seed_from_u64(6);
+        let (v, d) = (9, 13);
+        let mv = randv(&mut rng, v * d);
+        let small = randv(&mut rng, d); // |x| < 1
+        let huge: Vec<f32> = randv(&mut rng, d).iter().map(|x| x * 100.0).collect();
+        let fp = FixedPoint::new(8);
+        let cfg = KernelConfig::with_threads(1);
+        let mut alone = vec![0f32; v];
+        l1_scores_batch_quant_into(&mv, d, &small, 0.0, fp, &mut alone, &cfg);
+        let batched: Vec<f32> = [small.clone(), huge].concat();
+        let mut together = vec![0f32; 2 * v];
+        l1_scores_batch_quant_into(&mv, d, &batched, 0.0, fp, &mut together, &cfg);
+        assert_eq!(alone, together[..v], "batch-mate with a huge row changed the grid");
+    }
+
+    #[test]
+    fn fused_quant_dot_matches_quantize_then_dot() {
+        let mut rng = Rng::seed_from_u64(5);
+        let (n, d) = (17, 13);
+        let mat = randv(&mut rng, n * d);
+        let q = randv(&mut rng, d);
+        let fp = FixedPoint::new(8);
+        let mut matq = mat.clone();
+        let mut qq = q.clone();
+        for row in matq.chunks_mut(d) {
+            fp.quantize_tensor(row);
+        }
+        fp.quantize_tensor(&mut qq);
+        let mut want = vec![0f32; n];
+        dot_scores_into(&matq, d, &qq, &mut want, &KernelConfig::default());
+        let mut got = vec![0f32; n];
+        dot_scores_quant_into(&mat, d, &q, fp, &mut got, &KernelConfig::with_threads(2));
+        assert_eq!(want, got);
+    }
+
+    #[test]
     fn explicit_thread_counts_are_honoured_and_clamped() {
         let cfg = KernelConfig::with_threads(16);
         assert_eq!(cfg.plan_threads(4, 1000), 4); // clamped to rows
         assert_eq!(cfg.plan_threads(100, 1000), 16);
         assert_eq!(KernelConfig::with_threads(1).plan_threads(100, 1000), 1);
-        // auto mode never exceeds the work heuristic
+        // auto mode: HDR_THREADS (the CI matrix) is honoured exactly
+        // (clamped to rows); otherwise the work heuristic caps tiny jobs
         let auto = KernelConfig::default().plan_threads(2, 4);
-        assert_eq!(auto, 1);
+        match env_threads() {
+            Some(n) => assert_eq!(auto, n.clamp(1, 2)),
+            None => assert_eq!(auto, 1),
+        }
     }
 }

@@ -18,21 +18,33 @@ impl FixedPoint {
         Self { bits }
     }
 
-    /// Quantize one value given a pre-computed power-of-two scale.
+    /// Largest positive grid step: `2^(bits-1) - 1` (the negative side
+    /// reaches one further, to `-2^(bits-1)`, like two's complement).
+    #[inline]
+    pub fn qmax(&self) -> f32 {
+        ((1i64 << (self.bits - 1)) - 1) as f32
+    }
+
+    /// Quantize one value given a pre-computed power-of-two scale:
+    /// round-to-nearest onto the grid, saturating at the format limits.
+    /// Idempotent for any scale — grid points round back to themselves —
+    /// which is what lets the fused quantize-and-score kernels re-enter
+    /// already-quantized tensors safely (pinned by proptest).
     #[inline]
     pub fn quantize_with_scale(&self, x: f32, scale: f32) -> f32 {
-        let qmax = (1i64 << (self.bits - 1)) - 1;
-        let q = (x / scale).round().clamp(-(qmax as f32) - 1.0, qmax as f32);
+        let qmax = self.qmax();
+        let q = (x / scale).round().clamp(-qmax - 1.0, qmax);
         q * scale
     }
 
-    /// Power-of-two scale covering `max_abs`.
+    /// Power-of-two scale covering `max_abs`: `scale * qmax >= max_abs`, so
+    /// no in-range value ever hits the saturation clamp (pinned by
+    /// proptest).
     pub fn scale_for(&self, max_abs: f32) -> f32 {
         if max_abs == 0.0 {
             return 1.0;
         }
-        let qmax = ((1i64 << (self.bits - 1)) - 1) as f32;
-        let raw = max_abs / qmax;
+        let raw = max_abs / self.qmax();
         // round the scale up to a power of two (hardware-friendly shifts)
         (2.0f32).powi(raw.log2().ceil() as i32)
     }

@@ -10,12 +10,17 @@
 //! protocol's filter sets, and serves scoring ([`engine::KgcEngine::score_batch`]),
 //! single-query ranking ([`engine::KgcEngine::rank`]), micro-batched query
 //! serving ([`engine::KgcEngine::submit`] — concurrent submissions coalesce
-//! into full `(B, D)` batches, flushed on size or deadline), and filtered
+//! into full `(B, D)` batches, flushed on size or deadline —, its
+//! non-blocking twin [`engine::KgcEngine::submit_async`] for pipelining
+//! thousands of in-flight queries from one client), and filtered
 //! evaluation. Two traits make the stack pluggable:
 //!
 //! * [`engine::ScoreBackend`] — the execution strategy for the Eq. 10
 //!   score sweep: strict scalar reference, blocked multi-threaded host
-//!   kernels, or the PJRT score artifact (`--features pjrt`);
+//!   kernels, a sharded memory-matrix scan across scoped workers
+//!   (`sharded:N`), fix-N quantized scoring on the fused grid kernels
+//!   (`quant:N`, Fig. 9(b) at speed), or the PJRT score artifact
+//!   (`--features pjrt`);
 //! * [`engine::KgcModel`] — the model interface shared by the HDReason
 //!   engine, the PJRT-trained `coordinator` view, and the
 //!   TransE/DistMult/R-GCN baselines, so every cross-model table and eval

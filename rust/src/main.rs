@@ -98,11 +98,13 @@ COMMANDS:
              [--lr <preset>] [--dataset learnable] [--seed 42]
              End-to-end training via PJRT artifacts (`make artifacts` first)
   query      [--model tiny] [--dataset learnable] [--scale 1.0]
-             [--backend kernel|scalar] [--threads 0] [--queries 256]
-             [--batch <preset|B>] [--deadline-us 500] [--clients <batch>]
-             [--seed 42]
+             [--backend kernel|scalar|sharded:N|quant:N] [--threads 0]
+             [--queries 256] [--batch <preset|B>] [--deadline-us 500]
+             [--clients <batch>] [--seed 42]
              Rank a query stream through the KgcEngine micro-batched
-             serving path; prints throughput and filtered accuracy
+             serving path; prints throughput and filtered accuracy.
+             sharded:N fans the memory-matrix scan over N workers
+             (sharded = auto); quant:N scores on the fix-N grid
   simulate   [--dataset FB15K-237] [--accel u50] [--scale 1.0]
              FPGA cycle simulation of one training batch
   figures    --id <table3|table4|table5|table6|fig8a|fig8b|fig8c|fig8d|

@@ -96,6 +96,40 @@ pub fn rank_of(scores: &[f32], gold: usize, filter_out: &[u32]) -> usize {
     better + equal / 2 + 1
 }
 
+/// Per-shard partial of a rank merge: counts of scores in one contiguous
+/// shard of the score vector that are strictly better than / exactly equal
+/// to the gold score. The gold's own entry lands in the `equal` count of
+/// whichever shard holds it; [`merged_rank`] discounts it once. This is
+/// the reduction a sharded memory-matrix scan ships instead of raw score
+/// slices when only the rank is needed — and the invariant
+/// `merged_rank(shards) == rank_of(full)` for *arbitrary* shard boundaries
+/// is pinned by proptest.
+pub fn rank_counts(scores: &[f32], gold_score: f32) -> (usize, usize) {
+    let mut better = 0usize;
+    let mut equal = 0usize;
+    for &s in scores {
+        if s > gold_score {
+            better += 1;
+        } else if s == gold_score {
+            equal += 1;
+        }
+    }
+    (better, equal)
+}
+
+/// Merge per-shard [`rank_counts`] partials into the unfiltered average
+/// rank (ties take the mean of best/worst, exactly like [`rank_of`] with
+/// an empty filter). The `equal` total includes the gold itself once,
+/// contributed by its home shard.
+pub fn merged_rank(parts: impl IntoIterator<Item = (usize, usize)>) -> usize {
+    let (mut better, mut equal) = (0usize, 0usize);
+    for (b, e) in parts {
+        better += b;
+        equal += e;
+    }
+    better + equal.saturating_sub(1) / 2 + 1
+}
+
 /// Batched filtered-ranking evaluation — the kernel-layer protocol. Queries
 /// are scored `chunk` at a time: `score_chunk_fn(qs)` receives up to
 /// `chunk` (s, r, o) triples and returns their row-major
@@ -185,6 +219,21 @@ mod tests {
         let scores = vec![0.5, 0.5, 0.5];
         // gold 1: 0 better, 2 equal → 1 + 2/2 = 2
         assert_eq!(rank_of(&scores, 1, &[]), 2);
+    }
+
+    #[test]
+    fn shard_merge_reproduces_rank_with_ties() {
+        let scores = vec![0.9, 0.5, 0.7, 0.5, 0.1, 0.5];
+        for gold in 0..scores.len() {
+            let want = rank_of(&scores, gold, &[]);
+            // shard at fixed cut points 2 and 4
+            let parts =
+                [&scores[..2], &scores[2..4], &scores[4..]].map(|s| rank_counts(s, scores[gold]));
+            assert_eq!(merged_rank(parts), want, "gold {gold}");
+            // one shard per element is the finest legal split
+            let fine = scores.iter().map(|&s| rank_counts(&[s], scores[gold]));
+            assert_eq!(merged_rank(fine), want, "gold {gold} (singleton shards)");
+        }
     }
 
     #[test]

@@ -1,22 +1,32 @@
 //! Integration tests for the `engine` facade: backend parity through the
-//! public `KgcEngine` API (scalar vs kernel at thread counts 1/2/max), and
-//! the micro-batched serving path (identical to the unbatched path,
-//! partial-batch deadline flush, FIFO order).
+//! public `KgcEngine` API (scalar vs kernel vs sharded vs quant, at thread
+//! counts 1/2/max and shard counts that do and do not divide |V|), the
+//! micro-batched serving path (identical to the unbatched path,
+//! partial-batch deadline flush, FIFO order), the non-blocking
+//! `submit_async` handles, and the Fig. 9(b) quantization trend.
 
 use hdreason::baselines::{DistMult, MarginModel, TransE};
 use hdreason::engine::{
-    BackendKind, EngineBuilder, KgcEngine, MicroBatcher, QueryRequest, ScalarBackend,
+    BackendKind, EngineBuilder, KernelBackend, KgcEngine, MicroBatcher, QuantBackend,
+    QueryHandle, QueryRequest, ScalarBackend, ScoreBackend, ShardedBackend,
 };
 use hdreason::model::{evaluate_ranking_batched, RankMetrics};
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 fn close(a: f32, b: f32) -> bool {
     (a - b).abs() <= 1e-5 * a.abs().max(b.abs()).max(1.0)
 }
 
+/// 1 / 2 / max, plus the CI matrix's `HDR_THREADS` pin when set — so a
+/// single-core runner under `HDR_THREADS=2` still exercises the
+/// multi-worker interleavings.
 fn thread_counts() -> Vec<usize> {
     let max = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut t = vec![1, 2, max];
+    if let Some(n) = hdreason::hdc::kernels::env_threads() {
+        t.push(n);
+    }
     t.sort_unstable();
     t.dedup();
     t
@@ -30,6 +40,21 @@ fn engine(kind: BackendKind, threads: usize, capacity: usize) -> KgcEngine {
         .threads(threads)
         .batch_capacity(capacity)
         .deadline(Duration::from_millis(1))
+        .build()
+        .expect("tiny engine builds")
+}
+
+/// Same graph/state/serving knobs as [`engine`], but with a caller-built
+/// backend and full-length rankings (`top_k` covers every candidate), so
+/// parity tests can compare whole orderings.
+fn engine_custom(backend: Box<dyn ScoreBackend>) -> KgcEngine {
+    EngineBuilder::new("tiny")
+        .dataset("learnable")
+        .seed(11)
+        .custom_backend(backend)
+        .batch_capacity(8)
+        .deadline(Duration::from_millis(1))
+        .top_k(10_000)
         .build()
         .expect("tiny engine builds")
 }
@@ -177,6 +202,229 @@ fn micro_batcher_preserves_request_order() {
         assert_eq!(seq, i as u64);
         assert_eq!(req, reqs[i]);
     }
+}
+
+#[test]
+fn backend_parity_sharded_matches_kernel_exactly() {
+    // sharding only moves memory rows between workers — per-candidate math
+    // is untouched — so scores and rankings must be BYTE-identical to the
+    // kernel backend, including at shard counts that do not divide |V|
+    for threads in thread_counts() {
+        let kernel = engine_custom(Box::new(KernelBackend::with_threads(threads)));
+        let v = kernel.num_candidates();
+        assert!(v % 7 != 0, "need |V| % 7 != 0 to exercise the remainder shard");
+        let pairs = query_pairs(&kernel, 13);
+        let want = kernel.score_batch(&pairs);
+        for shards in [1usize, 2, 7] {
+            let sharded = engine_custom(Box::new(ShardedBackend::new(
+                shards,
+                Box::new(KernelBackend::with_threads(threads)),
+            )));
+            assert_eq!(want, sharded.score_batch(&pairs), "shards {shards} threads {threads}");
+            for &(s, r) in pairs.iter().take(4) {
+                let req = QueryRequest::forward(s, r);
+                assert_eq!(kernel.rank(req), sharded.rank(req), "shards {shards} req {req:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn backend_parity_quant_fix16_preserves_rankings() {
+    // fix-16 perturbs each logit by at most the grid half-step; the
+    // ranking must agree with the kernel backend everywhere the float
+    // scores are separated by more than twice the worst observed
+    // perturbation (near-ties may legitimately reorder on the grid)
+    let float_e = engine_custom(Box::new(KernelBackend::with_threads(1)));
+    let v = float_e.num_candidates();
+    for threads in thread_counts() {
+        let quant = engine_custom(Box::new(QuantBackend::new(16, threads)));
+        for &(s, r) in &query_pairs(&float_e, 6) {
+            let req = QueryRequest::forward(s, r);
+            let a = float_e.rank(req);
+            let b = quant.rank(req);
+            assert_eq!(a.top.len(), v, "top_k must cover every candidate");
+            assert_eq!(b.top.len(), v);
+            let b_score: HashMap<usize, f32> = b.top.iter().copied().collect();
+            let b_pos: HashMap<usize, usize> =
+                b.top.iter().enumerate().map(|(i, &(id, _))| (id, i)).collect();
+            let worst = a
+                .top
+                .iter()
+                .map(|&(id, s)| (s - b_score[&id]).abs())
+                .fold(0f32, f32::max);
+            let eps = 2.0 * worst + 1e-6;
+            assert!(worst < 1.0, "fix-16 perturbation implausibly large: {worst}");
+            let mut checked = 0usize;
+            for i in 0..v {
+                for j in (i + 1)..v {
+                    let (id_i, si) = a.top[i];
+                    let (id_j, sj) = a.top[j];
+                    if si - sj > eps {
+                        assert!(
+                            b_pos[&id_i] < b_pos[&id_j],
+                            "threads {threads} req {req:?}: fix-16 reordered {id_i} vs {id_j} \
+                             (float gap {} > eps {eps})",
+                            si - sj
+                        );
+                        checked += 1;
+                    }
+                }
+            }
+            assert!(checked > 0, "degenerate test: every candidate pair was a near-tie");
+        }
+    }
+}
+
+#[test]
+fn quant_submit_matches_rank_under_coalescing() {
+    // per-row query scales: a coalesced batch-mate cannot change a query's
+    // grid, so the quant serving path must agree with the unbatched
+    // reference byte-for-byte even under concurrent load
+    let e = engine_custom(Box::new(QuantBackend::new(8, 0)));
+    let v = e.num_candidates();
+    let r = e.kg().num_relations;
+    std::thread::scope(|s| {
+        let e = &e;
+        for c in 0..4usize {
+            s.spawn(move || {
+                for i in 0..8usize {
+                    let req = QueryRequest::forward((c * 31 + i * 5) % v, (c + i) % r);
+                    assert_eq!(e.submit(req), e.rank(req), "client {c} query {i}");
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn async_submit_matches_blocking_under_concurrent_load() {
+    // many clients, each holding a window of in-flight handles: every
+    // resolved ranking must equal what the unbatched rank() path produces
+    let e = engine(BackendKind::Kernel, 0, 8);
+    let v = e.num_candidates();
+    let r = e.kg().num_relations;
+    std::thread::scope(|s| {
+        let e = &e;
+        for c in 0..4usize {
+            s.spawn(move || {
+                for round in 0..4usize {
+                    let reqs: Vec<QueryRequest> = (0..8)
+                        .map(|i| {
+                            QueryRequest::forward((c * 37 + round * 11 + i * 3) % v, (c + i) % r)
+                        })
+                        .collect();
+                    let handles: Vec<QueryHandle> =
+                        reqs.iter().map(|&q| e.submit_async(q)).collect();
+                    for (h, &q) in handles.into_iter().zip(&reqs) {
+                        assert_eq!(h.wait(), e.rank(q), "client {c} round {round}");
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(e.pending_queries(), 0);
+    assert_eq!(e.unclaimed_results(), 0, "every published ranking was claimed");
+}
+
+#[test]
+fn async_pipeline_cannot_deadlock_at_capacity_one() {
+    // capacity 1 means every queued request needs its own flush; a single
+    // client pipelines 32 handles and collects them in REVERSE order, so
+    // the last handle's wait() must lead flushes for every earlier seq
+    let e = engine(BackendKind::Kernel, 0, 1);
+    let v = e.num_candidates();
+    let r = e.kg().num_relations;
+    let reqs: Vec<QueryRequest> =
+        (0..32).map(|i| QueryRequest::forward((i * 5) % v, i % r)).collect();
+    let handles: Vec<QueryHandle> = reqs.iter().map(|&q| e.submit_async(q)).collect();
+    for (h, &q) in handles.into_iter().zip(&reqs).rev() {
+        assert_eq!(h.wait(), e.rank(q));
+    }
+    assert_eq!(e.unclaimed_results(), 0);
+}
+
+#[test]
+fn async_poll_resolves_without_blocking() {
+    // capacity far above the stream: only the deadline can flush, and a
+    // poll-only client must drive it (no serving thread exists to help)
+    let e = engine(BackendKind::Kernel, 0, 1024);
+    let req = QueryRequest::forward(3, 1);
+    let want = e.rank(req);
+    let mut h = e.submit_async(req);
+    let start = Instant::now();
+    loop {
+        if let Some(r) = h.poll() {
+            assert_eq!(r, want);
+            break;
+        }
+        assert!(start.elapsed() < Duration::from_secs(30), "poll never resolved");
+        std::thread::yield_now();
+    }
+}
+
+#[test]
+fn dropped_async_handles_neither_leak_nor_deadlock() {
+    let e = engine(BackendKind::Kernel, 0, 1);
+    {
+        let _a = e.submit_async(QueryRequest::forward(1, 0));
+        let _b = e.submit_async(QueryRequest::forward(2, 1));
+        // both dropped unresolved — at capacity 1 the queue already holds
+        // a full batch, so cancellation must work on flush-ready queues
+    }
+    assert_eq!(e.pending_queries(), 0, "dropped handles cancel their queued work");
+    let req = QueryRequest::forward(3, 0);
+    assert_eq!(e.submit(req), e.rank(req), "serving continues after cancellations");
+    assert_eq!(e.unclaimed_results(), 0, "no orphaned rankings");
+}
+
+#[test]
+fn quant_score_deviation_grows_as_bits_shrink() {
+    // deterministic half of the Fig. 9(b) pin: mean |quant − float| logit
+    // deviation must grow as the grid coarsens, and fix-16 is near-lossless
+    let float_e = engine(BackendKind::Kernel, 1, 8);
+    let pairs = query_pairs(&float_e, 16);
+    let want = float_e.score_batch(&pairs);
+    let devs: Vec<f64> = [16u32, 8, 4, 2]
+        .iter()
+        .map(|&bits| {
+            let e = engine_custom(Box::new(QuantBackend::new(bits, 1)));
+            let got = e.score_batch(&pairs);
+            let total: f64 =
+                want.iter().zip(&got).map(|(a, b)| (a - b).abs() as f64).sum();
+            total / want.len() as f64
+        })
+        .collect();
+    let coarse = devs[3];
+    assert!(coarse > 0.0, "fix-2 must actually move the scores");
+    assert!(devs[0] < 0.01 * coarse, "fix-16 must be near-lossless: {devs:?}");
+    for w in devs.windows(2) {
+        assert!(w[0] <= w[1] + 1e-3 * coarse, "deviation must grow as bits shrink: {devs:?}");
+    }
+}
+
+#[test]
+fn quant_hits10_trend_matches_fig9b() {
+    // end-to-end half of the Fig. 9(b) pin, the engine-path mirror of the
+    // rgcn.rs fragility test: filtered Hits@10 through QuantBackend stays
+    // within tolerance of float at fix-8 and degrades monotonically (up to
+    // eval noise on the tiny split) as bits shrink to fix-2
+    let float_e = engine(BackendKind::Kernel, 0, 8);
+    let kg = float_e.kg();
+    let triples: Vec<hdreason::kg::Triple> =
+        kg.valid.iter().chain(kg.test.iter()).copied().collect();
+    let hf = float_e.evaluate(&triples).unwrap().hits10;
+    let hits: Vec<f64> = [8u32, 4, 2]
+        .iter()
+        .map(|&bits| {
+            let e = engine_custom(Box::new(QuantBackend::new(bits, 0)));
+            e.evaluate(&triples).unwrap().hits10
+        })
+        .collect();
+    assert!((hits[0] - hf).abs() <= 0.15, "fix-8 {} must retain float {hf}", hits[0]);
+    assert!(hits[1] <= hits[0] + 0.10, "fix-4 {} above fix-8 {}", hits[1], hits[0]);
+    assert!(hits[2] <= hits[1] + 0.10, "fix-2 {} above fix-4 {}", hits[2], hits[1]);
+    assert!(hits[2] <= hf + 0.10, "fix-2 {} above float {hf}", hits[2]);
 }
 
 #[test]

@@ -6,7 +6,7 @@ use hdreason::cache::HvCache;
 use hdreason::config::ReplacementPolicy;
 use hdreason::hdc::quant::FixedPoint;
 use hdreason::kg::{Csr, Triple};
-use hdreason::model::rank_of;
+use hdreason::model::{merged_rank, rank_counts, rank_of};
 use hdreason::scheduler::Scheduler;
 use hdreason::util::{Json, Rng};
 
@@ -128,6 +128,73 @@ fn prop_quantization_error_monotone_in_bits() {
             assert!(err <= last + 1e-6, "seed {seed}: error rose at fix-{bits}");
             last = err;
         }
+    }
+}
+
+#[test]
+fn prop_quantize_with_scale_is_idempotent_per_value() {
+    // grid points must round back to themselves for ANY power-of-two
+    // scale — the invariant that lets the fused quantize-and-score kernels
+    // re-enter already-quantized tensors safely
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let fp = FixedPoint::new(2 + rng.below(15) as u32);
+        for _ in 0..64 {
+            let x = rng.range_f64(-8.0, 8.0) as f32;
+            let scale = (2.0f32).powi(rng.below(13) as i32 - 6);
+            let q = fp.quantize_with_scale(x, scale);
+            let qq = fp.quantize_with_scale(q, scale);
+            assert_eq!(q, qq, "seed {seed}: x {x} scale {scale}");
+        }
+    }
+}
+
+#[test]
+fn prop_scale_for_covers_max_abs_without_saturating() {
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let fp = FixedPoint::new(2 + rng.below(15) as u32);
+        let max_abs = rng.range_f64(1e-6, 1e4) as f32;
+        let scale = fp.scale_for(max_abs);
+        // coverage: the positive end of the grid reaches max_abs (with one
+        // ulp of slack for the f32 division/log in scale_for)
+        assert!(
+            scale * fp.qmax() >= max_abs * (1.0 - 1e-6),
+            "seed {seed}: scale {scale} x qmax {} < max_abs {max_abs}",
+            fp.qmax()
+        );
+        // no saturation: ±max_abs land within half a grid step of
+        // themselves, which the saturating clamp could not achieve (the 1%
+        // slack absorbs f32 division error on quotients near qmax)
+        let hi = fp.quantize_with_scale(max_abs, scale);
+        let lo = fp.quantize_with_scale(-max_abs, scale);
+        let half = 0.5 * scale * 1.01;
+        assert!((hi - max_abs).abs() <= half, "seed {seed}: {hi} vs {max_abs} (scale {scale})");
+        assert!((lo + max_abs).abs() <= half, "seed {seed}: {lo} vs -{max_abs} (scale {scale})");
+    }
+}
+
+#[test]
+fn prop_shard_merged_rank_equals_unsharded() {
+    // merging per-shard (better, equal) partials must reproduce the
+    // unsharded rank for ARBITRARY shard boundaries — the invariant behind
+    // the sharded backend's merge step
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let v = 2 + rng.below(300);
+        // snap scores onto a coarse grid so ties are common
+        let scores: Vec<f32> = (0..v).map(|_| rng.below(9) as f32 / 4.0).collect();
+        let gold = rng.below(v);
+        let want = rank_of(&scores, gold, &[]);
+        let mut cuts = vec![0usize, v];
+        for _ in 0..rng.below(8) {
+            cuts.push(rng.below(v));
+        }
+        cuts.sort_unstable();
+        cuts.dedup();
+        let parts: Vec<(usize, usize)> =
+            cuts.windows(2).map(|w| rank_counts(&scores[w[0]..w[1]], scores[gold])).collect();
+        assert_eq!(merged_rank(parts), want, "seed {seed}: cuts {cuts:?}");
     }
 }
 
