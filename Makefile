@@ -28,14 +28,16 @@ ci:
 	$(CARGO) test -q --manifest-path $(MANIFEST)
 	HDR_THREADS=1 $(CARGO) test -q --manifest-path $(MANIFEST)
 	HDR_THREADS=2 $(CARGO) test -q --manifest-path $(MANIFEST)
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- query --model tiny --queries 64 --backend sharded:2+quant:8
 
 # hot-path benchmark; appends {name, median_s, iters} JSON-lines rows to
-# BENCH_3.json at the repo root so the perf trajectory accumulates per PR
+# BENCH_4.json at the repo root so the perf trajectory accumulates per PR
 bench:
 	$(CARGO) bench --bench runtime_hotpath --manifest-path $(MANIFEST) -- --json
 
 # KgcEngine serving throughput: submit at batch 1/8/64, sharded/quant
-# score backends, and the submit_async pipeline (same JSON sink)
+# score backends, the submit_async pipeline, and the rank-native
+# (rank-only / top-k) sharded rows (same BENCH_4.json sink)
 bench-serving:
 	$(CARGO) bench --bench engine_serving --manifest-path $(MANIFEST) -- --json
 

@@ -86,6 +86,19 @@ fn main() -> hdreason::Result<()> {
         served as f64 / async_s.max(1e-9)
     );
 
+    // wait_any: collect in-flight handles as they complete, regardless of
+    // submission order — the bulk wait for clients with many handles
+    let mut inflight: Vec<_> =
+        stream.iter().take(16).map(|&q| engine.submit_async(q)).collect();
+    let mut collected = 0usize;
+    while !inflight.is_empty() {
+        let (i, ranking) = engine.wait_any(&mut inflight);
+        let done = inflight.swap_remove(i);
+        assert_eq!(ranking.request, done.request());
+        collected += 1;
+    }
+    println!("wait_any() collected {collected} completions out of submission order");
+
     // ---- alternative score backends (CLI: --backend sharded:N|quant:N) ---
     // sharded: fan the (|V|, D) memory-matrix scan across N workers;
     // scores are byte-identical to the kernel backend
@@ -101,6 +114,14 @@ fn main() -> hdreason::Result<()> {
         .seed(42)
         .custom_backend(Box::new(QuantBackend::new(8, 0)))
         .build()?;
+    // composed: the shard fan-out over the quantized leaf — what the CLI
+    // spells `--backend sharded:4+quant:8`; byte-identical to plain quant
+    // because the fix-N grid scales are per-row (slice-local)
+    let composed = EngineBuilder::new("tiny")
+        .dataset("learnable")
+        .seed(42)
+        .backend(BackendKind::parse("sharded:4+quant:8")?)
+        .build()?;
     let req = QueryRequest::forward(t.src, t.rel);
     println!(
         "backends on ({}, r{}, ?): kernel top1 {:?}, sharded top1 {:?}, fix-8 top1 {:?}",
@@ -110,6 +131,8 @@ fn main() -> hdreason::Result<()> {
         sharded.rank(req).top[0],
         quant.rank(req).top[0]
     );
+    assert_eq!(composed.rank(req), quant.rank(req), "sharding cannot change the quant grid");
+    println!("composed backend '{}' == quant:8, byte-identical", composed.backend_desc());
 
     // ---- filtered evaluation (untrained baseline) ------------------------
     let before = engine.evaluate(&kg.test)?;

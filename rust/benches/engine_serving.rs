@@ -1,7 +1,7 @@
 //! Bench: end-to-end serving throughput through `KgcEngine::submit` /
 //! `submit_async`, plus the sharded and quantized score backends.
 //!
-//! Four sections, all on the `tiny` preset with the same query stream:
+//! Five sections, all on the `tiny` preset with the same query stream:
 //!
 //! 1. **Micro-batcher coalescing** — `submit` at batch capacities 1/8/64,
 //!    offered load scaled to capacity (one client per serving slot, like
@@ -15,15 +15,26 @@
 //!    (the fused quantize-and-score kernel, Fig. 9(b) at speed).
 //! 4. **Async pipelining** — one client keeps the whole stream in flight
 //!    via `submit_async` handles, then collects; no thread-per-query.
+//! 5. **Rank-native sharded serving** — rank-only (`rank_pairs_into`,
+//!    per-shard `(better, equal)` partials) and top-k
+//!    (`top_k_pairs_into`, shard-local selection + k-way merge) against
+//!    the dense-merge path that ships full (B, |V|) score blocks and
+//!    reduces host-side, both at one shard worker per core.
+//!    Target: sharded rank-only ≥ 2x the sharded dense-merge path.
 //!
 //! Run: cargo bench --bench engine_serving [-- --json [PATH]]
-//! (`--json` appends rows to BENCH_3.json at the repo root by default.)
+//! (`--json` appends rows to BENCH_4.json at the repo root by default.)
 
 use hdreason::bench::harness::{bench, maybe_append_json, BenchResult};
+use hdreason::config::model_preset;
 use hdreason::engine::{
-    BackendKind, EngineBuilder, KernelBackend, KgcEngine, QuantBackend, QueryRequest,
-    ScoreBackend, ShardedBackend,
+    top_k_of, BackendKind, EngineBuilder, KernelBackend, KgcEngine, QuantBackend, QueryRequest,
+    RankPartial, ScoreBackend, ShardedBackend,
 };
+use hdreason::hdc;
+use hdreason::kg::generator;
+use hdreason::model::{rank_of, ModelState};
+use std::hint::black_box;
 use std::time::Duration;
 
 const QUERIES: usize = 256;
@@ -146,6 +157,90 @@ fn main() {
         r.per_second(QUERIES as f64)
     );
     results.push(r);
+
+    // ---- 5. rank-native sharded serving: reduced vs dense-merge ----------
+    // same model state the engine builder would produce, scored through
+    // the backend seam directly so the two reductions are isolated from
+    // the serving queue
+    let cfg = model_preset("tiny").expect("tiny preset");
+    let kg = generator::learnable_for_preset(&cfg, 0.8, 0);
+    let state = ModelState::init(&cfg, 0);
+    let hr = state.encode_relations_host();
+    let mem = hdc::memorize(&kg.train_csr(), &state.encode_vertices_host(), &hr, cfg.dim_hd);
+    let (d, v, bias) = (cfg.dim_hd, kg.num_vertices, 6.0f32);
+    let pairs: Vec<(usize, usize)> = (0..QUERIES)
+        .map(|i| {
+            let t = kg.train[i % kg.train.len()];
+            (t.src, t.rel)
+        })
+        .collect();
+    let golds: Vec<usize> =
+        (0..QUERIES).map(|i| kg.train[i % kg.train.len()].dst).collect();
+    let sharded =
+        ShardedBackend::new(max_workers, Box::new(KernelBackend::with_threads(1)));
+
+    // dense-merge rank path: every shard ships its (B, shard) score block,
+    // the merge rebuilds (B, |V|), and ranks reduce host-side — what a
+    // rank-only workload paid before the reduced seam existed
+    let r_dense = bench(&format!("engine/rank_dense(tiny,sharded={max_workers})"), 3, 15, || {
+        let mut scores = vec![0f32; QUERIES * v];
+        sharded.score_pairs_into(&mem.data, &hr, d, &pairs, bias, &mut scores);
+        let mut acc = 0usize;
+        for (row, &g) in golds.iter().enumerate() {
+            acc += rank_of(&scores[row * v..(row + 1) * v], g, &[]);
+        }
+        black_box(acc);
+    });
+    println!("{}", r_dense.row());
+    let dense_qps = r_dense.per_second(QUERIES as f64);
+    println!("  -> {dense_qps:.0} rank queries/s via dense merge\n");
+    results.push(r_dense);
+
+    // rank-only path: each shard ships two counters per query
+    let r_rank = bench(&format!("engine/rank_only(tiny,sharded={max_workers})"), 3, 15, || {
+        let mut parts = vec![RankPartial::default(); QUERIES];
+        sharded.rank_pairs_into(&mem.data, &hr, d, &pairs, bias, &golds, &mut parts);
+        let acc: usize = parts
+            .iter()
+            .map(|p| hdreason::model::merged_rank(std::iter::once((p.better, p.equal))))
+            .sum();
+        black_box(acc);
+    });
+    println!("{}", r_rank.row());
+    let rank_qps = r_rank.per_second(QUERIES as f64);
+    println!("  -> {rank_qps:.0} rank queries/s via per-shard partials");
+    println!(
+        "  -> rank-only speedup over dense merge ({max_workers} workers): {:.2}x  (target >= 2x)\n",
+        rank_qps / dense_qps.max(1e-12)
+    );
+    results.push(r_rank);
+
+    // top-k: dense merge + selection vs shard-local select + k-way merge
+    let k = 10usize;
+    let r_topk_dense =
+        bench(&format!("engine/top_k_dense(tiny,sharded={max_workers},k={k})"), 3, 15, || {
+            let mut scores = vec![0f32; QUERIES * v];
+            sharded.score_pairs_into(&mem.data, &hr, d, &pairs, bias, &mut scores);
+            for row_scores in scores.chunks(v) {
+                black_box(top_k_of(row_scores, k));
+            }
+        });
+    println!("{}", r_topk_dense.row());
+    let topk_dense_qps = r_topk_dense.per_second(QUERIES as f64);
+    results.push(r_topk_dense);
+    let r_topk =
+        bench(&format!("engine/top_k(tiny,sharded={max_workers},k={k})"), 3, 15, || {
+            let mut tops: Vec<Vec<(usize, f32)>> = vec![Vec::new(); QUERIES];
+            sharded.top_k_pairs_into(&mem.data, &hr, d, &pairs, bias, k, &mut tops);
+            black_box(tops);
+        });
+    println!("{}", r_topk.row());
+    let topk_qps = r_topk.per_second(QUERIES as f64);
+    println!(
+        "  -> top-k {topk_qps:.0} vs dense {topk_dense_qps:.0} queries/s: {:.2}x\n",
+        topk_qps / topk_dense_qps.max(1e-12)
+    );
+    results.push(r_topk);
 
     // context row: the raw batched score path without the serving queue,
     // an upper bound on what submit() coalescing can reach

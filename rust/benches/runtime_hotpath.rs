@@ -77,6 +77,29 @@ fn main() {
         kg.num_vertices
     );
 
+    // ---- top-k selection: bounded heap vs the old full |V| sort ---------
+    // the serving path's post-score reduction; scores reused from the
+    // batched sweep above, k = the default Ranking depth
+    let k = 10usize;
+    let v = kg.num_vertices;
+    let sort_topk = push(bench("select/full-sort(tiny,k=10)", 3, 30, || {
+        for scores in out.chunks(v) {
+            let mut idx: Vec<usize> = (0..v).collect();
+            idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+            idx.truncate(k);
+            black_box(idx);
+        }
+    }));
+    let heap_topk = push(bench("select/heap(tiny,k=10)", 3, 30, || {
+        for scores in out.chunks(v) {
+            black_box(hdc::kernels::top_k_select(scores, k));
+        }
+    }));
+    println!(
+        "  -> top-k selection speedup vs full sort: {:.2}x\n",
+        sort_topk.median_s / heap_topk.median_s
+    );
+
     // ---- neighbor reconstruction (Eq. 2): per-candidate alloc vs fused --
     let rec_scalar = push(bench("reconstruct/scalar(tiny)", 2, 20, || {
         black_box(hdc::reconstruct_neighbors_scalar(&mem, &hv, &hr, 0, 0, 10));

@@ -30,10 +30,67 @@
 //! facade, the baselines) instead of calling `model::score` /
 //! `hdc::kernels` free functions directly; those free functions remain as
 //! `#[doc(hidden)]` delegating wrappers for the transition.
+//!
+//! Besides the dense sweeps, the trait carries **reduced-result** forms —
+//! [`ScoreBackend::rank_pairs_into`] (per-query [`RankPartial`] counts)
+//! and [`ScoreBackend::top_k_pairs_into`] (per-query bounded-heap top-k) —
+//! with dense-fallback defaults; [`ShardedBackend`] overrides them to
+//! reduce *inside* each shard worker, shipping `O(B)` counters or
+//! `O(B·k)` candidates across the merge instead of `(B, |V|)` score
+//! blocks (the reduce-at-the-source pattern of the KG-accelerator
+//! survey).
 
 use crate::hdc::kernels::{self, KernelConfig};
 use crate::hdc::l1_distance;
 use crate::hdc::quant::FixedPoint;
+use crate::model::rank_counts;
+
+/// Reduced rank result for one query: whole-matrix
+/// [`crate::model::rank_counts`] against the gold vertex's score, plus
+/// that score. `equal` includes the gold's own entry once (contributed by
+/// whichever shard holds its row); [`crate::model::merged_rank`] and
+/// [`crate::model::filtered_rank_from_partial`] both discount it.
+///
+/// This is what a rank-only workload ships across the shard merge instead
+/// of a raw `(B, |V|)` score block: two counters and a float per query.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct RankPartial {
+    /// Candidates scoring strictly above the gold.
+    pub better: usize,
+    /// Candidates scoring exactly the gold score — gold itself included.
+    pub equal: usize,
+    /// The gold vertex's score (the threshold the counts are against).
+    pub gold_score: f32,
+}
+
+impl RankPartial {
+    fn from_dense(scores: &[f32], gold: usize) -> Self {
+        let gold_score = scores[gold];
+        let (better, equal) = rank_counts(scores, gold_score);
+        Self { better, equal, gold_score }
+    }
+}
+
+/// Dense-sweep rank reduction — the one copy of the score-then-count
+/// fallback shared by the trait defaults and the sharded backend's
+/// single-shard / non-slice-local paths, so the [`RankPartial`] semantics
+/// cannot drift between them. `scores` is row-major (B, `v`).
+fn dense_rank_reduce(scores: &[f32], v: usize, golds: &[usize], out: &mut [RankPartial]) {
+    for (row, (&gold, o)) in golds.iter().zip(out.iter_mut()).enumerate() {
+        // same diagnostic as the sharded fan-out path, so a bad gold fails
+        // identically at any shard count
+        assert!(gold < v, "rank_batch_into: gold {gold} out of range for {v} rows");
+        *o = RankPartial::from_dense(&scores[row * v..(row + 1) * v], gold);
+    }
+}
+
+/// Dense-sweep top-k reduction — the selection-side twin of
+/// [`dense_rank_reduce`], same sharing rationale.
+fn dense_top_k_reduce(scores: &[f32], v: usize, k: usize, out: &mut [Vec<(usize, f32)>]) {
+    for (row, o) in out.iter_mut().enumerate() {
+        *o = kernels::top_k_select(&scores[row * v..(row + 1) * v], k);
+    }
+}
 
 /// Execution strategy for the Eq. 10 score sweep and the dot-product
 /// decoder. Implementations must be callable from multiple serving threads
@@ -79,10 +136,164 @@ pub trait ScoreBackend: Send + Sync {
         self.score_batch_into(mv, dim_hd, q, bias, &mut out);
         out
     }
+
+    /// Human-readable description including parameters and composition
+    /// (`sharded:4+quant:8`); [`Self::name`] stays the bare family name.
+    fn describe(&self) -> String {
+        self.name().to_string()
+    }
+
+    /// Whether one row's score depends only on that row and the query —
+    /// i.e. scoring `(1 row, 1 query)` alone is byte-identical to the same
+    /// pair inside any batched or sharded call. True for every host
+    /// backend (the kernels keep per-pair lane association fixed, and the
+    /// quant grid scales are per-row); an AOT artifact backend whose
+    /// reduction order is opaque must return `false`, which routes the
+    /// reduced rank/top-k paths back through its dense scorer.
+    fn slice_local(&self) -> bool {
+        true
+    }
+
+    /// Score one packed query point against one memory row — the
+    /// rescoring primitive the reduced rank path uses for gold and
+    /// filtered candidates. Exact w.r.t. the batched sweep whenever
+    /// [`Self::slice_local`] holds.
+    fn score_one(&self, row: &[f32], dim_hd: usize, q: &[f32], bias: f32) -> f32 {
+        let mut out = [0f32];
+        self.score_batch_into(row, dim_hd, q, bias, &mut out);
+        out[0]
+    }
+
+    /// Reduced-result Eq. 10 rank sweep: for each packed query row `b`,
+    /// count how many candidates score strictly above / exactly equal to
+    /// the score of vertex `golds[b]` (see [`RankPartial`]). The default
+    /// scores densely and reduces host-side; backends that can reduce at
+    /// the source (the sharded fan-out) override this so no `(B, |V|)`
+    /// block is ever shipped for rank-only workloads.
+    fn rank_batch_into(
+        &self,
+        mv: &[f32],
+        dim_hd: usize,
+        q: &[f32],
+        bias: f32,
+        golds: &[usize],
+        out: &mut [RankPartial],
+    ) {
+        let d = dim_hd.max(1);
+        let v = mv.len() / d;
+        let b = q.len() / d;
+        assert_eq!(golds.len(), b, "rank_batch_into: one gold per query");
+        assert_eq!(out.len(), b, "rank_batch_into: one partial per query");
+        let mut scores = vec![0f32; v * b];
+        self.score_batch_into(mv, dim_hd, q, bias, &mut scores);
+        dense_rank_reduce(&scores, v, golds, out);
+    }
+
+    /// [`Self::rank_batch_into`] over `(subject, relation)` pairs. Routed
+    /// through [`Self::score_pairs_into`] so backends with a fused
+    /// gather+score path (the PJRT artifact) keep it on the dense leg.
+    #[allow(clippy::too_many_arguments)]
+    fn rank_pairs_into(
+        &self,
+        mv: &[f32],
+        hr: &[f32],
+        dim_hd: usize,
+        pairs: &[(usize, usize)],
+        bias: f32,
+        golds: &[usize],
+        out: &mut [RankPartial],
+    ) {
+        let d = dim_hd.max(1);
+        let v = mv.len() / d;
+        assert_eq!(golds.len(), pairs.len(), "rank_pairs_into: one gold per query");
+        assert_eq!(out.len(), pairs.len(), "rank_pairs_into: one partial per query");
+        let mut scores = vec![0f32; v * pairs.len()];
+        self.score_pairs_into(mv, hr, dim_hd, pairs, bias, &mut scores);
+        dense_rank_reduce(&scores, v, golds, out);
+    }
+
+    /// Reduced-result top-k sweep: `out[b]` receives the `min(k, |V|)`
+    /// best `(vertex, score)` pairs for packed query row `b`, score
+    /// descending, ties by ascending vertex id (the
+    /// [`kernels::top_k_select`] order). The default scores densely and
+    /// selects host-side; the sharded backend overrides it to select
+    /// inside each shard and k-way merge, shipping `O(B·k)` per shard.
+    fn top_k_batch_into(
+        &self,
+        mv: &[f32],
+        dim_hd: usize,
+        q: &[f32],
+        bias: f32,
+        k: usize,
+        out: &mut [Vec<(usize, f32)>],
+    ) {
+        let d = dim_hd.max(1);
+        let v = mv.len() / d;
+        let b = q.len() / d;
+        assert_eq!(out.len(), b, "top_k_batch_into: one list per query");
+        let mut scores = vec![0f32; v * b];
+        self.score_batch_into(mv, dim_hd, q, bias, &mut scores);
+        dense_top_k_reduce(&scores, v, k, out);
+    }
+
+    /// [`Self::top_k_batch_into`] over `(subject, relation)` pairs, routed
+    /// through [`Self::score_pairs_into`] like [`Self::rank_pairs_into`].
+    #[allow(clippy::too_many_arguments)]
+    fn top_k_pairs_into(
+        &self,
+        mv: &[f32],
+        hr: &[f32],
+        dim_hd: usize,
+        pairs: &[(usize, usize)],
+        bias: f32,
+        k: usize,
+        out: &mut [Vec<(usize, f32)>],
+    ) {
+        let d = dim_hd.max(1);
+        let v = mv.len() / d;
+        assert_eq!(out.len(), pairs.len(), "top_k_pairs_into: one list per query");
+        let mut scores = vec![0f32; v * pairs.len()];
+        self.score_pairs_into(mv, hr, dim_hd, pairs, bias, &mut scores);
+        dense_top_k_reduce(&scores, v, k, out);
+    }
+}
+
+/// Inner (leaf) backend of a `sharded:N+inner` composition: what each
+/// shard worker runs, always single-threaded so the shard fan-out is the
+/// only parallelism (an explicit `N` maps one-to-one onto workers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InnerBackendKind {
+    Scalar,
+    Kernel,
+    /// Fix-N quantized scoring on each shard's row slice — byte-identical
+    /// to unsharded quant by the slice-local per-row scales.
+    Quant(u32),
+}
+
+impl InnerBackendKind {
+    fn instantiate(self) -> Box<dyn ScoreBackend> {
+        match self {
+            Self::Scalar => Box::new(ScalarBackend),
+            Self::Kernel => Box::new(KernelBackend::with_threads(1)),
+            Self::Quant(bits) => Box::new(QuantBackend::new(bits, 1)),
+        }
+    }
+}
+
+impl std::fmt::Display for InnerBackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Scalar => write!(f, "scalar"),
+            Self::Kernel => write!(f, "kernel"),
+            Self::Quant(bits) => write!(f, "quant:{bits}"),
+        }
+    }
 }
 
 /// Named backend selection, e.g. from a `--backend` CLI flag. The sharded
-/// and quantized forms carry their parameter: `sharded:4`, `quant:8`.
+/// and quantized forms carry their parameter (`sharded:4`, `quant:8`;
+/// bare `sharded` auto-sizes to the machine), and `sharded:N+inner`
+/// composes the shard fan-out over a leaf backend (`sharded:4+quant:8`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum BackendKind {
     Scalar,
@@ -91,16 +302,43 @@ pub enum BackendKind {
     Sharded(usize),
     /// Fix-N quantized scoring (`quant:8` = fix-8).
     Quant(u32),
+    /// Shard fan-out (`0` = auto) over an explicit leaf backend —
+    /// the CLI form `sharded:N+scalar|kernel|quant:M`.
+    Composed(usize, InnerBackendKind),
 }
 
 impl BackendKind {
-    pub const ALL: &'static [&'static str] = &["scalar", "kernel", "sharded:N", "quant:N"];
+    pub const ALL: &'static [&'static str] =
+        &["scalar", "kernel", "sharded[:N]", "quant:N", "sharded[:N]+(scalar|kernel|quant:M)"];
 
     pub fn parse(s: &str) -> crate::Result<Self> {
         let s = s.to_ascii_lowercase();
+        // composition: `outer+inner`, where the outer must be a sharded
+        // form (it is the only backend that wraps another)
+        if let Some((outer, inner)) = s.split_once('+') {
+            let shards = match Self::parse_leaf(outer)? {
+                Self::Sharded(n) => n,
+                other => anyhow::bail!(
+                    "only 'sharded[:N]' can wrap another backend, not '{outer}' ({other:?})"
+                ),
+            };
+            return match Self::parse_leaf(inner)? {
+                Self::Scalar => Ok(Self::Composed(shards, InnerBackendKind::Scalar)),
+                Self::Kernel => Ok(Self::Composed(shards, InnerBackendKind::Kernel)),
+                Self::Quant(bits) => Ok(Self::Composed(shards, InnerBackendKind::Quant(bits))),
+                Self::Sharded(_) | Self::Composed(..) => anyhow::bail!(
+                    "'{inner}' cannot be the inner backend of a composition \
+                     (shard workers must be leaf backends)"
+                ),
+            };
+        }
+        Self::parse_leaf(&s)
+    }
+
+    fn parse_leaf(s: &str) -> crate::Result<Self> {
         let (head, arg) = match s.split_once(':') {
             Some((h, a)) => (h, Some(a)),
-            None => (s.as_str(), None),
+            None => (s, None),
         };
         match (head, arg) {
             ("scalar", None) => Ok(Self::Scalar),
@@ -116,20 +354,39 @@ impl BackendKind {
                 _ => anyhow::bail!("bad bit width '{a}' (want quant:N, N in 2..=16)"),
             },
             ("quant", None) => anyhow::bail!("backend 'quant' needs a bit width, e.g. 'quant:8'"),
-            _ => anyhow::bail!("unknown backend '{s}' (have {:?})", Self::ALL),
+            _ => anyhow::bail!("unknown backend '{s}' (have {})", Self::ALL.join(", ")),
         }
     }
 
     /// Instantiate with an explicit worker-thread count (`0` = auto; the
     /// scalar backend is single-threaded by definition and ignores it).
-    /// `Sharded` puts its parallelism in the shard fan-out — each shard
-    /// runs a single-threaded kernel — so `threads` is ignored there too.
+    /// `Sharded` and `Composed` put their parallelism in the shard
+    /// fan-out — each shard runs a single-threaded leaf — so `threads` is
+    /// ignored there too.
     pub fn instantiate(self, threads: usize) -> Box<dyn ScoreBackend> {
         match self {
             Self::Scalar => Box::new(ScalarBackend),
             Self::Kernel => Box::new(KernelBackend::with_threads(threads)),
             Self::Sharded(shards) => Box::new(ShardedBackend::with_shards(shards)),
             Self::Quant(bits) => Box::new(QuantBackend::new(bits, threads)),
+            Self::Composed(shards, inner) => {
+                Box::new(ShardedBackend::new(shards, inner.instantiate()))
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    /// The canonical CLI spelling; [`BackendKind::parse`] round-trips it.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Scalar => write!(f, "scalar"),
+            Self::Kernel => write!(f, "kernel"),
+            Self::Sharded(0) => write!(f, "sharded"),
+            Self::Sharded(n) => write!(f, "sharded:{n}"),
+            Self::Quant(bits) => write!(f, "quant:{bits}"),
+            Self::Composed(0, inner) => write!(f, "sharded+{inner}"),
+            Self::Composed(n, inner) => write!(f, "sharded:{n}+{inner}"),
         }
     }
 }
@@ -286,6 +543,14 @@ impl ScoreBackend for ShardedBackend {
         "sharded"
     }
 
+    fn describe(&self) -> String {
+        format!("sharded:{}+{}", self.shards, self.inner.describe())
+    }
+
+    fn slice_local(&self) -> bool {
+        self.inner.slice_local()
+    }
+
     fn score_batch_into(&self, mv: &[f32], dim_hd: usize, q: &[f32], bias: f32, out: &mut [f32]) {
         let d = dim_hd.max(1);
         let v = mv.len() / d;
@@ -350,6 +615,169 @@ impl ScoreBackend for ShardedBackend {
             out[lo..lo + part.len()].copy_from_slice(&part);
         }
     }
+
+    /// The rank-native sharded path: each worker scores its row slice
+    /// through the inner backend and reduces it to per-query
+    /// [`crate::model::rank_counts`] partials *before* the merge, so the
+    /// inter-shard traffic is `O(B)` counter pairs instead of the
+    /// `O(B · |V|)` score block [`Self::score_batch_into`] ships. Gold
+    /// scores are rescored up front through the inner backend — exact
+    /// because every in-tree inner is slice-local (per-row math); a
+    /// non-slice-local inner falls back to the dense default.
+    fn rank_batch_into(
+        &self,
+        mv: &[f32],
+        dim_hd: usize,
+        q: &[f32],
+        bias: f32,
+        golds: &[usize],
+        out: &mut [RankPartial],
+    ) {
+        let d = dim_hd.max(1);
+        let v = mv.len() / d;
+        let b = q.len() / d;
+        assert_eq!(golds.len(), b, "rank_batch_into: one gold per query");
+        assert_eq!(out.len(), b, "rank_batch_into: one partial per query");
+        let ranges = shard_ranges(v, self.plan_shards(v, b * d));
+        if ranges.len() <= 1 || !self.inner.slice_local() {
+            // single shard (or opaque inner): dense reduce, no fan-out win
+            let mut scores = vec![0f32; v * b];
+            self.inner.score_batch_into(mv, dim_hd, q, bias, &mut scores);
+            dense_rank_reduce(&scores, v, golds, out);
+            return;
+        }
+        let gold_scores: Vec<f32> = golds
+            .iter()
+            .enumerate()
+            .map(|(row, &gold)| {
+                assert!(gold < v, "rank_batch_into: gold {gold} out of range for {v} rows");
+                self.inner.score_one(
+                    &mv[gold * d..(gold + 1) * d],
+                    dim_hd,
+                    &q[row * d..(row + 1) * d],
+                    bias,
+                )
+            })
+            .collect();
+        let inner = &self.inner;
+        let gold_scores = &gold_scores;
+        // each worker ships B (better, equal) pairs, not B × shard floats
+        let parts: Vec<Vec<(usize, usize)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|&(lo, hi)| {
+                    s.spawn(move || {
+                        let sv = hi - lo;
+                        let mut block = vec![0f32; sv * b];
+                        inner.score_batch_into(&mv[lo * d..hi * d], dim_hd, q, bias, &mut block);
+                        (0..b)
+                            .map(|row| {
+                                rank_counts(&block[row * sv..(row + 1) * sv], gold_scores[row])
+                            })
+                            .collect()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+        });
+        for (row, o) in out.iter_mut().enumerate() {
+            let (mut better, mut equal) = (0usize, 0usize);
+            for part in &parts {
+                better += part[row].0;
+                equal += part[row].1;
+            }
+            *o = RankPartial { better, equal, gold_score: gold_scores[row] };
+        }
+    }
+
+    /// Pack host-side and take the reduced [`Self::rank_batch_into`] path
+    /// (the default would densify through `score_pairs_into`).
+    #[allow(clippy::too_many_arguments)]
+    fn rank_pairs_into(
+        &self,
+        mv: &[f32],
+        hr: &[f32],
+        dim_hd: usize,
+        pairs: &[(usize, usize)],
+        bias: f32,
+        golds: &[usize],
+        out: &mut [RankPartial],
+    ) {
+        let q = crate::model::pack_forward_queries(mv, hr, dim_hd, pairs);
+        self.rank_batch_into(mv, dim_hd, &q, bias, golds, out);
+    }
+
+    /// Shard-local bounded-heap top-k, k-way merged: each worker selects
+    /// its slice's `k` best per query (global vertex ids) and ships
+    /// `O(B · k)` candidates; the merge re-selects over `shards · k`
+    /// entries per query. Identical to selecting over the dense merge
+    /// because the comparator is the same and selection is associative.
+    fn top_k_batch_into(
+        &self,
+        mv: &[f32],
+        dim_hd: usize,
+        q: &[f32],
+        bias: f32,
+        k: usize,
+        out: &mut [Vec<(usize, f32)>],
+    ) {
+        let d = dim_hd.max(1);
+        let v = mv.len() / d;
+        let b = q.len() / d;
+        assert_eq!(out.len(), b, "top_k_batch_into: one list per query");
+        let ranges = shard_ranges(v, self.plan_shards(v, b * d));
+        if ranges.len() <= 1 || !self.inner.slice_local() {
+            let mut scores = vec![0f32; v * b];
+            self.inner.score_batch_into(mv, dim_hd, q, bias, &mut scores);
+            dense_top_k_reduce(&scores, v, k, out);
+            return;
+        }
+        let inner = &self.inner;
+        // per shard: one top-k list per query row
+        type ShardTops = Vec<Vec<(usize, f32)>>;
+        let mut parts: Vec<ShardTops> = std::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|&(lo, hi)| {
+                    s.spawn(move || {
+                        let sv = hi - lo;
+                        let mut block = vec![0f32; sv * b];
+                        inner.score_batch_into(&mv[lo * d..hi * d], dim_hd, q, bias, &mut block);
+                        (0..b)
+                            .map(|row| {
+                                kernels::top_k_select(&block[row * sv..(row + 1) * sv], k)
+                                    .into_iter()
+                                    .map(|(j, s)| (j + lo, s))
+                                    .collect()
+                            })
+                            .collect::<ShardTops>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+        });
+        for (row, o) in out.iter_mut().enumerate() {
+            let lists = parts.iter_mut().map(|p| std::mem::take(&mut p[row])).collect();
+            *o = kernels::merge_top_k(lists, k.min(v));
+        }
+    }
+
+    /// Pack host-side and take the reduced [`Self::top_k_batch_into`]
+    /// path (the default would densify through `score_pairs_into`).
+    #[allow(clippy::too_many_arguments)]
+    fn top_k_pairs_into(
+        &self,
+        mv: &[f32],
+        hr: &[f32],
+        dim_hd: usize,
+        pairs: &[(usize, usize)],
+        bias: f32,
+        k: usize,
+        out: &mut [Vec<(usize, f32)>],
+    ) {
+        let q = crate::model::pack_forward_queries(mv, hr, dim_hd, pairs);
+        self.top_k_batch_into(mv, dim_hd, &q, bias, k, out);
+    }
 }
 
 /// Fix-N quantized scoring: routes the Eq. 10 sweep and the dot decoder
@@ -380,6 +808,10 @@ impl QuantBackend {
 impl ScoreBackend for QuantBackend {
     fn name(&self) -> &'static str {
         "quant"
+    }
+
+    fn describe(&self) -> String {
+        format!("quant:{}", self.fp.bits)
     }
 
     fn score_batch_into(&self, mv: &[f32], dim_hd: usize, q: &[f32], bias: f32, out: &mut [f32]) {
@@ -415,6 +847,13 @@ impl PjrtBackend {
 impl ScoreBackend for PjrtBackend {
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+
+    /// The artifact's on-device reduction order is opaque: a single row
+    /// rescored host-side need not be bit-identical to the same row inside
+    /// an artifact batch, so the reduced rank path must not mix the two.
+    fn slice_local(&self) -> bool {
+        false
     }
 
     fn score_batch_into(&self, mv: &[f32], dim_hd: usize, q: &[f32], bias: f32, out: &mut [f32]) {
@@ -501,6 +940,61 @@ mod tests {
         assert!(BackendKind::parse("scalar:2").is_err());
         assert_eq!(BackendKind::Sharded(3).instantiate(0).name(), "sharded");
         assert_eq!(BackendKind::Quant(8).instantiate(0).name(), "quant");
+    }
+
+    #[test]
+    fn composed_kinds_parse_display_and_instantiate() {
+        use InnerBackendKind as Inner;
+        assert_eq!(
+            BackendKind::parse("sharded:4+quant:8").unwrap(),
+            BackendKind::Composed(4, Inner::Quant(8))
+        );
+        assert_eq!(
+            BackendKind::parse("SHARDED+Kernel").unwrap(),
+            BackendKind::Composed(0, Inner::Kernel)
+        );
+        assert_eq!(
+            BackendKind::parse("sharded:2+scalar").unwrap(),
+            BackendKind::Composed(2, Inner::Scalar)
+        );
+        // bad compositions are CLI errors, not panics
+        assert!(BackendKind::parse("quant:8+sharded:2").is_err(), "outer must be sharded");
+        assert!(BackendKind::parse("sharded:2+sharded:2").is_err(), "no nested sharding");
+        assert!(BackendKind::parse("sharded:2+quant").is_err(), "inner quant needs bits");
+        assert!(BackendKind::parse("sharded:0+kernel").is_err());
+        assert!(BackendKind::parse("kernel+kernel").is_err());
+        // Display is the canonical CLI spelling and parse round-trips it
+        for kind in [
+            BackendKind::Scalar,
+            BackendKind::Kernel,
+            BackendKind::Sharded(0),
+            BackendKind::Sharded(7),
+            BackendKind::Quant(4),
+            BackendKind::Composed(0, Inner::Kernel),
+            BackendKind::Composed(4, Inner::Quant(8)),
+            BackendKind::Composed(3, Inner::Scalar),
+        ] {
+            assert_eq!(BackendKind::parse(&kind.to_string()).unwrap(), kind, "{kind}");
+        }
+        let b = BackendKind::Composed(4, Inner::Quant(8)).instantiate(0);
+        assert_eq!(b.name(), "sharded");
+        assert_eq!(b.describe(), "sharded:4+quant:8");
+    }
+
+    #[test]
+    fn cli_composition_serves_byte_identically_to_code_built() {
+        // `--backend sharded:N+quant:M` must be the same backend as the
+        // code-constructed ShardedBackend-over-QuantBackend
+        let mut rng = Rng::seed_from_u64(21);
+        let (v, d, b) = (23, 13, 4);
+        let mv = randv(&mut rng, v * d);
+        let q = randv(&mut rng, b * d);
+        let from_cli = BackendKind::parse("sharded:3+quant:8").unwrap().instantiate(0);
+        let from_code = ShardedBackend::new(3, Box::new(QuantBackend::new(8, 1)));
+        assert_eq!(
+            from_cli.score_batch(&mv, d, &q, 0.5),
+            from_code.score_batch(&mv, d, &q, 0.5)
+        );
     }
 
     #[test]

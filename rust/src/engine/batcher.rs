@@ -119,9 +119,15 @@ impl MicroBatcher {
     }
 
     /// Time until the oldest pending request hits its deadline (`None` when
-    /// the queue is empty; zero when already expired).
+    /// the queue is empty; zero when already expired). A deadline too
+    /// large to represent as an `Instant` (`Duration::MAX`, an
+    /// effectively-infinite `--deadline-us`) saturates to `Duration::MAX`
+    /// — "never" — instead of panicking on `Instant` overflow.
     pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
-        self.pending.front().map(|&(_, _, t)| (t + self.deadline).saturating_duration_since(now))
+        self.pending.front().map(|&(_, _, t)| match t.checked_add(self.deadline) {
+            Some(due) => due.saturating_duration_since(now),
+            None => Duration::MAX,
+        })
     }
 
     /// Drain up to one `capacity`-sized batch, FIFO. Requests beyond the
@@ -223,6 +229,28 @@ mod tests {
         b.remove(s0);
         let rem = b.time_to_deadline(t0 + Duration::from_millis(3));
         assert_eq!(rem, Some(Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn huge_deadlines_do_not_overflow_instant() {
+        // Duration::MAX (an effectively-infinite --deadline-us) used to
+        // panic in time_to_deadline via `t + deadline`; it must instead
+        // report "never" and leave size the only flush trigger
+        let mut b = MicroBatcher::new(2, Duration::MAX);
+        let t0 = Instant::now();
+        b.push_at(req(0), t0);
+        let much_later = t0 + Duration::from_secs(3600);
+        assert_eq!(b.time_to_deadline(much_later), Some(Duration::MAX));
+        assert!(!b.deadline_expired(much_later));
+        assert!(!b.should_flush(much_later));
+        b.push_at(req(1), t0);
+        assert!(b.should_flush(t0), "a full batch still flushes");
+        // a huge-but-representable deadline keeps exact countdown semantics
+        let huge = Duration::from_secs(1u64 << 32);
+        let mut b = MicroBatcher::new(2, huge);
+        b.push_at(req(0), t0);
+        assert!(!b.should_flush(much_later));
+        assert_eq!(b.time_to_deadline(much_later), Some(huge - Duration::from_secs(3600)));
     }
 
     #[test]

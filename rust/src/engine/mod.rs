@@ -18,20 +18,32 @@
 //!   so the kernel layer amortizes every memory-matrix pass;
 //! * [`KgcEngine::submit_async`] — the non-blocking form: returns a
 //!   [`QueryHandle`] immediately, so one client can keep thousands of
-//!   queries in flight and poll ([`QueryHandle::poll`]) or block
-//!   ([`QueryHandle::wait`]) per handle; results are identical to
-//!   [`KgcEngine::submit`], and a handle dropped unresolved cancels its
-//!   work instead of leaking it;
+//!   queries in flight and poll ([`QueryHandle::poll`]), block
+//!   ([`QueryHandle::wait`]) per handle, or bulk-wait across handles
+//!   ([`KgcEngine::wait_any`], which returns completions out of
+//!   submission order); results are identical to [`KgcEngine::submit`],
+//!   and a handle dropped unresolved cancels its work instead of leaking
+//!   it;
 //! * [`KgcEngine::evaluate`] / [`KgcEngine::evaluate_both`] — the §5.2
 //!   filtered ranking protocol via the generic [`KgcModel`] code path.
 //!
 //! Execution strategy is pluggable through [`ScoreBackend`]
-//! (`--backend scalar|kernel|sharded:N|quant:N` on the CLI — the sharded
-//! form fans the (|V|, D) memory-matrix scan across N workers, the quant
-//! form scores on the fix-N grid; [`PjrtBackend`] comes from a loaded
-//! runtime), and every other scorer in the crate — the PJRT trainer view,
-//! the TransE/DistMult/R-GCN baselines — speaks the same [`KgcModel`]
-//! trait, so cross-model tables and the CLI run one generic path.
+//! (`--backend scalar|kernel|sharded:N|quant:N|sharded:N+quant:M` on the
+//! CLI — the sharded form fans the (|V|, D) memory-matrix scan across N
+//! workers, the quant form scores on the fix-N grid, and the composed
+//! `a+b` form runs the shard fan-out over a leaf backend;
+//! [`PjrtBackend`] comes from a loaded runtime), and every other scorer
+//! in the crate — the PJRT trainer view, the TransE/DistMult/R-GCN
+//! baselines — speaks the same [`KgcModel`] trait, so cross-model tables
+//! and the CLI run one generic path.
+//!
+//! Serving and evaluation are **rank-native**: rankings and filtered
+//! ranks flow through the backend's reduced sweeps
+//! ([`ScoreBackend::top_k_pairs_into`] / [`ScoreBackend::rank_pairs_into`])
+//! rather than dense `(B, |V|)` score blocks, so the sharded backend
+//! ships `O(B·k)` top-k candidates or `O(B)` rank partials across the
+//! shard merge instead of raw score slices; [`KgcEngine::score_batch`]
+//! remains for callers that want the full logits.
 //!
 //! Construction goes through [`EngineBuilder`]:
 //!
@@ -53,8 +65,8 @@ mod batcher;
 mod model;
 
 pub use backend::{
-    BackendKind, KernelBackend, PjrtBackend, QuantBackend, ScalarBackend, ScoreBackend,
-    ShardedBackend,
+    BackendKind, InnerBackendKind, KernelBackend, PjrtBackend, QuantBackend, RankPartial,
+    ScalarBackend, ScoreBackend, ShardedBackend,
 };
 pub use batcher::{MicroBatcher, QueryRequest, Ranking};
 pub use model::{evaluate_double, evaluate_forward, KgcModel};
@@ -121,6 +133,12 @@ impl KgcEngine {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.name()
+    }
+
+    /// Full backend description including parameters and composition
+    /// (e.g. `sharded:4+quant:8`).
+    pub fn backend_desc(&self) -> String {
+        self.backend.describe()
     }
 
     /// Serving batch capacity (the micro-batcher's flush size).
@@ -222,31 +240,81 @@ impl KgcEngine {
         QueryHandle { engine: self, seq, request: req, resolved: false }
     }
 
-    /// Block until `seq`'s ranking is published, leading flushes whenever
-    /// this thread is the first to observe a flush condition.
-    fn await_result(&self, seq: u64) -> Ranking {
+    /// The one serve loop every blocking wait runs: repeatedly try to
+    /// `claim` a published result under the lock, otherwise lead any due
+    /// flush (lock released while scoring, so submitters keep queueing),
+    /// otherwise sleep on the condvar until a leader publishes. The
+    /// timeout bounds any missed wakeup: it tracks the oldest pending
+    /// deadline, and the upper clamp keeps an effectively-infinite
+    /// configured deadline (`Duration::MAX`) out of the platform
+    /// condvar's timeout arithmetic — publication wakes us via
+    /// `notify_all` long before it matters.
+    fn claim_or_lead<T>(&self, mut claim: impl FnMut(&mut ServeState) -> Option<T>) -> T {
         loop {
             let mut st = self.serve.lock().unwrap();
-            if let Some(r) = st.results.remove(&seq) {
-                return r;
+            if let Some(out) = claim(&mut st) {
+                return out;
             }
             if st.batcher.should_flush(Instant::now()) {
-                // become the leader: drain one batch and score it with the
-                // lock released so other submitters keep queueing
                 let batch = st.batcher.take_batch();
                 drop(st);
                 self.lead(batch);
                 continue;
             }
-            // Wait for a leader to deliver our result or for the oldest
-            // pending deadline; the timeout bounds any missed wakeup.
             let wait = st
                 .batcher
                 .time_to_deadline(Instant::now())
                 .unwrap_or(self.deadline)
-                .max(Duration::from_micros(50));
+                .clamp(Duration::from_micros(50), Duration::from_secs(3600));
             let (_guard, _timeout) = self.serve_cv.wait_timeout(st, wait).unwrap();
         }
+    }
+
+    /// Block until `seq`'s ranking is published, leading flushes whenever
+    /// this thread is the first to observe a flush condition.
+    fn await_result(&self, seq: u64) -> Ranking {
+        self.claim_or_lead(|st| st.results.remove(&seq))
+    }
+
+    /// Block until *any* of `handles` resolves; returns the index of the
+    /// resolved handle and its ranking — the `epoll`-style bulk wait for
+    /// async clients holding thousands of in-flight handles that complete
+    /// out of submission order. Condvar-based, like [`QueryHandle::wait`]:
+    /// the caller leads due flushes itself and otherwise sleeps until a
+    /// leader publishes, so there is no polling loop.
+    ///
+    /// The returned index's handle is left in `handles` but marked
+    /// resolved — its ranking has been handed over, so dropping it is a
+    /// no-op and a later [`QueryHandle::wait`] on it panics. Callers
+    /// typically `swap_remove(i)` it and loop until the set is empty.
+    ///
+    /// # Panics
+    /// If `handles` is empty (there is nothing to wait for), contains a
+    /// handle already resolved by [`QueryHandle::poll`] /
+    /// [`QueryHandle::wait`], or contains a handle from another engine.
+    pub fn wait_any(&self, handles: &mut [QueryHandle<'_>]) -> (usize, Ranking) {
+        assert!(!handles.is_empty(), "wait_any on an empty handle set would block forever");
+        for h in handles.iter() {
+            assert!(
+                std::ptr::eq(h.engine, self),
+                "wait_any: handle belongs to a different engine"
+            );
+            assert!(!h.resolved, "wait_any: handle already resolved");
+        }
+        // seq -> slice index, built once per call with the lock NOT held;
+        // each wakeup then scans only the (small, just-published) results
+        // table against it instead of rescanning the whole handle slice
+        // under the serve mutex — keeps a thousands-of-handles drain loop
+        // from going quadratic in lock-held work.
+        let seq_to_idx: HashMap<u64, usize> =
+            handles.iter().enumerate().map(|(i, h)| (h.seq, i)).collect();
+        let (i, r) = self.claim_or_lead(|st| {
+            let (seq, i) =
+                st.results.keys().find_map(|seq| seq_to_idx.get(seq).map(|&i| (*seq, i)))?;
+            Some((i, st.results.remove(&seq).expect("checked present")))
+        });
+        handles[i].resolved = true;
+        (i, r)
     }
 
     /// Score one drained batch and publish its rankings (discarding any
@@ -285,6 +353,10 @@ impl KgcEngine {
     /// matter. This is the load-driver the CLI `query` command, the
     /// serving bench, and the examples share.
     ///
+    /// The spawn count is clamped to `requests.len()`: a client beyond
+    /// the request count would submit nothing yet still contend on the
+    /// serve mutex (and pay its spawn), so it is never created.
+    ///
     /// # Panics
     /// If any request is out of range for the served graph (validated
     /// up front, before anything is enqueued).
@@ -292,7 +364,7 @@ impl KgcEngine {
         for &req in requests {
             self.validate_request(req);
         }
-        let clients = clients.max(1);
+        let clients = serve_clients(clients, requests.len());
         std::thread::scope(|s| {
             let handles: Vec<_> = (0..clients)
                 .map(|c| {
@@ -335,24 +407,69 @@ impl KgcEngine {
         self.backend.score_batch_into(&self.mem.data, d, &q, self.bias, out);
     }
 
-    /// Score and rank one drained micro-batch. Forward requests go through
-    /// [`ScoreBackend::score_pairs_into`] — the entry point backends with a
-    /// fused gather+score path (the PJRT score artifact) accelerate —
-    /// while backward requests take the packed-`q` path (`M_node − H_rel`),
-    /// which has no artifact equivalent. For the scalar/kernel backends
-    /// both routes are the same math on the same kernel, so a query's
-    /// logits are identical regardless of batch composition (the
-    /// batched-vs-unbatched parity tests rely on that).
-    ///
-    /// Single-direction batches (the common serving case) score straight
-    /// into the result buffer; only mixed batches pay a staging copy.
+    /// Shared body of the rank-native eval path (both directions): one
+    /// reduced [`ScoreBackend::rank_batch_into`] sweep over pre-packed
+    /// queries `q`, then each query's short filter list rescored
+    /// row-by-row against the same `q` — exact for slice-local backends.
+    /// `filters[row]` is query `row`'s filtered candidate list; one rank
+    /// is pushed per query.
+    fn reduced_ranks_chunk(
+        &self,
+        q: &[f32],
+        golds: &[usize],
+        filters: &[&[u32]],
+        ranks: &mut Vec<usize>,
+    ) {
+        let d = self.cfg.dim_hd;
+        let v = self.kg.num_vertices;
+        let mut parts = vec![RankPartial::default(); golds.len()];
+        self.backend.rank_batch_into(&self.mem.data, d, q, self.bias, golds, &mut parts);
+        for (row, (&gold, part)) in golds.iter().zip(&parts).enumerate() {
+            ranks.push(crate::model::filtered_rank_from_partial(
+                part.better,
+                part.equal,
+                part.gold_score,
+                gold,
+                v,
+                filters[row],
+                |fi| {
+                    self.backend.score_one(
+                        &self.mem.data[fi * d..(fi + 1) * d],
+                        d,
+                        &q[row * d..(row + 1) * d],
+                        self.bias,
+                    )
+                },
+            ));
+        }
+    }
+
+    /// Backward-direction top-k (`M_node − H_rel` packed queries) into
+    /// `tops`, one list per pair — the reduced-form sibling of
+    /// [`Self::score_backward_into`].
+    fn top_k_backward_into(&self, pairs: &[(usize, usize)], tops: &mut [Vec<(usize, f32)>]) {
+        let d = self.cfg.dim_hd;
+        let q = crate::model::pack_backward_queries(&self.mem.data, &self.hr, d, pairs);
+        self.backend.top_k_batch_into(&self.mem.data, d, &q, self.bias, self.top_k, tops);
+    }
+
+    /// Score and rank one drained micro-batch — rank-native: the batch
+    /// goes through the backend's reduced top-k sweep
+    /// ([`ScoreBackend::top_k_pairs_into`] forward, the packed-`q`
+    /// [`ScoreBackend::top_k_batch_into`] backward), so serving never
+    /// materializes a `(B, |V|)` score block here. For the sharded backend
+    /// that also shrinks the inter-shard merge from `O(B · |V|)` floats to
+    /// `O(B · k)` candidates; dense backends select inside the sweep.
+    /// The selection order (score descending, ties by ascending vertex id)
+    /// is identical to the old sort-based path, so a query's ranking is
+    /// unchanged by batch composition (the batched-vs-unbatched parity
+    /// tests rely on that).
     fn rank_requests(&self, batch: &[(u64, QueryRequest)]) -> Vec<(u64, Ranking)> {
         if batch.is_empty() {
             return Vec::new();
         }
         let d = self.cfg.dim_hd;
-        let v = self.kg.num_vertices;
-        let mut scores = vec![0f32; batch.len() * v];
+        let mut tops: Vec<Vec<(usize, f32)>> = vec![Vec::new(); batch.len()];
 
         let fwd_rows: Vec<usize> = (0..batch.len())
             .filter(|&i| batch[i].1.direction == Direction::Forward)
@@ -360,54 +477,53 @@ impl KgcEngine {
         let all_pairs =
             || batch.iter().map(|&(_, r)| (r.node, r.rel)).collect::<Vec<(usize, usize)>>();
         if fwd_rows.len() == batch.len() {
-            self.backend.score_pairs_into(
+            self.backend.top_k_pairs_into(
                 &self.mem.data,
                 &self.hr,
                 d,
                 &all_pairs(),
                 self.bias,
-                &mut scores,
+                self.top_k,
+                &mut tops,
             );
         } else if fwd_rows.is_empty() {
-            self.score_backward_into(&all_pairs(), &mut scores);
+            self.top_k_backward_into(&all_pairs(), &mut tops);
         } else {
-            // mixed directions: score each side into a staging buffer and
+            // mixed directions: sweep each side into a staging list and
             // scatter rows back to their submission positions
             let pairs_of = |rows: &[usize]| {
                 rows.iter().map(|&i| (batch[i].1.node, batch[i].1.rel)).collect::<Vec<_>>()
             };
-            let mut scatter = |rows: &[usize], out: &[f32]| {
+            let mut scatter = |rows: &[usize], side: &mut [Vec<(usize, f32)>]| {
                 for (k, &i) in rows.iter().enumerate() {
-                    scores[i * v..(i + 1) * v].copy_from_slice(&out[k * v..(k + 1) * v]);
+                    tops[i] = std::mem::take(&mut side[k]);
                 }
             };
             let fwd_pairs = pairs_of(&fwd_rows);
-            let mut out = vec![0f32; fwd_pairs.len() * v];
-            self.backend.score_pairs_into(
+            let mut side = vec![Vec::new(); fwd_pairs.len()];
+            self.backend.top_k_pairs_into(
                 &self.mem.data,
                 &self.hr,
                 d,
                 &fwd_pairs,
                 self.bias,
-                &mut out,
+                self.top_k,
+                &mut side,
             );
-            scatter(&fwd_rows, &out);
+            scatter(&fwd_rows, &mut side);
             let bwd_rows: Vec<usize> = (0..batch.len())
                 .filter(|&i| batch[i].1.direction == Direction::Backward)
                 .collect();
             let bwd_pairs = pairs_of(&bwd_rows);
-            let mut out = vec![0f32; bwd_pairs.len() * v];
-            self.score_backward_into(&bwd_pairs, &mut out);
-            scatter(&bwd_rows, &out);
+            let mut side = vec![Vec::new(); bwd_pairs.len()];
+            self.top_k_backward_into(&bwd_pairs, &mut side);
+            scatter(&bwd_rows, &mut side);
         }
 
         batch
             .iter()
-            .enumerate()
-            .map(|(row, &(seq, req))| {
-                let top = top_k_of(&scores[row * v..(row + 1) * v], self.top_k);
-                (seq, Ranking { request: req, top })
-            })
+            .zip(tops)
+            .map(|(&(seq, req), top)| (seq, Ranking { request: req, top }))
             .collect()
     }
 }
@@ -493,14 +609,23 @@ impl Drop for QueryHandle<'_> {
     }
 }
 
-/// Deterministic top-k: score descending, ties by ascending vertex id.
-/// (Full sort — |V| at preset scale is small; swap for a selection pass if
-/// a future preset makes this the serving bottleneck.)
-fn top_k_of(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
-    let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
-    idx.truncate(k);
-    idx.into_iter().map(|i| (i, scores[i])).collect()
+/// Client threads [`KgcEngine::serve_all`] actually spawns for a request
+/// stream: at least one, and never more than there are requests — a
+/// client beyond the request count would submit nothing yet still pay its
+/// spawn and contend on the serve mutex. Factored out so the clamp itself
+/// is directly unit-testable (the end-to-end served count is identical
+/// with or without it).
+fn serve_clients(requested: usize, requests: usize) -> usize {
+    requested.clamp(1, requests.max(1))
+}
+
+/// Deterministic top-k of a raw score vector: score descending, ties by
+/// ascending vertex id. Now the bounded-heap selection kernel
+/// ([`crate::hdc::kernels::top_k_select`], O(|V| log k)) instead of the
+/// old full |V| sort; output is identical, the selection edge-case and
+/// proptest suites pin it against sort-then-truncate.
+pub fn top_k_of(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
+    crate::hdc::kernels::top_k_select(scores, k)
 }
 
 impl KgcModel for KgcEngine {
@@ -520,6 +645,61 @@ impl KgcModel for KgcEngine {
 
     fn eval_chunk(&self) -> usize {
         self.batch_capacity
+    }
+
+    /// The rank-native eval path: per-chunk [`RankPartial`] sweeps through
+    /// [`ScoreBackend::rank_batch_into`] (queries packed once, reused for
+    /// the short filter rescoring) — bit-identical ranks to the dense
+    /// protocol for slice-local backends (per-row math), which is every
+    /// host backend. A non-slice-local backend (the PJRT artifact) opts
+    /// out and the dense protocol runs.
+    fn forward_ranks(
+        &self,
+        queries: &[(usize, usize, usize)],
+        labels: &LabelBatch,
+        chunk: usize,
+    ) -> crate::Result<Option<Vec<usize>>> {
+        if !self.backend.slice_local() {
+            return Ok(None);
+        }
+        let d = self.cfg.dim_hd;
+        let mut ranks = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(chunk.max(1)) {
+            let pairs: Vec<(usize, usize)> = chunk.iter().map(|&(s, r, _)| (s, r)).collect();
+            let golds: Vec<usize> = chunk.iter().map(|&(_, _, o)| o).collect();
+            let filters: Vec<&[u32]> =
+                chunk.iter().map(|&(s, r, _)| labels.objects(s, r)).collect();
+            // pack once: the same q drives the reduced sweep AND the
+            // filter rescoring (slice-local, so per-row values agree)
+            let q = crate::model::pack_forward_queries(&self.mem.data, &self.hr, d, &pairs);
+            self.reduced_ranks_chunk(&q, &golds, &filters, &mut ranks);
+        }
+        Ok(Some(ranks))
+    }
+
+    /// Backward half of the rank-native eval path: packed `M_o − H_r`
+    /// queries, gold = the triple's subject, filters from the subject
+    /// index.
+    fn backward_ranks(
+        &self,
+        triples: &[Triple],
+        subjects: &SubjectIndex,
+        chunk: usize,
+    ) -> crate::Result<Option<Vec<usize>>> {
+        if !self.backend.slice_local() {
+            return Ok(None);
+        }
+        let d = self.cfg.dim_hd;
+        let mut ranks = Vec::with_capacity(triples.len());
+        for chunk in triples.chunks(chunk.max(1)) {
+            let pairs: Vec<(usize, usize)> = chunk.iter().map(|t| (t.dst, t.rel)).collect();
+            let golds: Vec<usize> = chunk.iter().map(|t| t.src).collect();
+            let filters: Vec<&[u32]> =
+                chunk.iter().map(|t| subjects.subjects(t.rel, t.dst)).collect();
+            let q = crate::model::pack_backward_queries(&self.mem.data, &self.hr, d, &pairs);
+            self.reduced_ranks_chunk(&q, &golds, &filters, &mut ranks);
+        }
+        Ok(Some(ranks))
     }
 }
 
@@ -829,6 +1009,86 @@ mod tests {
         e.lead(batch);
         assert_eq!(e.unclaimed_results(), 0, "abandoned ranking must not leak");
         assert!(e.serve.lock().unwrap().abandoned.is_empty(), "marker consumed");
+    }
+
+    #[test]
+    fn serve_all_clamps_idle_clients_to_the_request_count() {
+        // the clamp itself, pinned directly: 64 requested clients for 3
+        // requests spawn exactly 3 submitter threads, never an idle one
+        assert_eq!(serve_clients(64, 3), 3);
+        assert_eq!(serve_clients(3, 3), 3);
+        assert_eq!(serve_clients(1, 3), 1);
+        assert_eq!(serve_clients(0, 3), 1, "at least one client");
+        assert_eq!(serve_clients(8, 0), 1, "empty stream spawns one no-op client");
+        // and end-to-end: every request is still served under the clamp
+        let e = tiny_engine(BackendKind::Kernel);
+        let reqs: Vec<QueryRequest> = (0..3).map(|i| QueryRequest::forward(i, 0)).collect();
+        assert_eq!(e.serve_all(&reqs, 64), 3);
+        assert_eq!(e.serve_all(&reqs, 1), 3);
+        assert_eq!(e.serve_all(&[], 8), 0);
+    }
+
+    #[test]
+    fn wait_any_returns_completions_out_of_submission_order() {
+        let e = tiny_engine(BackendKind::Kernel);
+        let reqs: Vec<QueryRequest> =
+            (0..6).map(|i| QueryRequest::forward(i + 1, i % 2)).collect();
+        let mut handles: Vec<QueryHandle> = reqs.iter().map(|&r| e.submit_async(r)).collect();
+        // lead the queued batches (capacity 4: two of them) in REVERSE
+        // order, so results publish in the opposite order of submission
+        let mut batches = Vec::new();
+        loop {
+            let batch = e.serve.lock().unwrap().batcher.take_batch();
+            if batch.is_empty() {
+                break;
+            }
+            batches.push(batch);
+        }
+        for batch in batches.into_iter().rev() {
+            e.lead(batch);
+        }
+        let mut collected = Vec::new();
+        while !handles.is_empty() {
+            let (i, ranking) = e.wait_any(&mut handles);
+            let h = handles.swap_remove(i);
+            assert_eq!(ranking.request, h.request());
+            assert_eq!(ranking, e.rank(h.request()));
+            collected.push(ranking.request);
+        }
+        assert_eq!(collected.len(), reqs.len());
+        assert_eq!(e.unclaimed_results(), 0);
+        assert_eq!(e.pending_queries(), 0);
+    }
+
+    #[test]
+    fn wait_any_leads_flushes_itself() {
+        // nothing else drives the queue: wait_any must lead the deadline
+        // flush for its own handles, like wait() does
+        let e = tiny_engine(BackendKind::Kernel);
+        let mut handles = vec![e.submit_async(QueryRequest::forward(2, 1))];
+        let (i, ranking) = e.wait_any(&mut handles);
+        assert_eq!(i, 0);
+        assert_eq!(ranking, e.rank(QueryRequest::forward(2, 1)));
+    }
+
+    #[test]
+    #[should_panic(expected = "empty handle set")]
+    fn wait_any_on_no_handles_panics_instead_of_hanging() {
+        let e = tiny_engine(BackendKind::Kernel);
+        let mut handles: Vec<QueryHandle> = Vec::new();
+        let _ = e.wait_any(&mut handles);
+    }
+
+    #[test]
+    #[should_panic(expected = "already resolved")]
+    fn wait_any_rejects_resolved_handles() {
+        let e = tiny_engine(BackendKind::Kernel);
+        let mut handles = vec![e.submit_async(QueryRequest::forward(1, 0))];
+        let (i, _) = e.wait_any(&mut handles);
+        assert_eq!(i, 0);
+        // the ranking was already handed over: a second bulk wait on the
+        // same handle must fail fast, like QueryHandle::wait after poll
+        let _ = e.wait_any(&mut handles);
     }
 
     #[test]

@@ -42,6 +42,37 @@ pub trait KgcModel {
     fn eval_chunk(&self) -> usize {
         64
     }
+
+    /// Reduced-result forward ranks: the filtered rank of each `(s, r, o)`
+    /// query without handing a dense `(chunk, |V|)` logit block back to
+    /// the evaluator; `chunk` bounds the internal sweep width exactly as
+    /// it bounds the dense protocol's. `Ok(None)` (the default) means the
+    /// model has no reduced path and [`evaluate_forward`] runs the dense
+    /// protocol; `Ok(Some(ranks))` must contain exactly the ranks the
+    /// dense protocol would produce — the engine parity tests pin that.
+    fn forward_ranks(
+        &self,
+        queries: &[(usize, usize, usize)],
+        labels: &LabelBatch,
+        chunk: usize,
+    ) -> crate::Result<Option<Vec<usize>>> {
+        let _ = (queries, labels, chunk);
+        Ok(None)
+    }
+
+    /// Reduced-result backward ranks: the filtered subject rank of each
+    /// triple, or `Ok(None)` for the dense protocol (the default) —
+    /// distinct from [`Self::backward_chunk`] returning `None`, which
+    /// marks a single-direction model.
+    fn backward_ranks(
+        &self,
+        triples: &[Triple],
+        subjects: &SubjectIndex,
+        chunk: usize,
+    ) -> crate::Result<Option<Vec<usize>>> {
+        let _ = (triples, subjects, chunk);
+        Ok(None)
+    }
 }
 
 /// Every margin-trained baseline is a forward-direction [`KgcModel`] for
@@ -71,6 +102,21 @@ pub fn evaluate_forward<M: KgcModel + ?Sized>(
     labels: &LabelBatch,
     chunk: usize,
 ) -> crate::Result<RankMetrics> {
+    // rank-native models (the engine over a slice-local backend) skip the
+    // dense (chunk, |V|) logit hand-off entirely
+    if let Some(ranks) = model.forward_ranks(queries, labels, chunk)? {
+        anyhow::ensure!(
+            ranks.len() == queries.len(),
+            "forward_ranks returned {} ranks for {} queries",
+            ranks.len(),
+            queries.len()
+        );
+        let mut m = RankMetrics::default();
+        for rank in ranks {
+            m.add_rank(rank);
+        }
+        return Ok(m.finalize());
+    }
     try_evaluate_ranking_batched(queries, labels, chunk, |qs| {
         let pairs: Vec<(usize, usize)> = qs.iter().map(|&(s, r, _)| (s, r)).collect();
         model.forward_chunk(&pairs)
@@ -91,6 +137,19 @@ pub fn evaluate_double<M: KgcModel + ?Sized>(
     let queries: Vec<(usize, usize, usize)> =
         triples.iter().map(|t| (t.src, t.rel, t.dst)).collect();
     let fwd = evaluate_forward(model, &queries, labels, chunk)?;
+    if let Some(ranks) = model.backward_ranks(triples, subjects, chunk)? {
+        anyhow::ensure!(
+            ranks.len() == triples.len(),
+            "backward_ranks returned {} ranks for {} triples",
+            ranks.len(),
+            triples.len()
+        );
+        let mut bwd = RankMetrics::default();
+        for rank in ranks {
+            bwd.add_rank(rank);
+        }
+        return Ok(RankMetrics::mean_of(&fwd, &bwd.finalize()));
+    }
     let mut bwd = RankMetrics::default();
     for tc in triples.chunks(chunk.max(1)) {
         let pairs: Vec<(usize, usize)> = tc.iter().map(|t| (t.dst, t.rel)).collect();

@@ -504,6 +504,82 @@ pub fn dot_scores_quant_into(
     });
 }
 
+// -------------------------------------------------------- top-k selection
+
+/// One candidate in a top-k selection. Ordering is "better is smaller":
+/// score descending under `total_cmp` (so NaNs order deterministically
+/// instead of poisoning comparisons), ties broken by ascending index —
+/// exactly the order a full `sort_by(total_cmp desc, idx asc)` produces.
+/// Equality is defined through the same total order, so `Eq`/`Ord` stay
+/// consistent even for NaN scores.
+#[derive(Debug, Clone, Copy)]
+struct TopKEntry {
+    idx: usize,
+    score: f32,
+}
+
+impl PartialEq for TopKEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for TopKEntry {}
+
+impl PartialOrd for TopKEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TopKEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Greater == worse, so a max-heap's root is the worst kept entry
+        other.score.total_cmp(&self.score).then(self.idx.cmp(&other.idx))
+    }
+}
+
+/// Deterministic top-k selection over a score vector: the `k` best
+/// `(index, score)` pairs, score descending, ties by ascending index. NaNs
+/// order by `total_cmp` (negative NaNs below −∞, positive NaNs above +∞ —
+/// identical to what a full `total_cmp` sort does, so no panic, no
+/// poisoned ordering).
+///
+/// A bounded max-heap of the k kept candidates (root = current worst)
+/// replaces the full |V| sort of the serving path: O(|V| log k) instead of
+/// O(|V| log |V|), and no |V|-sized index allocation. Output order and
+/// content are pinned to the full-sort reference by proptest.
+pub fn top_k_select(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let k = k.min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut heap = std::collections::BinaryHeap::with_capacity(k + 1);
+    for (idx, &score) in scores.iter().enumerate() {
+        let e = TopKEntry { idx, score };
+        if heap.len() < k {
+            heap.push(e);
+        } else if e < *heap.peek().expect("non-empty heap") {
+            heap.pop();
+            heap.push(e);
+        }
+    }
+    // ascending in the "better is smaller" order == best first
+    heap.into_sorted_vec().into_iter().map(|e| (e.idx, e.score)).collect()
+}
+
+/// Merge shard-local top-k lists (each already best-first, indices global)
+/// into one global top-k. The candidate pool is at most `shards * k`
+/// entries, so a sort of the concatenation beats a streaming k-way merge
+/// at every realistic shard count; ordering matches [`top_k_select`] on
+/// the concatenated dense vector by construction (same comparator).
+pub fn merge_top_k(parts: Vec<Vec<(usize, f32)>>, k: usize) -> Vec<(usize, f32)> {
+    let mut all: Vec<(usize, f32)> = parts.into_iter().flatten().collect();
+    all.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+    all.truncate(k);
+    all
+}
+
 /// Eq. 2 reconstruction scores without materializing any bound vector:
 /// `out[j] = cosine(m, H_j ∘ r)`, with `dot(m, H_j ∘ r)` and `‖H_j ∘ r‖²`
 /// fused into one pass and `‖m‖²` hoisted out of the vertex loop.
@@ -685,6 +761,70 @@ mod tests {
         let mut got = vec![0f32; n];
         dot_scores_quant_into(&mat, d, &q, fp, &mut got, &KernelConfig::with_threads(2));
         assert_eq!(want, got);
+    }
+
+    /// The full-sort reference the selection kernel replaced (and must
+    /// reproduce exactly, ties and NaNs included).
+    fn top_k_by_full_sort(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
+        let mut idx: Vec<usize> = (0..scores.len()).collect();
+        idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+        idx.truncate(k);
+        idx.into_iter().map(|i| (i, scores[i])).collect()
+    }
+
+    #[test]
+    fn top_k_select_edge_cases() {
+        let scores = [0.5f32, 0.9, 0.1, 0.9, 0.7];
+        // k == 1: the single best, lowest index on a tie
+        assert_eq!(top_k_select(&scores, 1), vec![(1, 0.9)]);
+        // k >= |V|: the whole vector, fully sorted
+        let full = top_k_select(&scores, 99);
+        assert_eq!(full, top_k_by_full_sort(&scores, 99));
+        assert_eq!(full.len(), scores.len());
+        // k == 0 and empty input are empty, not panics
+        assert!(top_k_select(&scores, 0).is_empty());
+        assert!(top_k_select(&[], 3).is_empty());
+        // all-equal scores: tie-break by ascending vertex id must hold
+        let flat = [2.5f32; 7];
+        let got = top_k_select(&flat, 4);
+        assert_eq!(got, vec![(0, 2.5), (1, 2.5), (2, 2.5), (3, 2.5)]);
+    }
+
+    #[test]
+    fn top_k_select_is_nan_safe_under_total_cmp() {
+        // NaNs must neither panic nor poison the order: total_cmp puts
+        // positive NaN above +inf, so the kernel and the full sort agree
+        let scores = [0.3f32, f32::NAN, 0.9, -f32::NAN, 0.9, f32::NEG_INFINITY];
+        for k in 0..=scores.len() + 1 {
+            let got = top_k_select(&scores, k);
+            let want = top_k_by_full_sort(&scores, k);
+            assert_eq!(got.len(), want.len(), "k={k}");
+            for (g, w) in got.iter().zip(&want) {
+                assert_eq!(g.0, w.0, "k={k}");
+                assert_eq!(g.1.to_bits(), w.1.to_bits(), "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_top_k_matches_select_on_the_dense_vector() {
+        let mut rng = Rng::seed_from_u64(7);
+        let scores: Vec<f32> = (0..40).map(|_| (rng.below(9) as f32) / 4.0).collect();
+        for k in [1usize, 3, 10, 40] {
+            let want = top_k_select(&scores, k);
+            // shard at uneven cut points, select per shard with global ids
+            let cuts = [0usize, 7, 19, 40];
+            let parts: Vec<Vec<(usize, f32)>> = cuts
+                .windows(2)
+                .map(|w| {
+                    top_k_select(&scores[w[0]..w[1]], k)
+                        .into_iter()
+                        .map(|(i, s)| (i + w[0], s))
+                        .collect()
+                })
+                .collect();
+            assert_eq!(merge_top_k(parts, k), want, "k={k}");
+        }
     }
 
     #[test]

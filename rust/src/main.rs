@@ -98,13 +98,17 @@ COMMANDS:
              [--lr <preset>] [--dataset learnable] [--seed 42]
              End-to-end training via PJRT artifacts (`make artifacts` first)
   query      [--model tiny] [--dataset learnable] [--scale 1.0]
-             [--backend kernel|scalar|sharded:N|quant:N] [--threads 0]
-             [--queries 256] [--batch <preset|B>] [--deadline-us 500]
-             [--clients <batch>] [--seed 42]
+             [--backend kernel|scalar|sharded[:N]|quant:N|sharded:N+quant:M]
+             [--threads 0] [--queries 256] [--batch <preset|B>]
+             [--deadline-us 500] [--clients <batch>] [--seed 42]
              Rank a query stream through the KgcEngine micro-batched
              serving path; prints throughput and filtered accuracy.
-             sharded:N fans the memory-matrix scan over N workers
-             (sharded = auto); quant:N scores on the fix-N grid
+             sharded[:N] fans the memory-matrix scan over N workers
+             (bare sharded = auto-size to the machine); quant:N scores
+             on the fix-N grid; sharded:N+(scalar|kernel|quant:M)
+             composes the shard fan-out over a leaf backend — e.g.
+             sharded:4+quant:8 runs fix-8 scoring on 4 shard workers,
+             byte-identical to unsharded quant:8
   simulate   [--dataset FB15K-237] [--accel u50] [--scale 1.0]
              FPGA cycle simulation of one training batch
   figures    --id <table3|table4|table5|table6|fig8a|fig8b|fig8c|fig8d|
@@ -183,7 +187,7 @@ fn cmd_query(args: &Args) -> hdreason::Result<()> {
     println!(
         "engine: preset {}, backend {}, serving batch {} (deadline {} us)",
         model,
-        engine.backend_name(),
+        engine.backend_desc(),
         engine.batch_capacity(),
         deadline_us
     );

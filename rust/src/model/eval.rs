@@ -63,37 +63,13 @@ impl RankMetrics {
 /// all candidates, then discount each distinct filtered id's contribution
 /// directly — filter lists (the known objects of one (s, r)) are short.
 pub fn rank_of(scores: &[f32], gold: usize, filter_out: &[u32]) -> usize {
-    let gs = scores[gold];
-    let mut better = 0usize;
-    let mut equal = 0usize;
-    for (i, &s) in scores.iter().enumerate() {
-        if i == gold {
-            continue;
-        }
-        if s > gs {
-            better += 1;
-        } else if s == gs {
-            equal += 1;
-        }
-    }
-    for (k, &f) in filter_out.iter().enumerate() {
-        let fi = f as usize;
-        if fi == gold || fi >= scores.len() {
-            continue;
-        }
-        // each distinct id is discounted once (label lists built across
-        // splits can repeat an object)
-        if filter_out[..k].contains(&f) {
-            continue;
-        }
-        let s = scores[fi];
-        if s > gs {
-            better -= 1;
-        } else if s == gs {
-            equal -= 1;
-        }
-    }
-    better + equal / 2 + 1
+    // One implementation for dense and reduced protocols: count over the
+    // dense vector, then apply the same filter discount the reduced path
+    // uses — so the two eval paths cannot drift apart.
+    let (better, equal) = rank_counts(scores, scores[gold]);
+    filtered_rank_from_partial(better, equal, scores[gold], gold, scores.len(), filter_out, |i| {
+        scores[i]
+    })
 }
 
 /// Per-shard partial of a rank merge: counts of scores in one contiguous
@@ -128,6 +104,47 @@ pub fn merged_rank(parts: impl IntoIterator<Item = (usize, usize)>) -> usize {
         equal += e;
     }
     better + equal.saturating_sub(1) / 2 + 1
+}
+
+/// Filtered rank from a reduced rank partial, without the dense score
+/// vector: `better`/`equal` are the merged whole-matrix [`rank_counts`]
+/// against `gold_score` (with the gold's own entry included once in
+/// `equal`, as its home shard contributes it), and `score_of(id)` rescores
+/// individual filtered candidates — filter lists are short, so rescoring
+/// them row-by-row is O(|filter| · D) against the O(|V| · D) sweep the
+/// dense protocol would redo.
+///
+/// Exactly [`rank_of`] on the dense vector whenever `score_of` returns the
+/// same value the counting pass saw for that id (slice-local row math —
+/// true of every host backend). Pinned by the eval tests.
+pub fn filtered_rank_from_partial(
+    better: usize,
+    equal: usize,
+    gold_score: f32,
+    gold: usize,
+    num_candidates: usize,
+    filter_out: &[u32],
+    mut score_of: impl FnMut(usize) -> f32,
+) -> usize {
+    let mut better = better;
+    // drop the gold's own contribution, mirroring rank_of's `i == gold` skip
+    let mut equal = equal.saturating_sub(1);
+    for (k, &f) in filter_out.iter().enumerate() {
+        let fi = f as usize;
+        if fi == gold || fi >= num_candidates {
+            continue;
+        }
+        if filter_out[..k].contains(&f) {
+            continue;
+        }
+        let s = score_of(fi);
+        if s > gold_score {
+            better -= 1;
+        } else if s == gold_score {
+            equal -= 1;
+        }
+    }
+    better + equal / 2 + 1
 }
 
 /// Batched filtered-ranking evaluation — the kernel-layer protocol. Queries
@@ -233,6 +250,31 @@ mod tests {
             // one shard per element is the finest legal split
             let fine = scores.iter().map(|&s| rank_counts(&[s], scores[gold]));
             assert_eq!(merged_rank(fine), want, "gold {gold} (singleton shards)");
+        }
+    }
+
+    #[test]
+    fn filtered_rank_from_partial_matches_rank_of() {
+        // coarse grid so ties are common; filters with duplicates, the
+        // gold itself, and out-of-range ids — all must mirror rank_of
+        let scores = vec![0.75, 0.5, 0.75, 0.25, 0.5, 0.75, 0.0];
+        let filters: Vec<Vec<u32>> =
+            vec![vec![], vec![0, 2], vec![2, 2, 5], vec![1, 9, 4], vec![3, 3, 0, 6]];
+        for gold in 0..scores.len() {
+            let (better, equal) = rank_counts(&scores, scores[gold]);
+            for filter in &filters {
+                let want = rank_of(&scores, gold, filter);
+                let got = filtered_rank_from_partial(
+                    better,
+                    equal,
+                    scores[gold],
+                    gold,
+                    scores.len(),
+                    filter,
+                    |i| scores[i],
+                );
+                assert_eq!(got, want, "gold {gold} filter {filter:?}");
+            }
         }
     }
 

@@ -14,8 +14,8 @@ mod score;
 
 pub use embeddings::ModelState;
 pub use eval::{
-    evaluate_ranking, evaluate_ranking_batched, merged_rank, rank_counts, rank_of,
-    try_evaluate_ranking_batched, RankMetrics,
+    evaluate_ranking, evaluate_ranking_batched, filtered_rank_from_partial, merged_rank,
+    rank_counts, rank_of, try_evaluate_ranking_batched, RankMetrics,
 };
 pub use loss::{bce_loss_host, sigmoid};
 pub use optimizer::{make_optimizer, Adagrad, Adam, Optimizer, Sgd};

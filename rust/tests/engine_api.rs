@@ -7,10 +7,10 @@
 
 use hdreason::baselines::{DistMult, MarginModel, TransE};
 use hdreason::engine::{
-    BackendKind, EngineBuilder, KernelBackend, KgcEngine, MicroBatcher, QuantBackend,
-    QueryHandle, QueryRequest, ScalarBackend, ScoreBackend, ShardedBackend,
+    top_k_of, BackendKind, EngineBuilder, KernelBackend, KgcEngine, MicroBatcher, QuantBackend,
+    QueryHandle, QueryRequest, RankPartial, ScalarBackend, ScoreBackend, ShardedBackend,
 };
-use hdreason::model::{evaluate_ranking_batched, RankMetrics};
+use hdreason::model::{evaluate_ranking_batched, merged_rank, rank_counts, rank_of, RankMetrics};
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
@@ -227,6 +227,151 @@ fn backend_parity_sharded_matches_kernel_exactly() {
             }
         }
     }
+}
+
+/// Random (|V|, D) matrix + (B, D) packed queries for the reduced-path
+/// parity matrix: |V| = 23 is prime, so shard counts 2 and 7 both leave a
+/// remainder shard.
+fn reduced_fixture(seed: u64) -> (Vec<f32>, Vec<f32>, Vec<usize>, usize, usize, usize) {
+    let mut rng = hdreason::util::Rng::seed_from_u64(seed);
+    let (v, d, b) = (23usize, 13usize, 6usize);
+    let mv: Vec<f32> = (0..v * d).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let q: Vec<f32> = (0..b * d).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let golds: Vec<usize> = (0..b).map(|i| (i * 7 + 1) % v).collect();
+    (mv, q, golds, v, d, b)
+}
+
+/// A fresh single-threaded leaf backend: kernel, or fix-N quant (fix-2
+/// makes grid ties common, exercising the `equal` counts and tie-breaks).
+fn leaf(bits: Option<u32>) -> Box<dyn ScoreBackend> {
+    match bits {
+        None => Box::new(KernelBackend::with_threads(1)),
+        Some(bits) => Box::new(QuantBackend::new(bits, 1)),
+    }
+}
+
+#[test]
+fn sharded_rank_partials_match_dense_rank_over_kernel_and_quant_inners() {
+    // acceptance pin: merged_rank over per-shard rank_counts partials ==
+    // rank_of on the dense merge, at shard counts that do and do not
+    // divide |V|, for both kernel and quant inners
+    let (mv, q, golds, v, d, b) = reduced_fixture(31);
+    for bits in [None, Some(8u32), Some(2)] {
+        let dense = leaf(bits).score_batch(&mv, d, &q, 1.5);
+        for shards in [1usize, 2, 7] {
+            let backend = ShardedBackend::new(shards, leaf(bits));
+            let mut parts = vec![RankPartial::default(); b];
+            backend.rank_batch_into(&mv, d, &q, 1.5, &golds, &mut parts);
+            for (row, (&gold, p)) in golds.iter().zip(&parts).enumerate() {
+                let row_scores = &dense[row * v..(row + 1) * v];
+                assert_eq!(
+                    p.gold_score.to_bits(),
+                    row_scores[gold].to_bits(),
+                    "bits {bits:?} shards {shards} row {row}: gold rescore drifted"
+                );
+                assert_eq!(
+                    (p.better, p.equal),
+                    rank_counts(row_scores, row_scores[gold]),
+                    "bits {bits:?} shards {shards} row {row}: counts"
+                );
+                assert_eq!(
+                    merged_rank(std::iter::once((p.better, p.equal))),
+                    rank_of(row_scores, gold, &[]),
+                    "bits {bits:?} shards {shards} row {row}: rank"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_top_k_matches_selection_on_the_dense_merge() {
+    // acceptance pin: shard-local select + k-way merge == top_k_of on the
+    // full score vector, byte-identical (ids AND scores), including
+    // k == 1, k >= |V|, and tie-heavy fix-2 grids
+    let (mv, q, _, v, d, b) = reduced_fixture(32);
+    for bits in [None, Some(8u32), Some(2)] {
+        let dense = leaf(bits).score_batch(&mv, d, &q, 1.5);
+        for shards in [1usize, 2, 7] {
+            let backend = ShardedBackend::new(shards, leaf(bits));
+            for k in [1usize, 3, 10, v, v + 9] {
+                let mut tops: Vec<Vec<(usize, f32)>> = vec![Vec::new(); b];
+                backend.top_k_batch_into(&mv, d, &q, 1.5, k, &mut tops);
+                for (row, top) in tops.iter().enumerate() {
+                    let want = top_k_of(&dense[row * v..(row + 1) * v], k);
+                    assert_eq!(top, &want, "bits {bits:?} shards {shards} k {k} row {row}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn composed_backend_kind_serves_identically_to_code_built() {
+    // `--backend sharded:3+quant:8` through parse + the builder must be
+    // the same serving backend as the code-constructed composition
+    let kind = BackendKind::parse("sharded:3+quant:8").unwrap();
+    let via_cli = EngineBuilder::new("tiny")
+        .dataset("learnable")
+        .seed(11)
+        .backend(kind)
+        .batch_capacity(8)
+        .deadline(Duration::from_millis(1))
+        .top_k(10_000)
+        .build()
+        .unwrap();
+    assert_eq!(via_cli.backend_name(), "sharded");
+    assert_eq!(via_cli.backend_desc(), "sharded:3+quant:8");
+    let via_code =
+        engine_custom(Box::new(ShardedBackend::new(3, Box::new(QuantBackend::new(8, 1)))));
+    for &(s, r) in &query_pairs(&via_code, 8) {
+        let req = QueryRequest::forward(s, r);
+        assert_eq!(via_cli.rank(req), via_code.rank(req), "req {req:?}");
+        assert_eq!(via_cli.submit(req), via_code.rank(req), "served req {req:?}");
+    }
+    assert_eq!(
+        via_cli.evaluate(&via_cli.kg().test).unwrap(),
+        via_code.evaluate(&via_code.kg().test).unwrap(),
+        "filtered eval must agree through the reduced path"
+    );
+}
+
+#[test]
+fn wait_any_stress_with_dropped_handles_interleaved() {
+    let e = engine(BackendKind::Kernel, 0, 4);
+    let v = e.num_candidates();
+    let r = e.kg().num_relations;
+    for round in 0..4usize {
+        let reqs: Vec<QueryRequest> = (0..12)
+            .map(|i| QueryRequest::forward((round * 17 + i * 5) % v, i % r))
+            .collect();
+        let mut kept: Vec<QueryHandle> = Vec::new();
+        for (i, &req) in reqs.iter().enumerate() {
+            let h = e.submit_async(req);
+            // every third handle is dropped unresolved at submission time
+            if i % 3 == 2 {
+                drop(h);
+            } else {
+                kept.push(h);
+            }
+        }
+        let mut served = 0usize;
+        while !kept.is_empty() {
+            let (i, ranking) = e.wait_any(&mut kept);
+            let h = kept.swap_remove(i);
+            assert_eq!(ranking.request, h.request(), "round {round}");
+            assert_eq!(ranking, e.rank(h.request()), "round {round}");
+            served += 1;
+            if served == 2 && kept.len() > 1 {
+                // drop another handle mid-collection: the remaining waits
+                // must neither deadlock nor receive the abandoned ranking
+                drop(kept.swap_remove(0));
+            }
+        }
+        assert_eq!(served, 7, "round {round}: 8 kept, 1 dropped mid-collection");
+    }
+    assert_eq!(e.pending_queries(), 0);
+    assert_eq!(e.unclaimed_results(), 0, "abandoned rankings must not leak");
 }
 
 #[test]

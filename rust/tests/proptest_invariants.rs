@@ -4,6 +4,8 @@
 
 use hdreason::cache::HvCache;
 use hdreason::config::ReplacementPolicy;
+use hdreason::engine::{KernelBackend, RankPartial, ScoreBackend, ShardedBackend};
+use hdreason::hdc::kernels::top_k_select;
 use hdreason::hdc::quant::FixedPoint;
 use hdreason::kg::{Csr, Triple};
 use hdreason::model::{merged_rank, rank_counts, rank_of};
@@ -195,6 +197,70 @@ fn prop_shard_merged_rank_equals_unsharded() {
         let parts: Vec<(usize, usize)> =
             cuts.windows(2).map(|w| rank_counts(&scores[w[0]..w[1]], scores[gold])).collect();
         assert_eq!(merged_rank(parts), want, "seed {seed}: cuts {cuts:?}");
+    }
+}
+
+#[test]
+fn prop_top_k_select_equals_full_sort_truncate() {
+    // the bounded-heap selection kernel must reproduce sort-then-truncate
+    // byte-for-byte on arbitrary score vectors: continuous values, coarse
+    // tie-heavy grids, infinities, and NaNs (total_cmp order)
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed);
+        let v = 1 + rng.below(300);
+        let scores: Vec<f32> = (0..v)
+            .map(|_| match rng.below(12) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                3..=7 => rng.below(5) as f32 / 2.0,
+                _ => rng.f32(),
+            })
+            .collect();
+        let k = rng.below(v + 4);
+        let got = top_k_select(&scores, k);
+        let mut idx: Vec<usize> = (0..v).collect();
+        idx.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+        idx.truncate(k);
+        assert_eq!(got.len(), idx.len(), "seed {seed} k {k}");
+        for (pos, (&(gi, gs), &wi)) in got.iter().zip(&idx).enumerate() {
+            assert_eq!(gi, wi, "seed {seed} k {k} pos {pos}");
+            assert_eq!(gs.to_bits(), scores[wi].to_bits(), "seed {seed} k {k} pos {pos}");
+        }
+    }
+}
+
+#[test]
+fn prop_sharded_rank_partials_equal_dense_counts() {
+    // the reduced sharded rank sweep must agree with counting over the
+    // dense merge for arbitrary shapes, shard counts, and golds
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed * 3 + 2);
+        let v = 2 + rng.below(60);
+        let d = 1 + rng.below(20);
+        let b = 1 + rng.below(5);
+        let shards = 1 + rng.below(9);
+        let mv: Vec<f32> = (0..v * d).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let q: Vec<f32> = (0..b * d).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let golds: Vec<usize> = (0..b).map(|_| rng.below(v)).collect();
+        let dense = KernelBackend::with_threads(1).score_batch(&mv, d, &q, 0.5);
+        let backend = ShardedBackend::new(shards, Box::new(KernelBackend::with_threads(1)));
+        let mut parts = vec![RankPartial::default(); b];
+        backend.rank_batch_into(&mv, d, &q, 0.5, &golds, &mut parts);
+        for (row, (&gold, p)) in golds.iter().zip(&parts).enumerate() {
+            let row_scores = &dense[row * v..(row + 1) * v];
+            assert_eq!(p.gold_score.to_bits(), row_scores[gold].to_bits(), "seed {seed}");
+            assert_eq!(
+                (p.better, p.equal),
+                rank_counts(row_scores, row_scores[gold]),
+                "seed {seed} shards {shards} row {row}"
+            );
+            assert_eq!(
+                merged_rank(std::iter::once((p.better, p.equal))),
+                rank_of(row_scores, gold, &[]),
+                "seed {seed} shards {shards} row {row}"
+            );
+        }
     }
 }
 
