@@ -1,19 +1,17 @@
-//! Link prediction + serving demo: train HDReason through the PJRT
-//! artifacts, hand the trained state to a [`hdreason::engine::KgcEngine`],
-//! answer (subject, relation, ?) queries through the engine's serving
-//! path, and compare HDReason against the TransE / DistMult baselines on
-//! identical data through the one generic `KgcModel` eval path — the
-//! Fig. 8(a) experiment at example scale.
-//!
-//! Requires PJRT artifacts (`make artifacts` + `--features pjrt`) for the
-//! training half; the engine itself is artifact-free.
+//! Link prediction + serving demo: train HDReason (PJRT artifacts when
+//! present, the host-native runtime otherwise), hand the trained state to
+//! a [`hdreason::engine::KgcEngine`], answer (subject, relation, ?)
+//! queries through the engine's serving path, and compare HDReason against
+//! the TransE / DistMult baselines on identical data through the one
+//! generic `KgcModel` eval path — the Fig. 8(a) experiment at example
+//! scale. Runs in every build; no artifacts required.
 
 use hdreason::baselines::{self, train_margin_model};
 use hdreason::config::RunConfig;
 use hdreason::coordinator::HdrTrainer;
 use hdreason::engine::{evaluate_forward, BackendKind, EngineBuilder, KgcModel, QueryRequest};
 use hdreason::kg::{generator, LabelBatch};
-use hdreason::runtime::{HdrRuntime, Manifest};
+use hdreason::runtime::{HdrRuntime, HostRuntime, Manifest, TrainerRuntime};
 
 fn main() -> hdreason::Result<()> {
     let mut rc = RunConfig::from_presets("tiny", "u50")?;
@@ -29,8 +27,13 @@ fn main() -> hdreason::Result<()> {
         kg.train.len()
     );
 
-    let manifest = Manifest::load(&Manifest::default_dir())?;
-    let runtime = HdrRuntime::load(&manifest, &rc.model)?;
+    let runtime: TrainerRuntime = match Manifest::load(&Manifest::default_dir())
+        .and_then(|m| HdrRuntime::load(&m, &rc.model))
+    {
+        Ok(rt) => rt.into(),
+        Err(_) => HostRuntime::with_kernel(&rc.model, 0).into(),
+    };
+    println!("training runtime: {}", runtime.describe());
     let mut trainer = HdrTrainer::new(rc, runtime, &kg)?;
     trainer.fit()?;
 
@@ -59,7 +62,7 @@ fn main() -> hdreason::Result<()> {
 
     // ---- accuracy comparison: one generic KgcModel eval path ------------
     println!("\naccuracy comparison (filtered test metrics):");
-    println!("{}", trainer.evaluate(&kg.test)?.row("HDReason (PJRT)"));
+    println!("{}", trainer.evaluate(&kg.test)?.row("HDReason (trainer)"));
     println!("{}", engine.evaluate(&kg.test)?.row("HDReason (engine)"));
 
     let labels = LabelBatch::full(&kg);

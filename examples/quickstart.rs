@@ -4,10 +4,10 @@
 //! synthetic KG — no AOT artifacts required — and walks the serving
 //! surface: single-query ranking, the micro-batched `submit` path,
 //! filtered double-direction evaluation, and the §3.3 interpretability
-//! query. If PJRT artifacts are present (`make artifacts` +
-//! `--features pjrt`), it additionally trains end-to-end through the
-//! artifacts and rebuilds the engine from the trained state to show the
-//! accuracy moving; otherwise that section is skipped with a note.
+//! query. It then trains end-to-end — through the PJRT artifacts when
+//! present (`make artifacts` + `--features pjrt`), through the host-native
+//! `runtime::HostRuntime` otherwise — and rebuilds the engine from the
+//! trained state to show the accuracy moving.
 //!
 //!     cargo run --release --example quickstart
 
@@ -15,7 +15,7 @@ use hdreason::config::accel_preset;
 use hdreason::coordinator::HdrTrainer;
 use hdreason::engine::{BackendKind, EngineBuilder, QuantBackend, QueryRequest, ShardedBackend};
 use hdreason::hdc;
-use hdreason::runtime::{HdrRuntime, Manifest};
+use hdreason::runtime::{HdrRuntime, HostRuntime, Manifest, TrainerRuntime};
 use hdreason::sim::{simulate_batch, SimOptions, Workload};
 use std::time::{Duration, Instant};
 
@@ -140,13 +140,15 @@ fn main() -> hdreason::Result<()> {
     let both = engine.evaluate_both(&kg.test)?;
     println!("{}", both.row("engine untrained (2-dir)"));
 
-    // ---- optional: PJRT training, then serve the trained state -----------
-    match pjrt_training(&kg) {
+    // ---- training, then serve the trained state --------------------------
+    // PJRT artifacts when present; otherwise the host-native runtime — the
+    // training section runs in every build
+    match training(&kg) {
         Ok(after) => {
             println!("{}", after.row("engine trained   (test)"));
             assert!(after.mrr > before.mrr, "training must beat the untrained engine");
         }
-        Err(e) => println!("\n(skipping PJRT training section: {e})"),
+        Err(e) => println!("\n(skipping training section: {e})"),
     }
 
     // ---- interpretability (§3.3): reconstruct a vertex's neighbors -------
@@ -178,21 +180,26 @@ fn main() -> hdreason::Result<()> {
     Ok(())
 }
 
-/// Train through the PJRT artifacts and re-evaluate through a fresh engine
-/// built from the trained state. Fails (gracefully, at the call site) when
-/// artifacts are absent or the crate was built without `--features pjrt`.
-fn pjrt_training(
-    kg: &hdreason::kg::KnowledgeGraph,
-) -> hdreason::Result<hdreason::model::RankMetrics> {
+/// Train end-to-end — through the PJRT artifacts when they are compiled
+/// and present, through the host-native runtime otherwise — then
+/// re-evaluate through a fresh engine built from the trained state.
+fn training(kg: &hdreason::kg::KnowledgeGraph) -> hdreason::Result<hdreason::model::RankMetrics> {
     let mut rc = hdreason::config::RunConfig::from_presets("tiny", "u50")?;
     rc.train.epochs = 48;
     rc.train.steps_per_epoch = 16; // 768 train steps end-to-end
     rc.train.lr = 2e-2;
     rc.train.eval_every = 10;
     rc.validate()?;
-    let manifest = Manifest::load(&Manifest::default_dir())?;
-    let runtime = HdrRuntime::load(&manifest, &rc.model)?;
-    println!("\nPJRT platform: {} (jax {} artifacts)", runtime.platform(), manifest.jax_version);
+    let runtime: TrainerRuntime = match Manifest::load(&Manifest::default_dir())
+        .and_then(|m| HdrRuntime::load(&m, &rc.model))
+    {
+        Ok(rt) => rt.into(),
+        Err(e) => {
+            println!("\n(PJRT unavailable: {e}; training on the host-native runtime)");
+            HostRuntime::with_kernel(&rc.model, 0).into()
+        }
+    };
+    println!("training runtime: {}", runtime.describe());
     let mut trainer = HdrTrainer::new(rc, runtime, kg)?;
     trainer.fit()?;
     print!("{}", trainer.log.render());

@@ -23,7 +23,7 @@
 //!    Target: sharded rank-only ≥ 2x the sharded dense-merge path.
 //!
 //! Run: cargo bench --bench engine_serving [-- --json [PATH]]
-//! (`--json` appends rows to BENCH_4.json at the repo root by default.)
+//! (`--json` appends rows to BENCH_5.json at the repo root by default.)
 
 use hdreason::bench::harness::{bench, maybe_append_json, BenchResult};
 use hdreason::config::model_preset;

@@ -1,0 +1,127 @@
+//! Bench: host-native training throughput — `HostRuntime::train_step`
+//! steps/sec on the engine backend seam, no PJRT artifacts required.
+//!
+//! The headline number is thread scaling: the same kernel-backend train
+//! step at 1 worker thread vs one per core (target: ≥ 2x at max threads —
+//! the encode/memorize/score/backward legs are all row-parallel). Also
+//! measured: the fix-8 quantized training backend (Fig. 9 at train time)
+//! and the sharded fan-out composition, plus a `small`-preset row where
+//! the scaling has real work to amortize against.
+//!
+//! Run: cargo bench --bench train_throughput [-- --json [PATH]]
+//! (`--json` appends rows to BENCH_5.json at the repo root by default.)
+
+use hdreason::bench::harness::{bench, maybe_append_json, BenchResult};
+use hdreason::config::model_preset;
+use hdreason::engine::BackendKind;
+use hdreason::kg::{generator, QueryBatcher};
+use hdreason::model::ModelState;
+use hdreason::runtime::{EdgeArrays, HostRuntime};
+use std::hint::black_box;
+
+/// One preset's training fixture: state, padded edges, and a fixed query
+/// batch with capacity-padded label rows (exactly what the trainer feeds).
+struct Fixture {
+    state: ModelState,
+    edges: EdgeArrays,
+    subj: Vec<i32>,
+    rel: Vec<i32>,
+    labels: Vec<f32>,
+}
+
+fn fixture(preset: &str) -> (hdreason::config::ModelConfig, Fixture) {
+    let cfg = model_preset(preset).unwrap();
+    let kg = generator::learnable_for_preset(&cfg, 0.8, 0);
+    let state = ModelState::init(&cfg, 0);
+    let edges = EdgeArrays::from_kg(&kg, &cfg);
+    let mut batcher = QueryBatcher::new(&kg, cfg.batch, 0);
+    let qb = batcher.next_batch();
+    let (live, cap) = (kg.num_vertices, cfg.num_vertices);
+    let mut labels = vec![0f32; cfg.batch * cap];
+    for row in 0..cfg.batch {
+        labels[row * cap..row * cap + live]
+            .copy_from_slice(&qb.labels[row * live..(row + 1) * live]);
+    }
+    (cfg, Fixture { state, edges, subj: qb.subj, rel: qb.rel, labels })
+}
+
+fn step_bench(
+    name: &str,
+    cfg: &hdreason::config::ModelConfig,
+    f: &Fixture,
+    kind: BackendKind,
+    threads: usize,
+    warmup: usize,
+    iters: usize,
+) -> BenchResult {
+    let rt = HostRuntime::new(cfg, kind.instantiate(threads), threads);
+    bench(name, warmup, iters, || {
+        let out = rt
+            .train_step(&f.state, &f.edges, &f.subj, &f.rel, &f.labels, 6.0, 0.1)
+            .expect("host train step");
+        black_box(out.loss);
+    })
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut push = |r: BenchResult| -> BenchResult {
+        println!("{} ({:.1} steps/s)", r.row(), r.per_second(1.0));
+        results.push(r.clone());
+        r
+    };
+    let max_threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    // ---- tiny preset: the CI-sized step --------------------------------
+    let (cfg, f) = fixture("tiny");
+    let t1 = push(step_bench("train_step/kernel/t1(tiny)", &cfg, &f, BackendKind::Kernel, 1, 3, 20));
+    let tmax = push(step_bench(
+        &format!("train_step/kernel/t{max_threads}(tiny)"),
+        &cfg,
+        &f,
+        BackendKind::Kernel,
+        max_threads,
+        3,
+        20,
+    ));
+    println!("  -> tiny thread scaling: {:.2}x\n", t1.median_s / tmax.median_s);
+
+    // quantized + sharded training backends, fixed at max parallelism
+    push(step_bench(
+        "train_step/quant8(tiny)",
+        &cfg,
+        &f,
+        BackendKind::Quant(8),
+        max_threads,
+        3,
+        20,
+    ));
+    push(step_bench(
+        &format!("train_step/sharded{max_threads}(tiny)"),
+        &cfg,
+        &f,
+        BackendKind::Sharded(max_threads),
+        max_threads,
+        3,
+        20,
+    ));
+    println!();
+
+    // ---- small preset: enough work for the >= 2x scaling target --------
+    let (cfg, f) = fixture("small");
+    let s1 =
+        push(step_bench("train_step/kernel/t1(small)", &cfg, &f, BackendKind::Kernel, 1, 1, 8));
+    let smax = push(step_bench(
+        &format!("train_step/kernel/t{max_threads}(small)"),
+        &cfg,
+        &f,
+        BackendKind::Kernel,
+        max_threads,
+        1,
+        8,
+    ));
+    let scaling = s1.median_s / smax.median_s;
+    println!("  -> small thread scaling: {scaling:.2}x (target >= 2x at max threads)");
+
+    maybe_append_json(&results);
+}

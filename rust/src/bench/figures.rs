@@ -13,7 +13,7 @@ use crate::hdc::{self, DropStrategy};
 use crate::kg::{generator, GraphStats, KnowledgeGraph, LabelBatch};
 use crate::model::{evaluate_ranking_batched, RankMetrics};
 use crate::platform::{self, accelerators, device};
-use crate::runtime::{HdrRuntime, Manifest};
+use crate::runtime::{HdrRuntime, HostRuntime, Manifest, TrainerRuntime};
 use crate::sim::{simulate_batch, SimOptions, Workload};
 use std::fmt::Write as _;
 
@@ -50,13 +50,19 @@ fn learnable_kg(seed: u64) -> (crate::config::ModelConfig, KnowledgeGraph) {
 }
 
 fn hdr_trained(kg: &KnowledgeGraph, epochs: usize) -> crate::Result<HdrTrainer<'_>> {
-    let manifest = Manifest::load(&Manifest::default_dir())?;
     let mut rc = RunConfig::from_presets("tiny", "u50")?;
     rc.train.epochs = epochs;
     rc.train.steps_per_epoch = 16;
     rc.train.eval_every = 0;
     rc.train.lr = 2e-2;
-    let runtime = HdrRuntime::load(&manifest, &rc.model)?;
+    // PJRT artifacts when compiled + present, the host-native runtime
+    // otherwise — the accuracy figures no longer require `make artifacts`
+    let runtime: TrainerRuntime = match Manifest::load(&Manifest::default_dir())
+        .and_then(|m| HdrRuntime::load(&m, &rc.model))
+    {
+        Ok(rt) => rt.into(),
+        Err(_) => HostRuntime::with_kernel(&rc.model, 0).into(),
+    };
     let mut t = HdrTrainer::new(rc, runtime, kg)?;
     t.fit()?;
     Ok(t)
@@ -197,7 +203,7 @@ pub fn fig8a() -> crate::Result<String> {
 
     let trainer = hdr_trained(&kg, 48)?;
     let hdr = trainer.evaluate_both(&eval_triples(&kg))?;
-    writeln!(out, "{}", hdr.row("HDR (D=128, PJRT, 2-dir)")).ok();
+    writeln!(out, "{}", hdr.row(&format!("HDR ({}, 2-dir)", trainer.runtime().describe()))).ok();
 
     // baselines: one generic `KgcModel` eval loop over the trained models
     let mut transe = baselines::TransE::new(kg.num_vertices, kg.num_relations, 32, 0);
@@ -223,7 +229,7 @@ pub fn fig8b() -> crate::Result<String> {
     writeln!(out, "Fig 8(b) — single-direction accuracy (tiny learnable KG)").ok();
     let trainer = hdr_trained(&kg, 48)?;
     let hdr = trainer.evaluate(&eval_triples(&kg))?;
-    writeln!(out, "{}", hdr.row("HDR (PJRT)")).ok();
+    writeln!(out, "{}", hdr.row(&format!("HDR ({})", trainer.runtime().describe()))).ok();
 
     let mut walker = baselines::RlWalker::new(&kg, 0);
     walker.max_hops = 1;

@@ -7,8 +7,21 @@ pub struct EpochLog {
     pub epoch: usize,
     pub mean_loss: f32,
     pub steps: usize,
+    /// Training time only. The in-loop evaluation is timed separately in
+    /// [`Self::eval_secs`] — per-epoch training throughput (the paper's
+    /// headline number) must not silently absorb ranking work on eval
+    /// epochs.
     pub secs: f64,
+    /// In-loop evaluation time (`0.0` on epochs that did not evaluate).
+    pub eval_secs: f64,
     pub eval: Option<RankMetrics>,
+}
+
+impl EpochLog {
+    /// Training steps per second this epoch (excluding eval time).
+    pub fn steps_per_sec(&self) -> f64 {
+        self.steps as f64 / self.secs.max(1e-12)
+    }
 }
 
 #[derive(Debug, Default, Clone)]
@@ -46,8 +59,8 @@ impl TrainingLog {
             ));
             if let Some(m) = &e.eval {
                 out.push_str(&format!(
-                    "  MRR {:.4} H@1 {:.3} H@10 {:.3}",
-                    m.mrr, m.hits1, m.hits10
+                    "  MRR {:.4} H@1 {:.3} H@10 {:.3} (eval {:.2}s)",
+                    m.mrr, m.hits1, m.hits10, e.eval_secs
                 ));
             }
             out.push('\n');
@@ -63,12 +76,29 @@ mod tests {
     #[test]
     fn log_tracks_best_mrr_and_curve() {
         let mut log = TrainingLog::default();
-        log.push(EpochLog { epoch: 0, mean_loss: 1.0, steps: 4, secs: 0.1, eval: None });
+        log.push(EpochLog {
+            epoch: 0,
+            mean_loss: 1.0,
+            steps: 4,
+            secs: 0.1,
+            eval_secs: 0.0,
+            eval: None,
+        });
         let m = RankMetrics { mrr: 0.4, ..Default::default() };
-        log.push(EpochLog { epoch: 1, mean_loss: 0.5, steps: 4, secs: 0.1, eval: Some(m) });
+        log.push(EpochLog {
+            epoch: 1,
+            mean_loss: 0.5,
+            steps: 4,
+            secs: 0.1,
+            eval_secs: 0.25,
+            eval: Some(m),
+        });
         assert_eq!(log.final_loss(), Some(0.5));
         assert_eq!(log.best_mrr(), 0.4);
         assert_eq!(log.loss_curve(), vec![(0, 1.0), (1, 0.5)]);
         assert!(log.render().contains("epoch   1"));
+        // eval time is reported separately from the train-time column
+        assert!(log.render().contains("(eval 0.25s)"));
+        assert!((log.epochs[0].steps_per_sec() - 40.0).abs() < 1e-9);
     }
 }

@@ -1,7 +1,9 @@
 //! The L3 coordinator: drives end-to-end HDReason training and evaluation
-//! through the PJRT artifacts — the software role the paper's host CPU
-//! plays (Fig. 3), with the FPGA kernel replaced by the XLA CPU backend
-//! and mirrored by the cycle simulator for hardware numbers.
+//! through a [`crate::runtime::TrainerRuntime`] — the software role the
+//! paper's host CPU plays (Fig. 3), with the FPGA kernel replaced by the
+//! PJRT train_step artifact (when compiled and present) or the pure-rust
+//! [`crate::runtime::HostRuntime`] over an engine score backend, and
+//! mirrored by the cycle simulator for hardware numbers.
 
 mod metrics;
 mod trainer;

@@ -1,25 +1,34 @@
-//! End-to-end HDReason trainer over the PJRT artifacts.
+//! End-to-end HDReason trainer over a pluggable training runtime.
 //!
-//! Division of labour mirrors the paper's CPU/FPGA split (§4.1):
-//!   * "kernel" work — encode/memorize/score/gradients — runs in the
-//!     train_step artifact (one fused XLA computation, the fwd/bwd
-//!     co-optimization realized by jax.vjp);
-//!   * host work — query batching, label rows, sigmoid, optimizer update,
-//!     eval ranking — runs here in rust.
+//! Division of labour mirrors the paper's CPU/accelerator split (§4.1):
+//! "kernel" work — encode/memorize/score/gradients — runs in the
+//! [`TrainerRuntime`] (the fused PJRT train_step artifact when compiled
+//! and present, the pure-rust [`crate::runtime::HostRuntime`] over an
+//! engine [`ScoreBackend`] otherwise); host work — query batching, label
+//! rows, sigmoid, optimizer update, eval ranking — runs here.
+//!
+//! In-loop evaluation is **rank-native** on the host runtime: the
+//! [`TrainerModel`] view routes the filtered protocol through the
+//! backend's reduced [`ScoreBackend::rank_batch_into`] sweep (per-query
+//! [`crate::engine::RankPartial`] counters instead of dense `(B, |V|)`
+//! logit blocks), so a sharded training backend ships `O(B)` counters
+//! across its per-epoch eval merges too.
 
 use super::metrics::{EpochLog, TrainingLog};
 use crate::config::RunConfig;
-use crate::engine::{evaluate_double, evaluate_forward, KernelBackend, KgcModel, ScoreBackend};
+use crate::engine::{
+    evaluate_double, evaluate_forward, BackendKind, KernelBackend, KgcModel, ScoreBackend,
+};
 use crate::hdc::GraphMemory;
 use crate::kg::{KnowledgeGraph, LabelBatch, QueryBatcher, SubjectIndex};
 use crate::model::{make_optimizer, ModelState, Optimizer, RankMetrics};
-use crate::runtime::{EdgeArrays, HdrRuntime};
+use crate::runtime::{EdgeArrays, HostRuntime, TrainerRuntime};
 use std::time::Instant;
 
 pub struct HdrTrainer<'kg> {
     pub rc: RunConfig,
     pub state: ModelState,
-    runtime: HdrRuntime,
+    runtime: TrainerRuntime,
     edges: EdgeArrays,
     kg: &'kg KnowledgeGraph,
     opt_ev: Box<dyn Optimizer>,
@@ -28,7 +37,11 @@ pub struct HdrTrainer<'kg> {
 }
 
 impl<'kg> HdrTrainer<'kg> {
-    pub fn new(rc: RunConfig, runtime: HdrRuntime, kg: &'kg KnowledgeGraph) -> crate::Result<Self> {
+    pub fn new(
+        rc: RunConfig,
+        runtime: impl Into<TrainerRuntime>,
+        kg: &'kg KnowledgeGraph,
+    ) -> crate::Result<Self> {
         rc.validate()?;
         anyhow::ensure!(
             kg.num_vertices <= rc.model.num_vertices
@@ -41,13 +54,35 @@ impl<'kg> HdrTrainer<'kg> {
         let edges = EdgeArrays::from_kg(kg, &rc.model);
         let opt_ev = make_optimizer(rc.train.optimizer, rc.train.lr, state.ev.len());
         let opt_er = make_optimizer(rc.train.optimizer, rc.train.lr, state.er.len());
-        Ok(Self { rc, state, runtime, edges, kg, opt_ev, opt_er, log: TrainingLog::default() })
+        Ok(Self {
+            rc,
+            state,
+            runtime: runtime.into(),
+            edges,
+            kg,
+            opt_ev,
+            opt_er,
+            log: TrainingLog::default(),
+        })
+    }
+
+    /// Host-native trainer over an engine score backend — training without
+    /// artifacts, in every build (the CLI `train --runtime host` path).
+    /// `threads = 0` auto-sizes the kernel layer (honouring `HDR_THREADS`).
+    pub fn host(
+        rc: RunConfig,
+        kg: &'kg KnowledgeGraph,
+        backend: BackendKind,
+        threads: usize,
+    ) -> crate::Result<Self> {
+        let runtime = HostRuntime::new(&rc.model, backend.instantiate(threads), threads);
+        Self::new(rc, runtime, kg)
     }
 
     /// Run one epoch of `steps` train steps; returns the mean loss.
     ///
     /// Label rows are padded from the live vertex count up to the
-    /// artifact's |V| capacity (padding vertices never appear as gold
+    /// runtime's |V| capacity (padding vertices never appear as gold
     /// objects, so their labels are all-zero).
     pub fn train_epoch(&mut self, batcher: &mut QueryBatcher, steps: usize) -> crate::Result<f32> {
         let mut total = 0f64;
@@ -84,16 +119,17 @@ impl<'kg> HdrTrainer<'kg> {
         Ok((total / steps.max(1) as f64) as f32)
     }
 
-    /// Eval-time [`KgcModel`] view of this trainer: forward queries run
-    /// the PJRT forward artifact, backward queries run a lazily-memorized
-    /// host memory snapshot through the kernel backend. The generic
-    /// `engine::evaluate_*` protocol does the ranking.
+    /// Eval-time [`KgcModel`] view of this trainer. On the PJRT runtime,
+    /// forward queries run the forward artifact and backward queries run a
+    /// lazily-memorized host snapshot through the kernel backend; on the
+    /// host runtime both directions run the training backend over the same
+    /// snapshot, through the reduced rank sweep when it is slice-local.
+    /// The generic `engine::evaluate_*` protocol does the ranking.
     pub fn model(&self) -> TrainerModel<'_, 'kg> {
-        TrainerModel { trainer: self, backend: KernelBackend::default(), host: Default::default() }
+        TrainerModel { trainer: self, fallback: KernelBackend::default(), host: Default::default() }
     }
 
-    /// Filtered-ranking evaluation over a triple list, batched through the
-    /// forward artifact (queries padded to |B|) — the generic
+    /// Filtered-ranking evaluation over a triple list — the generic
     /// [`evaluate_forward`] protocol over [`Self::model`].
     pub fn evaluate(&self, triples: &[crate::kg::Triple]) -> crate::Result<RankMetrics> {
         let labels = LabelBatch::full(self.kg);
@@ -103,10 +139,9 @@ impl<'kg> HdrTrainer<'kg> {
     }
 
     /// Double-direction evaluation (§2.2): averages forward `(s, r, ?)`
-    /// ranking (through the PJRT forward artifact) with backward
-    /// `(?, r, o)` ranking (host-side inverse translation over the same
-    /// memory hypervectors) — the protocol behind Fig. 8(a), via the
-    /// generic [`evaluate_double`] code path.
+    /// ranking with backward `(?, r, o)` ranking (inverse translation over
+    /// the same memory hypervectors) — the protocol behind Fig. 8(a), via
+    /// the generic [`evaluate_double`] code path.
     pub fn evaluate_both(&self, triples: &[crate::kg::Triple]) -> crate::Result<RankMetrics> {
         let labels = LabelBatch::full(self.kg);
         let subjects = SubjectIndex::full(self.kg);
@@ -114,6 +149,12 @@ impl<'kg> HdrTrainer<'kg> {
     }
 
     /// Full training run per the TrainConfig; logs every epoch.
+    ///
+    /// The epoch timer measures *training only*: it is read before the
+    /// in-loop evaluation runs, and eval time lands in
+    /// [`EpochLog::eval_secs`] instead — otherwise every eval epoch's
+    /// per-epoch training-throughput number (the paper's headline metric)
+    /// would silently include ranking work.
     pub fn fit(&mut self) -> crate::Result<()> {
         let tc = self.rc.train.clone();
         let mut batcher = QueryBatcher::new(self.kg, self.rc.model.batch, tc.seed);
@@ -121,16 +162,20 @@ impl<'kg> HdrTrainer<'kg> {
         for epoch in 0..tc.epochs {
             let start = Instant::now();
             let mean_loss = self.train_epoch(&mut batcher, tc.steps_per_epoch)?;
-            let eval = if tc.eval_every > 0 && (epoch + 1) % tc.eval_every == 0 {
-                Some(self.evaluate(&self.kg.valid)?)
+            let secs = start.elapsed().as_secs_f64();
+            let (eval, eval_secs) = if tc.eval_every > 0 && (epoch + 1) % tc.eval_every == 0 {
+                let eval_start = Instant::now();
+                let m = self.evaluate(&self.kg.valid)?;
+                (Some(m), eval_start.elapsed().as_secs_f64())
             } else {
-                None
+                (None, 0.0)
             };
             self.log.push(EpochLog {
                 epoch,
                 mean_loss,
                 steps: tc.steps_per_epoch,
-                secs: start.elapsed().as_secs_f64(),
+                secs,
+                eval_secs,
                 eval,
             });
         }
@@ -150,7 +195,7 @@ impl<'kg> HdrTrainer<'kg> {
         }
     }
 
-    pub fn runtime(&self) -> &HdrRuntime {
+    pub fn runtime(&self) -> &TrainerRuntime {
         &self.runtime
     }
 
@@ -162,14 +207,16 @@ impl<'kg> HdrTrainer<'kg> {
 /// Borrowed eval view of an [`HdrTrainer`] implementing the crate-wide
 /// [`KgcModel`] interface (see [`HdrTrainer::model`]).
 ///
-/// The backward direction needs the encoded relation hypervectors and the
-/// memorized (|V|, D) matrix; both are built lazily on first use so
-/// forward-only evaluation (the per-epoch `fit` cadence) never pays for
-/// them.
+/// The backward direction (and, on the host runtime, the forward one too)
+/// needs the encoded relation hypervectors and the memorized (|V|, D)
+/// matrix; both are built lazily on first use so a run that never
+/// evaluates never pays for them.
 pub struct TrainerModel<'a, 'kg> {
     trainer: &'a HdrTrainer<'kg>,
-    backend: KernelBackend,
-    /// Lazily-built `(H^r, M^v)` host snapshot for the backward direction.
+    /// Scorer for the PJRT runtime's host-side backward leg; the host
+    /// runtime evaluates through its own training backend instead.
+    fallback: KernelBackend,
+    /// Lazily-built `(H^r, M^v)` host snapshot.
     host: std::cell::OnceCell<(Vec<f32>, GraphMemory)>,
 }
 
@@ -180,37 +227,89 @@ impl TrainerModel<'_, '_> {
             let d = t.rc.model.dim_hd;
             let hv = t.state.encode_vertices_host();
             let hr = t.state.encode_relations_host();
-            let mem = crate::hdc::memorize(&t.kg.train_csr(), &hv, &hr, d);
+            // memorize exactly the edges training aggregates — the
+            // (possibly truncated) EdgeArrays prefix, not the full split:
+            // on an over-capacity graph the full split would score a
+            // memory matrix no train step ever optimized
+            let e = t.edges();
+            let triples: Vec<crate::kg::Triple> = (0..e.live)
+                .map(|i| {
+                    crate::kg::Triple::new(
+                        e.src[i] as usize,
+                        e.rel[i] as usize,
+                        e.dst[i] as usize,
+                    )
+                })
+                .collect();
+            let csr = crate::kg::Csr::from_triples(t.kg.num_vertices, &triples);
+            let mem = crate::hdc::memorize(&csr, &hv, &hr, d);
             (hr, mem)
         })
+    }
+
+    /// The scorer this view ranks with: the training backend on the host
+    /// runtime (so eval sees exactly the logits training optimizes —
+    /// quantized eval for quantized training), the kernel fallback for the
+    /// PJRT runtime's host-side legs.
+    fn backend(&self) -> &dyn ScoreBackend {
+        match self.trainer.runtime() {
+            TrainerRuntime::Host(h) => h.backend(),
+            TrainerRuntime::Pjrt(_) => &self.fallback,
+        }
+    }
+
+    /// Whether the reduced rank sweep is exact here: every score must come
+    /// from the same slice-local host scorer. The PJRT runtime's forward
+    /// logits come from the artifact (opaque reduction order), so it stays
+    /// on the dense protocol.
+    fn reduced_eval(&self) -> bool {
+        matches!(self.trainer.runtime(), TrainerRuntime::Host(_)) && self.backend().slice_local()
     }
 }
 
 impl KgcModel for TrainerModel<'_, '_> {
     fn model_name(&self) -> String {
-        format!("HDR ({}, PJRT)", self.trainer.rc.model.preset)
+        format!("HDR ({}, {})", self.trainer.rc.model.preset, self.trainer.runtime().describe())
     }
 
     fn forward_chunk(&self, pairs: &[(usize, usize)]) -> crate::Result<Vec<f32>> {
         let t = self.trainer;
         let b = t.rc.model.batch;
-        let v = t.rc.model.num_vertices;
         // rank over the live vertex prefix only: capacity-padding vertices
         // are structurally impossible objects
         let live = t.kg.num_vertices;
-        anyhow::ensure!(pairs.len() <= b, "chunk {} exceeds artifact batch {b}", pairs.len());
-        let mut qs = vec![0i32; b];
-        let mut qr = vec![0i32; b];
-        for (i, &(s, r)) in pairs.iter().enumerate() {
-            qs[i] = s as i32;
-            qr[i] = r as i32;
+        anyhow::ensure!(pairs.len() <= b, "chunk {} exceeds eval batch {b}", pairs.len());
+        match t.runtime() {
+            TrainerRuntime::Pjrt(rt) => {
+                let v = t.rc.model.num_vertices;
+                let mut qs = vec![0i32; b];
+                let mut qr = vec![0i32; b];
+                for (i, &(s, r)) in pairs.iter().enumerate() {
+                    qs[i] = s as i32;
+                    qr[i] = r as i32;
+                }
+                let logits = rt.forward(&t.state, &t.edges, &qs, &qr, t.rc.train.bias as f32)?;
+                let mut out = Vec::with_capacity(pairs.len() * live);
+                for i in 0..pairs.len() {
+                    out.extend_from_slice(&logits[i * v..i * v + live]);
+                }
+                Ok(out)
+            }
+            TrainerRuntime::Host(_) => {
+                let d = t.rc.model.dim_hd;
+                let (hr, mem) = self.host_snapshot();
+                let mut out = vec![0f32; pairs.len() * live];
+                self.backend().score_pairs_into(
+                    &mem.data,
+                    hr,
+                    d,
+                    pairs,
+                    t.rc.train.bias as f32,
+                    &mut out,
+                );
+                Ok(out)
+            }
         }
-        let logits = t.runtime.forward(&t.state, &t.edges, &qs, &qr, t.rc.train.bias as f32)?;
-        let mut out = Vec::with_capacity(pairs.len() * live);
-        for i in 0..pairs.len() {
-            out.extend_from_slice(&logits[i * v..i * v + live]);
-        }
-        Ok(out)
     }
 
     fn backward_chunk(&self, pairs: &[(usize, usize)]) -> crate::Result<Option<Vec<f32>>> {
@@ -220,11 +319,86 @@ impl KgcModel for TrainerModel<'_, '_> {
         let (hr, mem) = self.host_snapshot();
         let q = crate::model::pack_backward_queries(&mem.data, hr, d, pairs);
         let mut out = vec![0f32; pairs.len() * live];
-        self.backend.score_batch_into(&mem.data, d, &q, 0.0, &mut out);
+        self.backend().score_batch_into(&mem.data, d, &q, t.rc.train.bias as f32, &mut out);
         Ok(Some(out))
     }
 
     fn eval_chunk(&self) -> usize {
         self.trainer.rc.model.batch
+    }
+
+    /// The rank-native in-loop eval path (ROADMAP's "per-shard
+    /// `RankPartial` sweeps for the trainer's in-loop eval"): reduced
+    /// [`ScoreBackend::rank_batch_into`] sweeps over the host snapshot,
+    /// chunked like the dense protocol — bit-identical ranks for
+    /// slice-local backends.
+    fn forward_ranks(
+        &self,
+        queries: &[(usize, usize, usize)],
+        labels: &LabelBatch,
+        chunk: usize,
+    ) -> crate::Result<Option<Vec<usize>>> {
+        if !self.reduced_eval() {
+            return Ok(None);
+        }
+        let t = self.trainer;
+        let d = t.rc.model.dim_hd;
+        let bias = t.rc.train.bias as f32;
+        let (hr, mem) = self.host_snapshot();
+        let mut ranks = Vec::with_capacity(queries.len());
+        for qchunk in queries.chunks(chunk.max(1)) {
+            let pairs: Vec<(usize, usize)> = qchunk.iter().map(|&(s, r, _)| (s, r)).collect();
+            let golds: Vec<usize> = qchunk.iter().map(|&(_, _, o)| o).collect();
+            let filters: Vec<&[u32]> =
+                qchunk.iter().map(|&(s, r, _)| labels.objects(s, r)).collect();
+            let q = crate::model::pack_forward_queries(&mem.data, hr, d, &pairs);
+            crate::engine::reduced_ranks_into(
+                self.backend(),
+                &mem.data,
+                d,
+                bias,
+                &q,
+                &golds,
+                &filters,
+                &mut ranks,
+            );
+        }
+        Ok(Some(ranks))
+    }
+
+    /// Backward half of the rank-native eval: packed `M_o − H_r` queries,
+    /// gold = the triple's subject, filters from the subject index.
+    fn backward_ranks(
+        &self,
+        triples: &[crate::kg::Triple],
+        subjects: &SubjectIndex,
+        chunk: usize,
+    ) -> crate::Result<Option<Vec<usize>>> {
+        if !self.reduced_eval() {
+            return Ok(None);
+        }
+        let t = self.trainer;
+        let d = t.rc.model.dim_hd;
+        let bias = t.rc.train.bias as f32;
+        let (hr, mem) = self.host_snapshot();
+        let mut ranks = Vec::with_capacity(triples.len());
+        for tchunk in triples.chunks(chunk.max(1)) {
+            let pairs: Vec<(usize, usize)> = tchunk.iter().map(|t| (t.dst, t.rel)).collect();
+            let golds: Vec<usize> = tchunk.iter().map(|t| t.src).collect();
+            let filters: Vec<&[u32]> =
+                tchunk.iter().map(|t| subjects.subjects(t.rel, t.dst)).collect();
+            let q = crate::model::pack_backward_queries(&mem.data, hr, d, &pairs);
+            crate::engine::reduced_ranks_into(
+                self.backend(),
+                &mem.data,
+                d,
+                bias,
+                &q,
+                &golds,
+                &filters,
+                &mut ranks,
+            );
+        }
+        Ok(Some(ranks))
     }
 }

@@ -407,12 +407,9 @@ impl KgcEngine {
         self.backend.score_batch_into(&self.mem.data, d, &q, self.bias, out);
     }
 
-    /// Shared body of the rank-native eval path (both directions): one
-    /// reduced [`ScoreBackend::rank_batch_into`] sweep over pre-packed
-    /// queries `q`, then each query's short filter list rescored
-    /// row-by-row against the same `q` — exact for slice-local backends.
-    /// `filters[row]` is query `row`'s filtered candidate list; one rank
-    /// is pushed per query.
+    /// Shared body of the rank-native eval path (both directions): the
+    /// crate-wide [`reduced_ranks_into`] over this engine's memory matrix
+    /// and backend.
     fn reduced_ranks_chunk(
         &self,
         q: &[f32],
@@ -420,28 +417,16 @@ impl KgcEngine {
         filters: &[&[u32]],
         ranks: &mut Vec<usize>,
     ) {
-        let d = self.cfg.dim_hd;
-        let v = self.kg.num_vertices;
-        let mut parts = vec![RankPartial::default(); golds.len()];
-        self.backend.rank_batch_into(&self.mem.data, d, q, self.bias, golds, &mut parts);
-        for (row, (&gold, part)) in golds.iter().zip(&parts).enumerate() {
-            ranks.push(crate::model::filtered_rank_from_partial(
-                part.better,
-                part.equal,
-                part.gold_score,
-                gold,
-                v,
-                filters[row],
-                |fi| {
-                    self.backend.score_one(
-                        &self.mem.data[fi * d..(fi + 1) * d],
-                        d,
-                        &q[row * d..(row + 1) * d],
-                        self.bias,
-                    )
-                },
-            ));
-        }
+        reduced_ranks_into(
+            self.backend.as_ref(),
+            &self.mem.data,
+            self.cfg.dim_hd,
+            self.bias,
+            q,
+            golds,
+            filters,
+            ranks,
+        );
     }
 
     /// Backward-direction top-k (`M_node − H_rel` packed queries) into
@@ -617,6 +602,45 @@ impl Drop for QueryHandle<'_> {
 /// with or without it).
 fn serve_clients(requested: usize, requests: usize) -> usize {
     requested.clamp(1, requests.max(1))
+}
+
+/// One chunk of the rank-native filtered eval protocol, shared by
+/// [`KgcEngine`] and the trainer's in-loop eval: one reduced
+/// [`ScoreBackend::rank_batch_into`] sweep over the pre-packed queries `q`
+/// (row-major (B, D)) against the (|V|, D) matrix `mv`, then each query's
+/// short filter list rescored row-by-row through
+/// [`ScoreBackend::score_one`] — exact w.r.t. the dense protocol for
+/// slice-local backends. `filters[row]` is query `row`'s filtered
+/// candidate list; one rank is pushed per query.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn reduced_ranks_into(
+    backend: &dyn ScoreBackend,
+    mv: &[f32],
+    dim_hd: usize,
+    bias: f32,
+    q: &[f32],
+    golds: &[usize],
+    filters: &[&[u32]],
+    ranks: &mut Vec<usize>,
+) {
+    let d = dim_hd.max(1);
+    let v = mv.len() / d;
+    let mut parts = vec![RankPartial::default(); golds.len()];
+    backend.rank_batch_into(mv, dim_hd, q, bias, golds, &mut parts);
+    for (row, (&gold, part)) in golds.iter().zip(&parts).enumerate() {
+        ranks.push(crate::model::filtered_rank_from_partial(
+            part.better,
+            part.equal,
+            part.gold_score,
+            gold,
+            v,
+            filters[row],
+            |fi| {
+                let qrow = &q[row * d..(row + 1) * d];
+                backend.score_one(&mv[fi * d..(fi + 1) * d], dim_hd, qrow, bias)
+            },
+        ));
+    }
 }
 
 /// Deterministic top-k of a raw score vector: score descending, ties by

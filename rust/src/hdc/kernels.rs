@@ -504,6 +504,192 @@ pub fn dot_scores_quant_into(
     });
 }
 
+// ------------------------------------------------------- training kernels
+
+/// L1 subgradient sign: `sgn(0) = 0`, matching the convention the AOT
+/// train_step artifact lowers for `∂|x|` (and making gradients of exactly
+/// tied coordinates vanish instead of picking a side).
+#[inline]
+fn sgn(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+/// Eq. 5/6 encode into a caller buffer: `out_i = tanh(e_i · H^B)` for each
+/// row of the (n, d) embedding matrix `e`, rows sharded across threads.
+/// Per-element accumulation order (ascending input dimension) matches
+/// [`super::Encoder::encode`], so the result is bit-identical to the
+/// scalar encoder — the equivalence test pins that.
+pub fn encode_tanh_into(
+    e: &[f32],
+    hb: &[f32],
+    dim_in: usize,
+    dim_hd: usize,
+    out: &mut [f32],
+    cfg: &KernelConfig,
+) {
+    assert!(dim_in > 0 && dim_hd > 0, "encode_tanh_into: zero dimension");
+    assert_eq!(e.len() % dim_in, 0, "encode_tanh_into: e must be (n, d)");
+    assert_eq!(hb.len(), dim_in * dim_hd, "encode_tanh_into: hb must be (d, D)");
+    let n = e.len() / dim_in;
+    assert_eq!(out.len(), n * dim_hd, "encode_tanh_into: out must be (n, D)");
+    let threads = cfg.plan_threads(n, dim_in * dim_hd);
+    par_rows(out, dim_hd, threads, |first, chunk| {
+        for (li, row) in chunk.chunks_mut(dim_hd).enumerate() {
+            let i = first + li;
+            row.fill(0.0);
+            for (a, &x) in e[i * dim_in..(i + 1) * dim_in].iter().enumerate() {
+                let hbrow = &hb[a * dim_hd..(a + 1) * dim_hd];
+                for (o, &w) in row.iter_mut().zip(hbrow) {
+                    *o += x * w;
+                }
+            }
+            for o in row.iter_mut() {
+                *o = o.tanh();
+            }
+        }
+    });
+}
+
+/// Backward of [`encode_tanh_into`] (Eqs. 11/12, the encode leg): given
+/// upstream gradients `g_h` w.r.t. the hypervectors and the forward output
+/// `h` itself, contract through the tanh jacobian and the frozen base
+/// matrix: `out[i][a] = Σ_k g_h[i][k] · (1 − h[i][k]²) · hb[a][k]`.
+/// `out` is the (n, d) gradient w.r.t. the original-space embeddings.
+pub fn encode_tanh_backward_into(
+    g_h: &[f32],
+    h: &[f32],
+    hb: &[f32],
+    dim_in: usize,
+    dim_hd: usize,
+    out: &mut [f32],
+    cfg: &KernelConfig,
+) {
+    assert!(dim_in > 0 && dim_hd > 0, "encode_tanh_backward_into: zero dimension");
+    assert_eq!(g_h.len(), h.len(), "encode_tanh_backward_into: g_h must match h");
+    assert_eq!(h.len() % dim_hd, 0, "encode_tanh_backward_into: h must be (n, D)");
+    assert_eq!(hb.len(), dim_in * dim_hd, "encode_tanh_backward_into: hb must be (d, D)");
+    let n = h.len() / dim_hd;
+    assert_eq!(out.len(), n * dim_in, "encode_tanh_backward_into: out must be (n, d)");
+    let threads = cfg.plan_threads(n, dim_in * dim_hd);
+    par_rows(out, dim_in, threads, |first, chunk| {
+        // worker-local tanh'-scaled gradient row, reused across rows
+        let mut t = vec![0f32; dim_hd];
+        for (li, orow) in chunk.chunks_mut(dim_in).enumerate() {
+            let i = first + li;
+            let hrow = &h[i * dim_hd..(i + 1) * dim_hd];
+            let grow = &g_h[i * dim_hd..(i + 1) * dim_hd];
+            for ((tk, &gk), &hk) in t.iter_mut().zip(grow).zip(hrow) {
+                *tk = gk * (1.0 - hk * hk);
+            }
+            for (a, o) in orow.iter_mut().enumerate() {
+                *o = dot_blocked(&t, &hb[a * dim_hd..(a + 1) * dim_hd]);
+            }
+        }
+    });
+}
+
+/// One worker's share of the L1-score backward: rows `first..first+rows`
+/// of the memory matrix, accumulating that slice of `g_mv` (disjoint per
+/// worker) and a worker-local `g_q` partial (summed by the caller).
+#[allow(clippy::too_many_arguments)]
+fn l1_backward_rows(
+    mv: &[f32],
+    d: usize,
+    v: usize,
+    q: &[f32],
+    g: &[f32],
+    first: usize,
+    g_mv_chunk: &mut [f32],
+    g_q: &mut [f32],
+) {
+    let b = q.len() / d;
+    for (lj, gm) in g_mv_chunk.chunks_mut(d).enumerate() {
+        let j = first + lj;
+        let row = &mv[j * d..(j + 1) * d];
+        gm.fill(0.0);
+        for bq in 0..b {
+            let w = g[bq * v + j];
+            if w == 0.0 {
+                continue;
+            }
+            let qrow = &q[bq * d..(bq + 1) * d];
+            let gqrow = &mut g_q[bq * d..(bq + 1) * d];
+            for k in 0..d {
+                let s = w * sgn(qrow[k] - row[k]);
+                gm[k] += s;
+                gqrow[k] -= s;
+            }
+        }
+    }
+}
+
+/// Backward of the batched Eq. 10 L1 scorer: given upstream gradients `g`
+/// (row-major (B, |V|), `g[b·|V| + j] = ∂L/∂logit_{b,j}` for
+/// `logit = bias − ||q_b − mv_j||₁`), accumulate
+///
+/// * `g_mv[j][k] = Σ_b g[b][j] · sgn(q_b[k] − mv_j[k])` — the candidate-row
+///   gradient, and
+/// * `g_q[b][k]  = −Σ_j g[b][j] · sgn(q_b[k] − mv_j[k])` — the packed-query
+///   gradient (the caller scatters it onto `M_s` / `H_r`).
+///
+/// Both outputs are overwritten. Memory-matrix rows shard across
+/// `std::thread::scope` workers exactly like the forward scorer — each
+/// worker owns a disjoint `g_mv` slice and a private `g_q` partial that the
+/// caller-side reduction sums, so `g_mv` is bit-identical at every thread
+/// count and `g_q` differs only by float reassociation across partials.
+pub fn l1_scores_batch_backward_into(
+    mv: &[f32],
+    dim_hd: usize,
+    q: &[f32],
+    g: &[f32],
+    g_mv: &mut [f32],
+    g_q: &mut [f32],
+    cfg: &KernelConfig,
+) {
+    let d = dim_hd.max(1);
+    let v = mv.len() / d;
+    let b = q.len() / d;
+    assert_eq!(g.len(), v * b, "l1_scores_batch_backward_into: g must be (B, |V|)");
+    assert_eq!(g_mv.len(), mv.len(), "l1_scores_batch_backward_into: g_mv must match mv");
+    assert_eq!(g_q.len(), q.len(), "l1_scores_batch_backward_into: g_q must match q");
+    g_q.fill(0.0);
+    if v == 0 || b == 0 {
+        g_mv.fill(0.0);
+        return;
+    }
+    let threads = cfg.plan_threads(v, 2 * b * d);
+    if threads <= 1 {
+        l1_backward_rows(mv, d, v, q, g, 0, g_mv, g_q);
+        return;
+    }
+    let rows_per = (v + threads - 1) / threads;
+    let partials: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = g_mv
+            .chunks_mut(rows_per * d)
+            .enumerate()
+            .map(|(t, chunk)| {
+                s.spawn(move || {
+                    let mut gq_local = vec![0f32; b * d];
+                    l1_backward_rows(mv, d, v, q, g, t * rows_per, chunk, &mut gq_local);
+                    gq_local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("train backward worker panicked")).collect()
+    });
+    for p in partials {
+        for (o, &x) in g_q.iter_mut().zip(&p) {
+            *o += x;
+        }
+    }
+}
+
 // -------------------------------------------------------- top-k selection
 
 /// One candidate in a top-k selection. Ordering is "better is smaller":
@@ -761,6 +947,111 @@ mod tests {
         let mut got = vec![0f32; n];
         dot_scores_quant_into(&mat, d, &q, fp, &mut got, &KernelConfig::with_threads(2));
         assert_eq!(want, got);
+    }
+
+    #[test]
+    fn encode_kernel_matches_scalar_encoder_bit_for_bit() {
+        let mut rng = Rng::seed_from_u64(20);
+        let (n, d, dd) = (9, 7, 13); // awkward, non-lane-multiple dims
+        let enc = crate::hdc::Encoder::new(d, dd, 3);
+        let e = randv(&mut rng, n * d);
+        let want = enc.encode_matrix(&e);
+        for threads in [1usize, 2, 8] {
+            let mut got = vec![0f32; n * dd];
+            let cfg = KernelConfig::with_threads(threads);
+            encode_tanh_into(&e, &enc.base, d, dd, &mut got, &cfg);
+            assert_eq!(want, got, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn encode_backward_matches_naive_contraction() {
+        let mut rng = Rng::seed_from_u64(21);
+        let (n, d, dd) = (5, 6, 11);
+        let hb = randv(&mut rng, d * dd);
+        let h: Vec<f32> = randv(&mut rng, n * dd).iter().map(|x| x.tanh()).collect();
+        let g_h = randv(&mut rng, n * dd);
+        // naive reference: strict triple loop
+        let mut want = vec![0f32; n * d];
+        for i in 0..n {
+            for a in 0..d {
+                let mut s = 0f32;
+                for k in 0..dd {
+                    let hk = h[i * dd + k];
+                    s += g_h[i * dd + k] * (1.0 - hk * hk) * hb[a * dd + k];
+                }
+                want[i * d + a] = s;
+            }
+        }
+        for threads in [1usize, 3] {
+            let mut got = vec![0f32; n * d];
+            let cfg = KernelConfig::with_threads(threads);
+            encode_tanh_backward_into(&g_h, &h, &hb, d, dd, &mut got, &cfg);
+            for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+                assert!(
+                    (w - g).abs() <= 1e-6 + 1e-5 * w.abs(),
+                    "threads {threads} elem {i}: {w} vs {g}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn l1_backward_matches_naive_subgradient() {
+        let mut rng = Rng::seed_from_u64(22);
+        let (v, d, b) = (19, 13, 5);
+        let mv = randv(&mut rng, v * d);
+        let q = randv(&mut rng, b * d);
+        let g = randv(&mut rng, b * v);
+        // naive reference: for every (b, j, k) accumulate the sign
+        let mut want_mv = vec![0f32; v * d];
+        let mut want_q = vec![0f32; b * d];
+        for bq in 0..b {
+            for j in 0..v {
+                let w = g[bq * v + j];
+                for k in 0..d {
+                    let s = w * sgn(q[bq * d + k] - mv[j * d + k]);
+                    want_mv[j * d + k] += s;
+                    want_q[bq * d + k] -= s;
+                }
+            }
+        }
+        for threads in [1usize, 2, 7] {
+            let mut g_mv = vec![1.0f32; v * d]; // overwritten, not accumulated
+            let mut g_q = vec![1.0f32; b * d];
+            let cfg = KernelConfig::with_threads(threads);
+            l1_scores_batch_backward_into(&mv, d, &q, &g, &mut g_mv, &mut g_q, &cfg);
+            // g_mv rows are worker-disjoint: bit-identical at any count
+            assert_eq!(want_mv, g_mv, "threads {threads}");
+            for (i, (w, got)) in want_q.iter().zip(&g_q).enumerate() {
+                assert!(
+                    (w - got).abs() <= 1e-5 + 1e-4 * w.abs(),
+                    "threads {threads} g_q[{i}]: {w} vs {got}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn l1_backward_vanishes_without_upstream_gradient() {
+        let mut rng = Rng::seed_from_u64(23);
+        let (v, d, b) = (7, 5, 3);
+        let mv = randv(&mut rng, v * d);
+        let q = randv(&mut rng, b * d);
+        let mut g_mv = vec![9f32; v * d];
+        let mut g_q = vec![9f32; b * d];
+        let zero_g = vec![0f32; b * v];
+        l1_scores_batch_backward_into(
+            &mv,
+            d,
+            &q,
+            &zero_g,
+            &mut g_mv,
+            &mut g_q,
+            &KernelConfig::with_threads(2),
+        );
+        assert!(g_mv.iter().all(|&x| x == 0.0), "g_mv must be overwritten to zero");
+        assert!(g_q.iter().all(|&x| x == 0.0), "g_q must be overwritten to zero");
     }
 
     /// The full-sort reference the selection kernel replaced (and must

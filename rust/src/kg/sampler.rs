@@ -171,8 +171,24 @@ impl NegativeSampler {
             }
         }
         // dense tiny graphs: fall back to an arbitrary corruption
-        Triple::new(t.src, t.rel, (t.dst + 1) % self.num_vertices)
+        fallback_corrupt(t, self.num_vertices)
     }
+}
+
+/// Deterministic last-resort corruption after the sampler's 64 random
+/// attempts all hit known facts: walk the object forward until it is
+/// neither the original object nor a self-loop. The old `(dst + 1) % |V|`
+/// form violated the no-self-loop invariant whenever
+/// `t.src == (t.dst + 1) % |V|`; for |V| ≥ 3 this version always returns a
+/// proper corruption (it may still be a *different* known fact — that is
+/// the fallback's documented compromise). A non-self-loop triple in a
+/// |V| = 2 graph has no valid object corruption at all (the only other
+/// vertex is the subject), so there the skip lands back on the original
+/// object.
+fn fallback_corrupt(t: &Triple, num_vertices: usize) -> Triple {
+    let dst = (t.dst + 1) % num_vertices;
+    let dst = if dst == t.src { (t.dst + 2) % num_vertices } else { dst };
+    Triple::new(t.src, t.rel, dst)
 }
 
 #[cfg(test)]
@@ -207,6 +223,74 @@ mod tests {
         let mut b = QueryBatcher::new(&kg, 8, 1);
         for _ in 0..steps {
             b.next_batch();
+        }
+    }
+
+    #[test]
+    fn weighted_positive_labels_carry_pos_weight() {
+        // pos_weight > 1 (the auto |V|/16 scaling on live graphs) must
+        // land on every positive label entry, not just stay at 1.0
+        let kg = kg();
+        let mut b = QueryBatcher::new(&kg, 16, 3);
+        b.pos_weight = 3.5;
+        let labels = LabelBatch::from_triples(kg.train.iter());
+        for _ in 0..3 {
+            let qb = b.next_batch();
+            for (i, &g) in qb.gold.iter().enumerate() {
+                assert_eq!(qb.labels[i * kg.num_vertices + g], 3.5, "gold carries the weight");
+            }
+            for (i, &x) in qb.labels.iter().enumerate() {
+                assert!(x == 0.0 || x == 3.5, "label {i} is {x}, want 0 or pos_weight");
+                // every weighted entry is a known object of its query row
+                if x != 0.0 {
+                    let (row, v) = (i / kg.num_vertices, i % kg.num_vertices);
+                    let (s, r) = (qb.subj[row] as usize, qb.rel[row] as usize);
+                    assert!(labels.objects(s, r).contains(&(v as u32)), "({s},{r}) -> {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fallback_corruption_never_self_loops_nor_returns_the_input() {
+        // the old fallback `(dst + 1) % |V|` produced src == dst whenever
+        // src == (dst + 1) % |V| — pin the fixed invariant exhaustively
+        for v in [3usize, 4, 5, 7] {
+            for src in 0..v {
+                for dst in 0..v {
+                    if src == dst {
+                        continue;
+                    }
+                    let t = Triple::new(src, 1, dst);
+                    let c = fallback_corrupt(&t, v);
+                    assert_eq!(c.src, src, "fallback corrupts the object only");
+                    assert_eq!(c.rel, t.rel);
+                    assert_ne!(c.src, c.dst, "self-loop from fallback (|V|={v}, t={t:?})");
+                    assert_ne!(c.dst, t.dst, "fallback returned the true triple (|V|={v})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_graph_exhausting_the_sampler_still_gets_valid_negatives() {
+        // a complete graph over one relation forces the 64-attempt loop to
+        // fail every time: every candidate is either known or a self-loop,
+        // so corrupt() must exercise the fallback — which still may not
+        // return a self-loop
+        let v = 5;
+        let mut kg = KnowledgeGraph::new("dense", v, 1);
+        for s in 0..v {
+            for d in 0..v {
+                if s != d {
+                    kg.train.push(Triple::new(s, 0, d));
+                }
+            }
+        }
+        let mut ns = NegativeSampler::new(&kg, 7);
+        for t in kg.train.clone() {
+            let n = ns.corrupt(&t);
+            assert_ne!(n.src, n.dst, "self-loop negative for {t:?}");
         }
     }
 

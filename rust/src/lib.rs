@@ -47,8 +47,11 @@
 //! * **L1 (python/compile/kernels, build-time)** — Pallas kernels for
 //!   encoding, binding, and the TransE L1 score.
 //!
-//! Python never runs on the request path: [`runtime`] loads the AOT
-//! artifacts via PJRT (`xla` crate) and [`coordinator`] drives training and
+//! Python never runs on the request path: [`runtime`] carries two training
+//! runtimes behind one `train_step` contract — the AOT artifacts via PJRT
+//! (`xla` crate, `--features pjrt`) and the host-native
+//! [`runtime::HostRuntime`] on the kernel layer (any build, any
+//! [`engine::ScoreBackend`]) — and [`coordinator`] drives training and
 //! inference entirely from rust.
 //!
 //! See `DESIGN.md` for the substitution table (FPGA → simulator, real KGs →

@@ -13,7 +13,7 @@ use hdreason::config::{accel_preset, RunConfig, ACCEL_PRESETS, MODEL_PRESETS};
 use hdreason::coordinator::HdrTrainer;
 use hdreason::engine::{BackendKind, EngineBuilder, QueryRequest};
 use hdreason::kg::generator;
-use hdreason::runtime::{HdrRuntime, Manifest};
+use hdreason::runtime::{HdrRuntime, HostRuntime, Manifest, TrainerRuntime};
 use hdreason::sim::{simulate_batch, SimOptions, Workload};
 
 struct Args {
@@ -96,7 +96,14 @@ COMMANDS:
   datasets   [--scale 0.05]                      Table 3 statistics
   train      [--model tiny] [--accel u50] [--epochs 20] [--steps 32]
              [--lr <preset>] [--dataset learnable] [--seed 42]
-             End-to-end training via PJRT artifacts (`make artifacts` first)
+             [--runtime auto|host|pjrt] [--backend <spec>] [--threads 0]
+             End-to-end training. `--runtime auto` (default) uses the PJRT
+             train_step artifact when compiled + present and otherwise the
+             host-native runtime, which needs no artifacts and scores
+             through any engine backend: `--backend
+             kernel|scalar|sharded[:N]|quant:N|sharded:N+quant:M` (e.g.
+             quant:8 trains on fix-8 logits). `--backend`/`--threads`
+             apply to the host runtime only.
   query      [--model tiny] [--dataset learnable] [--scale 1.0]
              [--backend kernel|scalar|sharded[:N]|quant:N|sharded:N+quant:M]
              [--threads 0] [--queries 256] [--batch <preset|B>]
@@ -153,9 +160,24 @@ fn cmd_train(args: &Args) -> hdreason::Result<()> {
         kg.train.len()
     );
 
-    let manifest = Manifest::load(&Manifest::default_dir())?;
-    let runtime = HdrRuntime::load(&manifest, &rc.model)?;
-    println!("runtime: PJRT {} / preset {}", runtime.platform(), rc.model.preset);
+    let backend = BackendKind::parse(&args.get("backend", "kernel"))?;
+    let threads = args.get_usize("threads", 0);
+    let host = || HostRuntime::new(&rc.model, backend.instantiate(threads), threads);
+    let load_pjrt =
+        || Manifest::load(&Manifest::default_dir()).and_then(|m| HdrRuntime::load(&m, &rc.model));
+    let runtime: TrainerRuntime = match args.get("runtime", "auto").as_str() {
+        "pjrt" => load_pjrt()?.into(),
+        "host" => host().into(),
+        "auto" => match load_pjrt() {
+            Ok(rt) => rt.into(),
+            Err(e) => {
+                eprintln!("note: PJRT unavailable ({e:#}); training on the host runtime");
+                host().into()
+            }
+        },
+        other => anyhow::bail!("unknown --runtime '{other}' (want auto|host|pjrt)"),
+    };
+    println!("runtime: {} / preset {}", runtime.describe(), rc.model.preset);
 
     let mut trainer = HdrTrainer::new(rc, runtime, &kg)?;
     trainer.fit()?;

@@ -17,20 +17,37 @@ pub struct EdgeArrays {
     pub dst: Vec<i32>,
     pub mask: Vec<f32>,
     pub live: usize,
+    /// Training triples dropped because the graph exceeded `cfg.num_edges`
+    /// (`0` when everything fits). Dropped edges never reach the memorize
+    /// aggregation, so a non-zero count means the model trains on a
+    /// subgraph — surfaced here and warned about at construction.
+    pub truncated: usize,
 }
 
 impl EdgeArrays {
-    /// Build from a KG's training split, padding (or truncating — with a
-    /// warning in the count) to `cfg.num_edges`.
+    /// Build from a KG's training split, padding up to `cfg.num_edges` —
+    /// or truncating down to it, recording the dropped count in
+    /// [`Self::truncated`] and warning on stderr.
     pub fn from_kg(kg: &KnowledgeGraph, cfg: &ModelConfig) -> Self {
         let e = cfg.num_edges;
         let live = kg.train.len().min(e);
+        let truncated = kg.train.len() - live;
+        if truncated > 0 {
+            eprintln!(
+                "warning: graph '{}' has {} training triples but preset '{}' caps |E| at {e}; \
+                 truncating {truncated} triples (the model trains on a subgraph)",
+                kg.name,
+                kg.train.len(),
+                cfg.preset
+            );
+        }
         let mut out = Self {
             src: vec![0; e],
             rel: vec![0; e],
             dst: vec![0; e],
             mask: vec![0.0; e],
             live,
+            truncated,
         };
         for (i, t) in kg.train.iter().take(live).enumerate() {
             out.src[i] = t.src as i32;
@@ -221,16 +238,23 @@ mod tests {
         let e = EdgeArrays::from_kg(&kg, &cfg);
         assert_eq!(e.src.len(), 1024);
         assert_eq!(e.live, 100);
+        assert_eq!(e.truncated, 0, "padding is not truncation");
         assert_eq!(e.mask.iter().filter(|&&m| m == 1.0).count(), 100);
         assert!(e.mask[100..].iter().all(|&m| m == 0.0));
     }
 
     #[test]
-    fn edge_arrays_truncate_overfull() {
+    fn edge_arrays_truncate_overfull_and_record_the_count() {
         let cfg = model_preset("tiny").unwrap();
         let mut kg = crate::kg::KnowledgeGraph::new("big", 256, 8);
         kg.train = (0..2000).map(|i| Triple::new(i % 256, i % 8, (i + 1) % 256)).collect();
         let e = EdgeArrays::from_kg(&kg, &cfg);
         assert_eq!(e.live, 1024);
+        // the doc promise: truncation is *counted*, not silent
+        assert_eq!(e.truncated, 2000 - 1024);
+        assert_eq!(e.mask.iter().filter(|&&m| m == 1.0).count(), 1024);
+        // the kept prefix is the first `live` triples, in order
+        assert_eq!(e.src[1023], kg.train[1023].src as i32);
+        assert_eq!(e.dst[1023], kg.train[1023].dst as i32);
     }
 }

@@ -1,0 +1,475 @@
+//! Host-native training runtime: the full `train_step` contract of the
+//! PJRT artifact executor in pure rust on the kernel layer — so `train`
+//! works in the default build, where `runtime/client.rs` is a stub.
+//!
+//! The compute graph is the same one `python/compile/model.py` lowers
+//! (Fig. 2(b)):
+//!
+//! ```text
+//! e^v, e^r ── tanh(e · H^B) ──▶ H^v, H^r          (encode, Eq. 5/6)
+//! H^v, H^r, edges ── Σ bind ──▶ M^v               (memorize, Eq. 1/7)
+//! M^v, queries ── bias − ‖q − M_j‖₁ ──▶ logits    (score, Eq. 10)
+//! logits, labels ── BCE ──▶ loss ── analytic ∇ ──▶ ∇e^v, ∇e^r (Eqs. 11/12)
+//! ```
+//!
+//! What makes the analytic backward tractable host-side is exactly the
+//! paper's §3 pitch: the HDC model is *linear* in its hypervectors — encode
+//! is one matmul through a frozen base matrix, memorize is a masked
+//! segment-sum of element-wise binds, and the score is a piecewise-linear
+//! L1 translation — so every jacobian is a sign pattern, a bind partner, or
+//! the frozen `H^B` itself (no per-layer weight gradients as a GCN would
+//! need). The heavy legs run in [`crate::hdc::kernels`]
+//! ([`kernels::encode_tanh_into`], [`kernels::memorize_into`],
+//! [`kernels::l1_scores_batch_backward_into`], row-parallel across
+//! `HDR_THREADS`-pinnable workers).
+//!
+//! The *forward score* routes through an [`crate::engine::ScoreBackend`],
+//! so training composes with the serving backends: `sharded:N` fans the
+//! (|V|, D) sweep across workers, and `quant:M` trains on fix-M logits
+//! (Fig. 9's quantization at train time) with the backward taking the
+//! float-grid straight-through estimate (gradients w.r.t. the unquantized
+//! hypervectors — the standard STE treatment).
+//!
+//! [`train_step_reference`] is the strict scalar reference (fresh
+//! allocations, naive loops, left-to-right sums) that the
+//! `host_training` equivalence tests pin the kernel path against.
+
+use super::executor::{EdgeArrays, TrainStepOutput};
+use crate::config::ModelConfig;
+use crate::engine::{ScalarBackend, ScoreBackend};
+use crate::hdc::kernels::{self, KernelConfig};
+use crate::kg::{Csr, Triple};
+use crate::model::{pack_forward_queries, sigmoid, ModelState};
+
+/// Pure-rust training runtime over the engine's [`ScoreBackend`] seam —
+/// the drop-in host replacement for the PJRT `train_step` artifact (same
+/// inputs, same [`TrainStepOutput`] contract, artifact-static shapes: all
+/// tensors are capacity-sized and padding vertices simply carry zero
+/// labels and empty neighborhoods, exactly as in the compiled graph).
+pub struct HostRuntime {
+    pub cfg: ModelConfig,
+    backend: Box<dyn ScoreBackend>,
+    kcfg: KernelConfig,
+}
+
+impl HostRuntime {
+    /// `threads` feeds the kernel-layer config for the encode / memorize /
+    /// backward legs (`0` = auto, honouring `HDR_THREADS`); the forward
+    /// score parallelism is whatever `backend` was built with.
+    pub fn new(cfg: &ModelConfig, backend: Box<dyn ScoreBackend>, threads: usize) -> Self {
+        Self { cfg: cfg.clone(), backend, kcfg: KernelConfig::with_threads(threads) }
+    }
+
+    /// Kernel-backend convenience (the CLI default).
+    pub fn with_kernel(cfg: &ModelConfig, threads: usize) -> Self {
+        Self::new(cfg, Box::new(crate::engine::KernelBackend::with_threads(threads)), threads)
+    }
+
+    /// The score backend training runs through (also the trainer's in-loop
+    /// eval backend, so eval sees the same logits training optimizes).
+    pub fn backend(&self) -> &dyn ScoreBackend {
+        self.backend.as_ref()
+    }
+
+    /// Live (masked-in) edges as a destination-keyed CSR over the capacity
+    /// vertex set — the aggregation set the artifact's masked segment-sum
+    /// reduces.
+    fn live_csr(&self, edges: &EdgeArrays) -> Csr {
+        let triples: Vec<Triple> = (0..edges.live)
+            .map(|e| {
+                Triple::new(edges.src[e] as usize, edges.rel[e] as usize, edges.dst[e] as usize)
+            })
+            .collect();
+        Csr::from_triples(self.cfg.num_vertices, &triples)
+    }
+
+    /// Encode both embedding tables and memorize the graph: the shared
+    /// front half of [`Self::forward`] and [`Self::train_step`]. Returns
+    /// `(hv, hr, mv)`, all capacity-shaped row-major `(·, D)`.
+    fn encode_and_memorize(
+        &self,
+        m: &ModelState,
+        edges: &EdgeArrays,
+    ) -> crate::Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let c = &self.cfg;
+        anyhow::ensure!(
+            m.ev.len() == c.num_vertices * c.dim_in
+                && m.er.len() == c.num_relations * c.dim_in
+                && m.hb.len() == c.dim_in * c.dim_hd,
+            "model state shapes do not match the '{}' preset",
+            c.preset
+        );
+        let mut hv = vec![0f32; c.num_vertices * c.dim_hd];
+        kernels::encode_tanh_into(&m.ev, &m.hb, c.dim_in, c.dim_hd, &mut hv, &self.kcfg);
+        let mut hr = vec![0f32; c.num_relations * c.dim_hd];
+        kernels::encode_tanh_into(&m.er, &m.hb, c.dim_in, c.dim_hd, &mut hr, &self.kcfg);
+        let mut mv = vec![0f32; c.num_vertices * c.dim_hd];
+        kernels::memorize_into(&self.live_csr(edges), &hv, &hr, c.dim_hd, &mut mv, &self.kcfg);
+        Ok((hv, hr, mv))
+    }
+
+    fn query_pairs(&self, q_subj: &[i32], q_rel: &[i32]) -> crate::Result<Vec<(usize, usize)>> {
+        let c = &self.cfg;
+        anyhow::ensure!(
+            q_subj.len() == c.batch && q_rel.len() == c.batch,
+            "batch mismatch: got {} subjects / {} relations for |B| = {}",
+            q_subj.len(),
+            q_rel.len(),
+            c.batch
+        );
+        q_subj
+            .iter()
+            .zip(q_rel)
+            .map(|(&s, &r)| {
+                let (s, r) = (s as usize, r as usize);
+                anyhow::ensure!(
+                    s < c.num_vertices && r < c.num_relations,
+                    "query ({s}, {r}) out of range for capacity ({}, {})",
+                    c.num_vertices,
+                    c.num_relations
+                );
+                Ok((s, r))
+            })
+            .collect()
+    }
+
+    /// Full forward pass, same contract as the PJRT forward artifact:
+    /// (B,) queries → row-major (B, |V|) logits through the configured
+    /// backend. Re-encodes and re-memorizes from the current state.
+    pub fn forward(
+        &self,
+        m: &ModelState,
+        edges: &EdgeArrays,
+        q_subj: &[i32],
+        q_rel: &[i32],
+        bias: f32,
+    ) -> crate::Result<Vec<f32>> {
+        let c = &self.cfg;
+        let pairs = self.query_pairs(q_subj, q_rel)?;
+        let (_hv, hr, mv) = self.encode_and_memorize(m, edges)?;
+        let mut logits = vec![0f32; c.batch * c.num_vertices];
+        self.backend.score_pairs_into(&mv, &hr, c.dim_hd, &pairs, bias, &mut logits);
+        Ok(logits)
+    }
+
+    /// One training step: loss + embedding gradients (Eqs. 11/12), the
+    /// host-native equivalent of the train_step artifact. `labels` is the
+    /// row-major (B, |V|) multi-hot matrix at *capacity* |V| (the trainer
+    /// pads live labels up, as for the artifact).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        m: &ModelState,
+        edges: &EdgeArrays,
+        q_subj: &[i32],
+        q_rel: &[i32],
+        labels: &[f32],
+        bias: f32,
+        smoothing: f32,
+    ) -> crate::Result<TrainStepOutput> {
+        let c = &self.cfg;
+        let (v, d, dd, b) = (c.num_vertices, c.dim_in, c.dim_hd, c.batch);
+        anyhow::ensure!(labels.len() == b * v, "labels shape: want (B, |V|) = ({b}, {v})");
+        let pairs = self.query_pairs(q_subj, q_rel)?;
+        let (hv, hr, mv) = self.encode_and_memorize(m, edges)?;
+
+        // forward: packed q_b = M_s + H_r, scored through the backend
+        let q = pack_forward_queries(&mv, &hr, dd, &pairs);
+        let mut logits = vec![0f32; b * v];
+        self.backend.score_batch_into(&mv, dd, &q, bias, &mut logits);
+
+        // BCE-with-logits (smoothed exactly as the lowered loss_fn: the
+        // smoothing mass spreads over the label row's |V| entries) + the
+        // upstream gradient dL/dlogit = (σ(logit) − y) / (B·|V|)
+        let n = (b * v) as f64;
+        let smooth = smoothing / v as f32;
+        let mut g = vec![0f32; b * v];
+        let mut loss = 0f64;
+        for ((gi, &l), &y0) in g.iter_mut().zip(&logits).zip(labels) {
+            let y = y0 * (1.0 - smoothing) + smooth;
+            loss += (l.max(0.0) - l * y + (-l.abs()).exp().ln_1p()) as f64;
+            *gi = (sigmoid(l) - y) / n as f32;
+        }
+        let loss = (loss / n) as f32;
+
+        // score backward: g_mv over candidate rows, g_q over packed queries
+        // (for the quant backend this is the straight-through estimate on
+        // the float hypervectors)
+        let mut g_mv = vec![0f32; v * dd];
+        let mut g_q = vec![0f32; b * dd];
+        kernels::l1_scores_batch_backward_into(&mv, dd, &q, &g, &mut g_mv, &mut g_q, &self.kcfg);
+
+        // query-side scatter: q_b = M_{s_b} + H_{r_b}
+        let mut g_hr = vec![0f32; c.num_relations * dd];
+        for (row, &(s, r)) in pairs.iter().enumerate() {
+            let gq = &g_q[row * dd..(row + 1) * dd];
+            for (o, &x) in g_mv[s * dd..(s + 1) * dd].iter_mut().zip(gq) {
+                *o += x;
+            }
+            for (o, &x) in g_hr[r * dd..(r + 1) * dd].iter_mut().zip(gq) {
+                *o += x;
+            }
+        }
+
+        // memorize backward over the live edge list:
+        // M_dst += H_src ∘ H_rel  ⇒  ∂H_src = g_M[dst] ∘ H_rel,
+        //                            ∂H_rel = g_M[dst] ∘ H_src
+        let mut g_hv = vec![0f32; v * dd];
+        for ((&src, &rel), &dst) in
+            edges.src.iter().zip(&edges.rel).zip(&edges.dst).take(edges.live)
+        {
+            let (src, rel, dst) = (src as usize, rel as usize, dst as usize);
+            let gm = &g_mv[dst * dd..(dst + 1) * dd];
+            let h = &hv[src * dd..(src + 1) * dd];
+            let r = &hr[rel * dd..(rel + 1) * dd];
+            for k in 0..dd {
+                g_hv[src * dd + k] += gm[k] * r[k];
+                g_hr[rel * dd + k] += gm[k] * h[k];
+            }
+        }
+
+        // encode backward through tanh and the frozen base matrix
+        let mut grad_ev = vec![0f32; v * d];
+        kernels::encode_tanh_backward_into(&g_hv, &hv, &m.hb, d, dd, &mut grad_ev, &self.kcfg);
+        let mut grad_er = vec![0f32; c.num_relations * d];
+        kernels::encode_tanh_backward_into(&g_hr, &hr, &m.hb, d, dd, &mut grad_er, &self.kcfg);
+
+        Ok(TrainStepOutput { loss, grad_ev, grad_er })
+    }
+}
+
+/// Strict scalar reference of the host train step: one naive loop per
+/// equation, fresh allocations, left-to-right float sums, the
+/// [`ScalarBackend`] for the forward sweep. Slow and auditably correct —
+/// what the `host_training` tests pin [`HostRuntime::train_step`] (and its
+/// threaded kernels) against, and what the finite-difference check probes.
+#[allow(clippy::too_many_arguments)]
+pub fn train_step_reference(
+    cfg: &ModelConfig,
+    m: &ModelState,
+    edges: &EdgeArrays,
+    q_subj: &[i32],
+    q_rel: &[i32],
+    labels: &[f32],
+    bias: f32,
+    smoothing: f32,
+) -> TrainStepOutput {
+    let (v, r_cnt, d, dd, b) =
+        (cfg.num_vertices, cfg.num_relations, cfg.dim_in, cfg.dim_hd, cfg.batch);
+    assert_eq!(labels.len(), b * v, "labels shape");
+    let enc = crate::hdc::Encoder { dim_in: d, dim_hd: dd, base: m.hb.clone() };
+    let hv = enc.encode_matrix(&m.ev);
+    let hr = enc.encode_matrix(&m.er);
+    let triples: Vec<Triple> = (0..edges.live)
+        .map(|e| Triple::new(edges.src[e] as usize, edges.rel[e] as usize, edges.dst[e] as usize))
+        .collect();
+    let mem = crate::hdc::memorize_scalar(&Csr::from_triples(v, &triples), &hv, &hr, dd);
+    let mv = &mem.data;
+
+    let pairs: Vec<(usize, usize)> =
+        q_subj.iter().zip(q_rel).map(|(&s, &r)| (s as usize, r as usize)).collect();
+    let q = pack_forward_queries(mv, &hr, dd, &pairs);
+    let mut logits = vec![0f32; b * v];
+    ScalarBackend.score_batch_into(mv, dd, &q, bias, &mut logits);
+
+    let n = (b * v) as f64;
+    let smooth = smoothing / v as f32;
+    let mut g = vec![0f32; b * v];
+    let mut loss = 0f64;
+    for ((gi, &l), &y0) in g.iter_mut().zip(&logits).zip(labels) {
+        let y = y0 * (1.0 - smoothing) + smooth;
+        loss += (l.max(0.0) - l * y + (-l.abs()).exp().ln_1p()) as f64;
+        *gi = (sigmoid(l) - y) / n as f32;
+    }
+    let loss = (loss / n) as f32;
+
+    let sgn = |x: f32| {
+        if x > 0.0 {
+            1.0
+        } else if x < 0.0 {
+            -1.0
+        } else {
+            0.0
+        }
+    };
+    let mut g_mv = vec![0f32; v * dd];
+    let mut g_q = vec![0f32; b * dd];
+    for bq in 0..b {
+        for j in 0..v {
+            let w = g[bq * v + j];
+            for k in 0..dd {
+                let s = w * sgn(q[bq * dd + k] - mv[j * dd + k]);
+                g_mv[j * dd + k] += s;
+                g_q[bq * dd + k] -= s;
+            }
+        }
+    }
+    let mut g_hr = vec![0f32; r_cnt * dd];
+    let mut g_hv = vec![0f32; v * dd];
+    for (row, &(s, r)) in pairs.iter().enumerate() {
+        for k in 0..dd {
+            g_mv[s * dd + k] += g_q[row * dd + k];
+            g_hr[r * dd + k] += g_q[row * dd + k];
+        }
+    }
+    for t in &triples {
+        for k in 0..dd {
+            g_hv[t.src * dd + k] += g_mv[t.dst * dd + k] * hr[t.rel * dd + k];
+            g_hr[t.rel * dd + k] += g_mv[t.dst * dd + k] * hv[t.src * dd + k];
+        }
+    }
+
+    let encode_backward = |g_h: &[f32], h: &[f32], rows: usize| -> Vec<f32> {
+        let mut out = vec![0f32; rows * d];
+        for i in 0..rows {
+            for a in 0..d {
+                let mut s = 0f32;
+                for k in 0..dd {
+                    let hk = h[i * dd + k];
+                    s += g_h[i * dd + k] * (1.0 - hk * hk) * m.hb[a * dd + k];
+                }
+                out[i * d + a] = s;
+            }
+        }
+        out
+    };
+    let grad_ev = encode_backward(&g_hv, &hv, v);
+    let grad_er = encode_backward(&g_hr, &hr, r_cnt);
+    TrainStepOutput { loss, grad_ev, grad_er }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::KernelBackend;
+    use crate::kg::KnowledgeGraph;
+
+    /// Small awkward-dimension config for unit tests (not a preset: the
+    /// host runtime has no artifact registry to agree with).
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            preset: "host-test".into(),
+            num_vertices: 23,
+            num_relations: 4,
+            num_edges: 64,
+            dim_in: 7,
+            dim_hd: 13,
+            batch: 5,
+        }
+    }
+
+    fn fixture(
+        cfg: &ModelConfig,
+        seed: u64,
+    ) -> (ModelState, EdgeArrays, Vec<i32>, Vec<i32>, Vec<f32>) {
+        let mut rng = crate::util::Rng::seed_from_u64(seed);
+        let state = ModelState::init(cfg, seed);
+        let mut kg = KnowledgeGraph::new("host-test", cfg.num_vertices, cfg.num_relations);
+        kg.train = (0..40)
+            .map(|_| {
+                Triple::new(
+                    rng.below(cfg.num_vertices),
+                    rng.below(cfg.num_relations),
+                    rng.below(cfg.num_vertices),
+                )
+            })
+            .collect();
+        let edges = EdgeArrays::from_kg(&kg, cfg);
+        let qs: Vec<i32> = (0..cfg.batch).map(|_| rng.below(cfg.num_vertices) as i32).collect();
+        let qr: Vec<i32> = (0..cfg.batch).map(|_| rng.below(cfg.num_relations) as i32).collect();
+        let mut labels = vec![0f32; cfg.batch * cfg.num_vertices];
+        for row in 0..cfg.batch {
+            labels[row * cfg.num_vertices + rng.below(cfg.num_vertices)] = 1.0;
+        }
+        (state, edges, qs, qr, labels)
+    }
+
+    #[test]
+    fn train_step_shapes_and_finiteness() {
+        let cfg = tiny_cfg();
+        let (state, edges, qs, qr, labels) = fixture(&cfg, 1);
+        let rt = HostRuntime::with_kernel(&cfg, 1);
+        let out = rt.train_step(&state, &edges, &qs, &qr, &labels, 2.0, 0.1).unwrap();
+        assert!(out.loss.is_finite() && out.loss > 0.0, "loss {}", out.loss);
+        assert_eq!(out.grad_ev.len(), cfg.num_vertices * cfg.dim_in);
+        assert_eq!(out.grad_er.len(), cfg.num_relations * cfg.dim_in);
+        assert!(out.grad_ev.iter().all(|x| x.is_finite()));
+        assert!(out.grad_er.iter().all(|x| x.is_finite()));
+        // the model has parameters in play: gradients must not all vanish
+        assert!(out.grad_ev.iter().any(|&x| x != 0.0), "grad_ev identically zero");
+        assert!(out.grad_er.iter().any(|&x| x != 0.0), "grad_er identically zero");
+    }
+
+    #[test]
+    fn forward_scores_the_memorized_snapshot() {
+        let cfg = tiny_cfg();
+        let (state, edges, qs, qr, _) = fixture(&cfg, 2);
+        let rt = HostRuntime::with_kernel(&cfg, 1);
+        let got = rt.forward(&state, &edges, &qs, &qr, 1.5).unwrap();
+        // reference: scalar encode → memorize → per-query scalar scores
+        let hv = state.encode_vertices_host();
+        let hr = state.encode_relations_host();
+        let triples: Vec<Triple> = (0..edges.live)
+            .map(|e| {
+                Triple::new(edges.src[e] as usize, edges.rel[e] as usize, edges.dst[e] as usize)
+            })
+            .collect();
+        let mem = crate::hdc::memorize_scalar(
+            &Csr::from_triples(cfg.num_vertices, &triples),
+            &hv,
+            &hr,
+            cfg.dim_hd,
+        );
+        for (row, (&s, &r)) in qs.iter().zip(&qr).enumerate() {
+            let want = crate::model::transe_scores_host(
+                &mem.data,
+                cfg.dim_hd,
+                mem.vertex(s as usize),
+                &hr[r as usize * cfg.dim_hd..(r as usize + 1) * cfg.dim_hd],
+                1.5,
+            );
+            for (j, w) in want.iter().enumerate() {
+                let g = got[row * cfg.num_vertices + j];
+                assert!((w - g).abs() <= 1e-5 * w.abs().max(1.0), "q{row} v{j}: {w} vs {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn bad_shapes_are_errors_not_panics() {
+        let cfg = tiny_cfg();
+        let (state, edges, qs, qr, labels) = fixture(&cfg, 3);
+        let rt = HostRuntime::with_kernel(&cfg, 1);
+        // short labels
+        assert!(rt.train_step(&state, &edges, &qs, &qr, &labels[1..], 0.0, 0.0).is_err());
+        // wrong batch
+        assert!(rt.train_step(&state, &edges, &qs[1..], &qr, &labels, 0.0, 0.0).is_err());
+        // out-of-capacity query subject
+        let mut bad = qs.clone();
+        bad[0] = cfg.num_vertices as i32;
+        assert!(rt.train_step(&state, &edges, &bad, &qr, &labels, 0.0, 0.0).is_err());
+    }
+
+    #[test]
+    fn sharded_composition_trains_bit_identically_to_its_leaf() {
+        // sharding only changes which worker walks a row; with the same
+        // single-threaded leaf and backward config the whole TrainStepOutput
+        // must be bit-identical (the logits are, so g is, so the grads are)
+        let cfg = tiny_cfg();
+        let (state, edges, qs, qr, labels) = fixture(&cfg, 4);
+        let plain = HostRuntime::new(&cfg, Box::new(KernelBackend::with_threads(1)), 1);
+        let sharded = HostRuntime::new(
+            &cfg,
+            Box::new(crate::engine::ShardedBackend::new(
+                3,
+                Box::new(KernelBackend::with_threads(1)),
+            )),
+            1,
+        );
+        let a = plain.train_step(&state, &edges, &qs, &qr, &labels, 2.0, 0.1).unwrap();
+        let b = sharded.train_step(&state, &edges, &qs, &qr, &labels, 2.0, 0.1).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        assert_eq!(a.grad_ev, b.grad_ev);
+        assert_eq!(a.grad_er, b.grad_er);
+    }
+}

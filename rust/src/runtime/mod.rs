@@ -1,15 +1,81 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them from
-//! the rust hot path (the architecture's L3 ↔ L2 boundary).
+//! Training runtimes: the PJRT artifact executor and its host-native twin.
 //!
-//! Python runs only at build time (`make artifacts`); this module makes the
-//! binary self-contained afterwards. The interchange format is HLO *text*:
-//! the bundled xla_extension 0.5.1 rejects jax ≥ 0.5 protos (64-bit
-//! instruction ids), while the text parser reassigns ids cleanly.
+//! * [`HdrRuntime`] loads AOT-compiled HLO-text artifacts and executes them
+//!   via PJRT (the architecture's L3 ↔ L2 boundary). Python runs only at
+//!   build time (`make artifacts`); the interchange format is HLO *text*:
+//!   the bundled xla_extension 0.5.1 rejects jax ≥ 0.5 protos (64-bit
+//!   instruction ids), while the text parser reassigns ids cleanly. The
+//!   default build stubs the PJRT client (feature `pjrt` off), so loads
+//!   fail with an actionable error.
+//! * [`HostRuntime`] implements the same `train_step` contract in pure
+//!   rust on the kernel layer, scoring through any
+//!   [`crate::engine::ScoreBackend`] — training without artifacts, in
+//!   every build.
+//! * [`TrainerRuntime`] is the seam the coordinator trains through: PJRT
+//!   when compiled and loaded, host otherwise, one `train_step` dispatch.
 
 mod artifacts;
 mod client;
 mod executor;
+mod host;
 
 pub use artifacts::{ArtifactEntry, Manifest};
 pub use client::{Engine, LoadedComputation};
 pub use executor::{EdgeArrays, HdrRuntime, TrainStepOutput};
+pub use host::{train_step_reference, HostRuntime};
+
+use crate::model::ModelState;
+
+/// The execution strategy behind [`crate::coordinator::HdrTrainer`]: one
+/// `train_step` contract, two implementations. Both accept artifact-shaped
+/// (capacity-padded) inputs and return the same [`TrainStepOutput`], so the
+/// trainer's epoch loop is runtime-agnostic; the `host_training` tests pin
+/// the two equivalent on a case where both exist.
+pub enum TrainerRuntime {
+    /// The AOT train_step artifact via PJRT (`--features pjrt` + artifacts
+    /// on disk).
+    Pjrt(HdrRuntime),
+    /// The pure-rust [`HostRuntime`] over a score backend (any build).
+    Host(HostRuntime),
+}
+
+impl TrainerRuntime {
+    /// Human-readable runtime description for run banners.
+    pub fn describe(&self) -> String {
+        match self {
+            Self::Pjrt(rt) => format!("pjrt ({})", rt.platform()),
+            Self::Host(h) => format!("host ({})", h.backend().describe()),
+        }
+    }
+
+    /// One training step: loss + embedding gradients (Eqs. 11/12),
+    /// dispatched to whichever implementation this runtime carries.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        m: &ModelState,
+        edges: &EdgeArrays,
+        q_subj: &[i32],
+        q_rel: &[i32],
+        labels: &[f32],
+        bias: f32,
+        smoothing: f32,
+    ) -> crate::Result<TrainStepOutput> {
+        match self {
+            Self::Pjrt(rt) => rt.train_step(m, edges, q_subj, q_rel, labels, bias, smoothing),
+            Self::Host(h) => h.train_step(m, edges, q_subj, q_rel, labels, bias, smoothing),
+        }
+    }
+}
+
+impl From<HdrRuntime> for TrainerRuntime {
+    fn from(rt: HdrRuntime) -> Self {
+        Self::Pjrt(rt)
+    }
+}
+
+impl From<HostRuntime> for TrainerRuntime {
+    fn from(rt: HostRuntime) -> Self {
+        Self::Host(rt)
+    }
+}
