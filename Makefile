@@ -29,21 +29,26 @@ ci:
 	HDR_THREADS=1 $(CARGO) test -q --manifest-path $(MANIFEST)
 	HDR_THREADS=2 $(CARGO) test -q --manifest-path $(MANIFEST)
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- query --model tiny --queries 64 --backend sharded:2+quant:8
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- query --model tiny --queries 64 --backend noisy:gauss:0.1:42+sharded:2+quant:8
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- train --model tiny --runtime host --epochs 3 --steps 8 --eval-every 3
+	$(CARGO) test -q --release --manifest-path $(MANIFEST) --test noise_robustness -- degrades
 
-# hot-path benchmark; appends {name, median_s, iters} JSON-lines rows to
-# BENCH_5.json at the repo root so the perf trajectory accumulates per PR
+# hot-path + serving benchmarks; append {name, median_s, iters} JSON-lines
+# rows to BENCH_6.json at the repo root so the perf trajectory accumulates
+# per PR (the serving run carries the noisy fault-channel overhead rows)
 bench:
 	$(CARGO) bench --bench runtime_hotpath --manifest-path $(MANIFEST) -- --json
+	$(CARGO) bench --bench engine_serving --manifest-path $(MANIFEST) -- --json
 
 # KgcEngine serving throughput: submit at batch 1/8/64, sharded/quant
-# score backends, the submit_async pipeline, and the rank-native
-# (rank-only / top-k) sharded rows (same BENCH_5.json sink)
+# score backends, the submit_async pipeline, the rank-native
+# (rank-only / top-k) sharded rows, and the noisy fault-channel overhead
+# rows (same BENCH_6.json sink)
 bench-serving:
 	$(CARGO) bench --bench engine_serving --manifest-path $(MANIFEST) -- --json
 
 # host-native training throughput: train_step steps/sec at 1 thread vs
-# max (target >= 2x), quant/sharded training backends (same BENCH_5.json
+# max (target >= 2x), quant/sharded training backends (same BENCH_6.json
 # sink)
 bench-train:
 	$(CARGO) bench --bench train_throughput --manifest-path $(MANIFEST) -- --json

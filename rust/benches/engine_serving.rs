@@ -1,7 +1,7 @@
 //! Bench: end-to-end serving throughput through `KgcEngine::submit` /
 //! `submit_async`, plus the sharded and quantized score backends.
 //!
-//! Five sections, all on the `tiny` preset with the same query stream:
+//! Six sections, all on the `tiny` preset with the same query stream:
 //!
 //! 1. **Micro-batcher coalescing** — `submit` at batch capacities 1/8/64,
 //!    offered load scaled to capacity (one client per serving slot, like
@@ -21,9 +21,13 @@
 //!    the dense-merge path that ships full (B, |V|) score blocks and
 //!    reduces host-side, both at one shard worker per core.
 //!    Target: sharded rank-only ≥ 2x the sharded dense-merge path.
+//! 6. **Noisy-path overhead** — `score_batch` through `NoisyBackend`
+//!    fault channels (gaussian read noise over the kernel, stuck bits
+//!    over the fix-8 grid, saturating accumulation) against their clean
+//!    inners, so the cost of seeded fault injection is a tracked number.
 //!
 //! Run: cargo bench --bench engine_serving [-- --json [PATH]]
-//! (`--json` appends rows to BENCH_5.json at the repo root by default.)
+//! (`--json` appends rows to BENCH_6.json at the repo root by default.)
 
 use hdreason::bench::harness::{bench, maybe_append_json, BenchResult};
 use hdreason::config::model_preset;
@@ -241,6 +245,40 @@ fn main() {
         topk_qps / topk_dense_qps.max(1e-12)
     );
     results.push(r_topk);
+
+    // ---- 6. noisy-path overhead: fault channels vs their clean inners ----
+    let mut channel_qps: Vec<(String, f64)> = Vec::new();
+    for spec in [
+        "kernel",
+        "noisy:gauss:0.1:42+kernel",
+        "noisy:saturate:4:42+kernel",
+        "quant:8",
+        "noisy:stuck:0.05:42+quant:8",
+    ] {
+        let engine = engine_with_backend(BackendKind::parse(spec).unwrap().instantiate(0));
+        let pairs = pair_stream(&engine, QUERIES);
+        let r = bench(&format!("engine/score_batch(tiny,{spec})"), 3, 15, || {
+            std::hint::black_box(engine.score_batch(&pairs));
+        });
+        println!("{}", r.row());
+        let qps = r.per_second(QUERIES as f64);
+        println!("  -> {qps:.0} queries/s through {spec}\n");
+        channel_qps.push((spec.to_string(), qps));
+        results.push(r);
+    }
+    let qps_of = |name: &str| {
+        channel_qps
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|&(_, q)| q)
+            .unwrap_or(f64::NAN)
+    };
+    println!(
+        "  -> noisy overhead vs clean: gauss {:.2}x, saturate {:.2}x (over kernel); stuck {:.2}x (over quant:8)\n",
+        qps_of("kernel") / qps_of("noisy:gauss:0.1:42+kernel").max(1e-12),
+        qps_of("kernel") / qps_of("noisy:saturate:4:42+kernel").max(1e-12),
+        qps_of("quant:8") / qps_of("noisy:stuck:0.05:42+quant:8").max(1e-12),
+    );
 
     // context row: the raw batched score path without the serving queue,
     // an upper bound on what submit() coalescing can reach

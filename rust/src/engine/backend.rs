@@ -4,7 +4,7 @@
 //!
 //! A [`ScoreBackend`] executes the crate's one scoring primitive (Eq. 10:
 //! `bias − ||q − M_j||₁` against every row of the (|V|, D) memory matrix)
-//! plus the dot-product decoder the DistMult-family baselines use. Five
+//! plus the dot-product decoder the DistMult-family baselines use. Six
 //! implementations:
 //!
 //! * [`ScalarBackend`] — the strict-order scalar reference (one row at a
@@ -20,6 +20,11 @@
 //! * [`QuantBackend`] — fix-N quantized scoring through the fused
 //!   quantize-and-score kernels (Fig. 9(b)'s robustness experiment at
 //!   kernel speed, no per-query tensor copies).
+//! * [`NoisyBackend`] — deterministic, seeded hardware-fault injection
+//!   (gaussian read noise, stuck-at-0/1 bits on the fix-N grid, saturating
+//!   accumulation) decorating any leaf backend; per-row fault masks are
+//!   derived from row *content*, so the noisy path keeps the slice-local
+//!   invariant and composes under [`ShardedBackend`] byte-identically.
 //! * [`PjrtBackend`] — the AOT score artifact via the PJRT runtime. Only
 //!   constructible from a successfully loaded [`crate::runtime::HdrRuntime`],
 //!   which the default build's pjrt stub refuses — so it is effectively
@@ -290,11 +295,96 @@ impl std::fmt::Display for InnerBackendKind {
     }
 }
 
+/// One injected hardware fault model — the parameter is the fault
+/// intensity knob the degradation sweeps ramp.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NoiseModel {
+    /// Additive N(0, sigma²) read noise on each memory row's score.
+    Gauss(f32),
+    /// Stuck-at-0/1 bits: each dimension of a memory row's fix-N code has
+    /// this probability of one uniformly-drawn bit being forced to a
+    /// uniformly-drawn constant.
+    Stuck(f32),
+    /// Saturating accumulation: the L1 distance clamps at this limit
+    /// (scores floor at `bias − limit`); dot products clamp to ±limit.
+    Saturate(f32),
+}
+
+impl std::fmt::Display for NoiseModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Gauss(sigma) => write!(f, "gauss:{sigma}"),
+            Self::Stuck(rate) => write!(f, "stuck:{rate}"),
+            Self::Saturate(limit) => write!(f, "saturate:{limit}"),
+        }
+    }
+}
+
+/// A fault model plus the global seed its per-row draws derive from. The
+/// seed is parsed and displayed for every model so specs stay uniform;
+/// `saturate` is deterministic by construction and ignores it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NoiseSpec {
+    pub model: NoiseModel,
+    pub seed: u64,
+}
+
+impl NoiseSpec {
+    fn parse(head: &str) -> crate::Result<Self> {
+        let parts: Vec<&str> = head.split(':').collect();
+        let [model, param, seed] = parts[..] else {
+            anyhow::bail!(
+                "bad noise spec 'noisy:{head}' (want noisy:<gauss|stuck|saturate>:<param>:<seed>)"
+            );
+        };
+        let p: f32 = param
+            .parse()
+            .ok()
+            .filter(|p: &f32| p.is_finite())
+            .ok_or_else(|| anyhow::anyhow!("bad noise parameter '{param}' in 'noisy:{head}'"))?;
+        let model = match model {
+            "gauss" if p >= 0.0 => NoiseModel::Gauss(p),
+            "gauss" => anyhow::bail!("gauss sigma must be >= 0, got '{param}'"),
+            "stuck" if (0.0..=1.0).contains(&p) => NoiseModel::Stuck(p),
+            "stuck" => anyhow::bail!("stuck rate must be in 0..=1, got '{param}'"),
+            "saturate" if p > 0.0 => NoiseModel::Saturate(p),
+            "saturate" => anyhow::bail!("saturate limit must be > 0, got '{param}'"),
+            other => {
+                anyhow::bail!("unknown noise model '{other}' (have gauss, stuck, saturate)")
+            }
+        };
+        let seed: u64 = seed
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad noise seed '{seed}' in 'noisy:{head}'"))?;
+        Ok(Self { model, seed })
+    }
+}
+
+impl std::fmt::Display for NoiseSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}", self.model, self.seed)
+    }
+}
+
+/// What a `noisy:` spec wraps: a bare leaf, or a shard fan-out over a
+/// leaf. The noisy decorator is pushed down to the leaves at
+/// instantiation (faults are slice-local, so noising inside each shard is
+/// byte-identical to noising outside the merge — and it keeps the reduced
+/// rank/top-k sweeps reduced).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NoisyInner {
+    Leaf(InnerBackendKind),
+    /// Shard fan-out (`0` = auto) with the fault injection at each leaf.
+    Sharded(usize, InnerBackendKind),
+}
+
 /// Named backend selection, e.g. from a `--backend` CLI flag. The sharded
 /// and quantized forms carry their parameter (`sharded:4`, `quant:8`;
-/// bare `sharded` auto-sizes to the machine), and `sharded:N+inner`
-/// composes the shard fan-out over a leaf backend (`sharded:4+quant:8`).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// bare `sharded` auto-sizes to the machine), `sharded:N+inner` composes
+/// the shard fan-out over a leaf backend (`sharded:4+quant:8`), and
+/// `noisy:<model>:<param>:<seed>+inner` wraps any of those in seeded
+/// hardware-fault injection (`noisy:gauss:0.1:42+sharded:2+quant:8`).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum BackendKind {
     Scalar,
     Kernel,
@@ -305,16 +395,47 @@ pub enum BackendKind {
     /// Shard fan-out (`0` = auto) over an explicit leaf backend —
     /// the CLI form `sharded:N+scalar|kernel|quant:M`.
     Composed(usize, InnerBackendKind),
+    /// Seeded hardware-fault injection over any of the above — the CLI
+    /// form `noisy:<gauss|stuck|saturate>:<param>:<seed>+<inner>`.
+    Noisy(NoiseSpec, NoisyInner),
 }
 
 impl BackendKind {
-    pub const ALL: &'static [&'static str] =
-        &["scalar", "kernel", "sharded[:N]", "quant:N", "sharded[:N]+(scalar|kernel|quant:M)"];
+    pub const ALL: &'static [&'static str] = &[
+        "scalar",
+        "kernel",
+        "sharded[:N]",
+        "quant:N",
+        "sharded[:N]+(scalar|kernel|quant:M)",
+        "noisy:(gauss|stuck|saturate):PARAM:SEED+<any of the above>",
+    ];
 
     pub fn parse(s: &str) -> crate::Result<Self> {
         let s = s.to_ascii_lowercase();
+        // fault injection: `noisy:<model>:<param>:<seed>+<inner>`, the
+        // only decorator that wraps arbitrary (possibly composed) specs
+        if let Some(rest) = s.strip_prefix("noisy:") {
+            let Some((head, inner_spec)) = rest.split_once('+') else {
+                anyhow::bail!(
+                    "noisy backend needs an inner: noisy:<model>:<param>:<seed>+<inner>, \
+                     e.g. 'noisy:gauss:0.1:42+kernel'"
+                );
+            };
+            let spec = NoiseSpec::parse(head)?;
+            let inner = match Self::parse(inner_spec)? {
+                Self::Scalar => NoisyInner::Leaf(InnerBackendKind::Scalar),
+                Self::Kernel => NoisyInner::Leaf(InnerBackendKind::Kernel),
+                Self::Quant(bits) => NoisyInner::Leaf(InnerBackendKind::Quant(bits)),
+                Self::Sharded(n) => NoisyInner::Sharded(n, InnerBackendKind::Kernel),
+                Self::Composed(n, leaf) => NoisyInner::Sharded(n, leaf),
+                Self::Noisy(..) => {
+                    anyhow::bail!("'noisy' cannot wrap another noisy backend")
+                }
+            };
+            return Ok(Self::Noisy(spec, inner));
+        }
         // composition: `outer+inner`, where the outer must be a sharded
-        // form (it is the only backend that wraps another)
+        // form (it is the only other backend that wraps another)
         if let Some((outer, inner)) = s.split_once('+') {
             let shards = match Self::parse_leaf(outer)? {
                 Self::Sharded(n) => n,
@@ -372,6 +493,15 @@ impl BackendKind {
             Self::Composed(shards, inner) => {
                 Box::new(ShardedBackend::new(shards, inner.instantiate()))
             }
+            // leaf pushdown: faults are slice-local, so injecting at each
+            // shard's leaf is byte-identical to injecting outside the
+            // merge — and the reduced rank/top-k sweeps stay reduced
+            Self::Noisy(spec, NoisyInner::Leaf(leaf)) => {
+                Box::new(NoisyBackend::new(spec, leaf, threads))
+            }
+            Self::Noisy(spec, NoisyInner::Sharded(shards, leaf)) => {
+                Box::new(ShardedBackend::new(shards, Box::new(NoisyBackend::new(spec, leaf, 1))))
+            }
         }
     }
 }
@@ -387,6 +517,13 @@ impl std::fmt::Display for BackendKind {
             Self::Quant(bits) => write!(f, "quant:{bits}"),
             Self::Composed(0, inner) => write!(f, "sharded+{inner}"),
             Self::Composed(n, inner) => write!(f, "sharded:{n}+{inner}"),
+            Self::Noisy(spec, NoisyInner::Leaf(inner)) => write!(f, "noisy:{spec}+{inner}"),
+            Self::Noisy(spec, NoisyInner::Sharded(0, inner)) => {
+                write!(f, "noisy:{spec}+sharded+{inner}")
+            }
+            Self::Noisy(spec, NoisyInner::Sharded(n, inner)) => {
+                write!(f, "noisy:{spec}+sharded:{n}+{inner}")
+            }
         }
     }
 }
@@ -823,6 +960,190 @@ impl ScoreBackend for QuantBackend {
     }
 }
 
+/// Grid the stuck-bit model corrupts when the wrapped leaf is not a quant
+/// backend: faults need a bit width to stick, and fix-8 is the paper's
+/// headline datapath precision.
+const DEFAULT_STUCK_BITS: u32 = 8;
+
+/// Deterministic, seeded hardware-fault injection decorating a leaf
+/// backend — the serving-path mirror of the HDC robustness studies: read
+/// noise, stuck memory bits, and saturating accumulators, injected at
+/// score time so every consumer of the backend seam (serving, reduced
+/// rank/top-k sweeps, host training) sees the same faulted hardware.
+///
+/// Every model keeps the slice-local invariant: a row's faults derive
+/// from [`kernels::row_fault_seed`] over its *content* and the global
+/// seed, never from its position, shard, batch, or thread. For a fixed
+/// seed, scores are therefore byte-identical across `HDR_THREADS`, shard
+/// counts, and micro-batch compositions — pinned by the determinism
+/// matrix test — and wrapping the noisy leaf in [`ShardedBackend`]
+/// (`noisy:…+sharded:N+…` pushes the decorator down to each shard's
+/// leaf) changes nothing.
+///
+/// Model semantics:
+/// * `gauss:SIGMA:SEED` — one N(0, SIGMA²) draw per memory row added to
+///   that row's score for every query (readout-path noise), via
+///   [`kernels::add_read_noise_into`] behind any leaf.
+/// * `stuck:RATE:SEED` — stuck-at-0/1 bits on the fix-N codes of memory
+///   rows through the fused [`kernels::l1_scores_batch_stuck_into`]; the
+///   grid is the quant leaf's, or fix-8 over a float leaf (queries
+///   quantize, fault-free, only when the leaf quantizes). `rate = 0` over
+///   a quant leaf is exactly that quant backend.
+/// * `saturate:LIMIT:SEED` — L1 partial sums are non-negative, so a
+///   saturating accumulator clamping at LIMIT is *exactly*
+///   `min(distance, LIMIT)`: an exact post-pass score floor at
+///   `bias − LIMIT` behind any leaf (the seed is parsed for spec
+///   uniformity but never drawn from).
+pub struct NoisyBackend {
+    spec: NoiseSpec,
+    inner: Box<dyn ScoreBackend>,
+    /// Stuck-bit grid: the quant leaf's, else fix-8.
+    grid: FixedPoint,
+    quant_leaf: bool,
+    scalar_leaf: bool,
+    cfg: KernelConfig,
+}
+
+impl NoisyBackend {
+    /// `threads = 0` = auto, as for [`KernelBackend`]; a scalar leaf is
+    /// single-threaded by definition.
+    pub fn new(spec: NoiseSpec, leaf: InnerBackendKind, threads: usize) -> Self {
+        let inner: Box<dyn ScoreBackend> = match leaf {
+            InnerBackendKind::Scalar => Box::new(ScalarBackend),
+            InnerBackendKind::Kernel => Box::new(KernelBackend::with_threads(threads)),
+            InnerBackendKind::Quant(bits) => Box::new(QuantBackend::new(bits, threads)),
+        };
+        let (grid, quant_leaf) = match leaf {
+            InnerBackendKind::Quant(bits) => (FixedPoint::new(bits), true),
+            _ => (FixedPoint::new(DEFAULT_STUCK_BITS), false),
+        };
+        let scalar_leaf = matches!(leaf, InnerBackendKind::Scalar);
+        Self {
+            spec,
+            inner,
+            grid,
+            quant_leaf,
+            scalar_leaf,
+            cfg: KernelConfig::with_threads(if scalar_leaf { 1 } else { threads }),
+        }
+    }
+
+    pub fn spec(&self) -> NoiseSpec {
+        self.spec
+    }
+}
+
+impl ScoreBackend for NoisyBackend {
+    fn name(&self) -> &'static str {
+        "noisy"
+    }
+
+    fn describe(&self) -> String {
+        format!("noisy:{}+{}", self.spec, self.inner.describe())
+    }
+
+    fn score_batch_into(&self, mv: &[f32], dim_hd: usize, q: &[f32], bias: f32, out: &mut [f32]) {
+        match self.spec.model {
+            NoiseModel::Gauss(sigma) => {
+                self.inner.score_batch_into(mv, dim_hd, q, bias, out);
+                kernels::add_read_noise_into(mv, dim_hd, sigma, self.spec.seed, out, &self.cfg);
+            }
+            NoiseModel::Stuck(rate) => {
+                if self.scalar_leaf {
+                    // strict scalar reference: corrupt each row into a
+                    // buffer, left-to-right scalar distances
+                    let d = dim_hd.max(1);
+                    let v = mv.len() / d;
+                    let b = q.len() / d;
+                    assert_eq!(out.len(), v * b, "score_batch_into: out must be (B, |V|)");
+                    let mut rowq = vec![0f32; d];
+                    for j in 0..v {
+                        kernels::stuck_row_into(
+                            &mut rowq,
+                            &mv[j * d..(j + 1) * d],
+                            self.grid,
+                            rate,
+                            self.spec.seed,
+                        );
+                        for bq in 0..b {
+                            out[bq * v + j] =
+                                bias - l1_distance(&q[bq * d..(bq + 1) * d], &rowq);
+                        }
+                    }
+                } else {
+                    kernels::l1_scores_batch_stuck_into(
+                        mv,
+                        dim_hd,
+                        q,
+                        bias,
+                        self.grid,
+                        rate,
+                        self.spec.seed,
+                        self.quant_leaf,
+                        out,
+                        &self.cfg,
+                    );
+                }
+            }
+            NoiseModel::Saturate(limit) => {
+                self.inner.score_batch_into(mv, dim_hd, q, bias, out);
+                // min(distance, limit) == score floor at bias − limit
+                let floor = bias - limit;
+                for o in out.iter_mut() {
+                    if *o < floor {
+                        *o = floor;
+                    }
+                }
+            }
+        }
+    }
+
+    fn dot_scores_into(&self, mat: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+        match self.spec.model {
+            NoiseModel::Gauss(sigma) => {
+                self.inner.dot_scores_into(mat, dim, q, out);
+                kernels::add_read_noise_into(mat, dim, sigma, self.spec.seed, out, &self.cfg);
+            }
+            NoiseModel::Stuck(rate) => {
+                if self.scalar_leaf {
+                    let d = dim.max(1);
+                    let n = mat.len() / d;
+                    assert_eq!(out.len(), n, "dot_scores_into: out must be (N,)");
+                    let mut rowq = vec![0f32; d];
+                    for (j, o) in out.iter_mut().enumerate() {
+                        kernels::stuck_row_into(
+                            &mut rowq,
+                            &mat[j * d..(j + 1) * d],
+                            self.grid,
+                            rate,
+                            self.spec.seed,
+                        );
+                        *o = q.iter().zip(&rowq).map(|(a, b)| a * b).sum();
+                    }
+                } else {
+                    kernels::dot_scores_stuck_into(
+                        mat,
+                        dim,
+                        q,
+                        self.grid,
+                        rate,
+                        self.spec.seed,
+                        self.quant_leaf,
+                        out,
+                        &self.cfg,
+                    );
+                }
+            }
+            NoiseModel::Saturate(limit) => {
+                self.inner.dot_scores_into(mat, dim, q, out);
+                for o in out.iter_mut() {
+                    *o = o.clamp(-limit, limit);
+                }
+            }
+        }
+    }
+}
+
 /// Eq. 10 scoring through the AOT score artifact. Construction requires a
 /// loaded [`crate::runtime::HdrRuntime`], which only a `--features pjrt`
 /// build with artifacts on disk can produce — the default stub build fails
@@ -979,6 +1300,164 @@ mod tests {
         let b = BackendKind::Composed(4, Inner::Quant(8)).instantiate(0);
         assert_eq!(b.name(), "sharded");
         assert_eq!(b.describe(), "sharded:4+quant:8");
+    }
+
+    #[test]
+    fn noisy_kinds_parse_display_and_round_trip() {
+        use InnerBackendKind as Inner;
+        let gauss = NoiseSpec { model: NoiseModel::Gauss(0.1), seed: 42 };
+        assert_eq!(
+            BackendKind::parse("noisy:gauss:0.1:42+kernel").unwrap(),
+            BackendKind::Noisy(gauss, NoisyInner::Leaf(Inner::Kernel))
+        );
+        assert_eq!(
+            BackendKind::parse("NOISY:STUCK:0.05:7+quant:8").unwrap(),
+            BackendKind::Noisy(
+                NoiseSpec { model: NoiseModel::Stuck(0.05), seed: 7 },
+                NoisyInner::Leaf(Inner::Quant(8))
+            )
+        );
+        assert_eq!(
+            BackendKind::parse("noisy:gauss:0.1:42+sharded:2+quant:8").unwrap(),
+            BackendKind::Noisy(gauss, NoisyInner::Sharded(2, Inner::Quant(8)))
+        );
+        // bare `sharded` inner defaults to the kernel leaf
+        assert_eq!(
+            BackendKind::parse("noisy:saturate:5:0+sharded:3").unwrap(),
+            BackendKind::Noisy(
+                NoiseSpec { model: NoiseModel::Saturate(5.0), seed: 0 },
+                NoisyInner::Sharded(3, Inner::Kernel)
+            )
+        );
+        // bad specs are CLI errors, not panics
+        assert!(BackendKind::parse("noisy:gauss:0.1:42").is_err(), "needs an inner");
+        assert!(BackendKind::parse("noisy:gauss:0.1+kernel").is_err(), "needs a seed");
+        assert!(BackendKind::parse("noisy:flip:0.1:42+kernel").is_err(), "unknown model");
+        assert!(BackendKind::parse("noisy:gauss:-0.1:42+kernel").is_err(), "negative sigma");
+        assert!(BackendKind::parse("noisy:stuck:1.5:42+kernel").is_err(), "rate > 1");
+        assert!(BackendKind::parse("noisy:saturate:0:42+kernel").is_err(), "zero limit");
+        assert!(BackendKind::parse("noisy:gauss:0.1:x+kernel").is_err(), "bad seed");
+        assert!(
+            BackendKind::parse("noisy:gauss:0.1:1+noisy:gauss:0.1:2+kernel").is_err(),
+            "no nested noisy"
+        );
+        // Display is the canonical spelling and parse round-trips it
+        for kind in [
+            BackendKind::Noisy(gauss, NoisyInner::Leaf(Inner::Scalar)),
+            BackendKind::Noisy(gauss, NoisyInner::Leaf(Inner::Kernel)),
+            BackendKind::Noisy(
+                NoiseSpec { model: NoiseModel::Stuck(0.05), seed: 9 },
+                NoisyInner::Leaf(Inner::Quant(4)),
+            ),
+            BackendKind::Noisy(gauss, NoisyInner::Sharded(0, Inner::Kernel)),
+            BackendKind::Noisy(
+                NoiseSpec { model: NoiseModel::Saturate(3.5), seed: 1 },
+                NoisyInner::Sharded(7, Inner::Quant(8)),
+            ),
+        ] {
+            assert_eq!(BackendKind::parse(&kind.to_string()).unwrap(), kind, "{kind}");
+        }
+        let b = BackendKind::parse("noisy:gauss:0.1:42+quant:8").unwrap().instantiate(0);
+        assert_eq!(b.name(), "noisy");
+        assert_eq!(b.describe(), "noisy:gauss:0.1:42+quant:8");
+        // the sharded composition describes its actual structure: the
+        // decorator pushed down to each shard's leaf
+        let s = BackendKind::parse("noisy:gauss:0.1:42+sharded:2+quant:8").unwrap().instantiate(0);
+        assert_eq!(s.name(), "sharded");
+        assert_eq!(s.describe(), "sharded:2+noisy:gauss:0.1:42+quant:8");
+    }
+
+    #[test]
+    fn parse_error_enumerates_all_accepted_specs() {
+        let err = BackendKind::parse("fpga").unwrap_err().to_string();
+        for spec in BackendKind::ALL {
+            assert!(err.contains(spec), "error must list '{spec}', got: {err}");
+        }
+        assert!(BackendKind::ALL.iter().any(|s| s.contains("noisy:")), "ALL lists noisy");
+        assert!(BackendKind::ALL.iter().any(|s| s.contains('+')), "ALL lists composed");
+    }
+
+    #[test]
+    fn noisy_gauss_adds_one_offset_per_row_and_is_seed_deterministic() {
+        let mut rng = Rng::seed_from_u64(40);
+        let (v, d, b) = (23, 13, 4);
+        let mv = randv(&mut rng, v * d);
+        let q = randv(&mut rng, b * d);
+        let clean = KernelBackend::with_threads(1).score_batch(&mv, d, &q, 1.5);
+        let spec = NoiseSpec { model: NoiseModel::Gauss(0.2), seed: 42 };
+        let a = NoisyBackend::new(spec, InnerBackendKind::Kernel, 1).score_batch(&mv, d, &q, 1.5);
+        let c = NoisyBackend::new(spec, InnerBackendKind::Kernel, 2).score_batch(&mv, d, &q, 1.5);
+        assert_eq!(a, c, "same seed must be byte-identical at any thread count");
+        assert_ne!(a, clean, "sigma 0.2 added no noise");
+        for j in 0..v {
+            let off = a[j] - clean[j];
+            for bq in 1..b {
+                let o = a[bq * v + j] - clean[bq * v + j];
+                assert_eq!(o.to_bits(), off.to_bits(), "row {j} batch {bq}");
+            }
+        }
+        let other_seed = NoiseSpec { model: NoiseModel::Gauss(0.2), seed: 43 };
+        let o = NoisyBackend::new(other_seed, InnerBackendKind::Kernel, 1)
+            .score_batch(&mv, d, &q, 1.5);
+        assert_ne!(a, o, "a different seed must draw different noise");
+    }
+
+    #[test]
+    fn noisy_stuck_rate_zero_over_quant_is_exactly_quant() {
+        let mut rng = Rng::seed_from_u64(41);
+        let (v, d, b) = (21, 13, 3);
+        let mv = randv(&mut rng, v * d);
+        let q = randv(&mut rng, b * d);
+        let want = QuantBackend::new(8, 1).score_batch(&mv, d, &q, 0.5);
+        let spec = NoiseSpec { model: NoiseModel::Stuck(0.0), seed: 99 };
+        let got = NoisyBackend::new(spec, InnerBackendKind::Quant(8), 1)
+            .score_batch(&mv, d, &q, 0.5);
+        assert_eq!(want, got, "stuck rate 0 over quant:8 must reduce to quant:8");
+    }
+
+    #[test]
+    fn noisy_saturate_is_an_exact_score_floor() {
+        let mut rng = Rng::seed_from_u64(42);
+        let (v, d, b) = (23, 13, 4);
+        let mv = randv(&mut rng, v * d);
+        let q = randv(&mut rng, b * d);
+        let bias = 1.5f32;
+        let limit = 4.0f32;
+        let clean = KernelBackend::with_threads(1).score_batch(&mv, d, &q, bias);
+        let spec = NoiseSpec { model: NoiseModel::Saturate(limit), seed: 0 };
+        let got =
+            NoisyBackend::new(spec, InnerBackendKind::Kernel, 1).score_batch(&mv, d, &q, bias);
+        let mut clamped_any = false;
+        for (w, g) in clean.iter().zip(&got) {
+            let want = w.max(bias - limit);
+            assert_eq!(want.to_bits(), g.to_bits());
+            clamped_any |= want.to_bits() != w.to_bits();
+        }
+        assert!(clamped_any, "limit {limit} saturated nothing — weak fixture");
+    }
+
+    #[test]
+    fn sharded_over_noisy_leaves_is_byte_identical_to_unsharded_noisy() {
+        let mut rng = Rng::seed_from_u64(43);
+        let (v, d, b) = (23, 13, 4); // |V| prime: never divisible by shards
+        let mv = randv(&mut rng, v * d);
+        let q = randv(&mut rng, b * d);
+        for spec in ["noisy:gauss:0.2:42+quant:8", "noisy:stuck:0.3:7+quant:8"] {
+            let want =
+                BackendKind::parse(spec).unwrap().instantiate(1).score_batch(&mv, d, &q, 0.5);
+            for shards in [2usize, 7] {
+                let composed = format!(
+                    "{}+sharded:{shards}+{}",
+                    &spec[..spec.rfind('+').unwrap()],
+                    &spec[spec.rfind('+').unwrap() + 1..]
+                );
+                let got = BackendKind::parse(&composed)
+                    .unwrap()
+                    .instantiate(0)
+                    .score_batch(&mv, d, &q, 0.5);
+                assert_eq!(want, got, "{composed}");
+            }
+        }
     }
 
     #[test]

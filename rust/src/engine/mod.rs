@@ -28,11 +28,14 @@
 //!   filtered ranking protocol via the generic [`KgcModel`] code path.
 //!
 //! Execution strategy is pluggable through [`ScoreBackend`]
-//! (`--backend scalar|kernel|sharded:N|quant:N|sharded:N+quant:M` on the
-//! CLI — the sharded form fans the (|V|, D) memory-matrix scan across N
-//! workers, the quant form scores on the fix-N grid, and the composed
-//! `a+b` form runs the shard fan-out over a leaf backend;
-//! [`PjrtBackend`] comes from a loaded runtime), and every other scorer
+//! (`--backend scalar|kernel|sharded:N|quant:N|sharded:N+quant:M|`
+//! `noisy:<model>:<param>:<seed>+…` on the CLI — the sharded form fans
+//! the (|V|, D) memory-matrix scan across N workers, the quant form
+//! scores on the fix-N grid, the composed `a+b` form runs the shard
+//! fan-out over a leaf backend, and the noisy form injects seeded
+//! hardware faults — gaussian read noise, stuck bits, saturating
+//! accumulation — over any of them; [`PjrtBackend`] comes from a loaded
+//! runtime), and every other scorer
 //! in the crate — the PJRT trainer view, the TransE/DistMult/R-GCN
 //! baselines — speaks the same [`KgcModel`] trait, so cross-model tables
 //! and the CLI run one generic path.
@@ -65,8 +68,9 @@ mod batcher;
 mod model;
 
 pub use backend::{
-    BackendKind, InnerBackendKind, KernelBackend, PjrtBackend, QuantBackend, RankPartial,
-    ScalarBackend, ScoreBackend, ShardedBackend,
+    BackendKind, InnerBackendKind, KernelBackend, NoiseModel, NoiseSpec, NoisyBackend,
+    NoisyInner, PjrtBackend, QuantBackend, RankPartial, ScalarBackend, ScoreBackend,
+    ShardedBackend,
 };
 pub use batcher::{MicroBatcher, QueryRequest, Ranking};
 pub use model::{evaluate_double, evaluate_forward, KgcModel};
@@ -256,7 +260,17 @@ impl KgcEngine {
                 return out;
             }
             if st.batcher.should_flush(Instant::now()) {
-                let batch = st.batcher.take_batch();
+                // drain EVERY due batch under this one lock acquisition
+                // and lead them as a single flush: with many
+                // simultaneously-due requests (an async client bulk-
+                // waiting on a backlog) one leader scores one combined
+                // batch instead of re-locking per capacity chunk.
+                // Per-query results are unchanged — batching composition
+                // never changes a query's logits.
+                let mut batch = st.batcher.take_batch();
+                while st.batcher.should_flush(Instant::now()) {
+                    batch.extend(st.batcher.take_batch());
+                }
                 drop(st);
                 self.lead(batch);
                 continue;
@@ -1093,6 +1107,81 @@ mod tests {
         let (i, ranking) = e.wait_any(&mut handles);
         assert_eq!(i, 0);
         assert_eq!(ranking, e.rank(QueryRequest::forward(2, 1)));
+    }
+
+    #[test]
+    fn wait_any_flushes_all_due_handles_in_a_single_lead() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+
+        struct CountingBackend {
+            inner: KernelBackend,
+            scoring_calls: Arc<AtomicUsize>,
+        }
+        impl ScoreBackend for CountingBackend {
+            fn name(&self) -> &'static str {
+                "counting"
+            }
+            fn score_batch_into(
+                &self,
+                mv: &[f32],
+                dim_hd: usize,
+                q: &[f32],
+                bias: f32,
+                out: &mut [f32],
+            ) {
+                self.inner.score_batch_into(mv, dim_hd, q, bias, out);
+            }
+            fn dot_scores_into(&self, mat: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+                self.inner.dot_scores_into(mat, dim, q, out);
+            }
+            #[allow(clippy::too_many_arguments)]
+            fn top_k_pairs_into(
+                &self,
+                mv: &[f32],
+                hr: &[f32],
+                dim_hd: usize,
+                pairs: &[(usize, usize)],
+                bias: f32,
+                k: usize,
+                out: &mut [Vec<(usize, f32)>],
+            ) {
+                self.scoring_calls.fetch_add(1, Ordering::SeqCst);
+                self.inner.top_k_pairs_into(mv, hr, dim_hd, pairs, bias, k, out);
+            }
+        }
+
+        let calls = Arc::new(AtomicUsize::new(0));
+        let e = EngineBuilder::new("tiny")
+            .seed(7)
+            .custom_backend(Box::new(CountingBackend {
+                inner: KernelBackend::with_threads(1),
+                scoring_calls: Arc::clone(&calls),
+            }))
+            .batch_capacity(1)
+            .deadline(Duration::from_millis(1))
+            .build()
+            .unwrap();
+        let reqs: Vec<QueryRequest> = (0..16)
+            .map(|i| QueryRequest::forward(i % e.num_candidates(), i % e.kg().num_relations))
+            .collect();
+        let mut handles: Vec<QueryHandle> = reqs.iter().map(|&r| e.submit_async(r)).collect();
+        // capacity 1 makes every queued request its own full batch, so all
+        // 16 are simultaneously due: the first bulk wait must drain them
+        // all and lead ONE combined scoring pass, not 16 lock round-trips
+        let (i, first) = e.wait_any(&mut handles);
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "due batches must coalesce into one flush");
+        assert_eq!(first.request, handles[i].request());
+        handles.swap_remove(i);
+        // everything else was published by that same flush
+        while !handles.is_empty() {
+            let (j, ranking) = e.wait_any(&mut handles);
+            let h = handles.swap_remove(j);
+            assert_eq!(ranking.request, h.request());
+        }
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "no further scoring needed");
+        assert_eq!(e.pending_queries(), 0);
+        assert_eq!(e.unclaimed_results(), 0);
     }
 
     #[test]

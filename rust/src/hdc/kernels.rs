@@ -26,6 +26,7 @@
 use super::memory::GraphMemory;
 use super::quant::FixedPoint;
 use crate::kg::Csr;
+use crate::util::Rng;
 
 /// Width of the blocked inner loops (f32 lanes of one AVX2 register). Inner
 /// reductions carry this many independent partial sums.
@@ -504,6 +505,191 @@ pub fn dot_scores_quant_into(
     });
 }
 
+// -------------------------------------------------------- fault injection
+
+/// Per-row fault seed: fold the row's f32 bit patterns into the global
+/// seed (FxHash-style rotate-xor-multiply). A row's faults therefore
+/// depend only on its *content* and the global seed — never on its
+/// position in the matrix, the shard that scored it, the batch it shared,
+/// or the thread that ran it. This is the same slice-local discipline the
+/// per-row quantization scales obey, and it is what makes every noisy
+/// path byte-identical across `HDR_THREADS`, shard counts, and
+/// micro-batch compositions.
+pub fn row_fault_seed(global_seed: u64, row: &[f32]) -> u64 {
+    const K: u64 = 0x517cc1b727220a95;
+    let mut h = global_seed ^ 0x9E3779B97F4A7C15;
+    for &x in row {
+        h = (h.rotate_left(5) ^ x.to_bits() as u64).wrapping_mul(K);
+    }
+    h
+}
+
+/// Additive gaussian read noise on scores: one N(0, sigma²) draw per
+/// memory row (seeded from [`row_fault_seed`]), added to that row's score
+/// for *every* query in the batch — the fault lives on the stored row's
+/// readout path, so all queries against it see the same offset. `out` is
+/// the row-major (B, |V|) score matrix some inner scorer already filled.
+/// O(|V|·D) hashing + O(B·|V|) adds, negligible next to the O(B·|V|·D)
+/// distance work it rides behind.
+pub fn add_read_noise_into(
+    mv: &[f32],
+    dim_hd: usize,
+    sigma: f32,
+    seed: u64,
+    out: &mut [f32],
+    cfg: &KernelConfig,
+) {
+    let v = mv.len() / dim_hd.max(1);
+    if v == 0 || out.is_empty() {
+        return;
+    }
+    assert_eq!(out.len() % v, 0, "add_read_noise_into: out must be (B, |V|)");
+    let b = out.len() / v;
+    let mut noise = vec![0f32; v];
+    let threads = cfg.plan_threads(v, dim_hd);
+    par_rows(&mut noise, 1, threads, |first, chunk| {
+        for (lj, o) in chunk.iter_mut().enumerate() {
+            let j = first + lj;
+            let row = &mv[j * dim_hd..(j + 1) * dim_hd];
+            let mut rng = Rng::seed_from_u64(row_fault_seed(seed, row));
+            *o = sigma * rng.normal_f32();
+        }
+    });
+    for brow in out.chunks_mut(v).take(b) {
+        for (o, &n) in brow.iter_mut().zip(&noise) {
+            *o += n;
+        }
+    }
+}
+
+/// Quantize one row onto the fix-N grid and flip stuck bits in its
+/// two's-complement codes: each dimension independently suffers a fault
+/// with probability `rate`; a faulted dimension has one uniformly-drawn
+/// bit of its `fp.bits`-bit code forced to a uniformly-drawn 0/1. The RNG
+/// is seeded from [`row_fault_seed`] over the *original* float row and
+/// drawn in ascending-dimension order, so the fault mask is a pure
+/// function of (row content, global seed). `rate == 0` reduces exactly to
+/// per-row quantization (one Bernoulli draw per dimension, no bit draws).
+pub fn stuck_row_into(out: &mut [f32], row: &[f32], fp: FixedPoint, rate: f32, seed: u64) {
+    debug_assert_eq!(out.len(), row.len());
+    let scale = fp.scale_for(max_abs_blocked(row));
+    let mut rng = Rng::seed_from_u64(row_fault_seed(seed, row));
+    let bits = fp.bits;
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    for (o, &x) in out.iter_mut().zip(row) {
+        let mut code = (x / scale).round().clamp(-qmax - 1.0, qmax) as i32;
+        if rng.bool(rate as f64) {
+            let bit = rng.below(bits as usize) as u32;
+            let stuck_one = rng.below(2) == 1;
+            let mut u = code as u32;
+            if stuck_one {
+                u |= 1 << bit;
+            } else {
+                u &= !(1 << bit);
+            }
+            // sign-extend the masked code back from `bits` wide
+            code = ((u << (32 - bits)) as i32) >> (32 - bits);
+        }
+        *o = code as f32 * scale;
+    }
+}
+
+/// Fused stuck-bit Eq. 10 scorer: same contract as
+/// [`l1_scores_batch_into`], but every memory row streams through
+/// [`stuck_row_into`] — fix-N quantization plus seeded stuck-bit faults —
+/// in a worker-local buffer before the distance, exactly the shape of the
+/// fused quant scorer (no corrupted copy of `mv` is ever materialized).
+/// Queries model the datapath, not the stored array: they are quantized
+/// (fault-free) when `quantize_q` is set — i.e. when the wrapped leaf is
+/// a quant backend — and pass through untouched otherwise.
+#[allow(clippy::too_many_arguments)]
+pub fn l1_scores_batch_stuck_into(
+    mv: &[f32],
+    dim_hd: usize,
+    q: &[f32],
+    bias: f32,
+    fp: FixedPoint,
+    rate: f32,
+    seed: u64,
+    quantize_q: bool,
+    out: &mut [f32],
+    cfg: &KernelConfig,
+) {
+    let v = mv.len() / dim_hd.max(1);
+    let b = q.len() / dim_hd.max(1);
+    assert_eq!(out.len(), v * b, "l1_scores_batch_stuck_into: out must be (B, |V|)");
+    if v == 0 || b == 0 {
+        return;
+    }
+    let qq: std::borrow::Cow<[f32]> = if quantize_q {
+        let mut buf = vec![0f32; q.len()];
+        for (qrow, row) in buf.chunks_mut(dim_hd).zip(q.chunks(dim_hd)) {
+            quantize_row_into(qrow, row, fp);
+        }
+        std::borrow::Cow::Owned(buf)
+    } else {
+        std::borrow::Cow::Borrowed(q)
+    };
+    let qq = &qq[..];
+    let threads = cfg.plan_threads(v, b * dim_hd);
+    let mut scratch = vec![0f32; v * b];
+    par_rows(&mut scratch, b, threads, |first, chunk| {
+        let mut rowq = vec![0f32; dim_hd];
+        for (lj, srow) in chunk.chunks_mut(b).enumerate() {
+            let j = first + lj;
+            stuck_row_into(&mut rowq, &mv[j * dim_hd..(j + 1) * dim_hd], fp, rate, seed);
+            for (qi, o) in srow.iter_mut().enumerate() {
+                *o = bias - l1_distance_blocked(&qq[qi * dim_hd..(qi + 1) * dim_hd], &rowq);
+            }
+        }
+    });
+    for j in 0..v {
+        for bq in 0..b {
+            out[bq * v + j] = scratch[j * b + bq];
+        }
+    }
+}
+
+/// Stuck-bit dot-product decoder: the DistMult-family mirror of
+/// [`l1_scores_batch_stuck_into`] — memory rows corrupt on the fly in a
+/// worker-local buffer; the query quantizes (fault-free) iff `quantize_q`.
+#[allow(clippy::too_many_arguments)]
+pub fn dot_scores_stuck_into(
+    mat: &[f32],
+    dim: usize,
+    q: &[f32],
+    fp: FixedPoint,
+    rate: f32,
+    seed: u64,
+    quantize_q: bool,
+    out: &mut [f32],
+    cfg: &KernelConfig,
+) {
+    debug_assert_eq!(q.len(), dim);
+    let n = mat.len() / dim.max(1);
+    assert_eq!(out.len(), n, "dot_scores_stuck_into: out must be (N,)");
+    if n == 0 {
+        return;
+    }
+    let qq: std::borrow::Cow<[f32]> = if quantize_q {
+        let mut buf = vec![0f32; dim];
+        quantize_row_into(&mut buf, q, fp);
+        std::borrow::Cow::Owned(buf)
+    } else {
+        std::borrow::Cow::Borrowed(q)
+    };
+    let qq = &qq[..];
+    let threads = cfg.plan_threads(n, dim);
+    par_rows(out, 1, threads, |first, chunk| {
+        let mut rowq = vec![0f32; dim];
+        for (lj, o) in chunk.iter_mut().enumerate() {
+            let j = first + lj;
+            stuck_row_into(&mut rowq, &mat[j * dim..(j + 1) * dim], fp, rate, seed);
+            *o = dot_blocked(qq, &rowq);
+        }
+    });
+}
+
 // ------------------------------------------------------- training kernels
 
 /// L1 subgradient sign: `sgn(0) = 0`, matching the convention the AOT
@@ -755,15 +941,35 @@ pub fn top_k_select(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
 }
 
 /// Merge shard-local top-k lists (each already best-first, indices global)
-/// into one global top-k. The candidate pool is at most `shards * k`
-/// entries, so a sort of the concatenation beats a streaming k-way merge
-/// at every realistic shard count; ordering matches [`top_k_select`] on
-/// the concatenated dense vector by construction (same comparator).
+/// into one global top-k via a streaming k-way heap merge: one cursor per
+/// part in a `shards`-entry heap, popping the global best and advancing
+/// that part's cursor until `k` entries are out. O(k log shards) after the
+/// O(shards) heap build — the merge stops as soon as the answer is
+/// complete, instead of sorting the full `shards * k` concatenation whose
+/// tail is mostly discarded. Ordering matches [`top_k_select`] on the
+/// concatenated dense vector (same comparator; parts never share indices,
+/// so the part-index tiebreak only totalizes the heap order).
 pub fn merge_top_k(parts: Vec<Vec<(usize, f32)>>, k: usize) -> Vec<(usize, f32)> {
-    let mut all: Vec<(usize, f32)> = parts.into_iter().flatten().collect();
-    all.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
-    all.truncate(k);
-    all
+    // "better is smaller" via TopKEntry, so Reverse turns BinaryHeap's
+    // max-heap into best-first; part index keeps the order total
+    let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(TopKEntry, usize)>> = parts
+        .iter()
+        .enumerate()
+        .filter_map(|(p, part)| {
+            part.first().map(|&(idx, score)| std::cmp::Reverse((TopKEntry { idx, score }, p)))
+        })
+        .collect();
+    let mut cursors = vec![1usize; parts.len()];
+    let mut out = Vec::with_capacity(k.min(parts.iter().map(Vec::len).sum()));
+    while out.len() < k {
+        let Some(std::cmp::Reverse((e, p))) = heap.pop() else { break };
+        out.push((e.idx, e.score));
+        if let Some(&(idx, score)) = parts[p].get(cursors[p]) {
+            cursors[p] += 1;
+            heap.push(std::cmp::Reverse((TopKEntry { idx, score }, p)));
+        }
+    }
+    out
 }
 
 /// Eq. 2 reconstruction scores without materializing any bound vector:
@@ -946,6 +1152,130 @@ mod tests {
         dot_scores_into(&matq, d, &qq, &mut want, &KernelConfig::default());
         let mut got = vec![0f32; n];
         dot_scores_quant_into(&mat, d, &q, fp, &mut got, &KernelConfig::with_threads(2));
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn stuck_rate_zero_is_exactly_per_row_quantization() {
+        let mut rng = Rng::seed_from_u64(30);
+        let d = 13;
+        for bits in [2u32, 4, 8, 16] {
+            let fp = FixedPoint::new(bits);
+            let row = randv(&mut rng, d);
+            let mut want = row.clone();
+            fp.quantize_tensor(&mut want);
+            let mut got = vec![0f32; d];
+            stuck_row_into(&mut got, &row, fp, 0.0, 99);
+            assert_eq!(want, got, "fix-{bits}");
+        }
+    }
+
+    #[test]
+    fn stuck_faults_stay_on_the_grid_and_depend_only_on_content_and_seed() {
+        let mut rng = Rng::seed_from_u64(31);
+        let d = 32;
+        let fp = FixedPoint::new(8);
+        let row = randv(&mut rng, d);
+        let scale = fp.scale_for(max_abs_blocked(&row));
+        let mut a = vec![0f32; d];
+        let mut b = vec![0f32; d];
+        stuck_row_into(&mut a, &row, fp, 0.7, 42);
+        stuck_row_into(&mut b, &row, fp, 0.7, 42);
+        assert_eq!(a, b, "same content + seed must give the same faults");
+        // every corrupted value is still a representable fix-8 code
+        let qmax = ((1i64 << (fp.bits - 1)) - 1) as f32;
+        for &x in &a {
+            let code = x / scale;
+            assert_eq!(code, code.round(), "off-grid value {x}");
+            assert!((-qmax - 1.0..=qmax).contains(&code), "code {code} out of range");
+        }
+        let mut c = vec![0f32; d];
+        stuck_row_into(&mut c, &row, fp, 0.7, 43);
+        assert_ne!(a, c, "a different seed must draw a different fault mask");
+        // at rate 0.7 over 32 dims, faults all-missing is ~2^-55
+        let mut clean = vec![0f32; d];
+        stuck_row_into(&mut clean, &row, fp, 0.0, 42);
+        assert_ne!(a, clean, "rate 0.7 drew no faults");
+    }
+
+    #[test]
+    fn fused_stuck_scorer_matches_rowwise_reference_at_any_thread_count() {
+        let mut rng = Rng::seed_from_u64(32);
+        let (v, d, b) = (21, 13, 5);
+        let mv = randv(&mut rng, v * d);
+        let q = randv(&mut rng, b * d);
+        let fp = FixedPoint::new(8);
+        for quantize_q in [false, true] {
+            // reference: corrupt each row independently, then float scorer
+            let mut mvc = vec![0f32; v * d];
+            for (out, row) in mvc.chunks_mut(d).zip(mv.chunks(d)) {
+                stuck_row_into(out, row, fp, 0.3, 7);
+            }
+            let mut qq = q.clone();
+            if quantize_q {
+                for row in qq.chunks_mut(d) {
+                    fp.quantize_tensor(row);
+                }
+            }
+            let mut want = vec![0f32; v * b];
+            l1_scores_batch_into(&mvc, d, &qq, 1.5, &mut want, &KernelConfig::with_threads(1));
+            for threads in [1usize, 2, 8] {
+                let mut got = vec![0f32; v * b];
+                let cfg = KernelConfig::with_threads(threads);
+                l1_scores_batch_stuck_into(&mv, d, &q, 1.5, fp, 0.3, 7, quantize_q, &mut got, &cfg);
+                assert_eq!(want, got, "threads {threads} quantize_q {quantize_q}");
+            }
+        }
+    }
+
+    #[test]
+    fn read_noise_is_content_seeded_and_uniform_across_the_batch() {
+        let mut rng = Rng::seed_from_u64(33);
+        let (v, d, b) = (9, 13, 3);
+        let mv = randv(&mut rng, v * d);
+        let base = randv(&mut rng, v * b);
+        for threads in [1usize, 2, 8] {
+            let mut a = base.clone();
+            add_read_noise_into(&mv, d, 0.25, 11, &mut a, &KernelConfig::with_threads(threads));
+            let mut c = base.clone();
+            add_read_noise_into(&mv, d, 0.25, 11, &mut c, &KernelConfig::with_threads(1));
+            assert_eq!(a, c, "threads {threads} changed the noise draw");
+            // every query row sees the same per-vertex offset
+            for j in 0..v {
+                let off0 = a[j] - base[j];
+                for bq in 1..b {
+                    let off = a[bq * v + j] - base[bq * v + j];
+                    assert_eq!(off.to_bits(), off0.to_bits(), "row {j} batch {bq}");
+                }
+            }
+            assert_ne!(a, base, "sigma 0.25 added no noise");
+        }
+        // a different seed shifts the offsets
+        let mut other = base.clone();
+        add_read_noise_into(&mv, d, 0.25, 12, &mut other, &KernelConfig::with_threads(1));
+        let mut same = base.clone();
+        add_read_noise_into(&mv, d, 0.25, 11, &mut same, &KernelConfig::with_threads(1));
+        assert_ne!(other, same);
+    }
+
+    #[test]
+    fn dot_stuck_matches_rowwise_reference() {
+        let mut rng = Rng::seed_from_u64(34);
+        let (n, d) = (17, 13);
+        let mat = randv(&mut rng, n * d);
+        let q = randv(&mut rng, d);
+        let fp = FixedPoint::new(8);
+        let mut matc = vec![0f32; n * d];
+        for (out, row) in matc.chunks_mut(d).zip(mat.chunks(d)) {
+            stuck_row_into(out, row, fp, 0.2, 5);
+        }
+        let mut qq = q.clone();
+        fp.quantize_tensor(&mut qq);
+        let mut want = vec![0f32; n];
+        dot_scores_into(&matc, d, &qq, &mut want, &KernelConfig::with_threads(1));
+        let mut got = vec![0f32; n];
+        let cfg = KernelConfig::with_threads(2);
+        dot_scores_stuck_into(&mat, d, &q, fp, 0.2, 5, true, &mut got, &cfg);
         assert_eq!(want, got);
     }
 

@@ -101,11 +101,14 @@ COMMANDS:
              train_step artifact when compiled + present and otherwise the
              host-native runtime, which needs no artifacts and scores
              through any engine backend: `--backend
-             kernel|scalar|sharded[:N]|quant:N|sharded:N+quant:M` (e.g.
-             quant:8 trains on fix-8 logits). `--backend`/`--threads`
-             apply to the host runtime only.
+             kernel|scalar|sharded[:N]|quant:N|sharded:N+quant:M|
+             noisy:(gauss|stuck|saturate):P:SEED+<inner>` (e.g. quant:8
+             trains on fix-8 logits; a noisy spec trains THROUGH the
+             injected faults — noise-aware training). `--backend`/
+             `--threads` apply to the host runtime only.
   query      [--model tiny] [--dataset learnable] [--scale 1.0]
-             [--backend kernel|scalar|sharded[:N]|quant:N|sharded:N+quant:M]
+             [--backend kernel|scalar|sharded[:N]|quant:N|sharded:N+quant:M|
+                        noisy:(gauss|stuck|saturate):P:SEED+<inner>]
              [--threads 0] [--queries 256] [--batch <preset|B>]
              [--deadline-us 500] [--clients <batch>] [--seed 42]
              Rank a query stream through the KgcEngine micro-batched
@@ -115,7 +118,13 @@ COMMANDS:
              on the fix-N grid; sharded:N+(scalar|kernel|quant:M)
              composes the shard fan-out over a leaf backend — e.g.
              sharded:4+quant:8 runs fix-8 scoring on 4 shard workers,
-             byte-identical to unsharded quant:8
+             byte-identical to unsharded quant:8.
+             noisy:<model>:<param>:<seed>+<inner> injects deterministic
+             seeded hardware faults over any inner spec: gauss:SIGMA
+             (additive read noise on scores), stuck:RATE (stuck-at-0/1
+             bits on the fix-N grid; composes with quant:M, else fix-8),
+             saturate:LIMIT (saturating accumulation clamps |score-bias|)
+             — e.g. noisy:gauss:0.1:42+sharded:2+quant:8
   simulate   [--dataset FB15K-237] [--accel u50] [--scale 1.0]
              FPGA cycle simulation of one training batch
   figures    --id <table3|table4|table5|table6|fig8a|fig8b|fig8c|fig8d|

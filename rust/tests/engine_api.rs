@@ -3,7 +3,8 @@
 //! counts 1/2/max and shard counts that do and do not divide |V|), the
 //! micro-batched serving path (identical to the unbatched path,
 //! partial-batch deadline flush, FIFO order), the non-blocking
-//! `submit_async` handles, and the Fig. 9(b) quantization trend.
+//! `submit_async` handles, the Fig. 9(b) quantization trend, and the
+//! seeded-fault determinism matrix for `noisy:` backends.
 
 use hdreason::baselines::{DistMult, MarginModel, TransE};
 use hdreason::engine::{
@@ -521,6 +522,55 @@ fn dropped_async_handles_neither_leak_nor_deadlock() {
     let req = QueryRequest::forward(3, 0);
     assert_eq!(e.submit(req), e.rank(req), "serving continues after cancellations");
     assert_eq!(e.unclaimed_results(), 0, "no orphaned rankings");
+}
+
+#[test]
+fn noisy_determinism_matrix_across_threads_shards_and_paths() {
+    // acceptance pin: for a fixed seed, noisy scores are BYTE-identical
+    // across thread counts (1/2/max + the HDR_THREADS pin), shard counts
+    // (1/2/7 — 7 leaves a remainder shard), batch splits, and the
+    // submit / submit_async serving paths. Fault masks derive from the
+    // global seed + row content, never from execution layout.
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    for spec in [
+        "noisy:gauss:0.15:42+kernel",
+        "noisy:stuck:0.25:42+quant:8",
+        "noisy:saturate:3.5:42+kernel",
+    ] {
+        let kind = BackendKind::parse(spec).unwrap();
+        let reference = engine(kind, 1, 8);
+        let pairs = query_pairs(&reference, 13);
+        let want = reference.score_batch(&pairs);
+        for threads in thread_counts() {
+            let e = engine(kind, threads, 8);
+            assert_eq!(bits(&want), bits(&e.score_batch(&pairs)), "{spec} threads {threads}");
+        }
+        let (head, leaf) = spec.rsplit_once('+').unwrap();
+        for shards in [1usize, 2, 7] {
+            let sharded_spec = format!("{head}+sharded:{shards}+{leaf}");
+            let e = engine(BackendKind::parse(&sharded_spec).unwrap(), 0, 8);
+            assert_eq!(bits(&want), bits(&e.score_batch(&pairs)), "{sharded_spec}");
+        }
+        // batch splits: a pair scored alone == its row in the batch
+        let v = reference.num_candidates();
+        for (i, &(s, r)) in pairs.iter().take(4).enumerate() {
+            let single = reference.score_batch(&[(s, r)]);
+            assert_eq!(bits(&single), bits(&want[i * v..(i + 1) * v]), "{spec} split row {i}");
+        }
+        // serving paths: coalesced submit and async wait == unbatched rank
+        for &(s, r) in pairs.iter().take(3) {
+            let req = QueryRequest::forward(s, r);
+            let want_rank = reference.rank(req);
+            assert_eq!(reference.submit(req), want_rank, "{spec} submit {req:?}");
+            assert_eq!(reference.submit_async(req).wait(), want_rank, "{spec} async {req:?}");
+        }
+        // and the seed must matter (saturate is seed-free clamping)
+        if !spec.contains("saturate") {
+            let other = spec.replace(":42+", ":43+");
+            let e = engine(BackendKind::parse(&other).unwrap(), 1, 8);
+            assert_ne!(bits(&want), bits(&e.score_batch(&pairs)), "{other} vs seed 42");
+        }
+    }
 }
 
 #[test]

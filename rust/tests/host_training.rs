@@ -144,7 +144,17 @@ fn quantized_and_composed_backends_train() {
     // and the shard fan-out composes over it exactly as it does in serving
     let cfg = small_cfg();
     let f = fixture(&cfg, 7);
-    for spec in ["quant:8", "sharded:2+quant:8", "sharded:3+kernel"] {
+    for spec in [
+        "quant:8",
+        "sharded:2+quant:8",
+        "sharded:3+kernel",
+        // the fault channels train too: faulted logits feed the loss,
+        // gradients take the same straight-through estimate quant uses
+        "noisy:gauss:0.1:42+kernel",
+        "noisy:stuck:0.2:42+quant:8",
+        "noisy:saturate:2:42+kernel",
+        "noisy:gauss:0.1:42+sharded:2+quant:8",
+    ] {
         let kind = BackendKind::parse(spec).unwrap();
         let rt = HostRuntime::new(&cfg, kind.instantiate(0), 1);
         let out = rt.train_step(&f.state, &f.edges, &f.qs, &f.qr, &f.labels, 2.0, 0.1).unwrap();

@@ -5,7 +5,7 @@
 use hdreason::cache::HvCache;
 use hdreason::config::ReplacementPolicy;
 use hdreason::engine::{KernelBackend, RankPartial, ScoreBackend, ShardedBackend};
-use hdreason::hdc::kernels::top_k_select;
+use hdreason::hdc::kernels::{merge_top_k, top_k_select};
 use hdreason::hdc::quant::FixedPoint;
 use hdreason::kg::{Csr, Triple};
 use hdreason::model::{merged_rank, rank_counts, rank_of};
@@ -226,6 +226,52 @@ fn prop_top_k_select_equals_full_sort_truncate() {
         for (pos, (&(gi, gs), &wi)) in got.iter().zip(&idx).enumerate() {
             assert_eq!(gi, wi, "seed {seed} k {k} pos {pos}");
             assert_eq!(gs.to_bits(), scores[wi].to_bits(), "seed {seed} k {k} pos {pos}");
+        }
+    }
+}
+
+#[test]
+fn prop_merge_top_k_equals_full_sort_truncate() {
+    // the streaming k-way heap merge over shard-local top-k lists must
+    // reproduce selection on the undivided score vector byte-for-byte, at
+    // shard counts that do and do not divide |V|, on tie-heavy grids,
+    // infinities, and NaNs (total_cmp order)
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed * 5 + 3);
+        let v = 1 + rng.below(300);
+        let scores: Vec<f32> = (0..v)
+            .map(|_| match rng.below(12) {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                3..=7 => rng.below(5) as f32 / 2.0,
+                _ => rng.f32(),
+            })
+            .collect();
+        for shards in [2usize, 4, 8] {
+            let k = rng.below(v + 4);
+            let want = top_k_select(&scores, k);
+            // contiguous shard ranges, remainder spread like the backend's
+            let base = v / shards;
+            let extra = v % shards;
+            let mut start = 0usize;
+            let mut parts: Vec<Vec<(usize, f32)>> = Vec::with_capacity(shards);
+            for s in 0..shards {
+                let len = base + usize::from(s < extra);
+                let local = top_k_select(&scores[start..start + len], k);
+                parts.push(local.into_iter().map(|(i, x)| (start + i, x)).collect());
+                start += len;
+            }
+            let got = merge_top_k(parts, k);
+            assert_eq!(got.len(), want.len(), "seed {seed} shards {shards} k {k}");
+            for (pos, (&(gi, gs), &(wi, ws))) in got.iter().zip(&want).enumerate() {
+                assert_eq!(gi, wi, "seed {seed} shards {shards} k {k} pos {pos}");
+                assert_eq!(
+                    gs.to_bits(),
+                    ws.to_bits(),
+                    "seed {seed} shards {shards} k {k} pos {pos}"
+                );
+            }
         }
     }
 }
