@@ -1,7 +1,7 @@
 //! Bench: end-to-end serving throughput through `KgcEngine::submit` /
 //! `submit_async`, plus the sharded and quantized score backends.
 //!
-//! Six sections, all on the `tiny` preset with the same query stream:
+//! Seven sections, all on the `tiny` preset with the same query stream:
 //!
 //! 1. **Micro-batcher coalescing** — `submit` at batch capacities 1/8/64,
 //!    offered load scaled to capacity (one client per serving slot, like
@@ -25,9 +25,15 @@
 //!    fault channels (gaussian read noise over the kernel, stuck bits
 //!    over the fix-8 grid, saturating accumulation) against their clean
 //!    inners, so the cost of seeded fault injection is a tracked number.
+//! 7. **Live-mutation churn** — the incremental mutation path
+//!    (`insert_edges`/`remove_edges`, signed row deltas + adjacency
+//!    deltas) against the O(|E|) Csr + memorize rebuild it replaces, then
+//!    the `submit` serving path with a concurrent mutator thread cycling
+//!    a 64-edge batch in and out: queries/sec under churn vs quiet, plus
+//!    single-submit p50/p99 latency rows under churn.
 //!
 //! Run: cargo bench --bench engine_serving [-- --json [PATH]]
-//! (`--json` appends rows to BENCH_6.json at the repo root by default.)
+//! (`--json` appends rows to BENCH_7.json at the repo root by default.)
 
 use hdreason::bench::harness::{bench, maybe_append_json, BenchResult};
 use hdreason::config::model_preset;
@@ -36,9 +42,10 @@ use hdreason::engine::{
     RankPartial, ScoreBackend, ShardedBackend,
 };
 use hdreason::hdc;
-use hdreason::kg::generator;
+use hdreason::kg::{generator, Triple};
 use hdreason::model::{rank_of, ModelState};
 use std::hint::black_box;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
 
 const QUERIES: usize = 256;
@@ -278,6 +285,104 @@ fn main() {
         qps_of("kernel") / qps_of("noisy:gauss:0.1:42+kernel").max(1e-12),
         qps_of("kernel") / qps_of("noisy:saturate:4:42+kernel").max(1e-12),
         qps_of("quant:8") / qps_of("noisy:stuck:0.05:42+quant:8").max(1e-12),
+    );
+
+    // ---- 7. live-mutation churn: delta cost + serving under churn --------
+    // the incremental mutation path (signed row deltas + per-vertex
+    // adjacency deltas) vs the from-scratch rebuild each batch would
+    // otherwise cost, on the same graph section 5 scored
+    let engine = engine_with_capacity(8);
+    let (mv, mr) = (engine.num_candidates(), engine.kg().num_relations);
+    let batch: Vec<Triple> = (0..64)
+        .map(|i| Triple::new((i * 13 + 2) % mv, i % mr, (i * 29 + 5) % mv))
+        .collect();
+    let r_delta = bench("engine/mutate_cycle(tiny,batch=64,delta)", 3, 15, || {
+        engine.insert_edges(&batch);
+        engine.remove_edges(&batch);
+    });
+    println!("{}", r_delta.row());
+    let delta_eps = r_delta.per_second(2.0 * batch.len() as f64);
+    println!("  -> {delta_eps:.0} edge mutations/s via signed row deltas\n");
+    results.push(r_delta);
+
+    // rebuild alternative: Csr + full memorize over every train edge,
+    // once per mutation direction — what a batch costs without
+    // `memorize_delta_into` and incremental adjacency
+    let hv = state.encode_vertices_host();
+    let r_rebuild = bench("engine/mutate_cycle(tiny,batch=64,rebuild)", 1, 5, || {
+        for _ in 0..2 {
+            black_box(hdc::memorize(&kg.train_csr(), &hv, &hr, d));
+        }
+    });
+    println!("{}", r_rebuild.row());
+    println!(
+        "  -> delta vs rebuild per 64-edge batch: {:.1}x cheaper  ({} train edges)\n",
+        r_rebuild.median_s / r_delta.median_s.max(1e-12),
+        kg.train.len()
+    );
+    results.push(r_rebuild);
+
+    // serving under churn: the section-1 submit workload (b=8) with a
+    // mutator thread cycling the 64-edge batch in and out the whole time
+    let requests = request_stream(&engine, QUERIES);
+    let r_quiet = bench("engine/serve(tiny,b=8,quiet)", 3, 10, || {
+        engine.serve_all(&requests, 8);
+    });
+    println!("{}", r_quiet.row());
+    let quiet_qps = r_quiet.per_second(QUERIES as f64);
+    println!("  -> {quiet_qps:.0} queries/s on a quiet graph\n");
+    results.push(r_quiet);
+
+    let stop = AtomicBool::new(false);
+    let (r_churn, p50, p99) = std::thread::scope(|scope| {
+        let (e, halt, edges) = (&engine, &stop, &batch);
+        scope.spawn(move || {
+            while !halt.load(Ordering::Acquire) {
+                e.insert_edges(edges);
+                e.remove_edges(edges);
+            }
+        });
+        let r = bench("engine/serve(tiny,b=8,churn)", 3, 10, || {
+            engine.serve_all(&requests, 8);
+        });
+        // single-submit latency sample under the same concurrent mutator
+        // (one client, so each submit rides the 200us flush deadline)
+        let mut lat: Vec<f64> = Vec::with_capacity(QUERIES);
+        for &q in &requests {
+            let t0 = std::time::Instant::now();
+            black_box(engine.submit(q));
+            lat.push(t0.elapsed().as_secs_f64());
+        }
+        stop.store(true, Ordering::Release);
+        lat.sort_by(f64::total_cmp);
+        let pick = |p: f64| lat[((lat.len() - 1) as f64 * p).round() as usize];
+        (r, pick(0.5), pick(0.99))
+    });
+    println!("{}", r_churn.row());
+    let churn_qps = r_churn.per_second(QUERIES as f64);
+    println!(
+        "  -> {churn_qps:.0} queries/s under churn ({:.2}x of quiet)",
+        churn_qps / quiet_qps.max(1e-12)
+    );
+    results.push(r_churn);
+    for (name, secs) in
+        [("engine/serve_p50(tiny,b=8,churn)", p50), ("engine/serve_p99(tiny,b=8,churn)", p99)]
+    {
+        let row = BenchResult {
+            name: name.to_string(),
+            iters: QUERIES,
+            median_s: secs,
+            mad_s: 0.0,
+            min_s: secs,
+            mean_s: secs,
+        };
+        println!("{}", row.row());
+        results.push(row);
+    }
+    println!(
+        "  -> single-submit latency under churn: p50 {:.0} us, p99 {:.0} us\n",
+        p50 * 1e6,
+        p99 * 1e6
     );
 
     // context row: the raw batched score path without the serving queue,

@@ -9,7 +9,7 @@
 //! the scaling has real work to amortize against.
 //!
 //! Run: cargo bench --bench train_throughput [-- --json [PATH]]
-//! (`--json` appends rows to BENCH_6.json at the repo root by default.)
+//! (`--json` appends rows to BENCH_7.json at the repo root by default.)
 
 use hdreason::bench::harness::{bench, maybe_append_json, BenchResult};
 use hdreason::config::model_preset;

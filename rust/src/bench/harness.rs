@@ -6,9 +6,9 @@
 //! have no timings to record) passes its results through
 //! [`maybe_append_json`], so `cargo bench --bench <name> -- --json [PATH]`
 //! appends one `{"name", "median_s", "iters"}` object per line to
-//! `BENCH_6.json` (default: at the repo root, next to `rust/`; PR 1's rows
+//! `BENCH_7.json` (default: at the repo root, next to `rust/`; PR 1's rows
 //! live in `BENCH_1.json`, PR 2's in `BENCH_2.json`, and so on through
-//! `BENCH_5.json`). The files are append-only
+//! `BENCH_6.json`). The files are append-only
 //! JSON-lines so the perf trajectory accumulates across PRs — the default
 //! file name bumps with the PR sequence so each PR's hotpath + serving +
 //! training rows land together.
@@ -64,7 +64,7 @@ impl BenchResult {
 }
 
 /// Default JSON-lines sink at the repo root; bumps with the PR sequence.
-pub const DEFAULT_JSON_FILE: &str = "BENCH_6.json";
+pub const DEFAULT_JSON_FILE: &str = "BENCH_7.json";
 
 /// Parse `--json [PATH]` from the process args (cargo forwards everything
 /// after `--` to the bench binary). A bare `--json` defaults to

@@ -1303,6 +1303,55 @@ mod tests {
     }
 
     #[test]
+    fn mutated_rows_resnap_quant_scales_and_reseed_fault_masks() {
+        // the live-mutation contract for decorated backends: per-row
+        // quant scales and per-row fault seeds derive from row CONTENT at
+        // score time, never from a cached table — so a mutated row
+        // re-snaps / re-seeds itself automatically, untouched rows score
+        // byte-identically before and after, and sharding over the
+        // mutated matrix can't change a single bit (slice-local).
+        let mut rng = Rng::seed_from_u64(31);
+        let (v, b, d) = (17usize, 3usize, 16usize);
+        let mv = randv(&mut rng, v * d);
+        let q = randv(&mut rng, b * d);
+        let delta = randv(&mut rng, d);
+        let target = 5usize;
+        let mut mutated = mv.clone();
+        for (o, x) in mutated[target * d..(target + 1) * d].iter_mut().zip(&delta) {
+            *o += x;
+        }
+        let make = |label: &str| BackendKind::parse(label).expect(label).instantiate(1);
+        for label in ["quant:8", "noisy:gauss:0.2:42+kernel", "noisy:stuck:0.3:42+quant:8"] {
+            let be = make(label);
+            let mut before = vec![0f32; b * v];
+            let mut after = vec![0f32; b * v];
+            be.score_batch_into(&mv, d, &q, 6.0, &mut before);
+            be.score_batch_into(&mutated, d, &q, 6.0, &mut after);
+            let mut target_changed = false;
+            for row in 0..b {
+                for col in 0..v {
+                    let (x, y) = (before[row * v + col], after[row * v + col]);
+                    if col == target {
+                        target_changed |= x.to_bits() != y.to_bits();
+                    } else {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "{label}: untouched row {col} drifted after mutation"
+                        );
+                    }
+                }
+            }
+            assert!(target_changed, "{label}: mutated row must re-snap/re-seed");
+            let sharded = ShardedBackend::new(4, make(label));
+            let mut shard_after = vec![0f32; b * v];
+            sharded.score_batch_into(&mutated, d, &q, 6.0, &mut shard_after);
+            let bits = |s: &[f32]| s.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+            assert_eq!(bits(&after), bits(&shard_after), "{label}: sharded drift post-mutation");
+        }
+    }
+
+    #[test]
     fn noisy_kinds_parse_display_and_round_trip() {
         use InnerBackendKind as Inner;
         let gauss = NoiseSpec { model: NoiseModel::Gauss(0.1), seed: 42 };

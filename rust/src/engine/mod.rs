@@ -76,12 +76,24 @@ pub use batcher::{MicroBatcher, QueryRequest, Ranking};
 pub use model::{evaluate_double, evaluate_forward, KgcModel};
 
 use crate::config::{model_preset, ModelConfig};
-use crate::hdc::{self, GraphMemory};
-use crate::kg::{generator, Direction, KnowledgeGraph, LabelBatch, SubjectIndex, Triple};
+use crate::hdc::{self, kernels::KernelConfig};
+use crate::kg::{
+    generator, AdjacencyList, Direction, KnowledgeGraph, LabelBatch, SubjectIndex, Triple,
+};
 use crate::model::{ModelState, RankMetrics};
 use std::collections::{HashMap, HashSet};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
+
+/// Recover a poisoned mutex instead of propagating the panic: every
+/// engine lock guards plain data whose invariants hold at each store (a
+/// leader that panicked mid-`lead` never leaves half-written rankings —
+/// publication is per-entry), so the data is safe to keep serving. Without
+/// this, one panicking backend call would wedge every subsequent `submit`
+/// behind a `PoisonError`.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Shared serving queue behind [`KgcEngine::submit`] /
 /// [`KgcEngine::submit_async`].
@@ -93,22 +105,59 @@ struct ServeState {
     /// [`MicroBatcher::remove`]): publication discards these instead of
     /// leaking an unclaimable ranking in `results`.
     abandoned: HashSet<u64>,
+    /// Sequence numbers whose scoring panicked even when retried alone
+    /// (see [`KgcEngine::lead`]): the waiter for such a seq re-raises the
+    /// failure in its own thread instead of blocking forever, and
+    /// innocent batch-mates are unaffected.
+    failed: HashSet<u64>,
+}
+
+/// Epoch-tagged graph memory — the copy-on-write snapshot seam for live
+/// mutation. Readers clone the `Arc` under a microsecond lock hold and
+/// score against that immutable snapshot with no lock held; writers apply
+/// deltas through [`Arc::make_mut`] (in place when no reader snapshot is
+/// outstanding, one RCU-style matrix copy when one is) and bump `epoch`.
+/// An in-flight batch therefore always scores one consistent matrix — it
+/// can never observe a half-applied mutation — and readers never block
+/// writers while scoring.
+struct MemState {
+    /// Bumped once per applied mutation batch.
+    epoch: u64,
+    /// Memorized graph memory, row-major (|V|_kg, D).
+    data: Arc<Vec<f32>>,
+}
+
+/// Filtered-protocol label/subject sets, lazily rebuilt from the live
+/// adjacency when a mutation has made them stale (`epoch` lags the memory
+/// epoch). Queries and serving never touch these — only
+/// [`KgcEngine::evaluate`]/[`KgcEngine::evaluate_both`] pay the rebuild.
+struct Filters {
+    epoch: u64,
+    labels: LabelBatch,
+    subjects: SubjectIndex,
 }
 
 /// The unified reasoning engine (see module docs). Cheap to share across
-/// serving threads: all scoring state is immutable after construction and
-/// the only interior mutability is the micro-batch queue.
+/// serving threads: scoring state is immutable-by-snapshot — mutation
+/// (`insert_edges`/`remove_edges`) publishes a new epoch-tagged memory
+/// snapshot while in-flight readers keep the one they took.
 pub struct KgcEngine {
     cfg: ModelConfig,
     kg: KnowledgeGraph,
     state: ModelState,
+    /// Encoded vertex hypervectors, row-major (|V|_preset, D) — retained
+    /// for O(D)-per-edge delta memorization.
+    hv: Vec<f32>,
     /// Encoded relation hypervectors, row-major (|R|_preset, D).
     hr: Vec<f32>,
-    /// Memorized graph memory, row-major (|V|_kg, D).
-    mem: GraphMemory,
-    labels: LabelBatch,
-    subjects: SubjectIndex,
+    /// Epoch-tagged memorized graph memory (see [`MemState`]).
+    mem: Mutex<MemState>,
+    /// Live per-vertex adjacency, kept in lock-step with `mem`: memory
+    /// rows are always bit-equal to a from-scratch memorize of this list.
+    adj: Mutex<AdjacencyList>,
+    filters: Mutex<Filters>,
     backend: Box<dyn ScoreBackend>,
+    kcfg: KernelConfig,
     bias: f32,
     top_k: usize,
     batch_capacity: usize,
@@ -155,19 +204,152 @@ impl KgcEngine {
         self.kg.num_vertices
     }
 
-    /// Raw forward logits, row-major (|pairs|, |V|): Eq. 10 scores of each
-    /// `(subject, relation)` query against every candidate object, through
-    /// the configured backend.
-    pub fn score_batch(&self, pairs: &[(usize, usize)]) -> Vec<f32> {
-        let mut out = vec![0f32; pairs.len() * self.kg.num_vertices];
-        self.backend.score_pairs_into(
-            &self.mem.data,
+    /// Snapshot the current graph memory: clone the `Arc` under a brief
+    /// lock hold and score lock-free against the immutable snapshot.
+    /// Concurrent `insert_edges`/`remove_edges` publish a *new* snapshot;
+    /// this one stays consistent for as long as the caller holds it.
+    fn mem_snapshot(&self) -> Arc<Vec<f32>> {
+        Arc::clone(&lock_recover(&self.mem).data)
+    }
+
+    /// Mutation epoch of the graph memory: 0 at build, +1 per applied
+    /// [`Self::insert_edges`]/[`Self::remove_edges`] batch.
+    pub fn mem_epoch(&self) -> u64 {
+        lock_recover(&self.mem).epoch
+    }
+
+    /// Live edge count (the memorized multiset, after mutations).
+    pub fn num_live_edges(&self) -> usize {
+        lock_recover(&self.adj).num_edges()
+    }
+
+    /// Panic early on a mutation triple outside the served graph's
+    /// vocabulary — same contract as [`Self::validate_request`]: fail in
+    /// the mutating thread, before any state is touched.
+    fn validate_triple(&self, t: &Triple) {
+        assert!(
+            t.src < self.kg.num_vertices && t.dst < self.kg.num_vertices,
+            "mutation triple ({}, {}, {}) out of range for graph with {} vertices",
+            t.src,
+            t.rel,
+            t.dst,
+            self.kg.num_vertices
+        );
+        assert!(
+            t.rel < self.kg.num_relations,
+            "mutation triple relation {} out of range for graph with {} relations",
+            t.rel,
+            self.kg.num_relations
+        );
+    }
+
+    /// Insert a batch of edges live: O(D) per edge — each edge's bound
+    /// `H_src ∘ H_rel` pair is *added* onto memory row `dst`
+    /// ([`hdc::kernels::memorize_delta_into`]), no rebuild, no retraining
+    /// (the additive Eq. 1/7 structure HDReason's acceleration story rests
+    /// on). Duplicate edges memorize twice — multiset semantics, exactly
+    /// what a from-scratch memorize of the duplicated triple list does.
+    ///
+    /// Mutated rows stay bit-identical to a from-scratch memorize of the
+    /// new adjacency (inserts append at the tail of the per-row sum), so
+    /// scores through every slice-local backend — kernel, sharded:N,
+    /// quant:M (per-row scales re-snap from the new row content at score
+    /// time), noisy (content-derived fault seeds re-derive the same way) —
+    /// remain byte-identical across thread counts, shard counts, and
+    /// batch splits after the mutation.
+    ///
+    /// In-flight batches keep scoring the snapshot they took; queries
+    /// submitted after this returns see the new memory. Returns the number
+    /// of edges applied (= `edges.len()`).
+    ///
+    /// # Panics
+    /// If any triple is out of range for the served graph — raised before
+    /// anything is mutated.
+    pub fn insert_edges(&self, edges: &[Triple]) -> usize {
+        if edges.is_empty() {
+            return 0;
+        }
+        for t in edges {
+            self.validate_triple(t);
+        }
+        let mut mem = lock_recover(&self.mem);
+        let mut adj = lock_recover(&self.adj);
+        for t in edges {
+            adj.insert(t);
+        }
+        drop(adj);
+        let data = Arc::make_mut(&mut mem.data);
+        hdc::kernels::memorize_delta_into(
+            data,
+            &self.hv,
             &self.hr,
             self.cfg.dim_hd,
-            pairs,
-            self.bias,
-            &mut out,
+            edges,
+            1.0,
+            &self.kcfg,
         );
+        mem.epoch += 1;
+        edges.len()
+    }
+
+    /// Remove a batch of edges live. Each triple removes the **last**
+    /// occurrence of `(src, rel)` from `dst`'s adjacency row (undoing one
+    /// insert; edges not present are skipped), and every touched memory
+    /// row is recomputed exactly from its shortened neighbor list
+    /// ([`hdc::kernels::memorize_row_into`], O(degree·D) per touched row,
+    /// still independent of |E|). Exact recompute — not a float subtract —
+    /// because `(x + p) − p` rounds in f32: this way `insert_edges` then
+    /// `remove_edges` of the same batch restores the memory **bit-for-bit**,
+    /// and removed edges provably stop contributing.
+    ///
+    /// Returns the number of edges actually removed.
+    ///
+    /// # Panics
+    /// If any triple is out of range for the served graph.
+    pub fn remove_edges(&self, edges: &[Triple]) -> usize {
+        if edges.is_empty() {
+            return 0;
+        }
+        for t in edges {
+            self.validate_triple(t);
+        }
+        let mut mem = lock_recover(&self.mem);
+        let mut adj = lock_recover(&self.adj);
+        let mut touched: Vec<usize> = Vec::new();
+        let mut removed = 0usize;
+        for t in edges {
+            if adj.remove_last(t) {
+                removed += 1;
+                touched.push(t.dst);
+            }
+        }
+        if removed == 0 {
+            return 0;
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        let d = self.cfg.dim_hd;
+        let data = Arc::make_mut(&mut mem.data);
+        for &v in &touched {
+            hdc::kernels::memorize_row_into(
+                &mut data[v * d..(v + 1) * d],
+                adj.neighbors(v),
+                &self.hv,
+                &self.hr,
+            );
+        }
+        drop(adj);
+        mem.epoch += 1;
+        removed
+    }
+
+    /// Raw forward logits, row-major (|pairs|, |V|): Eq. 10 scores of each
+    /// `(subject, relation)` query against every candidate object, through
+    /// the configured backend, against one consistent memory snapshot.
+    pub fn score_batch(&self, pairs: &[(usize, usize)]) -> Vec<f32> {
+        let mv = self.mem_snapshot();
+        let mut out = vec![0f32; pairs.len() * self.kg.num_vertices];
+        self.backend.score_pairs_into(&mv, &self.hr, self.cfg.dim_hd, pairs, self.bias, &mut out);
         out
     }
 
@@ -240,7 +422,7 @@ impl KgcEngine {
     /// can join a batch.
     pub fn submit_async(&self, req: QueryRequest) -> QueryHandle<'_> {
         self.validate_request(req);
-        let seq = self.serve.lock().unwrap().batcher.push(req);
+        let seq = lock_recover(&self.serve).batcher.push(req);
         QueryHandle { engine: self, seq, request: req, resolved: false }
     }
 
@@ -255,7 +437,7 @@ impl KgcEngine {
     /// `notify_all` long before it matters.
     fn claim_or_lead<T>(&self, mut claim: impl FnMut(&mut ServeState) -> Option<T>) -> T {
         loop {
-            let mut st = self.serve.lock().unwrap();
+            let mut st = lock_recover(&self.serve);
             if let Some(out) = claim(&mut st) {
                 return out;
             }
@@ -280,14 +462,29 @@ impl KgcEngine {
                 .time_to_deadline(Instant::now())
                 .unwrap_or(self.deadline)
                 .clamp(Duration::from_micros(50), Duration::from_secs(3600));
-            let (_guard, _timeout) = self.serve_cv.wait_timeout(st, wait).unwrap();
+            let (_guard, _timeout) = self
+                .serve_cv
+                .wait_timeout(st, wait)
+                .unwrap_or_else(PoisonError::into_inner);
         }
     }
 
     /// Block until `seq`'s ranking is published, leading flushes whenever
     /// this thread is the first to observe a flush condition.
+    ///
+    /// # Panics
+    /// If `seq`'s scoring panicked even when retried alone (see
+    /// [`Self::lead`]) — the failure is re-raised here, in the waiting
+    /// thread, instead of blocking forever on a result that will never
+    /// be published.
     fn await_result(&self, seq: u64) -> Ranking {
-        self.claim_or_lead(|st| st.results.remove(&seq))
+        let got: Result<Ranking, ()> = self.claim_or_lead(|st| {
+            if st.failed.remove(&seq) {
+                return Some(Err(()));
+            }
+            st.results.remove(&seq).map(Ok)
+        });
+        got.unwrap_or_else(|()| panic!("serving query {seq} panicked in the batch leader"))
     }
 
     /// Block until *any* of `handles` resolves; returns the index of the
@@ -323,25 +520,64 @@ impl KgcEngine {
         let seq_to_idx: HashMap<u64, usize> =
             handles.iter().enumerate().map(|(i, h)| (h.seq, i)).collect();
         let (i, r) = self.claim_or_lead(|st| {
+            if let Some((seq, i)) =
+                st.failed.iter().find_map(|seq| seq_to_idx.get(seq).map(|&i| (*seq, i)))
+            {
+                st.failed.remove(&seq);
+                return Some((i, Err(())));
+            }
             let (seq, i) =
                 st.results.keys().find_map(|seq| seq_to_idx.get(seq).map(|&i| (*seq, i)))?;
-            Some((i, st.results.remove(&seq).expect("checked present")))
+            Some((i, Ok(st.results.remove(&seq).expect("checked present"))))
         });
         handles[i].resolved = true;
+        let r = r.unwrap_or_else(|()| {
+            panic!("serving query {} panicked in the batch leader", handles[i].seq)
+        });
         (i, r)
     }
 
     /// Score one drained batch and publish its rankings (discarding any
     /// whose handle was abandoned mid-flight), then wake every waiter.
+    ///
+    /// A panic during batch scoring is quarantined, not propagated: the
+    /// leader catches it and retries each request *alone*, so one
+    /// poisonous query cannot strand its coalesced batch-mates (they get
+    /// their correct rankings from the singleton retries). A request that
+    /// panics even alone is recorded in [`ServeState::failed`]; its waiter
+    /// re-raises the failure in its own thread, and serving continues for
+    /// everyone else — the long-running serve loop survives a panicked
+    /// flush leader.
     fn lead(&self, batch: Vec<(u64, QueryRequest)>) {
         if batch.is_empty() {
             return;
         }
-        let ranked = self.rank_requests(&batch);
-        let mut st = self.serve.lock().unwrap();
+        let score = |chunk: &[(u64, QueryRequest)]| {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.rank_requests(chunk)))
+        };
+        let (ranked, failed) = match score(&batch) {
+            Ok(r) => (r, Vec::new()),
+            Err(_) => {
+                let mut ok = Vec::new();
+                let mut bad = Vec::new();
+                for &(seq, req) in &batch {
+                    match score(&[(seq, req)]) {
+                        Ok(mut r) => ok.append(&mut r),
+                        Err(_) => bad.push(seq),
+                    }
+                }
+                (ok, bad)
+            }
+        };
+        let mut st = lock_recover(&self.serve);
         for (s, r) in ranked {
             if !st.abandoned.remove(&s) {
                 st.results.insert(s, r);
+            }
+        }
+        for s in failed {
+            if !st.abandoned.remove(&s) {
+                st.failed.insert(s);
             }
         }
         drop(st);
@@ -350,13 +586,13 @@ impl KgcEngine {
 
     /// Queued-but-unscored serving requests (diagnostics).
     pub fn pending_queries(&self) -> usize {
-        self.serve.lock().unwrap().batcher.len()
+        lock_recover(&self.serve).batcher.len()
     }
 
     /// Published rankings no handle has claimed yet (diagnostics; the
     /// abandoned-handle tests pin that this drains back to zero).
     pub fn unclaimed_results(&self) -> usize {
-        self.serve.lock().unwrap().results.len()
+        lock_recover(&self.serve).results.len()
     }
 
     /// Drive a whole request stream through [`Self::submit`] from
@@ -398,34 +634,58 @@ impl KgcEngine {
         })
     }
 
+    /// Lock the filtered-protocol label/subject sets, lazily rebuilding
+    /// them from the live adjacency when a mutation has made them stale.
+    /// The rebuild folds the *live* train edge multiset (mutations apply
+    /// to the memorized train split) with the untouched valid/test splits
+    /// — so a newly inserted fact filters like any other known fact and a
+    /// removed one stops filtering.
+    fn filters(&self) -> MutexGuard<'_, Filters> {
+        let epoch = self.mem_epoch();
+        let mut f = lock_recover(&self.filters);
+        if f.epoch != epoch {
+            let live = lock_recover(&self.adj).to_triples();
+            let all = || live.iter().chain(self.kg.valid.iter()).chain(self.kg.test.iter());
+            f.labels = LabelBatch::from_triples(all());
+            f.subjects = SubjectIndex::from_triples(all());
+            f.epoch = epoch;
+        }
+        f
+    }
+
     /// Filtered forward-direction evaluation of a triple list through the
     /// generic [`KgcModel`] path (chunk = the serving batch capacity).
     pub fn evaluate(&self, triples: &[Triple]) -> crate::Result<RankMetrics> {
         let queries: Vec<(usize, usize, usize)> =
             triples.iter().map(|t| (t.src, t.rel, t.dst)).collect();
-        evaluate_forward(self, &queries, &self.labels, self.batch_capacity)
+        let filters = self.filters();
+        evaluate_forward(self, &queries, &filters.labels, self.batch_capacity)
     }
 
     /// Double-direction filtered evaluation (§2.2): mean of object and
     /// subject ranking, both through the configured backend.
     pub fn evaluate_both(&self, triples: &[Triple]) -> crate::Result<RankMetrics> {
-        evaluate_double(self, triples, &self.labels, &self.subjects, self.batch_capacity)
+        let filters = self.filters();
+        evaluate_double(self, triples, &filters.labels, &filters.subjects, self.batch_capacity)
     }
 
     /// Backward-direction scoring (`M_node − H_rel` packed queries) into
     /// `out`, row-major (|pairs|, |V|) — the one copy of the backward
     /// recipe, shared by the serving path and [`KgcModel::backward_chunk`].
-    fn score_backward_into(&self, pairs: &[(usize, usize)], out: &mut [f32]) {
+    /// `mv` is the caller's memory snapshot: queries pack and score against
+    /// the same matrix.
+    fn score_backward_into(&self, mv: &[f32], pairs: &[(usize, usize)], out: &mut [f32]) {
         let d = self.cfg.dim_hd;
-        let q = crate::model::pack_backward_queries(&self.mem.data, &self.hr, d, pairs);
-        self.backend.score_batch_into(&self.mem.data, d, &q, self.bias, out);
+        let q = crate::model::pack_backward_queries(mv, &self.hr, d, pairs);
+        self.backend.score_batch_into(mv, d, &q, self.bias, out);
     }
 
     /// Shared body of the rank-native eval path (both directions): the
-    /// crate-wide [`reduced_ranks_into`] over this engine's memory matrix
-    /// and backend.
+    /// crate-wide [`reduced_ranks_into`] over the caller's memory snapshot
+    /// and this engine's backend.
     fn reduced_ranks_chunk(
         &self,
+        mv: &[f32],
         q: &[f32],
         golds: &[usize],
         filters: &[&[u32]],
@@ -433,7 +693,7 @@ impl KgcEngine {
     ) {
         reduced_ranks_into(
             self.backend.as_ref(),
-            &self.mem.data,
+            mv,
             self.cfg.dim_hd,
             self.bias,
             q,
@@ -446,10 +706,15 @@ impl KgcEngine {
     /// Backward-direction top-k (`M_node − H_rel` packed queries) into
     /// `tops`, one list per pair — the reduced-form sibling of
     /// [`Self::score_backward_into`].
-    fn top_k_backward_into(&self, pairs: &[(usize, usize)], tops: &mut [Vec<(usize, f32)>]) {
+    fn top_k_backward_into(
+        &self,
+        mv: &[f32],
+        pairs: &[(usize, usize)],
+        tops: &mut [Vec<(usize, f32)>],
+    ) {
         let d = self.cfg.dim_hd;
-        let q = crate::model::pack_backward_queries(&self.mem.data, &self.hr, d, pairs);
-        self.backend.top_k_batch_into(&self.mem.data, d, &q, self.bias, self.top_k, tops);
+        let q = crate::model::pack_backward_queries(mv, &self.hr, d, pairs);
+        self.backend.top_k_batch_into(mv, d, &q, self.bias, self.top_k, tops);
     }
 
     /// Score and rank one drained micro-batch — rank-native: the batch
@@ -468,6 +733,10 @@ impl KgcEngine {
             return Vec::new();
         }
         let d = self.cfg.dim_hd;
+        // one snapshot for the whole batch: every batch-mate (and both
+        // direction sweeps of a mixed batch) scores the same epoch's
+        // matrix, so a batch can never observe a half-applied mutation
+        let mv = self.mem_snapshot();
         let mut tops: Vec<Vec<(usize, f32)>> = vec![Vec::new(); batch.len()];
 
         let fwd_rows: Vec<usize> = (0..batch.len())
@@ -477,7 +746,7 @@ impl KgcEngine {
             || batch.iter().map(|&(_, r)| (r.node, r.rel)).collect::<Vec<(usize, usize)>>();
         if fwd_rows.len() == batch.len() {
             self.backend.top_k_pairs_into(
-                &self.mem.data,
+                &mv,
                 &self.hr,
                 d,
                 &all_pairs(),
@@ -486,7 +755,7 @@ impl KgcEngine {
                 &mut tops,
             );
         } else if fwd_rows.is_empty() {
-            self.top_k_backward_into(&all_pairs(), &mut tops);
+            self.top_k_backward_into(&mv, &all_pairs(), &mut tops);
         } else {
             // mixed directions: sweep each side into a staging list and
             // scatter rows back to their submission positions
@@ -501,7 +770,7 @@ impl KgcEngine {
             let fwd_pairs = pairs_of(&fwd_rows);
             let mut side = vec![Vec::new(); fwd_pairs.len()];
             self.backend.top_k_pairs_into(
-                &self.mem.data,
+                &mv,
                 &self.hr,
                 d,
                 &fwd_pairs,
@@ -515,7 +784,7 @@ impl KgcEngine {
                 .collect();
             let bwd_pairs = pairs_of(&bwd_rows);
             let mut side = vec![Vec::new(); bwd_pairs.len()];
-            self.top_k_backward_into(&bwd_pairs, &mut side);
+            self.top_k_backward_into(&mv, &bwd_pairs, &mut side);
             scatter(&bwd_rows, &mut side);
         }
 
@@ -563,7 +832,12 @@ impl QueryHandle<'_> {
     /// over, and a subsequent [`Self::wait`] panics rather than waiting
     /// for a result that can never be republished.
     pub fn poll(&mut self) -> Option<Ranking> {
-        let mut st = self.engine.serve.lock().unwrap();
+        let mut st = lock_recover(&self.engine.serve);
+        if st.failed.remove(&self.seq) {
+            self.resolved = true;
+            drop(st);
+            panic!("serving query {} panicked in the batch leader", self.seq);
+        }
         if let Some(r) = st.results.remove(&self.seq) {
             self.resolved = true;
             return Some(r);
@@ -572,7 +846,12 @@ impl QueryHandle<'_> {
             let batch = st.batcher.take_batch();
             drop(st);
             self.engine.lead(batch);
-            let mut st = self.engine.serve.lock().unwrap();
+            let mut st = lock_recover(&self.engine.serve);
+            if st.failed.remove(&self.seq) {
+                self.resolved = true;
+                drop(st);
+                panic!("serving query {} panicked in the batch leader", self.seq);
+            }
             if let Some(r) = st.results.remove(&self.seq) {
                 self.resolved = true;
                 return Some(r);
@@ -599,9 +878,12 @@ impl Drop for QueryHandle<'_> {
         if self.resolved {
             return;
         }
-        let mut st = self.engine.serve.lock().unwrap();
-        if st.batcher.remove(self.seq) || st.results.remove(&self.seq).is_some() {
-            return; // cancelled before scoring, or claimed-and-discarded
+        let mut st = lock_recover(&self.engine.serve);
+        if st.batcher.remove(self.seq)
+            || st.results.remove(&self.seq).is_some()
+            || st.failed.remove(&self.seq)
+        {
+            return; // cancelled, claimed-and-discarded, or failure dropped
         }
         // a leader is scoring it right now: discard at publication
         st.abandoned.insert(self.seq);
@@ -676,8 +958,9 @@ impl KgcModel for KgcEngine {
     }
 
     fn backward_chunk(&self, pairs: &[(usize, usize)]) -> crate::Result<Option<Vec<f32>>> {
+        let mv = self.mem_snapshot();
         let mut out = vec![0f32; pairs.len() * self.kg.num_vertices];
-        self.score_backward_into(pairs, &mut out);
+        self.score_backward_into(&mv, pairs, &mut out);
         Ok(Some(out))
     }
 
@@ -701,6 +984,9 @@ impl KgcModel for KgcEngine {
             return Ok(None);
         }
         let d = self.cfg.dim_hd;
+        // one snapshot across every chunk: the whole evaluation sees one
+        // consistent epoch even under concurrent mutation
+        let mv = self.mem_snapshot();
         let mut ranks = Vec::with_capacity(queries.len());
         for chunk in queries.chunks(chunk.max(1)) {
             let pairs: Vec<(usize, usize)> = chunk.iter().map(|&(s, r, _)| (s, r)).collect();
@@ -709,8 +995,8 @@ impl KgcModel for KgcEngine {
                 chunk.iter().map(|&(s, r, _)| labels.objects(s, r)).collect();
             // pack once: the same q drives the reduced sweep AND the
             // filter rescoring (slice-local, so per-row values agree)
-            let q = crate::model::pack_forward_queries(&self.mem.data, &self.hr, d, &pairs);
-            self.reduced_ranks_chunk(&q, &golds, &filters, &mut ranks);
+            let q = crate::model::pack_forward_queries(&mv, &self.hr, d, &pairs);
+            self.reduced_ranks_chunk(&mv, &q, &golds, &filters, &mut ranks);
         }
         Ok(Some(ranks))
     }
@@ -728,14 +1014,15 @@ impl KgcModel for KgcEngine {
             return Ok(None);
         }
         let d = self.cfg.dim_hd;
+        let mv = self.mem_snapshot();
         let mut ranks = Vec::with_capacity(triples.len());
         for chunk in triples.chunks(chunk.max(1)) {
             let pairs: Vec<(usize, usize)> = chunk.iter().map(|t| (t.dst, t.rel)).collect();
             let golds: Vec<usize> = chunk.iter().map(|t| t.src).collect();
             let filters: Vec<&[u32]> =
                 chunk.iter().map(|t| subjects.subjects(t.rel, t.dst)).collect();
-            let q = crate::model::pack_backward_queries(&self.mem.data, &self.hr, d, &pairs);
-            self.reduced_ranks_chunk(&q, &golds, &filters, &mut ranks);
+            let q = crate::model::pack_backward_queries(&mv, &self.hr, d, &pairs);
+            self.reduced_ranks_chunk(&mv, &q, &golds, &filters, &mut ranks);
         }
         Ok(Some(ranks))
     }
@@ -891,7 +1178,9 @@ impl EngineBuilder {
         };
         let hv = state.encode_vertices_host();
         let hr = state.encode_relations_host();
-        let mem = hdc::memorize(&kg.train_csr(), &hv, &hr, cfg.dim_hd);
+        let train_csr = kg.train_csr();
+        let mem = hdc::memorize(&train_csr, &hv, &hr, cfg.dim_hd);
+        let adj = AdjacencyList::from_csr(&train_csr);
         let labels = LabelBatch::full(&kg);
         let subjects = SubjectIndex::full(&kg);
         let backend = match self.custom_backend {
@@ -905,16 +1194,19 @@ impl EngineBuilder {
                 batcher: MicroBatcher::new(batch_capacity, self.deadline),
                 results: HashMap::new(),
                 abandoned: HashSet::new(),
+                failed: HashSet::new(),
             }),
             serve_cv: Condvar::new(),
             cfg,
             kg,
             state,
+            hv,
             hr,
-            mem,
-            labels,
-            subjects,
+            mem: Mutex::new(MemState { epoch: 0, data: Arc::new(mem.data) }),
+            adj: Mutex::new(adj),
+            filters: Mutex::new(Filters { epoch: 0, labels, subjects }),
             backend,
+            kcfg: KernelConfig::with_threads(self.threads),
             bias: self.bias,
             top_k: self.top_k,
             batch_capacity,
@@ -1202,6 +1494,142 @@ mod tests {
         // the ranking was already handed over: a second bulk wait on the
         // same handle must fail fast, like QueryHandle::wait after poll
         let _ = e.wait_any(&mut handles);
+    }
+
+    #[test]
+    fn insert_then_remove_round_trips_scores_bitwise() {
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        let e = tiny_engine(BackendKind::Kernel);
+        let pairs = [(0usize, 0usize), (3, 1), (7, 0)];
+        let before = e.score_batch(&pairs);
+        let edges0 = e.num_live_edges();
+        // duplicate edge included on purpose: multiset semantics, each
+        // insert memorizes once more and each remove undoes one insert
+        let batch =
+            vec![Triple::new(1, 0, 2), Triple::new(4, 1, 2), Triple::new(1, 0, 2)];
+        assert_eq!(e.insert_edges(&batch), 3);
+        assert_eq!(e.mem_epoch(), 1);
+        assert_eq!(e.num_live_edges(), edges0 + 3);
+        let mutated = e.score_batch(&pairs);
+        assert_ne!(bits(&before), bits(&mutated), "inserted edges must change scores");
+        assert_eq!(e.remove_edges(&batch), 3);
+        assert_eq!(e.mem_epoch(), 2);
+        assert_eq!(e.num_live_edges(), edges0);
+        assert_eq!(bits(&before), bits(&e.score_batch(&pairs)), "round trip must be bit-exact");
+        // removing an edge that is not present is a counted no-op
+        assert_eq!(e.remove_edges(&[Triple::new(1, 0, 2)]), 0);
+        assert_eq!(e.mem_epoch(), 2, "no-op removal publishes no new epoch");
+    }
+
+    #[test]
+    fn evaluate_sees_mutated_filters() {
+        let e = tiny_engine(BackendKind::Kernel);
+        let m0 = e.evaluate(&e.kg().test).unwrap();
+        // mutate, then evaluate again: the lazy filter rebuild must run
+        // (and evaluation still completes) instead of serving stale sets
+        let t = e.kg().train[0];
+        assert_eq!(e.remove_edges(&[t]), 1);
+        let m1 = e.evaluate(&e.kg().test).unwrap();
+        assert_eq!(m1.count, m0.count);
+        assert!(m1.mrr > 0.0 && m1.mrr <= 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_mutation_panics_before_touching_state() {
+        let e = tiny_engine(BackendKind::Kernel);
+        let _ = e.insert_edges(&[Triple::new(0, 0, e.num_candidates())]);
+    }
+
+    /// Delegates scoring to the kernel backend but panics whenever the
+    /// poisoned node appears in a batch — the fault model for the
+    /// quarantine tests.
+    struct PanickyBackend {
+        inner: KernelBackend,
+        poison_node: usize,
+    }
+    impl ScoreBackend for PanickyBackend {
+        fn name(&self) -> &'static str {
+            "panicky"
+        }
+        fn score_batch_into(
+            &self,
+            mv: &[f32],
+            dim_hd: usize,
+            q: &[f32],
+            bias: f32,
+            out: &mut [f32],
+        ) {
+            self.inner.score_batch_into(mv, dim_hd, q, bias, out);
+        }
+        fn dot_scores_into(&self, mat: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+            self.inner.dot_scores_into(mat, dim, q, out);
+        }
+        #[allow(clippy::too_many_arguments)]
+        fn top_k_pairs_into(
+            &self,
+            mv: &[f32],
+            hr: &[f32],
+            dim_hd: usize,
+            pairs: &[(usize, usize)],
+            bias: f32,
+            k: usize,
+            out: &mut [Vec<(usize, f32)>],
+        ) {
+            assert!(
+                !pairs.iter().any(|&(s, _)| s == self.poison_node),
+                "injected backend fault"
+            );
+            self.inner.top_k_pairs_into(mv, hr, dim_hd, pairs, bias, k, out);
+        }
+    }
+
+    fn panicky_engine(poison_node: usize) -> KgcEngine {
+        EngineBuilder::new("tiny")
+            .seed(7)
+            .custom_backend(Box::new(PanickyBackend {
+                inner: KernelBackend::with_threads(1),
+                poison_node,
+            }))
+            .batch_capacity(4)
+            .deadline(Duration::from_millis(1))
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn panicking_backend_call_does_not_wedge_subsequent_submits() {
+        let e = panicky_engine(3);
+        // a poisoned query coalesced with good batch-mates: the leader's
+        // panic is quarantined, the batch-mates get their rankings from
+        // the singleton retries, and the poisoned seq fails alone
+        let good_a = e.submit_async(QueryRequest::forward(1, 0));
+        let bad = e.submit_async(QueryRequest::forward(3, 0));
+        let good_b = e.submit_async(QueryRequest::forward(2, 1));
+        assert_eq!(good_a.wait(), e.rank(QueryRequest::forward(1, 0)));
+        assert_eq!(good_b.wait(), e.rank(QueryRequest::forward(2, 1)));
+        // the poisoned query re-raises in ITS waiter, nobody else's
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| bad.wait()));
+        assert!(err.is_err(), "poisoned query must re-raise in its own waiter");
+        // and the serve mutex is not wedged: submits keep working
+        for i in 0..6 {
+            let req = QueryRequest::forward((4 + i) % e.num_candidates(), i % 2);
+            assert_eq!(e.submit(req), e.rank(req), "post-panic submit {i}");
+        }
+        assert_eq!(e.pending_queries(), 0);
+        assert_eq!(e.unclaimed_results(), 0);
+    }
+
+    #[test]
+    fn dropped_handle_clears_its_failure_record() {
+        let e = panicky_engine(3);
+        let bad = e.submit_async(QueryRequest::forward(3, 0));
+        // drive the flush from another query's waiter
+        let req = QueryRequest::forward(1, 0);
+        assert_eq!(e.submit(req), e.rank(req));
+        drop(bad); // never waited: the failure record must not leak
+        assert!(lock_recover(&e.serve).failed.is_empty(), "failed seq leaked");
+        assert_eq!(e.unclaimed_results(), 0);
     }
 
     #[test]

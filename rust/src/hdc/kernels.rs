@@ -235,6 +235,22 @@ where
 
 // -------------------------------------------------------------- memorize
 
+/// Recompute ONE memory row from its neighbor list: `row = Σ H_src ∘ H_rel`
+/// over `neighbors`, accumulated in list order. This is the exact per-row
+/// body of [`memorize_into`], factored out so live-mutation paths
+/// (`KgcEngine::remove_edges`) can rebuild only the touched rows — the
+/// result is bit-identical to a from-scratch memorize of the same
+/// adjacency, because the accumulation order is the list order both ways.
+pub fn memorize_row_into(row: &mut [f32], neighbors: &[(u32, u32)], hv: &[f32], hr: &[f32]) {
+    let dim_hd = row.len();
+    row.fill(0.0);
+    for &(src, rel) in neighbors {
+        let h = &hv[src as usize * dim_hd..(src as usize + 1) * dim_hd];
+        let r = &hr[rel as usize * dim_hd..(rel as usize + 1) * dim_hd];
+        bind_bundle_into(row, h, r);
+    }
+}
+
 /// Eq. 1/7 memorization into a caller buffer: row `i` of `out` accumulates
 /// Σ_{(j,r)∈N(i)} H_j ∘ H_r via the fused multiply-accumulate, rows
 /// sharded across threads. Per-row accumulation order matches the scalar
@@ -254,11 +270,79 @@ pub fn memorize_into(
     let threads = cfg.plan_threads(v, avg_degree * dim_hd);
     par_rows(out, dim_hd, threads, |first, chunk| {
         for (li, row) in chunk.chunks_mut(dim_hd).enumerate() {
-            row.fill(0.0);
-            for &(src, rel) in csr.neighbors(first + li) {
-                let h = &hv[src as usize * dim_hd..(src as usize + 1) * dim_hd];
-                let r = &hr[rel as usize * dim_hd..(rel as usize + 1) * dim_hd];
+            memorize_row_into(row, csr.neighbors(first + li), hv, hr);
+        }
+    });
+}
+
+/// Delta-memorize: apply a batch of edge insertions (`sign = 1.0`) or
+/// deletions (`sign = -1.0`) as O(D) signed updates to the touched rows of
+/// an existing (|V|, D) memory matrix — `mem[dst] += sign · (H_src ∘
+/// H_rel)` per edge, with no full rebuild. This is the additive-memorize
+/// property the paper's acceleration story rests on: an edge is one bound
+/// pair in one row's sum, so mutating it never touches any other row
+/// (slice-local, like scoring — sharding/threading cannot change the
+/// result).
+///
+/// Determinism contract: edges are applied grouped by destination row, in
+/// batch order within each row, regardless of the thread count — so the
+/// mutated matrix is byte-identical across layouts. For `sign = 1.0` on a
+/// row whose current value equals a from-scratch memorize of its adjacency
+/// list, appending the new edges at the end of that list and applying this
+/// delta yields *exactly* the from-scratch memorize of the new list
+/// (float addition left-to-right — the delta IS the tail of the rebuild
+/// sum). The reverse is NOT true for `sign = -1.0` (`(x + p) - p` rounds):
+/// exact deletion goes through [`memorize_row_into`] on the shortened
+/// list instead.
+pub fn memorize_delta_into(
+    mem: &mut [f32],
+    hv: &[f32],
+    hr: &[f32],
+    dim_hd: usize,
+    edges: &[crate::kg::Triple],
+    sign: f32,
+    cfg: &KernelConfig,
+) {
+    if edges.is_empty() {
+        return;
+    }
+    debug_assert!(dim_hd > 0 && mem.len() % dim_hd == 0);
+    let v = mem.len() / dim_hd;
+    // stable sort by destination: per-row application order = batch order
+    let mut by_row: Vec<(usize, u32, u32)> =
+        edges.iter().map(|t| (t.dst, t.src as u32, t.rel as u32)).collect();
+    by_row.sort_by_key(|&(dst, _, _)| dst);
+    let rows_touched = {
+        let mut n = 0usize;
+        let mut last = usize::MAX;
+        for &(dst, _, _) in &by_row {
+            assert!(dst < v, "memorize_delta_into: dst {dst} out of range for {v} rows");
+            if dst != last {
+                n += 1;
+                last = dst;
+            }
+        }
+        n
+    };
+    let per_row = (edges.len() / rows_touched.max(1) + 1) * dim_hd;
+    let threads = cfg.plan_threads(rows_touched, per_row);
+    // workers own disjoint row ranges of the whole matrix (same row-range
+    // sharding the sharded score backend uses); each applies only the
+    // deltas that fall in its range, so no row is written by two threads
+    par_rows(mem, dim_hd, threads, |first, chunk| {
+        let rows = chunk.len() / dim_hd;
+        let lo = by_row.partition_point(|&(dst, _, _)| dst < first);
+        let hi = by_row.partition_point(|&(dst, _, _)| dst < first + rows);
+        for &(dst, src, rel) in &by_row[lo..hi] {
+            let row = &mut chunk[(dst - first) * dim_hd..(dst - first + 1) * dim_hd];
+            let h = &hv[src as usize * dim_hd..(src as usize + 1) * dim_hd];
+            let r = &hr[rel as usize * dim_hd..(rel as usize + 1) * dim_hd];
+            if sign >= 0.0 {
                 bind_bundle_into(row, h, r);
+            } else {
+                for ((o, &x), &y) in row.iter_mut().zip(h).zip(r) {
+                    *o -= x * y;
+                }
             }
         }
     });
@@ -1047,6 +1131,90 @@ mod tests {
         crate::hdc::bundle_into(&mut acc1, &bound);
         bind_bundle_into(&mut acc2, &a, &b);
         assert_eq!(acc1, acc2);
+    }
+
+    #[test]
+    fn delta_insert_is_bit_identical_to_appended_rebuild() {
+        // the live-mutation contract: memory + delta(+1, appended edges)
+        // == memorize of (old triples ++ appended edges), bit-for-bit, at
+        // every thread count — because the delta is exactly the tail of
+        // the rebuild's left-to-right per-row sum
+        use crate::kg::{Csr, Triple};
+        let mut rng = Rng::seed_from_u64(11);
+        let (v, r, d) = (23usize, 4usize, 13usize); // D not a lane multiple
+        let hv = randv(&mut rng, v * d);
+        let hr = randv(&mut rng, r * d);
+        let base: Vec<Triple> =
+            (0..60).map(|_| Triple::new(rng.below(v), rng.below(r), rng.below(v))).collect();
+        let extra: Vec<Triple> =
+            (0..17).map(|_| Triple::new(rng.below(v), rng.below(r), rng.below(v))).collect();
+        let mut combined = base.clone();
+        combined.extend_from_slice(&extra);
+        let want = memorize_blocked(
+            &Csr::from_triples(v, &combined),
+            &hv,
+            &hr,
+            d,
+            &KernelConfig::default(),
+        );
+        let base_csr = Csr::from_triples(v, &base);
+        for threads in [1usize, 2, 5] {
+            let mut mem = memorize_blocked(&base_csr, &hv, &hr, d, &KernelConfig::default()).data;
+            memorize_delta_into(
+                &mut mem,
+                &hv,
+                &hr,
+                d,
+                &extra,
+                1.0,
+                &KernelConfig::with_threads(threads),
+            );
+            assert_eq!(mem, want.data, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn delta_subtract_reverses_within_float_tolerance() {
+        // signed subtract is the O(D) fast path; exact deletion goes
+        // through memorize_row_into (tested below / at the engine layer)
+        use crate::kg::{Csr, Triple};
+        let mut rng = Rng::seed_from_u64(12);
+        let (v, r, d) = (11usize, 3usize, 16usize);
+        let hv = randv(&mut rng, v * d);
+        let hr = randv(&mut rng, r * d);
+        let base: Vec<Triple> =
+            (0..30).map(|_| Triple::new(rng.below(v), rng.below(r), rng.below(v))).collect();
+        let extra: Vec<Triple> =
+            (0..9).map(|_| Triple::new(rng.below(v), rng.below(r), rng.below(v))).collect();
+        let orig =
+            memorize_blocked(&Csr::from_triples(v, &base), &hv, &hr, d, &KernelConfig::default());
+        let mut mem = orig.data.clone();
+        memorize_delta_into(&mut mem, &hv, &hr, d, &extra, 1.0, &KernelConfig::default());
+        memorize_delta_into(&mut mem, &hv, &hr, d, &extra, -1.0, &KernelConfig::default());
+        for (i, (&got, &want)) in mem.iter().zip(&orig.data).enumerate() {
+            assert!(
+                (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                "elem {i}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn memorize_row_into_matches_full_memorize_rows() {
+        use crate::kg::{Csr, Triple};
+        let mut rng = Rng::seed_from_u64(13);
+        let (v, r, d) = (17usize, 3usize, 13usize);
+        let hv = randv(&mut rng, v * d);
+        let hr = randv(&mut rng, r * d);
+        let triples: Vec<Triple> =
+            (0..50).map(|_| Triple::new(rng.below(v), rng.below(r), rng.below(v))).collect();
+        let csr = Csr::from_triples(v, &triples);
+        let full = memorize_blocked(&csr, &hv, &hr, d, &KernelConfig::default());
+        let mut row = vec![0f32; d];
+        for i in 0..v {
+            memorize_row_into(&mut row, csr.neighbors(i), &hv, &hr);
+            assert_eq!(&row, &full.data[i * d..(i + 1) * d], "row {i}");
+        }
     }
 
     #[test]

@@ -72,6 +72,112 @@ impl Csr {
     }
 }
 
+/// Mutable per-vertex adjacency — the live-mutation sibling of [`Csr`].
+///
+/// `Csr` is rebuild-only: applying a k-edge mutation batch through it costs
+/// O(|E|). `AdjacencyList` keeps one `Vec<(src, rel)>` per destination
+/// vertex so inserts are O(1) amortized pushes and removals touch only the
+/// affected row — O(degree) worst case, independent of |E|.
+///
+/// Order contract (load-bearing for bit-exact delta-memorization):
+/// - `from_triples`/`from_csr` preserve per-destination relative triple
+///   order, matching `Csr::from_triples`'s counting sort.
+/// - `insert` appends at the end of the destination row, so the new edge's
+///   bind-bundle contribution is the *tail* of the row's left-to-right
+///   memorize sum — adding it as a float delta is bit-identical to a
+///   from-scratch rebuild.
+/// - `remove_last` removes the **last** occurrence of `(src, rel)` in the
+///   destination row (multiset semantics: duplicate edges memorize twice,
+///   and a remove undoes exactly one insert), shifting the tail left so the
+///   surviving order still equals a rebuild of the shortened triple list.
+#[derive(Debug, Clone)]
+pub struct AdjacencyList {
+    rows: Vec<Vec<(u32, u32)>>,
+    num_edges: usize,
+}
+
+impl AdjacencyList {
+    pub fn from_triples(num_vertices: usize, triples: &[Triple]) -> Self {
+        let mut rows = vec![Vec::new(); num_vertices];
+        for t in triples {
+            rows[t.dst].push((t.src as u32, t.rel as u32));
+        }
+        Self { rows, num_edges: triples.len() }
+    }
+
+    pub fn from_csr(csr: &Csr) -> Self {
+        let rows = (0..csr.num_vertices()).map(|v| csr.neighbors(v).to_vec()).collect();
+        Self { rows, num_edges: csr.num_edges() }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.num_edges
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.rows[v].len()
+    }
+
+    pub fn neighbors(&self, v: usize) -> &[(u32, u32)] {
+        &self.rows[v]
+    }
+
+    /// Append an edge at the end of its destination row (O(1) amortized).
+    pub fn insert(&mut self, t: &Triple) {
+        self.rows[t.dst].push((t.src as u32, t.rel as u32));
+        self.num_edges += 1;
+    }
+
+    /// Remove the last occurrence of `t` from its destination row,
+    /// preserving the order of the surviving entries. Returns `false`
+    /// (and changes nothing) when no such edge exists.
+    pub fn remove_last(&mut self, t: &Triple) -> bool {
+        let key = (t.src as u32, t.rel as u32);
+        let row = &mut self.rows[t.dst];
+        match row.iter().rposition(|&e| e == key) {
+            Some(i) => {
+                row.remove(i);
+                self.num_edges -= 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Materialize back into a [`Csr`] (per-row order preserved, so a CSR
+    /// rebuilt here memorizes to the same bytes as the live list).
+    pub fn to_csr(&self) -> Csr {
+        let mut offsets = Vec::with_capacity(self.rows.len() + 1);
+        let mut acc = 0;
+        offsets.push(0);
+        for row in &self.rows {
+            acc += row.len();
+            offsets.push(acc);
+        }
+        let mut entries = Vec::with_capacity(self.num_edges);
+        for row in &self.rows {
+            entries.extend_from_slice(row);
+        }
+        Csr { offsets, entries }
+    }
+
+    /// The live edge set as triples, destination-major, per-row order
+    /// preserved — the same sequence `Csr::from_triples` would lay out.
+    pub fn to_triples(&self) -> Vec<Triple> {
+        let mut out = Vec::with_capacity(self.num_edges);
+        for (dst, row) in self.rows.iter().enumerate() {
+            for &(src, rel) in row {
+                out.push(Triple::new(src as usize, rel as usize, dst));
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,5 +230,75 @@ mod tests {
         let c = Csr::from_triples(3, &[]);
         assert_eq!(c.num_edges(), 0);
         assert_eq!(c.max_degree(), 0);
+    }
+
+    fn sample_triples() -> Vec<Triple> {
+        vec![
+            Triple::new(0, 0, 1),
+            Triple::new(2, 1, 1),
+            Triple::new(3, 0, 2),
+            Triple::new(1, 1, 0),
+            Triple::new(2, 1, 1), // duplicate edge: memorizes twice
+        ]
+    }
+
+    fn assert_same_layout(a: &Csr, b: &Csr) {
+        assert_eq!(a.offsets, b.offsets);
+        assert_eq!(a.entries, b.entries);
+    }
+
+    #[test]
+    fn adjacency_round_trips_csr_with_order_preserved() {
+        let triples = sample_triples();
+        let csr = Csr::from_triples(4, &triples);
+        let adj = AdjacencyList::from_triples(4, &triples);
+        assert_eq!(adj.num_edges(), csr.num_edges());
+        for v in 0..4 {
+            assert_eq!(adj.neighbors(v), csr.neighbors(v), "row {v}");
+        }
+        assert_same_layout(&adj.to_csr(), &csr);
+        assert_same_layout(&AdjacencyList::from_csr(&csr).to_csr(), &csr);
+        // to_triples reproduces the dst-major order Csr::from_triples lays out
+        assert_same_layout(&Csr::from_triples(4, &adj.to_triples()), &csr);
+    }
+
+    #[test]
+    fn insert_appends_matching_extended_rebuild() {
+        let triples = sample_triples();
+        let mut adj = AdjacencyList::from_triples(4, &triples);
+        let extra = [Triple::new(3, 1, 1), Triple::new(0, 0, 3)];
+        for t in &extra {
+            adj.insert(t);
+        }
+        let mut combined = triples.clone();
+        combined.extend_from_slice(&extra);
+        assert_same_layout(&adj.to_csr(), &Csr::from_triples(4, &combined));
+        assert_eq!(adj.num_edges(), combined.len());
+    }
+
+    #[test]
+    fn remove_last_undoes_one_insert_and_preserves_order() {
+        let triples = sample_triples();
+        let mut adj = AdjacencyList::from_triples(4, &triples);
+        // duplicate (2,1,1): remove_last drops the LAST occurrence, leaving
+        // the earlier one in place — exactly undoing the second insert
+        assert!(adj.remove_last(&Triple::new(2, 1, 1)));
+        let first_four = &triples[..4];
+        assert_same_layout(&adj.to_csr(), &Csr::from_triples(4, first_four));
+        // removing a non-existent edge is a no-op returning false
+        assert!(!adj.remove_last(&Triple::new(3, 2, 0)));
+        assert_eq!(adj.num_edges(), 4);
+    }
+
+    #[test]
+    fn remove_from_middle_keeps_survivor_order() {
+        let triples = vec![
+            Triple::new(0, 0, 1),
+            Triple::new(2, 1, 1),
+            Triple::new(3, 0, 1),
+        ];
+        let mut adj = AdjacencyList::from_triples(4, &triples);
+        assert!(adj.remove_last(&Triple::new(2, 1, 1)));
+        assert_eq!(adj.neighbors(1), &[(0, 0), (3, 0)]);
     }
 }

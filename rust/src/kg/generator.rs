@@ -105,7 +105,10 @@ impl DatasetSpec {
 
 /// Zipf-ranked endpoint sampler: vertex ranks are a fixed random permutation
 /// so hub ids are spread over the id space like real datasets (not 0..k).
-struct ZipfSampler {
+///
+/// Public because the `serve` subcommand reuses it to drive Zipf-skewed
+/// query/mutation traffic matching each dataset's published hub skew.
+pub struct ZipfSampler {
     /// cumulative weights over ranks
     cdf: Vec<f64>,
     /// rank → vertex id
@@ -113,7 +116,7 @@ struct ZipfSampler {
 }
 
 impl ZipfSampler {
-    fn new(n: usize, exponent: f64, rng: &mut Rng) -> Self {
+    pub fn new(n: usize, exponent: f64, rng: &mut Rng) -> Self {
         let mut weights = Vec::with_capacity(n);
         let mut acc = 0.0;
         for k in 1..=n {
@@ -125,7 +128,7 @@ impl ZipfSampler {
         Self { cdf: weights, perm }
     }
 
-    fn sample(&self, rng: &mut Rng) -> usize {
+    pub fn sample(&self, rng: &mut Rng) -> usize {
         let total = *self.cdf.last().unwrap();
         let x = rng.f64() * total;
         let idx = self.cdf.partition_point(|&w| w < x);

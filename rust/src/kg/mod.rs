@@ -16,8 +16,8 @@ mod split;
 mod stats;
 mod triple;
 
-pub use csr::Csr;
-pub use generator::{DatasetSpec, KNOWN_DATASETS};
+pub use csr::{AdjacencyList, Csr};
+pub use generator::{DatasetSpec, ZipfSampler, KNOWN_DATASETS};
 pub use sampler::{LabelBatch, NegativeSampler, QueryBatch, QueryBatcher, SubjectIndex};
 pub use split::Split;
 pub use stats::GraphStats;

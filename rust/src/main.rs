@@ -4,6 +4,7 @@
 //!   datasets   print Table-3-style statistics of the synthetic datasets
 //!   train      end-to-end HDReason training through the PJRT artifacts
 //!   query      serve a ranked-query stream through the KgcEngine
+//!   serve      long-running mixed mutate+query workload (live KG churn)
 //!   simulate   run the FPGA cycle simulator on a dataset
 //!   figures    regenerate paper tables/figures (see `--id all`)
 //!   resources  print the Table 5 resource/power model
@@ -11,8 +12,8 @@
 use hdreason::bench::figures;
 use hdreason::config::{accel_preset, RunConfig, ACCEL_PRESETS, MODEL_PRESETS};
 use hdreason::coordinator::HdrTrainer;
-use hdreason::engine::{BackendKind, EngineBuilder, QueryRequest};
-use hdreason::kg::generator;
+use hdreason::engine::{BackendKind, EngineBuilder, KgcEngine, QueryRequest};
+use hdreason::kg::{generator, Triple, ZipfSampler};
 use hdreason::runtime::{HdrRuntime, HostRuntime, Manifest, TrainerRuntime};
 use hdreason::sim::{simulate_batch, SimOptions, Workload};
 
@@ -68,6 +69,7 @@ fn main() {
         "datasets" => cmd_datasets(&args),
         "train" => cmd_train(&args),
         "query" => cmd_query(&args),
+        "serve" => cmd_serve(&args),
         "simulate" => cmd_simulate(&args),
         "figures" => cmd_figures(&args),
         "resources" => {
@@ -125,6 +127,20 @@ COMMANDS:
              bits on the fix-N grid; composes with quant:M, else fix-8),
              saturate:LIMIT (saturating accumulation clamps |score-bias|)
              — e.g. noisy:gauss:0.1:42+sharded:2+quant:8
+  serve      [--model tiny] [--dataset learnable] [--backend <spec>]
+             [--threads 0] [--clients 4] [--batch <preset|B>]
+             [--deadline-us 500] [--duration-ms 1000] [--ops 4096]
+             [--mutate-batch 16] [--mutate-depth 8] [--seed 42]
+             Long-running mixed mutate+query workload: Zipf-skewed clients
+             (the dataset's Table 3 skew) stream queries through the
+             micro-batched serving path while a mutator thread churns the
+             live graph via insert_edges/remove_edges in a sliding window
+             of --mutate-depth batches of --mutate-batch edges. Bounded by
+             --duration-ms OR --ops, whichever hits first. Reports p50/p99
+             latency and queries/s under churn, an insert-visibility probe
+             (rank of a freshly inserted gold), and verifies the memory
+             round-trips bit-exactly once the window drains. Accepts every
+             composed --backend spec that `query` does.
   simulate   [--dataset FB15K-237] [--accel u50] [--scale 1.0]
              FPGA cycle simulation of one training batch
   figures    --id <table3|table4|table5|table6|fig8a|fig8b|fig8c|fig8d|
@@ -261,6 +277,199 @@ fn cmd_query(args: &Args) -> hdreason::Result<()> {
         println!("  ({}, r{}, ?) -> top3 {:?} (gold {})", t.src, t.rel, ids, t.dst);
     }
     println!("{}", engine.evaluate(&triples)?.row("engine (filtered)"));
+    Ok(())
+}
+
+/// Long-running mixed mutate+query serving loop: Zipf-skewed clients hammer
+/// the micro-batched `submit` path while a mutator thread churns the live
+/// graph through `insert_edges`/`remove_edges` in a sliding window (every
+/// inserted batch is removed again, so the run ends where it started).
+/// Reports p50/p99 latency and queries/sec under churn, plus an
+/// insert-visibility probe and a bit-exact memory round-trip check.
+fn cmd_serve(args: &Args) -> hdreason::Result<()> {
+    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+    let model = args.get("model", "tiny");
+    let dataset = args.get("dataset", "learnable");
+    let backend = BackendKind::parse(&args.get("backend", "kernel"))?;
+    let deadline_us = args.get_usize("deadline-us", 500);
+    let duration_ms = args.get_usize("duration-ms", 1000);
+    let max_ops = args.get_usize("ops", 4096).max(1);
+    let clients = args.get_usize("clients", 4).max(1);
+    let mutate_batch = args.get_usize("mutate-batch", 16).max(1);
+    let mutate_depth = args.get_usize("mutate-depth", 8).max(1);
+    let seed = args.get_usize("seed", 42) as u64;
+
+    let engine = EngineBuilder::new(&model)
+        .dataset(&dataset)
+        .scale(args.get_f64("scale", 1.0))
+        .seed(seed)
+        .backend(backend)
+        .threads(args.get_usize("threads", 0))
+        .batch_capacity(args.get_usize("batch", 0))
+        .deadline(std::time::Duration::from_micros(deadline_us as u64))
+        .build()?;
+    let kg = engine.kg();
+    println!(
+        "engine: preset {}, backend {}, serving batch {} (deadline {} us)",
+        model,
+        engine.backend_desc(),
+        engine.batch_capacity(),
+        deadline_us
+    );
+    println!(
+        "dataset: {} ({} vertices, {} relations, {} live edges)",
+        kg.name,
+        kg.num_vertices,
+        kg.num_relations,
+        engine.num_live_edges()
+    );
+
+    // traffic skew matched to the dataset family: named datasets carry
+    // their Table 3 Zipf exponent; the synthetic presets use their
+    // generator defaults
+    let zipf = generator::spec(&dataset).map(|s| s.zipf).unwrap_or(0.6);
+    let mut seed_rng = hdreason::util::Rng::seed_from_u64(seed ^ 0x5e12_7e0f);
+    let verts = ZipfSampler::new(kg.num_vertices, zipf, &mut seed_rng);
+    let rels = ZipfSampler::new(kg.num_relations, 1.1, &mut seed_rng);
+
+    // insert-visibility probe: vacate the coldest vertex (its memory row
+    // recomputes to exact zeros), then clone the hottest subject's
+    // in-edges onto it — delta-memorize replays the same bundle sequence,
+    // so the gold's row bit-equals M_hot and its rank must improve
+    let v = kg.num_vertices;
+    let mut indeg = vec![0usize; v];
+    for t in &kg.train {
+        indeg[t.dst] += 1;
+    }
+    let hot = (0..v).max_by_key(|&i| indeg[i]).unwrap();
+    let cold = (0..v).filter(|&i| i != hot).min_by_key(|&i| indeg[i]).unwrap();
+    let vacate: Vec<Triple> = kg.train.iter().filter(|t| t.dst == cold).copied().collect();
+    let cloned: Vec<Triple> = kg
+        .train
+        .iter()
+        .filter(|t| t.dst == hot)
+        .map(|t| Triple::new(t.src, t.rel, cold))
+        .collect();
+    let rank_of_cold = |e: &KgcEngine| {
+        let s = e.score_batch(&[(hot, 0)]);
+        1 + s.iter().filter(|&&x| x > s[cold]).count()
+    };
+    engine.remove_edges(&vacate);
+    let rank_before = rank_of_cold(&engine);
+    engine.insert_edges(&cloned);
+    let rank_after = rank_of_cold(&engine);
+    engine.remove_edges(&cloned);
+    engine.insert_edges(&vacate);
+    println!(
+        "probe: inserted gold {} rank {} -> {} for ({}, r0, ?), then restored",
+        cold, rank_before, rank_after, hot
+    );
+
+    // bit-exact churn baseline: the sliding window below removes every
+    // batch it inserts, so these scores must come back byte-identical
+    let probe_pairs: Vec<(usize, usize)> =
+        (0..8).map(|i| ((i * 31) % kg.num_vertices, i % kg.num_relations)).collect();
+    let baseline = engine.score_batch(&probe_pairs);
+
+    let stop = AtomicBool::new(false);
+    let issued = AtomicUsize::new(0);
+    let duration = std::time::Duration::from_millis(duration_ms as u64);
+    let start = std::time::Instant::now();
+    let (mut latencies, serve_secs, batches, inserted, removed) = std::thread::scope(|scope| {
+        let (e, stop, issued) = (&engine, &stop, &issued);
+        let (verts, rels) = (&verts, &rels);
+        let mutator = scope.spawn(move || {
+            let mut rng = hdreason::util::Rng::seed_from_u64(seed ^ 0x6d75_7461);
+            let mut window: std::collections::VecDeque<Vec<Triple>> = Default::default();
+            let (mut batches, mut ins, mut rem) = (0usize, 0usize, 0usize);
+            while !stop.load(Ordering::Acquire) {
+                let batch: Vec<Triple> = (0..mutate_batch)
+                    .map(|_| {
+                        let (s, d) = (verts.sample(&mut rng), verts.sample(&mut rng));
+                        Triple::new(s, rels.sample(&mut rng), d)
+                    })
+                    .collect();
+                ins += e.insert_edges(&batch);
+                window.push_back(batch);
+                batches += 1;
+                if window.len() > mutate_depth {
+                    rem += e.remove_edges(&window.pop_front().unwrap());
+                }
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            // drain: the run must end on the graph it started with
+            while let Some(b) = window.pop_front() {
+                rem += e.remove_edges(&b);
+            }
+            (batches, ins, rem)
+        });
+        let workers: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut rng =
+                        hdreason::util::Rng::seed_from_u64(seed ^ (0xc11e_0000 + c as u64));
+                    let mut lat: Vec<u64> = Vec::new();
+                    while !stop.load(Ordering::Acquire)
+                        && issued.fetch_add(1, Ordering::Relaxed) < max_ops
+                    {
+                        let req =
+                            QueryRequest::forward(verts.sample(&mut rng), rels.sample(&mut rng));
+                        let t0 = std::time::Instant::now();
+                        let _ = e.submit(req);
+                        lat.push(t0.elapsed().as_nanos() as u64);
+                    }
+                    lat
+                })
+            })
+            .collect();
+        while start.elapsed() < duration && issued.load(Ordering::Relaxed) < max_ops {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        stop.store(true, Ordering::Release);
+        let secs = start.elapsed().as_secs_f64().max(1e-9);
+        let mut lat: Vec<u64> = Vec::new();
+        for w in workers {
+            lat.extend(w.join().expect("serve client panicked"));
+        }
+        let (batches, ins, rem) = mutator.join().expect("mutator panicked");
+        (lat, secs, batches, ins, rem)
+    });
+
+    latencies.sort_unstable();
+    let pct = |p: f64| -> f64 {
+        if latencies.is_empty() {
+            return 0.0;
+        }
+        latencies[((latencies.len() - 1) as f64 * p).round() as usize] as f64 / 1e3
+    };
+    println!(
+        "served {} queries from {} clients in {:.1} ms under churn  ->  {:.0} queries/s",
+        latencies.len(),
+        clients,
+        serve_secs * 1e3,
+        latencies.len() as f64 / serve_secs
+    );
+    println!("latency: p50 {:.1} us, p99 {:.1} us", pct(0.50), pct(0.99));
+    println!(
+        "mutations: {} batches ({} edges inserted, {} removed), final epoch {}, live edges {}",
+        batches,
+        inserted,
+        removed,
+        engine.mem_epoch(),
+        engine.num_live_edges()
+    );
+    let restored = engine.score_batch(&probe_pairs);
+    let round_trip = baseline.len() == restored.len()
+        && baseline.iter().zip(&restored).all(|(a, b)| a.to_bits() == b.to_bits());
+    anyhow::ensure!(round_trip, "memory did not round-trip bit-for-bit after churn");
+    anyhow::ensure!(
+        engine.num_live_edges() == kg.train.len(),
+        "live edge count drifted: {} vs {}",
+        engine.num_live_edges(),
+        kg.train.len()
+    );
+    println!("memory round-trip after churn: bit-exact OK");
     Ok(())
 }
 

@@ -11,8 +11,10 @@ use hdreason::engine::{
     top_k_of, BackendKind, EngineBuilder, KernelBackend, KgcEngine, MicroBatcher, QuantBackend,
     QueryHandle, QueryRequest, RankPartial, ScalarBackend, ScoreBackend, ShardedBackend,
 };
+use hdreason::kg::Triple;
 use hdreason::model::{evaluate_ranking_batched, merged_rank, rank_counts, rank_of, RankMetrics};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
 
 fn close(a: f32, b: f32) -> bool {
@@ -620,6 +622,206 @@ fn quant_hits10_trend_matches_fig9b() {
     assert!(hits[1] <= hits[0] + 0.10, "fix-4 {} above fix-8 {}", hits[1], hits[0]);
     assert!(hits[2] <= hits[1] + 0.10, "fix-2 {} above fix-4 {}", hits[2], hits[1]);
     assert!(hits[2] <= hf + 0.10, "fix-2 {} above float {hf}", hits[2]);
+}
+
+/// A deterministic mutation workload: 9 synthetic inserts spanning the
+/// vertex/relation ranges plus 5 removals drawn from the train split.
+fn mutation_batches(e: &KgcEngine) -> (Vec<Triple>, Vec<Triple>) {
+    let v = e.num_candidates();
+    let r = e.kg().num_relations;
+    let ins: Vec<Triple> =
+        (0..9).map(|i| Triple::new((i * 13 + 2) % v, i % r, (i * 29 + 5) % v)).collect();
+    let rem: Vec<Triple> = e.kg().train.iter().step_by(7).take(5).copied().collect();
+    (ins, rem)
+}
+
+#[test]
+fn mutation_parity_matrix_across_threads_shards_and_paths() {
+    // acceptance pin for live mutation: after an insert+remove batch the
+    // slice-local contract must still hold — mutated scores BYTE-identical
+    // across thread counts, batch splits, and the submit / submit_async
+    // serving paths, for every backend family in the zoo.
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    for spec in ["scalar", "kernel", "sharded:3+quant:6", "noisy:stuck:0.2:42+quant:8"] {
+        let kind = BackendKind::parse(spec).unwrap();
+        let reference = engine(kind, 1, 8);
+        let (ins, rem) = mutation_batches(&reference);
+        assert_eq!(reference.insert_edges(&ins), ins.len(), "{spec}");
+        assert_eq!(reference.remove_edges(&rem), rem.len(), "{spec}");
+        let pairs = query_pairs(&reference, 13);
+        let want = reference.score_batch(&pairs);
+        for threads in thread_counts() {
+            let e = engine(kind, threads, 8);
+            e.insert_edges(&ins);
+            e.remove_edges(&rem);
+            assert_eq!(bits(&want), bits(&e.score_batch(&pairs)), "{spec} threads {threads}");
+        }
+        // batch splits: a pair scored alone == its row in the mutated batch
+        let v = reference.num_candidates();
+        for (i, &(s, r)) in pairs.iter().take(4).enumerate() {
+            let single = reference.score_batch(&[(s, r)]);
+            assert_eq!(bits(&single), bits(&want[i * v..(i + 1) * v]), "{spec} split row {i}");
+        }
+        // serving paths: coalesced submit and async wait == unbatched rank
+        for &(s, r) in pairs.iter().take(3) {
+            let req = QueryRequest::forward(s, r);
+            let want_rank = reference.rank(req);
+            assert_eq!(reference.submit(req), want_rank, "{spec} submit {req:?}");
+            assert_eq!(reference.submit_async(req).wait(), want_rank, "{spec} async {req:?}");
+        }
+    }
+    // shard sweep on the quant leaf: the same mutated matrix must score
+    // byte-identically at shard counts that do and do not divide |V|
+    let reference = engine_custom(Box::new(QuantBackend::new(6, 1)));
+    let (ins, rem) = mutation_batches(&reference);
+    reference.insert_edges(&ins);
+    reference.remove_edges(&rem);
+    let pairs = query_pairs(&reference, 13);
+    let want = bits(&reference.score_batch(&pairs));
+    for shards in [1usize, 2, 7] {
+        let e = engine_custom(Box::new(ShardedBackend::new(
+            shards,
+            Box::new(QuantBackend::new(6, 1)),
+        )));
+        e.insert_edges(&ins);
+        e.remove_edges(&rem);
+        assert_eq!(want, bits(&e.score_batch(&pairs)), "quant shards {shards}");
+    }
+}
+
+#[test]
+fn mutated_engine_matches_a_freshly_built_graph_bitwise() {
+    // the mutation path's inductive invariant: after any insert+remove
+    // sequence the memory rows are bit-equal to memorize-from-scratch of
+    // the mutated edge list, so a mutated engine and an engine built fresh
+    // on the equivalent graph must score byte-identically
+    let e = engine(BackendKind::Kernel, 1, 8);
+    let (ins, rem) = mutation_batches(&e);
+    assert_eq!(e.insert_edges(&ins), ins.len());
+    assert_eq!(e.remove_edges(&rem), rem.len());
+    let mut kg2 = e.kg().clone();
+    kg2.train.extend_from_slice(&ins);
+    for t in &rem {
+        // remove the LAST occurrence — the same multiset semantics the
+        // engine's remove_edges applies per adjacency row
+        let at = kg2.train.iter().rposition(|x| x == t).expect("removed triple present");
+        kg2.train.remove(at);
+    }
+    let fresh = EngineBuilder::new("tiny")
+        .seed(11)
+        .graph(kg2)
+        .threads(1)
+        .batch_capacity(8)
+        .deadline(Duration::from_millis(1))
+        .build()
+        .expect("fresh engine builds");
+    let pairs = query_pairs(&e, 13);
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    assert_eq!(bits(&e.score_batch(&pairs)), bits(&fresh.score_batch(&pairs)));
+    assert_eq!(e.num_live_edges(), fresh.kg().train.len());
+    assert_eq!(
+        e.evaluate(&e.kg().test).unwrap(),
+        fresh.evaluate(&fresh.kg().test).unwrap(),
+        "filtered eval must agree on the mutated graph"
+    );
+}
+
+#[test]
+fn inserted_gold_becomes_visible_and_removal_restores_baseline() {
+    // acceptance pin: inserted edges are visible to later queries — the
+    // rank of a newly inserted gold strictly improves — and removed edges
+    // stop contributing, bit-for-bit.
+    //
+    // Construction: vacate a cold vertex's memory row (remove all its
+    // in-edges — the row recomputes to exact zeros), then clone the hot
+    // subject's in-edges onto it in row order. Delta-memorize replays the
+    // same bind+bundle sequence from zero, so the gold's row becomes
+    // BIT-EQUAL to M_s and its score exactly ties the subject's own —
+    // guaranteed rank improvement, no statistical slack.
+    let e = engine(BackendKind::Kernel, 0, 8);
+    let v = e.num_candidates();
+    let mut indeg = vec![0usize; v];
+    for t in &e.kg().train {
+        indeg[t.dst] += 1;
+    }
+    let s = (0..v).max_by_key(|&i| indeg[i]).expect("non-empty graph");
+    let gold = (0..v).filter(|&i| i != s).min_by_key(|&i| indeg[i]).unwrap();
+    let rel = 0usize;
+    let baseline = e.score_batch(&[(s, rel)]);
+    let vacate: Vec<Triple> = e.kg().train.iter().filter(|t| t.dst == gold).copied().collect();
+    assert_eq!(e.remove_edges(&vacate), vacate.len());
+    let clone: Vec<Triple> = e
+        .kg()
+        .train
+        .iter()
+        .filter(|t| t.dst == s)
+        .map(|t| Triple::new(t.src, t.rel, gold))
+        .collect();
+    assert!(!clone.is_empty(), "hot subject must have in-edges");
+    let before = e.score_batch(&[(s, rel)]);
+    let rank = |scores: &[f32]| 1 + scores.iter().filter(|&&x| x > scores[gold]).count();
+    assert!(before[s] > before[gold], "hot subject must outscore the vacated gold");
+    let rank_before = rank(&before);
+    assert_eq!(e.insert_edges(&clone), clone.len());
+    let after = e.score_batch(&[(s, rel)]);
+    assert_eq!(after[gold].to_bits(), after[s].to_bits(), "cloned row must tie its source");
+    let rank_after = rank(&after);
+    assert!(rank_after < rank_before, "insert must improve rank: {rank_after} vs {rank_before}");
+    // the two row mutations touched nobody else's score
+    for j in (0..v).filter(|&j| j != gold) {
+        assert_eq!(after[j].to_bits(), before[j].to_bits(), "bystander {j} moved");
+    }
+    // removing the inserted edges and restoring the vacated ones brings
+    // back the original scores bit-for-bit: removed edges stop contributing
+    assert_eq!(e.remove_edges(&clone), clone.len());
+    assert_eq!(e.insert_edges(&vacate), vacate.len());
+    let restored = e.score_batch(&[(s, rel)]);
+    for j in 0..v {
+        assert_eq!(restored[j].to_bits(), baseline[j].to_bits(), "restore candidate {j}");
+    }
+}
+
+#[test]
+fn concurrent_churn_round_trips_memory_under_serving_load() {
+    // a mutator thread cycles insert+remove of the same batch while two
+    // clients hammer the serving path: nothing may deadlock or panic,
+    // in-flight batches always see a consistent snapshot, and the final
+    // memory must round-trip bit-for-bit
+    let e = engine(BackendKind::Kernel, 0, 4);
+    let (ins, _) = mutation_batches(&e);
+    let pairs = query_pairs(&e, 8);
+    let baseline = e.score_batch(&pairs);
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let (e, ins, stop) = (&e, &ins, &stop);
+        scope.spawn(move || {
+            for _ in 0..25 {
+                e.insert_edges(ins);
+                e.remove_edges(ins);
+            }
+            stop.store(true, Ordering::Release);
+        });
+        for c in 0..2usize {
+            scope.spawn(move || {
+                let v = e.num_candidates();
+                let r = e.kg().num_relations;
+                let mut i = 0usize;
+                while !stop.load(Ordering::Acquire) {
+                    let req = QueryRequest::forward((c * 31 + i * 5) % v, i % r);
+                    let ranking = e.submit(req);
+                    assert_eq!(ranking.request, req, "client {c} query {i}");
+                    i += 1;
+                }
+            });
+        }
+    });
+    assert_eq!(e.mem_epoch(), 50, "25 insert + 25 remove batches");
+    assert_eq!(e.num_live_edges(), e.kg().train.len());
+    assert_eq!(e.pending_queries(), 0);
+    let after = e.score_batch(&pairs);
+    for (i, (a, b)) in baseline.iter().zip(&after).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "churn round-trip logit {i}");
+    }
 }
 
 #[test]

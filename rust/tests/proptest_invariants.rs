@@ -352,6 +352,97 @@ fn random_json(rng: &mut Rng, depth: usize) -> Json {
     }
 }
 
+fn to_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn prop_insert_then_remove_round_trips_graph_memory_bitwise() {
+    // the live-mutation invariant: a delta insert is bit-identical to
+    // memorize-from-scratch of the extended edge list (the delta is the
+    // tail of each row's left-to-right bundle sum), and remove_last + an
+    // exact row recompute restores the original memory bit for bit —
+    // (x + p) − p would NOT, in f32
+    use hdreason::hdc::kernels::{memorize_delta_into, memorize_row_into, KernelConfig};
+    use hdreason::hdc::memorize;
+    use hdreason::kg::AdjacencyList;
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed * 11 + 5);
+        let v = 4 + rng.below(40);
+        let r = 1 + rng.below(5);
+        let d = 4 + rng.below(24);
+        let hv: Vec<f32> = (0..v * d).map(|_| rng.normal_f32()).collect();
+        let hr: Vec<f32> = (0..r * d).map(|_| rng.normal_f32()).collect();
+        let base = random_triples(&mut rng, v, r, rng.below(120));
+        let batch = random_triples(&mut rng, v, r, 1 + rng.below(40));
+        let threads = 1 + rng.below(4);
+        let mut adj = AdjacencyList::from_csr(&Csr::from_triples(v, &base));
+        let original = memorize(&Csr::from_triples(v, &base), &hv, &hr, d).data;
+        let mut mem = original.clone();
+        for t in &batch {
+            adj.insert(t);
+        }
+        let cfg = KernelConfig::with_threads(threads);
+        memorize_delta_into(&mut mem, &hv, &hr, d, &batch, 1.0, &cfg);
+        let mut extended = base.clone();
+        extended.extend_from_slice(&batch);
+        let want = memorize(&Csr::from_triples(v, &extended), &hv, &hr, d).data;
+        assert_eq!(to_bits(&mem), to_bits(&want), "seed {seed}: insert != rebuild");
+        let mut touched: Vec<usize> = batch.iter().map(|t| t.dst).collect();
+        for t in &batch {
+            assert!(adj.remove_last(t), "seed {seed}: inserted edge must be removable");
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        for &dst in &touched {
+            memorize_row_into(&mut mem[dst * d..(dst + 1) * d], adj.neighbors(dst), &hv, &hr);
+        }
+        assert_eq!(to_bits(&mem), to_bits(&original), "seed {seed}: round-trip");
+    }
+}
+
+#[test]
+fn prop_adjacency_multiset_semantics_match_a_vec_model() {
+    // AdjacencyList is the engine's mutable edge store; a random
+    // insert/remove trace must track a plain Vec<Triple> model (insert =
+    // push, remove = drop the LAST matching occurrence) and lay out
+    // exactly like a from-scratch CSR over the model's edge list
+    use hdreason::kg::AdjacencyList;
+    for seed in 0..CASES {
+        let mut rng = Rng::seed_from_u64(seed * 13 + 7);
+        let v = 4 + rng.below(30);
+        let r = 1 + rng.below(4);
+        let mut model = random_triples(&mut rng, v, r, rng.below(80));
+        let mut adj = AdjacencyList::from_csr(&Csr::from_triples(v, &model));
+        for step in 0..60 {
+            if rng.bool(0.5) {
+                let t = Triple::new(rng.below(v), rng.below(r), rng.below(v));
+                adj.insert(&t);
+                model.push(t);
+            } else {
+                // bias removals toward edges that are actually present
+                let t = if !model.is_empty() && rng.bool(0.7) {
+                    model[rng.below(model.len())]
+                } else {
+                    Triple::new(rng.below(v), rng.below(r), rng.below(v))
+                };
+                let in_model = model.iter().rposition(|x| *x == t);
+                assert_eq!(adj.remove_last(&t), in_model.is_some(), "seed {seed} step {step}");
+                if let Some(at) = in_model {
+                    model.remove(at);
+                }
+            }
+            assert_eq!(adj.num_edges(), model.len(), "seed {seed} step {step}");
+        }
+        let a = adj.to_csr();
+        let b = Csr::from_triples(v, &model);
+        assert_eq!(a.num_edges(), b.num_edges(), "seed {seed}");
+        for x in 0..v {
+            assert_eq!(a.neighbors(x), b.neighbors(x), "seed {seed} vertex {x}");
+        }
+    }
+}
+
 #[test]
 fn prop_memorize_is_linear_in_bundling() {
     // HDC memorization is a linear operator: memorize(G1 ∪ G2) =
