@@ -33,11 +33,13 @@ ci:
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- train --model tiny --runtime host --epochs 3 --steps 8 --eval-every 3
 	$(CARGO) test -q --release --manifest-path $(MANIFEST) --test noise_robustness -- degrades
 	$(CARGO) run --release --manifest-path $(MANIFEST) -- serve --model tiny --duration-ms 400 --ops 512 --clients 2 --mutate-batch 8 --backend noisy:gauss:0.05:42+sharded:2+quant:8
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- query --model tiny --queries 256 --backend sharded:2+quant:8 --cache lfu:256 --min-hit-rate 0.25
+	$(CARGO) run --release --manifest-path $(MANIFEST) -- serve --model tiny --duration-ms 1500 --ops 1024 --clients 2 --mutate-batch 8 --mutate-pause-us 20000 --backend noisy:gauss:0.05:42+sharded:2+quant:8 --cache lfu:256 --min-hit-rate 0.003
 
 # hot-path + serving benchmarks; append {name, median_s, iters} JSON-lines
-# rows to BENCH_7.json at the repo root so the perf trajectory accumulates
-# per PR (the serving run carries the noisy fault-channel overhead rows
-# and the live-mutation churn section)
+# rows to BENCH_8.json at the repo root so the perf trajectory accumulates
+# per PR (the serving run carries the noisy fault-channel overhead rows,
+# the live-mutation churn section, and the Zipf serving-cache policy rows)
 bench:
 	$(CARGO) bench --bench runtime_hotpath --manifest-path $(MANIFEST) -- --json
 	$(CARGO) bench --bench engine_serving --manifest-path $(MANIFEST) -- --json
@@ -45,14 +47,15 @@ bench:
 # KgcEngine serving throughput: submit at batch 1/8/64, sharded/quant
 # score backends, the submit_async pipeline, the rank-native
 # (rank-only / top-k) sharded rows, the noisy fault-channel overhead
-# rows, and the live-mutation churn rows — incremental delta vs full
-# rebuild, q/s + p50/p99 under concurrent mutation (same BENCH_7.json
-# sink)
+# rows, the live-mutation churn rows — incremental delta vs full
+# rebuild, q/s + p50/p99 under concurrent mutation — and the Zipf
+# serving-cache policy comparison (q/s + hit-rate rows per policy, same
+# BENCH_8.json sink)
 bench-serving:
 	$(CARGO) bench --bench engine_serving --manifest-path $(MANIFEST) -- --json
 
 # host-native training throughput: train_step steps/sec at 1 thread vs
-# max (target >= 2x), quant/sharded training backends (same BENCH_7.json
+# max (target >= 2x), quant/sharded training backends (same BENCH_8.json
 # sink)
 bench-train:
 	$(CARGO) bench --bench train_throughput --manifest-path $(MANIFEST) -- --json

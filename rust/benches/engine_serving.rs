@@ -1,7 +1,7 @@
 //! Bench: end-to-end serving throughput through `KgcEngine::submit` /
 //! `submit_async`, plus the sharded and quantized score backends.
 //!
-//! Seven sections, all on the `tiny` preset with the same query stream:
+//! Eight sections, all on the `tiny` preset with the same query stream:
 //!
 //! 1. **Micro-batcher coalescing** — `submit` at batch capacities 1/8/64,
 //!    offered load scaled to capacity (one client per serving slot, like
@@ -31,19 +31,27 @@
 //!    the `submit` serving path with a concurrent mutator thread cycling
 //!    a 64-edge batch in and out: queries/sec under churn vs quiet, plus
 //!    single-submit p50/p99 latency rows under churn.
+//! 8. **Serving cache under a Zipf trace** — the same zipf≈1.0 request
+//!    trace through `rank()` with the result cache off / lru / lfu /
+//!    random at one bounded capacity, over the `sharded:2+quant:8`
+//!    composition so the per-shard snapped-row cache rides along.
+//!    Hit-rate rows land next to the q/s rows in the JSON sink.
+//!    Target: lfu ≥ 2x uncached queries/sec at zipf ≈ 1.0.
 //!
 //! Run: cargo bench --bench engine_serving [-- --json [PATH]]
-//! (`--json` appends rows to BENCH_7.json at the repo root by default.)
+//! (`--json` appends rows to BENCH_8.json at the repo root by default.)
 
-use hdreason::bench::harness::{bench, maybe_append_json, BenchResult};
+use hdreason::bench::harness::{bench, maybe_append_json, percentile, BenchResult};
+use hdreason::cache::CacheSpec;
 use hdreason::config::model_preset;
 use hdreason::engine::{
     top_k_of, BackendKind, EngineBuilder, KernelBackend, KgcEngine, QuantBackend, QueryRequest,
     RankPartial, ScoreBackend, ShardedBackend,
 };
 use hdreason::hdc;
-use hdreason::kg::{generator, Triple};
+use hdreason::kg::{generator, Triple, ZipfSampler};
 use hdreason::model::{rank_of, ModelState};
+use hdreason::util::Rng;
 use std::hint::black_box;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
@@ -355,8 +363,7 @@ fn main() {
         }
         stop.store(true, Ordering::Release);
         lat.sort_by(f64::total_cmp);
-        let pick = |p: f64| lat[((lat.len() - 1) as f64 * p).round() as usize];
-        (r, pick(0.5), pick(0.99))
+        (r, percentile(&lat, 0.5), percentile(&lat, 0.99))
     });
     println!("{}", r_churn.row());
     let churn_qps = r_churn.per_second(QUERIES as f64);
@@ -383,6 +390,86 @@ fn main() {
         "  -> single-submit latency under churn: p50 {:.0} us, p99 {:.0} us\n",
         p50 * 1e6,
         p99 * 1e6
+    );
+
+    // ---- 8. serving cache: policy comparison under a Zipf trace ----------
+    // one skewed trace (vertices at zipf 1.0, relations at zipf 1.1, both
+    // seeded) replayed through rank() — the per-query serving path, no
+    // queue noise — against each cache policy at the same bounded
+    // capacity. `off` is the uncached baseline doing a full sweep per
+    // query; sharded:2+quant:8 keeps the per-shard snapped-row cache in
+    // the picture on the miss path.
+    const TRACE: usize = 2048;
+    let cached_engine = |spec: &str| -> KgcEngine {
+        EngineBuilder::new("tiny")
+            .dataset("learnable")
+            .seed(0)
+            .backend(BackendKind::parse("sharded:2+quant:8").unwrap())
+            .batch_capacity(64)
+            .deadline(Duration::from_micros(200))
+            .cache(CacheSpec::parse(spec).expect("cache spec parses"))
+            .build()
+            .expect("tiny engine builds")
+    };
+    let trace: Vec<QueryRequest> = {
+        let probe = cached_engine("off");
+        let mut rng = Rng::seed_from_u64(11);
+        let verts = ZipfSampler::new(probe.num_candidates(), 1.0, &mut rng);
+        let rels = ZipfSampler::new(probe.kg().num_relations, 1.1, &mut rng);
+        (0..TRACE)
+            .map(|_| QueryRequest::forward(verts.sample(&mut rng), rels.sample(&mut rng)))
+            .collect()
+    };
+    let mut policy_qps: Vec<(String, f64)> = Vec::new();
+    for spec in ["off", "lru:256", "lfu:256", "random:256:7"] {
+        let engine = cached_engine(spec);
+        let r = bench(&format!("engine/rank_trace(tiny,zipf=1.0,cache={spec})"), 2, 8, || {
+            for &q in &trace {
+                black_box(engine.rank(q));
+            }
+        });
+        println!("{}", r.row());
+        let qps = r.per_second(TRACE as f64);
+        policy_qps.push((spec.to_string(), qps));
+        results.push(r);
+        match engine.cache_stats() {
+            Some((stats, invalidations)) => {
+                let hit = stats.hit_rate();
+                println!(
+                    "  -> {qps:.0} queries/s, result cache {:.1}% hits ({} evictions, {} epoch invalidations)",
+                    hit * 100.0,
+                    stats.evictions,
+                    invalidations
+                );
+                if let Some(rows) = engine.row_cache_stats() {
+                    println!(
+                        "  -> per-shard row cache {:.1}% hits on the miss-path sweeps\n",
+                        rows.hit_rate() * 100.0
+                    );
+                }
+                // hit-rate pseudo-row: median_s carries the rate itself so
+                // the policy curves land in BENCH_8.json beside the q/s rows
+                results.push(BenchResult {
+                    name: format!("engine/cache_hit_rate(tiny,zipf=1.0,{spec})"),
+                    iters: stats.accesses() as usize,
+                    median_s: hit,
+                    mad_s: 0.0,
+                    min_s: hit,
+                    mean_s: hit,
+                });
+            }
+            None => println!("  -> {qps:.0} queries/s uncached\n"),
+        }
+    }
+    let policy = |name: &str| {
+        policy_qps.iter().find(|(n, _)| n == name).map(|&(_, q)| q).unwrap_or(f64::NAN)
+    };
+    let base = policy("off").max(1e-12);
+    println!(
+        "  -> cached speedup over uncached at zipf=1.0: lru {:.2}x, lfu {:.2}x, random {:.2}x  (target: lfu >= 2x)\n",
+        policy("lru:256") / base,
+        policy("lfu:256") / base,
+        policy("random:256:7") / base
     );
 
     // context row: the raw batched score path without the serving queue,

@@ -6,9 +6,9 @@
 //! have no timings to record) passes its results through
 //! [`maybe_append_json`], so `cargo bench --bench <name> -- --json [PATH]`
 //! appends one `{"name", "median_s", "iters"}` object per line to
-//! `BENCH_7.json` (default: at the repo root, next to `rust/`; PR 1's rows
+//! `BENCH_8.json` (default: at the repo root, next to `rust/`; PR 1's rows
 //! live in `BENCH_1.json`, PR 2's in `BENCH_2.json`, and so on through
-//! `BENCH_6.json`). The files are append-only
+//! `BENCH_7.json`). The files are append-only
 //! JSON-lines so the perf trajectory accumulates across PRs — the default
 //! file name bumps with the PR sequence so each PR's hotpath + serving +
 //! training rows land together.
@@ -64,7 +64,25 @@ impl BenchResult {
 }
 
 /// Default JSON-lines sink at the repo root; bumps with the PR sequence.
-pub const DEFAULT_JSON_FILE: &str = "BENCH_7.json";
+pub const DEFAULT_JSON_FILE: &str = "BENCH_8.json";
+
+/// Nearest-rank percentile over an ascending-sorted sample: the smallest
+/// element with at least `p` of the sample at or below it, i.e. index
+/// `ceil(p·n) − 1` clamped into range. This is the textbook estimator:
+/// `percentile(s, 1.0)` is the max, `percentile(s, 0.5)` the upper
+/// median. It replaces the ad-hoc `round((n−1)·p)` closures the serve
+/// loop and the serving bench each carried, whose round-to-even jitter
+/// under-reported tail latency on small samples (e.g. the p50 of 10
+/// samples picked index 5 — strictly *above* the median — while p90
+/// of 7 picked index 5 instead of the nearest-rank 6).
+///
+/// # Panics
+/// On an empty sample — there is no percentile of nothing.
+pub fn percentile<T: Copy>(sorted: &[T], p: f64) -> T {
+    assert!(!sorted.is_empty(), "percentile of an empty sample");
+    let idx = ((p * sorted.len() as f64).ceil() as usize).saturating_sub(1);
+    sorted[idx.min(sorted.len() - 1)]
+}
 
 /// Parse `--json [PATH]` from the process args (cargo forwards everything
 /// after `--` to the bench binary). A bare `--json` defaults to
@@ -161,6 +179,31 @@ mod tests {
         assert_eq!(j.get("iters").and_then(crate::util::Json::as_f64), Some(7.0));
         let med = j.get("median_s").and_then(crate::util::Json::as_f64).unwrap();
         assert!((med - 0.00123).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let s: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&s, 0.50), 50);
+        assert_eq!(percentile(&s, 0.99), 99);
+        assert_eq!(percentile(&s, 1.00), 100);
+        assert_eq!(percentile(&s, 0.0), 1);
+        // the old round((n-1)*p) form picked index 5 here (value 6): the
+        // nearest-rank p50 of an even sample is the lower of the two
+        // middle elements at index ceil(5)-1 = 4
+        let ten: Vec<u64> = (1..=10).collect();
+        assert_eq!(percentile(&ten, 0.50), 5);
+        // and p90 of 7 must reach the 7th-nearest rank, index 6, where
+        // the old form under-shot to index 5
+        let seven: Vec<f64> = (1..=7).map(f64::from).collect();
+        assert_eq!(percentile(&seven, 0.90), 7.0);
+        assert_eq!(percentile(&[42.0], 0.99), 42.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sample")]
+    fn percentile_of_nothing_panics() {
+        percentile::<f64>(&[], 0.5);
     }
 
     #[test]

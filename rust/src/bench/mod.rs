@@ -9,4 +9,4 @@
 pub mod figures;
 pub mod harness;
 
-pub use harness::{bench, BenchResult};
+pub use harness::{bench, percentile, BenchResult};

@@ -8,8 +8,10 @@
 //! HBM traffic) and is consumed by the cycle simulator.
 
 mod policy;
+mod serving;
 
-pub use policy::{LfuState, LruState, PolicyState, RandomState};
+pub use policy::{FifoState, LfuState, LruState, PolicyState, RandomState};
+pub use serving::{query_key, CacheSpec, ServingCache};
 
 use crate::config::ReplacementPolicy;
 use crate::util::FxHashMap;
@@ -89,22 +91,34 @@ impl HvCache {
     /// line is fetched from HBM (traffic accounted) and, if full, a victim
     /// is evicted per policy.
     pub fn access(&mut self, v: u32) -> bool {
-        // single CAM probe: hit path touches the map exactly once
-        if let std::collections::hash_map::Entry::Occupied(_) = self.cam.entry(v) {
-            self.stats.hits += 1;
-            self.policy.on_hit(v);
-            return true;
+        // single CAM probe per access: one `entry` lookup serves both
+        // paths. The hit path returns through the occupied entry; the miss
+        // path fills the vacant slot kept from the same probe, so `v` is
+        // never looked up a second time (the sim's cycle model counts one
+        // probe per access). The victim removal on a full miss is the line
+        // replacement of a *different* tag, not a re-probe of `v`; the
+        // victim is chosen before the policy learns about `v`, so the
+        // just-filled line can never be its own victim.
+        let full = self.cam.len() >= self.capacity;
+        match self.cam.entry(v) {
+            std::collections::hash_map::Entry::Occupied(_) => {
+                self.stats.hits += 1;
+                self.policy.on_hit(v as u64);
+                true
+            }
+            std::collections::hash_map::Entry::Vacant(slot) => {
+                self.stats.misses += 1;
+                self.stats.bytes_from_hbm += self.line_bytes as u64;
+                slot.insert(0);
+                if full {
+                    let victim = self.policy.evict() as u32;
+                    self.cam.remove(&victim);
+                    self.stats.evictions += 1;
+                }
+                self.policy.on_insert(v as u64);
+                false
+            }
         }
-        self.stats.misses += 1;
-        self.stats.bytes_from_hbm += self.line_bytes as u64;
-        if self.cam.len() >= self.capacity {
-            let victim = self.policy.evict();
-            self.cam.remove(&victim);
-            self.stats.evictions += 1;
-        }
-        self.cam.insert(v, 0);
-        self.policy.on_insert(v);
-        false
     }
 
     /// Warm the cache without counting stats (initial bulk load of encoded
@@ -115,7 +129,7 @@ impl HvCache {
                 break;
             }
             if self.cam.insert(v, 0).is_none() {
-                self.policy.on_insert(v);
+                self.policy.on_insert(v as u64);
             }
         }
     }
@@ -198,5 +212,30 @@ mod tests {
         c.warm(0..10u32);
         assert_eq!(c.len(), 4);
         assert_eq!(c.stats.accesses(), 0);
+    }
+
+    #[test]
+    fn eviction_after_warm_follows_policy_metadata() {
+        // warm must leave the policy's recency/frequency metadata
+        // consistent with residency: an access stream straight after a
+        // bulk warm evicts in the warmed-then-touched order, not
+        // arbitrarily
+        let mut c = cache(ReplacementPolicy::Lru, 3);
+        c.warm([1u32, 2, 3].into_iter());
+        assert!(c.access(2)); // hit bumps 2's recency past 1 and 3
+        assert!(!c.access(9)); // miss at capacity: evicts 1, the LRU warm line
+        assert!(c.contains(2) && c.contains(3) && c.contains(9) && !c.contains(1));
+        assert_eq!(c.stats.evictions, 1);
+        assert!(!c.access(8)); // next victim is 3, the next-oldest warm line
+        assert!(!c.contains(3) && c.contains(2));
+
+        // duplicate warm ids register with the policy exactly once, so the
+        // eviction sequence still covers every resident line exactly once
+        let mut c = cache(ReplacementPolicy::Lfu, 2);
+        c.warm([5u32, 5, 6, 7].into_iter());
+        assert_eq!(c.len(), 2);
+        assert!(c.contains(5) && c.contains(6) && !c.contains(7));
+        assert!(!c.access(9)); // evicts 5 (freq 1, older) per LFU tie-break
+        assert!(!c.contains(5) && c.contains(6) && c.contains(9));
     }
 }

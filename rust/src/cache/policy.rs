@@ -9,17 +9,17 @@ use crate::util::{FxHashMap, Rng};
 use std::collections::{BTreeSet, VecDeque};
 
 pub trait PolicyState: Send {
-    fn on_insert(&mut self, v: u32);
-    fn on_hit(&mut self, v: u32);
+    fn on_insert(&mut self, v: u64);
+    fn on_hit(&mut self, v: u64);
     /// Choose and remove a victim. Panics if empty (cache guards this).
-    fn evict(&mut self) -> u32;
+    fn evict(&mut self) -> u64;
 }
 
 /// Least-recently-used: timestamped BTreeSet ordered by last access.
 pub struct LruState {
     clock: u64,
-    order: BTreeSet<(u64, u32)>,
-    stamp: FxHashMap<u32, u64>,
+    order: BTreeSet<(u64, u64)>,
+    stamp: FxHashMap<u64, u64>,
 }
 
 impl LruState {
@@ -27,7 +27,7 @@ impl LruState {
         Self { clock: 0, order: BTreeSet::new(), stamp: FxHashMap::default() }
     }
 
-    fn touch(&mut self, v: u32) {
+    fn touch(&mut self, v: u64) {
         self.clock += 1;
         if let Some(old) = self.stamp.insert(v, self.clock) {
             self.order.remove(&(old, v));
@@ -43,15 +43,15 @@ impl Default for LruState {
 }
 
 impl PolicyState for LruState {
-    fn on_insert(&mut self, v: u32) {
+    fn on_insert(&mut self, v: u64) {
         self.touch(v);
     }
 
-    fn on_hit(&mut self, v: u32) {
+    fn on_hit(&mut self, v: u64) {
         self.touch(v);
     }
 
-    fn evict(&mut self) -> u32 {
+    fn evict(&mut self) -> u64 {
         let &(stamp, v) = self.order.iter().next().expect("evict from empty LRU");
         self.order.remove(&(stamp, v));
         self.stamp.remove(&v);
@@ -65,8 +65,8 @@ impl PolicyState for LruState {
 pub struct LfuState {
     clock: u64,
     /// (freq, last_access, v) ordered ascending — victim is the min.
-    order: BTreeSet<(u64, u64, u32)>,
-    meta: FxHashMap<u32, (u64, u64)>,
+    order: BTreeSet<(u64, u64, u64)>,
+    meta: FxHashMap<u64, (u64, u64)>,
 }
 
 impl LfuState {
@@ -74,7 +74,7 @@ impl LfuState {
         Self { clock: 0, order: BTreeSet::new(), meta: FxHashMap::default() }
     }
 
-    fn bump(&mut self, v: u32) {
+    fn bump(&mut self, v: u64) {
         self.clock += 1;
         let (freq, last) = self.meta.get(&v).copied().unwrap_or((0, 0));
         if freq > 0 || last > 0 {
@@ -93,15 +93,15 @@ impl Default for LfuState {
 }
 
 impl PolicyState for LfuState {
-    fn on_insert(&mut self, v: u32) {
+    fn on_insert(&mut self, v: u64) {
         self.bump(v);
     }
 
-    fn on_hit(&mut self, v: u32) {
+    fn on_hit(&mut self, v: u64) {
         self.bump(v);
     }
 
-    fn evict(&mut self) -> u32 {
+    fn evict(&mut self) -> u64 {
         let &(f, l, v) = self.order.iter().next().expect("evict from empty LFU");
         self.order.remove(&(f, l, v));
         self.meta.remove(&v);
@@ -111,8 +111,8 @@ impl PolicyState for LfuState {
 
 /// Uniform random replacement (seeded for reproducible simulations).
 pub struct RandomState {
-    resident: Vec<u32>,
-    pos: FxHashMap<u32, usize>,
+    resident: Vec<u64>,
+    pos: FxHashMap<u64, usize>,
     rng: Rng,
 }
 
@@ -123,16 +123,16 @@ impl RandomState {
 }
 
 impl PolicyState for RandomState {
-    fn on_insert(&mut self, v: u32) {
+    fn on_insert(&mut self, v: u64) {
         if !self.pos.contains_key(&v) {
             self.pos.insert(v, self.resident.len());
             self.resident.push(v);
         }
     }
 
-    fn on_hit(&mut self, _v: u32) {}
+    fn on_hit(&mut self, _v: u64) {}
 
-    fn evict(&mut self) -> u32 {
+    fn evict(&mut self) -> u64 {
         let i = self.rng.below(self.resident.len());
         let v = self.resident.swap_remove(i);
         self.pos.remove(&v);
@@ -146,7 +146,7 @@ impl PolicyState for RandomState {
 /// FIFO queue policy — not in the paper; kept for ablation curiosity and as
 /// a lower anchor in tests.
 pub struct FifoState {
-    queue: VecDeque<u32>,
+    queue: VecDeque<u64>,
 }
 
 impl FifoState {
@@ -162,13 +162,13 @@ impl Default for FifoState {
 }
 
 impl PolicyState for FifoState {
-    fn on_insert(&mut self, v: u32) {
+    fn on_insert(&mut self, v: u64) {
         self.queue.push_back(v);
     }
 
-    fn on_hit(&mut self, _v: u32) {}
+    fn on_hit(&mut self, _v: u64) {}
 
-    fn evict(&mut self) -> u32 {
+    fn evict(&mut self) -> u64 {
         self.queue.pop_front().expect("evict from empty FIFO")
     }
 }

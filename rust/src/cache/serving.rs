@@ -1,0 +1,275 @@
+//! Serving-side result cache — the Dispatcher IP's cache policies
+//! (§4.2.2, Fig. 10) put in front of the live `KgcEngine` sweep.
+//!
+//! [`ServingCache`] maps a packed `(node, relation, direction)` key to the
+//! query's top-k list and is governed by the same [`PolicyState`]
+//! machinery the cycle simulator uses (LRU / LFU / seeded Random, capacity
+//! in entries). Invalidation is **epoch-keyed and wholesale**: every entry
+//! is implicitly stamped with the cache's current epoch, and the first
+//! lookup that carries a newer memory epoch (bumped by
+//! `insert_edges`/`remove_edges`/train-step mutation) drops the whole
+//! table. A cached ranking is therefore valid iff its epoch equals the
+//! engine's `mem_epoch()` — correctness rides on the copy-on-write
+//! snapshot seam that is already pinned bit-exactly, and a cached result
+//! is byte-identical to re-running the sweep because it *is* a prior
+//! sweep's output at the same epoch.
+
+use super::{CacheStats, LfuState, LruState, PolicyState, RandomState};
+use crate::config::ReplacementPolicy;
+use crate::util::FxHashMap;
+
+/// Pack a query identity into one cache key. Node ids fit u32 (preset
+/// capacities are far below that) and relation ids fit 31 bits; the low
+/// bit keeps forward and backward sweeps of the same pair distinct.
+pub fn query_key(node: usize, rel: usize, forward: bool) -> u64 {
+    debug_assert!(node < (1usize << 32) && rel < (1usize << 31), "query id overflows cache key");
+    ((node as u64) << 32) | ((rel as u64) << 1) | u64::from(forward)
+}
+
+/// A parsed `--cache` flag: replacement policy, capacity in entries, and
+/// the seed the random policy draws victims from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheSpec {
+    pub policy: ReplacementPolicy,
+    pub capacity: usize,
+    pub seed: u64,
+}
+
+impl CacheSpec {
+    /// Parse the CLI grammar `lru:N | lfu:N | random:N[:SEED] | off`.
+    /// `off` (and the empty string) mean "no cache" — `Ok(None)`.
+    pub fn parse(s: &str) -> crate::Result<Option<Self>> {
+        let s = s.trim().to_ascii_lowercase();
+        if s.is_empty() || s == "off" {
+            return Ok(None);
+        }
+        let mut parts = s.split(':');
+        let policy = ReplacementPolicy::parse(parts.next().unwrap_or_default())
+            .map_err(|e| anyhow::anyhow!("--cache: {e} (want lru:N|lfu:N|random:N[:SEED]|off)"))?;
+        let capacity: usize = match parts.next() {
+            Some(c) => c
+                .parse()
+                .ok()
+                .filter(|&n| n > 0)
+                .ok_or_else(|| anyhow::anyhow!("--cache: bad capacity '{c}' (want entries >= 1)"))?,
+            None => anyhow::bail!("--cache: missing capacity (want e.g. lfu:256)"),
+        };
+        let seed: u64 = match (policy, parts.next()) {
+            (ReplacementPolicy::Random, Some(seed)) => seed
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--cache: bad random seed '{seed}'"))?,
+            (_, None) => 0,
+            (p, Some(extra)) => {
+                anyhow::bail!("--cache: unexpected trailing ':{extra}' after {p:?} spec")
+            }
+        };
+        anyhow::ensure!(parts.next().is_none(), "--cache: too many ':' fields in '{s}'");
+        Ok(Some(Self { policy, capacity, seed }))
+    }
+
+    /// Fresh policy state for this spec — also used when an epoch
+    /// invalidation wipes the table (the random policy re-seeds, keeping
+    /// victim sequences reproducible run-to-run).
+    pub fn instantiate_policy(&self) -> Box<dyn PolicyState> {
+        match self.policy {
+            ReplacementPolicy::Lru => Box::new(LruState::new()),
+            ReplacementPolicy::Lfu => Box::new(LfuState::new()),
+            ReplacementPolicy::Random => Box::new(RandomState::new(self.seed)),
+        }
+    }
+}
+
+impl std::fmt::Display for CacheSpec {
+    /// Canonical CLI spelling; [`CacheSpec::parse`] round-trips it.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.policy {
+            ReplacementPolicy::Lru => write!(f, "lru:{}", self.capacity),
+            ReplacementPolicy::Lfu => write!(f, "lfu:{}", self.capacity),
+            ReplacementPolicy::Random => write!(f, "random:{}:{}", self.capacity, self.seed),
+        }
+    }
+}
+
+/// Epoch-keyed result cache for the serving sweep (see module docs).
+///
+/// Usage protocol, per batch: call [`Self::begin`] with the sweep's memory
+/// epoch; only when it returns `true` may the caller [`Self::get`] /
+/// [`Self::insert`] at that epoch. A `false` return means the sweep holds
+/// a *stale* snapshot (a newer epoch has already been served) — its
+/// results are correct for its own snapshot but must not be cached, and
+/// nothing current can be served from the table to it.
+pub struct ServingCache {
+    spec: CacheSpec,
+    epoch: u64,
+    map: FxHashMap<u64, Vec<(usize, f32)>>,
+    policy: Box<dyn PolicyState>,
+    invalidations: u64,
+    pub stats: CacheStats,
+}
+
+impl ServingCache {
+    pub fn new(spec: CacheSpec) -> Self {
+        Self {
+            policy: spec.instantiate_policy(),
+            spec: CacheSpec { capacity: spec.capacity.max(1), ..spec },
+            epoch: 0,
+            map: FxHashMap::default(),
+            invalidations: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn spec(&self) -> CacheSpec {
+        self.spec
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.spec.capacity
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Wholesale epoch invalidations so far (epoch advances that dropped a
+    /// non-empty table).
+    pub fn invalidations(&self) -> u64 {
+        self.invalidations
+    }
+
+    /// Sync the cache onto `epoch`. Advancing drops every entry (they were
+    /// stamped with an older epoch) and reinstates a fresh policy. Returns
+    /// whether the cache is usable at `epoch` — `false` iff `epoch` is
+    /// older than what the cache has already seen.
+    pub fn begin(&mut self, epoch: u64) -> bool {
+        if epoch > self.epoch {
+            if !self.map.is_empty() {
+                self.invalidations += 1;
+                self.map.clear();
+                self.policy = self.spec.instantiate_policy();
+            }
+            self.epoch = epoch;
+        }
+        epoch == self.epoch
+    }
+
+    /// Look up a query's cached top-k list at the current epoch. Counts a
+    /// hit or a miss; the caller is expected to [`Self::insert`] what it
+    /// computes for misses.
+    pub fn get(&mut self, key: u64) -> Option<Vec<(usize, f32)>> {
+        match self.map.get(&key) {
+            Some(top) => {
+                self.stats.hits += 1;
+                self.policy.on_hit(key);
+                Some(top.clone())
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly swept result. A key that raced in since the probe
+    /// (another leader scored the same query at this epoch) is simply
+    /// overwritten — same epoch means bit-identical value, and its policy
+    /// metadata is already live.
+    pub fn insert(&mut self, key: u64, top: Vec<(usize, f32)>) {
+        if let Some(slot) = self.map.get_mut(&key) {
+            *slot = top;
+            return;
+        }
+        if self.map.len() >= self.spec.capacity {
+            let victim = self.policy.evict();
+            self.map.remove(&victim);
+            self.stats.evictions += 1;
+        }
+        self.map.insert(key, top);
+        self.policy.on_insert(key);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(s: &str) -> CacheSpec {
+        CacheSpec::parse(s).expect("parses").expect("not off")
+    }
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        for s in ["lru:64", "lfu:256", "random:32:7"] {
+            assert_eq!(spec(s).to_string(), s, "{s}");
+        }
+        // bare random defaults seed 0; canonical form spells it out
+        assert_eq!(spec("random:32").to_string(), "random:32:0");
+        assert!(CacheSpec::parse("off").unwrap().is_none());
+        assert!(CacheSpec::parse("").unwrap().is_none());
+        for bad in ["lru", "lru:0", "lru:x", "lru:8:9", "nope:8", "random:8:z", "lfu:8:1:2"] {
+            assert!(CacheSpec::parse(bad).is_err(), "{bad} must not parse");
+        }
+    }
+
+    #[test]
+    fn query_keys_are_injective_over_direction_and_ids() {
+        let mut seen = std::collections::HashSet::new();
+        for node in [0usize, 1, 255, 70_000] {
+            for rel in [0usize, 1, 236] {
+                for fwd in [false, true] {
+                    assert!(seen.insert(query_key(node, rel, fwd)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hits_require_matching_epoch() {
+        let mut c = ServingCache::new(spec("lru:8"));
+        assert!(c.begin(0));
+        assert!(c.get(1).is_none());
+        c.insert(1, vec![(3, 0.5)]);
+        assert_eq!(c.get(1), Some(vec![(3, 0.5)]));
+        // epoch advance drops the table wholesale
+        assert!(c.begin(2));
+        assert!(c.get(1).is_none());
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.invalidations(), 1);
+        // a stale sweep can neither read nor (by contract) write
+        assert!(!c.begin(1));
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.misses, 2);
+    }
+
+    #[test]
+    fn capacity_is_enforced_by_policy_eviction() {
+        let mut c = ServingCache::new(spec("lru:2"));
+        assert!(c.begin(0));
+        for k in 0..5u64 {
+            c.insert(k, vec![(k as usize, 0.0)]);
+        }
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.stats.evictions, 3);
+        // LRU: the two most recent inserts survive
+        assert!(c.get(3).is_some() && c.get(4).is_some());
+    }
+
+    #[test]
+    fn same_epoch_reinsert_overwrites_without_eviction() {
+        let mut c = ServingCache::new(spec("lfu:2"));
+        assert!(c.begin(0));
+        c.insert(7, vec![(1, 0.0)]);
+        c.insert(7, vec![(2, 0.0)]);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats.evictions, 0);
+        assert_eq!(c.get(7), Some(vec![(2, 0.0)]));
+    }
+}

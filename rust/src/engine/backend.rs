@@ -261,6 +261,50 @@ pub trait ScoreBackend: Send + Sync {
         self.score_pairs_into(mv, hr, dim_hd, pairs, bias, &mut scores);
         dense_top_k_reduce(&scores, v, k, out);
     }
+
+    /// [`Self::top_k_batch_into`] carrying the caller's memory epoch, so a
+    /// backend holding epoch-stamped caches (the sharded backend's
+    /// snapped-row cache) can tell which snapshot `mv` is. `epoch` is a
+    /// pure hint: results must be byte-identical to the epoch-less form,
+    /// and the default ignores it.
+    #[allow(clippy::too_many_arguments)]
+    fn top_k_batch_epoch_into(
+        &self,
+        epoch: u64,
+        mv: &[f32],
+        dim_hd: usize,
+        q: &[f32],
+        bias: f32,
+        k: usize,
+        out: &mut [Vec<(usize, f32)>],
+    ) {
+        let _ = epoch;
+        self.top_k_batch_into(mv, dim_hd, q, bias, k, out);
+    }
+
+    /// [`Self::top_k_pairs_into`] carrying the caller's memory epoch — the
+    /// same pure hint as [`Self::top_k_batch_epoch_into`].
+    #[allow(clippy::too_many_arguments)]
+    fn top_k_pairs_epoch_into(
+        &self,
+        epoch: u64,
+        mv: &[f32],
+        hr: &[f32],
+        dim_hd: usize,
+        pairs: &[(usize, usize)],
+        bias: f32,
+        k: usize,
+        out: &mut [Vec<(usize, f32)>],
+    ) {
+        let _ = epoch;
+        self.top_k_pairs_into(mv, hr, dim_hd, pairs, bias, k, out);
+    }
+
+    /// Aggregate statistics of any row-level cache this backend carries
+    /// (see [`ShardedBackend::with_row_cache`]); `None` when it has none.
+    fn row_cache_stats(&self) -> Option<crate::cache::CacheStats> {
+        None
+    }
 }
 
 /// Inner (leaf) backend of a `sharded:N+inner` composition: what each
@@ -636,6 +680,79 @@ pub struct ShardedBackend {
     /// the parity tests rely on that.
     auto: bool,
     inner: Box<dyn ScoreBackend>,
+    /// Optional per-shard snapped-row caches (see
+    /// [`Self::with_row_cache`]); `None` keeps the plain fan-out.
+    row_cache: Option<RowCacheSet>,
+}
+
+/// One epoch-stamped cache of grid-snapped memory rows per shard slot,
+/// keyed by **global** row id. Each worker only ever touches its own
+/// shard's cache, so the caches inherit the slice-local invariant: which
+/// worker snaps a row never changes the snap. Entries are valid only for
+/// the epoch they were snapped at; a sweep at a newer epoch wipes the
+/// shard's table on first touch, and a sweep at an older (stale snapshot)
+/// epoch bypasses the cache entirely.
+struct RowCacheSet {
+    /// The fix-N grid of the quant leaf the rows are snapped for.
+    fp: FixedPoint,
+    caches: Vec<std::sync::Mutex<RowCache>>,
+}
+
+struct RowCache {
+    epoch: u64,
+    capacity: usize,
+    rows: crate::util::FxHashMap<u32, Vec<f32>>,
+    policy: Box<dyn crate::cache::PolicyState>,
+    spec: crate::cache::CacheSpec,
+    stats: crate::cache::CacheStats,
+}
+
+impl RowCache {
+    fn new(spec: crate::cache::CacheSpec) -> Self {
+        Self {
+            epoch: 0,
+            capacity: spec.capacity.max(1),
+            rows: crate::util::FxHashMap::default(),
+            policy: spec.instantiate_policy(),
+            spec,
+            stats: crate::cache::CacheStats::default(),
+        }
+    }
+
+    /// Same epoch protocol as [`crate::cache::ServingCache::begin`].
+    fn begin(&mut self, epoch: u64) -> bool {
+        if epoch > self.epoch {
+            if !self.rows.is_empty() {
+                self.rows.clear();
+                self.policy = self.spec.instantiate_policy();
+            }
+            self.epoch = epoch;
+        }
+        epoch == self.epoch
+    }
+
+    /// The snapped form of global row `j`, quantizing and caching on miss.
+    /// The snap is [`kernels::quantize_row_into`] — the exact per-row grid
+    /// the fused quant kernels apply — so scoring a cached row is
+    /// bit-identical to the fused quantize-and-score pass.
+    fn snapped(&mut self, j: u32, row: &[f32], fp: FixedPoint) -> &[f32] {
+        if self.rows.contains_key(&j) {
+            self.stats.hits += 1;
+            self.policy.on_hit(j as u64);
+            return &self.rows[&j];
+        }
+        self.stats.misses += 1;
+        self.stats.bytes_from_hbm += std::mem::size_of_val(row) as u64;
+        if self.rows.len() >= self.capacity {
+            let victim = self.policy.evict() as u32;
+            self.rows.remove(&victim);
+            self.stats.evictions += 1;
+        }
+        let mut rowq = vec![0f32; row.len()];
+        kernels::quantize_row_into(&mut rowq, row, fp);
+        self.policy.on_insert(j as u64);
+        self.rows.entry(j).or_insert(rowq)
+    }
 }
 
 impl ShardedBackend {
@@ -650,7 +767,23 @@ impl ShardedBackend {
         } else {
             shards
         };
-        Self { shards: shards.max(1), auto, inner }
+        Self { shards: shards.max(1), auto, inner, row_cache: None }
+    }
+
+    /// Attach a per-shard cache of grid-snapped memory rows. Only
+    /// meaningful when `inner` scores on the fix-N grid of `fp` (the
+    /// `sharded:N+quant:M` composition): the cached value is the row
+    /// pre-snapped with the same per-row pow2 scale the fused kernel
+    /// derives, so a hot row skips its max-abs pass and grid snap on every
+    /// epoch-matched sweep while scores stay byte-identical. Each shard
+    /// slot owns its own cache of `spec.capacity` rows, keyed by global
+    /// row id; epoch-stamped wholesale invalidation mirrors the result
+    /// cache's contract. Takes effect on the epoch-carrying top-k sweeps
+    /// (the serving path) only.
+    pub fn with_row_cache(mut self, spec: crate::cache::CacheSpec, fp: FixedPoint) -> Self {
+        let caches = (0..self.shards).map(|_| std::sync::Mutex::new(RowCache::new(spec))).collect();
+        self.row_cache = Some(RowCacheSet { fp, caches });
+        self
     }
 
     /// The shard count one call actually fans out to: auto mode never
@@ -672,6 +805,102 @@ impl ShardedBackend {
 
     pub fn shards(&self) -> usize {
         self.shards
+    }
+
+    /// Shared body of the top-k sweeps: shard-local bounded-heap selection
+    /// plus k-way merge. When `epoch` is known and a row cache is attached
+    /// ([`Self::with_row_cache`]), each worker scores its slice from
+    /// epoch-matched pre-snapped rows instead of re-deriving every row's
+    /// scale and grid snap; the arithmetic per (query, row) pair is the
+    /// fused kernel's exact `bias − ||qq − rowq||₁`, so hit and miss paths
+    /// are byte-identical.
+    #[allow(clippy::too_many_arguments)]
+    fn top_k_batch_impl(
+        &self,
+        epoch: Option<u64>,
+        mv: &[f32],
+        dim_hd: usize,
+        q: &[f32],
+        bias: f32,
+        k: usize,
+        out: &mut [Vec<(usize, f32)>],
+    ) {
+        let d = dim_hd.max(1);
+        let v = mv.len() / d;
+        let b = q.len() / d;
+        assert_eq!(out.len(), b, "top_k_batch_into: one list per query");
+        let ranges = shard_ranges(v, self.plan_shards(v, b * d));
+        if ranges.len() <= 1 || !self.inner.slice_local() {
+            let mut scores = vec![0f32; v * b];
+            self.inner.score_batch_into(mv, dim_hd, q, bias, &mut scores);
+            dense_top_k_reduce(&scores, v, k, out);
+            return;
+        }
+        // cached path: snap the (B, D) query block once up front, exactly
+        // as the fused quant kernel does per call
+        let snapped_q = match (&self.row_cache, epoch) {
+            (Some(rc), Some(ep)) => {
+                let mut qq = vec![0f32; q.len()];
+                for (o, r) in qq.chunks_mut(d).zip(q.chunks(d)) {
+                    kernels::quantize_row_into(o, r, rc.fp);
+                }
+                Some((rc, ep, qq))
+            }
+            _ => None,
+        };
+        let cached = snapped_q.as_ref().map(|(rc, ep, qq)| (*rc, *ep, qq.as_slice()));
+        let inner = &self.inner;
+        type ShardTops = Vec<Vec<(usize, f32)>>;
+        let mut parts: Vec<ShardTops> = std::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .enumerate()
+                .map(|(wi, &(lo, hi))| {
+                    s.spawn(move || {
+                        let sv = hi - lo;
+                        let mut block = vec![0f32; sv * b];
+                        let mut scored = false;
+                        if let Some((rc, ep, qq)) = cached {
+                            // each worker owns one shard slot's cache;
+                            // contention only arises between concurrent
+                            // sweeps, never between this sweep's workers
+                            let mut cache = rc.caches[wi]
+                                .lock()
+                                .unwrap_or_else(std::sync::PoisonError::into_inner);
+                            if cache.begin(ep) {
+                                for lj in 0..sv {
+                                    let j = lo + lj;
+                                    let rowq =
+                                        cache.snapped(j as u32, &mv[j * d..(j + 1) * d], rc.fp);
+                                    for (qi, qrow) in qq.chunks(d).enumerate() {
+                                        block[qi * sv + lj] =
+                                            bias - kernels::l1_distance_blocked(qrow, rowq);
+                                    }
+                                }
+                                scored = true;
+                            }
+                        }
+                        if !scored {
+                            let rows = &mv[lo * d..hi * d];
+                            inner.score_batch_into(rows, dim_hd, q, bias, &mut block);
+                        }
+                        (0..b)
+                            .map(|row| {
+                                kernels::top_k_select(&block[row * sv..(row + 1) * sv], k)
+                                    .into_iter()
+                                    .map(|(j, s)| (j + lo, s))
+                                    .collect()
+                            })
+                            .collect::<ShardTops>()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+        });
+        for (row, o) in out.iter_mut().enumerate() {
+            let lists = parts.iter_mut().map(|p| std::mem::take(&mut p[row])).collect();
+            *o = kernels::merge_top_k(lists, k.min(v));
+        }
     }
 }
 
@@ -858,45 +1087,8 @@ impl ScoreBackend for ShardedBackend {
         k: usize,
         out: &mut [Vec<(usize, f32)>],
     ) {
-        let d = dim_hd.max(1);
-        let v = mv.len() / d;
-        let b = q.len() / d;
-        assert_eq!(out.len(), b, "top_k_batch_into: one list per query");
-        let ranges = shard_ranges(v, self.plan_shards(v, b * d));
-        if ranges.len() <= 1 || !self.inner.slice_local() {
-            let mut scores = vec![0f32; v * b];
-            self.inner.score_batch_into(mv, dim_hd, q, bias, &mut scores);
-            dense_top_k_reduce(&scores, v, k, out);
-            return;
-        }
-        let inner = &self.inner;
-        // per shard: one top-k list per query row
-        type ShardTops = Vec<Vec<(usize, f32)>>;
-        let mut parts: Vec<ShardTops> = std::thread::scope(|s| {
-            let handles: Vec<_> = ranges
-                .iter()
-                .map(|&(lo, hi)| {
-                    s.spawn(move || {
-                        let sv = hi - lo;
-                        let mut block = vec![0f32; sv * b];
-                        inner.score_batch_into(&mv[lo * d..hi * d], dim_hd, q, bias, &mut block);
-                        (0..b)
-                            .map(|row| {
-                                kernels::top_k_select(&block[row * sv..(row + 1) * sv], k)
-                                    .into_iter()
-                                    .map(|(j, s)| (j + lo, s))
-                                    .collect()
-                            })
-                            .collect::<ShardTops>()
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
-        });
-        for (row, o) in out.iter_mut().enumerate() {
-            let lists = parts.iter_mut().map(|p| std::mem::take(&mut p[row])).collect();
-            *o = kernels::merge_top_k(lists, k.min(v));
-        }
+        // no epoch in hand → the row cache (which is epoch-keyed) stays out
+        self.top_k_batch_impl(None, mv, dim_hd, q, bias, k, out);
     }
 
     /// Pack host-side and take the reduced [`Self::top_k_batch_into`]
@@ -913,7 +1105,50 @@ impl ScoreBackend for ShardedBackend {
         out: &mut [Vec<(usize, f32)>],
     ) {
         let q = crate::model::pack_forward_queries(mv, hr, dim_hd, pairs);
-        self.top_k_batch_into(mv, dim_hd, &q, bias, k, out);
+        self.top_k_batch_impl(None, mv, dim_hd, &q, bias, k, out);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn top_k_batch_epoch_into(
+        &self,
+        epoch: u64,
+        mv: &[f32],
+        dim_hd: usize,
+        q: &[f32],
+        bias: f32,
+        k: usize,
+        out: &mut [Vec<(usize, f32)>],
+    ) {
+        self.top_k_batch_impl(Some(epoch), mv, dim_hd, q, bias, k, out);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn top_k_pairs_epoch_into(
+        &self,
+        epoch: u64,
+        mv: &[f32],
+        hr: &[f32],
+        dim_hd: usize,
+        pairs: &[(usize, usize)],
+        bias: f32,
+        k: usize,
+        out: &mut [Vec<(usize, f32)>],
+    ) {
+        let q = crate::model::pack_forward_queries(mv, hr, dim_hd, pairs);
+        self.top_k_batch_impl(Some(epoch), mv, dim_hd, &q, bias, k, out);
+    }
+
+    fn row_cache_stats(&self) -> Option<crate::cache::CacheStats> {
+        let rc = self.row_cache.as_ref()?;
+        let mut total = crate::cache::CacheStats::default();
+        for slot in &rc.caches {
+            let c = slot.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            total.hits += c.stats.hits;
+            total.misses += c.stats.misses;
+            total.evictions += c.stats.evictions;
+            total.bytes_from_hbm += c.stats.bytes_from_hbm;
+        }
+        Some(total)
     }
 }
 

@@ -164,6 +164,10 @@ pub struct KgcEngine {
     deadline: Duration,
     serve: Mutex<ServeState>,
     serve_cv: Condvar,
+    /// Epoch-keyed result cache over the serving sweep (the Dispatcher
+    /// IP's §4.2.2 policies in front of live top-k serving); `None` when
+    /// serving uncached.
+    cache: Option<Mutex<crate::cache::ServingCache>>,
 }
 
 impl KgcEngine {
@@ -199,6 +203,26 @@ impl KgcEngine {
         self.batch_capacity
     }
 
+    /// The configured serving-cache spec, or `None` when uncached.
+    pub fn cache_spec(&self) -> Option<crate::cache::CacheSpec> {
+        self.cache.as_ref().map(|c| lock_recover(c).spec())
+    }
+
+    /// Result-cache counters plus the number of wholesale epoch
+    /// invalidations so far, when a serving cache is configured.
+    pub fn cache_stats(&self) -> Option<(crate::cache::CacheStats, u64)> {
+        self.cache.as_ref().map(|c| {
+            let c = lock_recover(c);
+            (c.stats, c.invalidations())
+        })
+    }
+
+    /// Aggregate snapped-row cache counters from the backend, when it
+    /// carries one ([`ShardedBackend::with_row_cache`]).
+    pub fn row_cache_stats(&self) -> Option<crate::cache::CacheStats> {
+        self.backend.row_cache_stats()
+    }
+
     /// Candidate count every ranking is over (the live vertex count).
     pub fn num_candidates(&self) -> usize {
         self.kg.num_vertices
@@ -209,7 +233,15 @@ impl KgcEngine {
     /// Concurrent `insert_edges`/`remove_edges` publish a *new* snapshot;
     /// this one stays consistent for as long as the caller holds it.
     fn mem_snapshot(&self) -> Arc<Vec<f32>> {
-        Arc::clone(&lock_recover(&self.mem).data)
+        self.mem_snapshot_with_epoch().0
+    }
+
+    /// [`Self::mem_snapshot`] plus the epoch it was published under, read
+    /// atomically under the same lock hold — the pair the serving cache
+    /// keys its validity on.
+    fn mem_snapshot_with_epoch(&self) -> (Arc<Vec<f32>>, u64) {
+        let m = lock_recover(&self.mem);
+        (Arc::clone(&m.data), m.epoch)
     }
 
     /// Mutation epoch of the graph memory: 0 at build, +1 per applied
@@ -705,72 +737,67 @@ impl KgcEngine {
 
     /// Backward-direction top-k (`M_node − H_rel` packed queries) into
     /// `tops`, one list per pair — the reduced-form sibling of
-    /// [`Self::score_backward_into`].
+    /// [`Self::score_backward_into`]. Carries the snapshot's `epoch` so an
+    /// epoch-aware backend can serve snapped rows from its cache.
     fn top_k_backward_into(
         &self,
         mv: &[f32],
+        epoch: u64,
         pairs: &[(usize, usize)],
         tops: &mut [Vec<(usize, f32)>],
     ) {
         let d = self.cfg.dim_hd;
         let q = crate::model::pack_backward_queries(mv, &self.hr, d, pairs);
-        self.backend.top_k_batch_into(mv, d, &q, self.bias, self.top_k, tops);
+        self.backend.top_k_batch_epoch_into(epoch, mv, d, &q, self.bias, self.top_k, tops);
     }
 
-    /// Score and rank one drained micro-batch — rank-native: the batch
-    /// goes through the backend's reduced top-k sweep
-    /// ([`ScoreBackend::top_k_pairs_into`] forward, the packed-`q`
-    /// [`ScoreBackend::top_k_batch_into`] backward), so serving never
-    /// materializes a `(B, |V|)` score block here. For the sharded backend
-    /// that also shrinks the inter-shard merge from `O(B · |V|)` floats to
-    /// `O(B · k)` candidates; dense backends select inside the sweep.
-    /// The selection order (score descending, ties by ascending vertex id)
-    /// is identical to the old sort-based path, so a query's ranking is
-    /// unchanged by batch composition (the batched-vs-unbatched parity
-    /// tests rely on that).
-    fn rank_requests(&self, batch: &[(u64, QueryRequest)]) -> Vec<(u64, Ranking)> {
-        if batch.is_empty() {
-            return Vec::new();
-        }
+    /// The uncached serving sweep: rank-native top-k over one drained
+    /// micro-batch ([`ScoreBackend::top_k_pairs_epoch_into`] forward, the
+    /// packed-`q` [`ScoreBackend::top_k_batch_epoch_into`] backward), so
+    /// serving never materializes a `(B, |V|)` score block. For the
+    /// sharded backend that also shrinks the inter-shard merge from
+    /// `O(B · |V|)` floats to `O(B · k)` candidates; dense backends select
+    /// inside the sweep. The selection order (score descending, ties by
+    /// ascending vertex id) is identical to the old sort-based path, so a
+    /// query's ranking is unchanged by batch composition (the
+    /// batched-vs-unbatched parity tests rely on that).
+    fn sweep_tops(
+        &self,
+        mv: &[f32],
+        epoch: u64,
+        batch: &[(u64, QueryRequest)],
+        tops: &mut [Vec<(usize, f32)>],
+    ) {
         let d = self.cfg.dim_hd;
-        // one snapshot for the whole batch: every batch-mate (and both
-        // direction sweeps of a mixed batch) scores the same epoch's
-        // matrix, so a batch can never observe a half-applied mutation
-        let mv = self.mem_snapshot();
-        let mut tops: Vec<Vec<(usize, f32)>> = vec![Vec::new(); batch.len()];
-
         let fwd_rows: Vec<usize> = (0..batch.len())
             .filter(|&i| batch[i].1.direction == Direction::Forward)
             .collect();
         let all_pairs =
             || batch.iter().map(|&(_, r)| (r.node, r.rel)).collect::<Vec<(usize, usize)>>();
         if fwd_rows.len() == batch.len() {
-            self.backend.top_k_pairs_into(
-                &mv,
+            self.backend.top_k_pairs_epoch_into(
+                epoch,
+                mv,
                 &self.hr,
                 d,
                 &all_pairs(),
                 self.bias,
                 self.top_k,
-                &mut tops,
+                tops,
             );
         } else if fwd_rows.is_empty() {
-            self.top_k_backward_into(&mv, &all_pairs(), &mut tops);
+            self.top_k_backward_into(mv, epoch, &all_pairs(), tops);
         } else {
             // mixed directions: sweep each side into a staging list and
             // scatter rows back to their submission positions
             let pairs_of = |rows: &[usize]| {
                 rows.iter().map(|&i| (batch[i].1.node, batch[i].1.rel)).collect::<Vec<_>>()
             };
-            let mut scatter = |rows: &[usize], side: &mut [Vec<(usize, f32)>]| {
-                for (k, &i) in rows.iter().enumerate() {
-                    tops[i] = std::mem::take(&mut side[k]);
-                }
-            };
             let fwd_pairs = pairs_of(&fwd_rows);
             let mut side = vec![Vec::new(); fwd_pairs.len()];
-            self.backend.top_k_pairs_into(
-                &mv,
+            self.backend.top_k_pairs_epoch_into(
+                epoch,
+                mv,
                 &self.hr,
                 d,
                 &fwd_pairs,
@@ -778,14 +805,83 @@ impl KgcEngine {
                 self.top_k,
                 &mut side,
             );
-            scatter(&fwd_rows, &mut side);
+            for (k, &i) in fwd_rows.iter().enumerate() {
+                tops[i] = std::mem::take(&mut side[k]);
+            }
             let bwd_rows: Vec<usize> = (0..batch.len())
                 .filter(|&i| batch[i].1.direction == Direction::Backward)
                 .collect();
             let bwd_pairs = pairs_of(&bwd_rows);
             let mut side = vec![Vec::new(); bwd_pairs.len()];
-            self.top_k_backward_into(&mv, &bwd_pairs, &mut side);
-            scatter(&bwd_rows, &mut side);
+            self.top_k_backward_into(mv, epoch, &bwd_pairs, &mut side);
+            for (k, &i) in bwd_rows.iter().enumerate() {
+                tops[i] = std::mem::take(&mut side[k]);
+            }
+        }
+    }
+
+    /// Score and rank one drained micro-batch, probing the serving cache
+    /// first when one is configured.
+    ///
+    /// Cache session protocol: the snapshot `(mv, epoch)` is read
+    /// atomically, then the cache is synced onto that epoch
+    /// ([`crate::cache::ServingCache::begin`]) under a short lock hold —
+    /// hits fill their rows directly and misses fall through to one
+    /// [`Self::sweep_tops`] over the missed rows only. Freshly swept rows
+    /// are offered back under a second lock hold that re-`begin`s at the
+    /// same epoch: if a newer epoch swept in between, `begin` reports the
+    /// results stale and they are simply not cached (they are still
+    /// correct for *this* batch — it scored its own consistent snapshot).
+    /// A cached row is byte-identical to re-sweeping because it *is* a
+    /// prior sweep's output at the same epoch against the same snapshot.
+    fn rank_requests(&self, batch: &[(u64, QueryRequest)]) -> Vec<(u64, Ranking)> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        // one snapshot for the whole batch: every batch-mate (and both
+        // direction sweeps of a mixed batch) scores the same epoch's
+        // matrix, so a batch can never observe a half-applied mutation
+        let (mv, epoch) = self.mem_snapshot_with_epoch();
+        let mut tops: Vec<Vec<(usize, f32)>> = vec![Vec::new(); batch.len()];
+
+        let key_of = |req: &QueryRequest| {
+            crate::cache::query_key(req.node, req.rel, req.direction == Direction::Forward)
+        };
+        let mut missed: Vec<usize> = (0..batch.len()).collect();
+        let mut cache_live = false;
+        if let Some(cache) = &self.cache {
+            let mut c = lock_recover(cache);
+            if c.begin(epoch) {
+                cache_live = true;
+                missed.retain(|&i| match c.get(key_of(&batch[i].1)) {
+                    Some(top) => {
+                        tops[i] = top;
+                        false
+                    }
+                    None => true,
+                });
+            }
+        }
+
+        if missed.len() == batch.len() {
+            self.sweep_tops(&mv, epoch, batch, &mut tops);
+        } else if !missed.is_empty() {
+            let sub: Vec<(u64, QueryRequest)> = missed.iter().map(|&i| batch[i]).collect();
+            let mut side = vec![Vec::new(); sub.len()];
+            self.sweep_tops(&mv, epoch, &sub, &mut side);
+            for (k, &i) in missed.iter().enumerate() {
+                tops[i] = std::mem::take(&mut side[k]);
+            }
+        }
+        if cache_live && !missed.is_empty() {
+            if let Some(cache) = &self.cache {
+                let mut c = lock_recover(cache);
+                if c.begin(epoch) {
+                    for &i in &missed {
+                        c.insert(key_of(&batch[i].1), tops[i].clone());
+                    }
+                }
+            }
         }
 
         batch
@@ -1046,6 +1142,7 @@ pub struct EngineBuilder {
     deadline: Duration,
     kg: Option<KnowledgeGraph>,
     state: Option<ModelState>,
+    cache: Option<crate::cache::CacheSpec>,
 }
 
 impl EngineBuilder {
@@ -1064,6 +1161,7 @@ impl EngineBuilder {
             deadline: Duration::from_micros(500),
             kg: None,
             state: None,
+            cache: None,
         }
     }
 
@@ -1141,6 +1239,18 @@ impl EngineBuilder {
         self
     }
 
+    /// Serving cache spec (`None` = uncached, the default). With a spec,
+    /// the engine keeps an epoch-keyed `(node, rel, direction) → top-k`
+    /// result cache in front of the serving sweep, and a
+    /// `sharded:N+quant:M` backend additionally caches grid-snapped hot
+    /// memory rows per shard — both governed by the spec's replacement
+    /// policy and capacity, both invalidated wholesale on every mutation
+    /// epoch. Cached serving is byte-identical to uncached.
+    pub fn cache(mut self, spec: Option<crate::cache::CacheSpec>) -> Self {
+        self.cache = spec;
+        self
+    }
+
     /// Materialize the engine: resolve the dataset, encode the model state
     /// into hypervectors, memorize the graph (Eq. 1/7), build the filter
     /// sets, and wire the backend + micro-batcher.
@@ -1183,9 +1293,19 @@ impl EngineBuilder {
         let adj = AdjacencyList::from_csr(&train_csr);
         let labels = LabelBatch::full(&kg);
         let subjects = SubjectIndex::full(&kg);
-        let backend = match self.custom_backend {
-            Some(b) => b,
-            None => self.backend_kind.instantiate(self.threads),
+        let backend = match (self.custom_backend, self.cache, self.backend_kind) {
+            (Some(b), _, _) => b,
+            // the one composition where a row cache helps: sharded workers
+            // over the fused quant kernel, where a cached pre-snapped row
+            // skips its per-sweep max-abs pass and grid snap. Noisy
+            // compositions never get one — cached rows would bypass the
+            // fault-injection channel.
+            (None, Some(spec), BackendKind::Composed(shards, InnerBackendKind::Quant(bits))) => {
+                let quant = QuantBackend::new(bits, 1);
+                let fp = quant.fp;
+                Box::new(ShardedBackend::new(shards, Box::new(quant)).with_row_cache(spec, fp))
+            }
+            (None, _, kind) => kind.instantiate(self.threads),
         };
         let batch_capacity =
             if self.batch_capacity == 0 { cfg.batch } else { self.batch_capacity };
@@ -1211,6 +1331,7 @@ impl EngineBuilder {
             top_k: self.top_k,
             batch_capacity,
             deadline: self.deadline,
+            cache: self.cache.map(|spec| Mutex::new(crate::cache::ServingCache::new(spec))),
         })
     }
 }
@@ -1649,5 +1770,81 @@ mod tests {
         assert!(m.mrr > 0.0 && m.mrr <= 1.0);
         let both = e.evaluate_both(&e.kg().test).unwrap();
         assert_eq!(both.count, 2 * e.kg().test.len());
+    }
+
+    fn cached_engine(spec: &str, kind: BackendKind) -> KgcEngine {
+        EngineBuilder::new("tiny")
+            .seed(7)
+            .backend(kind)
+            .batch_capacity(4)
+            .deadline(Duration::from_millis(1))
+            .cache(crate::cache::CacheSpec::parse(spec).unwrap())
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn cached_rank_hits_and_matches_uncached() {
+        let plain = tiny_engine(BackendKind::Kernel);
+        let cached = cached_engine("lfu:64", BackendKind::Kernel);
+        let reqs = [
+            QueryRequest::forward(1, 0),
+            QueryRequest::backward(1, 0),
+            QueryRequest::forward(2, 1),
+        ];
+        for _ in 0..3 {
+            for req in reqs {
+                assert_eq!(cached.rank(req), plain.rank(req));
+            }
+        }
+        let (stats, invalidations) = cached.cache_stats().expect("cache configured");
+        // pass 1 misses all three, passes 2-3 hit them
+        assert_eq!(stats.misses, 3);
+        assert_eq!(stats.hits, 6);
+        assert_eq!(invalidations, 0);
+        assert!(plain.cache_stats().is_none());
+        assert_eq!(cached.cache_spec().unwrap().to_string(), "lfu:64");
+    }
+
+    #[test]
+    fn cache_is_invalidated_by_mutation_epochs() {
+        let cached = cached_engine("lru:64", BackendKind::Kernel);
+        let plain = tiny_engine(BackendKind::Kernel);
+        let req = QueryRequest::forward(1, 0);
+        assert_eq!(cached.rank(req), plain.rank(req)); // miss, epoch 0
+        assert_eq!(cached.rank(req), plain.rank(req)); // hit
+        let edge = Triple::new(1, 0, 2);
+        assert_eq!(cached.insert_edges(&[edge]), 1);
+        assert_eq!(plain.insert_edges(&[edge]), 1);
+        // the cached entry is stamped epoch 0; this probe must MISS and
+        // resweep against the epoch-1 snapshot, not serve the stale top-k
+        assert_eq!(cached.rank(req), plain.rank(req));
+        let (stats, invalidations) = cached.cache_stats().unwrap();
+        assert_eq!((stats.hits, stats.misses), (1, 2));
+        assert_eq!(invalidations, 1);
+        // round-trip back to epoch 2 == original memory: still a fresh miss
+        assert_eq!(cached.remove_edges(&[edge]), 1);
+        assert_eq!(plain.remove_edges(&[edge]), 1);
+        assert_eq!(cached.rank(req), plain.rank(req));
+        assert_eq!(cached.cache_stats().unwrap().0.misses, 3);
+    }
+
+    #[test]
+    fn row_cache_is_wired_for_sharded_quant_only() {
+        let rowy = cached_engine("lfu:512", BackendKind::Composed(2, InnerBackendKind::Quant(8)));
+        let plain = tiny_engine(BackendKind::Composed(2, InnerBackendKind::Quant(8)));
+        assert!(plain.row_cache_stats().is_none(), "uncached engine carries no row cache");
+        // distinct queries so the result cache cannot absorb the repeats:
+        // every rank re-sweeps and the second pass hits snapped rows
+        let reqs: Vec<QueryRequest> = (0..6).map(|i| QueryRequest::forward(i, i % 2)).collect();
+        for _ in 0..2 {
+            for &req in &reqs {
+                assert_eq!(rowy.rank(req), plain.rank(req), "row-cached == uncached");
+            }
+        }
+        let rows = rowy.row_cache_stats().expect("row cache configured");
+        assert!(rows.hits > 0, "repeat sweeps must hit snapped rows: {rows:?}");
+        // kernel-backed engines never get a row cache even when cached
+        assert!(cached_engine("lfu:64", BackendKind::Kernel).row_cache_stats().is_none());
     }
 }

@@ -491,9 +491,12 @@ pub fn max_abs_blocked(a: &[f32]) -> f32 {
 
 /// Quantize one row in place with its own max-abs-derived scale; returns
 /// nothing — the scale is recomputed wherever the row is revisited, which
-/// is exactly what makes per-row quantization slice-local.
+/// is exactly what makes per-row quantization slice-local. Public so the
+/// sharded backend's snapped-row cache can pre-quantize hot rows with the
+/// *same* grid snap the fused quant kernels apply, keeping cached scoring
+/// bit-identical to the fused path.
 #[inline]
-fn quantize_row_into(out: &mut [f32], row: &[f32], fp: FixedPoint) {
+pub fn quantize_row_into(out: &mut [f32], row: &[f32], fp: FixedPoint) {
     let scale = fp.scale_for(max_abs_blocked(row));
     for (o, &x) in out.iter_mut().zip(row) {
         *o = fp.quantize_with_scale(x, scale);

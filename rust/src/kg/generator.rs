@@ -116,7 +116,12 @@ pub struct ZipfSampler {
 }
 
 impl ZipfSampler {
+    /// # Panics
+    /// If `n == 0`: there is no distribution over an empty id space, and
+    /// deferring the failure to the first [`Self::sample`] call (which
+    /// used to unwrap an empty cdf) hides the misconfigured call site.
     pub fn new(n: usize, exponent: f64, rng: &mut Rng) -> Self {
+        assert!(n > 0, "ZipfSampler over an empty id space (n = 0)");
         let mut weights = Vec::with_capacity(n);
         let mut acc = 0.0;
         for k in 1..=n {
@@ -129,8 +134,15 @@ impl ZipfSampler {
     }
 
     pub fn sample(&self, rng: &mut Rng) -> usize {
-        let total = *self.cdf.last().unwrap();
-        let x = rng.f64() * total;
+        self.sample_at(rng.f64())
+    }
+
+    /// Deterministic core of [`Self::sample`]: map `x01 ∈ [0, 1)` through
+    /// the inverse cdf. Split out so the cdf boundaries are testable
+    /// without steering the rng.
+    fn sample_at(&self, x01: f64) -> usize {
+        let total = *self.cdf.last().expect("cdf is non-empty by construction");
+        let x = x01 * total;
         let idx = self.cdf.partition_point(|&w| w < x);
         self.perm[idx.min(self.perm.len() - 1)] as usize
     }
@@ -317,6 +329,35 @@ pub fn random_for_preset(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    #[should_panic(expected = "empty id space")]
+    fn zipf_over_zero_ids_panics_at_construction() {
+        let mut rng = Rng::seed_from_u64(0);
+        let _ = ZipfSampler::new(0, 1.0, &mut rng);
+    }
+
+    #[test]
+    fn zipf_singleton_and_cdf_boundaries() {
+        let mut rng = Rng::seed_from_u64(3);
+        // n = 1: every draw is the only id, including both cdf endpoints
+        let one = ZipfSampler::new(1, 1.0, &mut rng);
+        assert_eq!(one.sample_at(0.0), 0);
+        assert_eq!(one.sample_at(0.5), 0);
+        for _ in 0..10 {
+            assert_eq!(one.sample(&mut rng), 0);
+        }
+        // x at the cdf boundaries stays in range and respects rank order:
+        // 0.0 lands exactly on the first cdf step (the heaviest rank) and
+        // anything below 1.0 clamps no further than the last rank
+        let z = ZipfSampler::new(5, 1.0, &mut rng);
+        assert_eq!(z.sample_at(0.0), z.perm[0] as usize);
+        assert_eq!(z.sample_at(1.0 - 1e-12), z.perm[4] as usize);
+        for i in 0..100 {
+            let v = z.sample_at(i as f64 / 100.0);
+            assert!(v < 5, "sample {v} out of range");
+        }
+    }
 
     #[test]
     fn matches_spec_counts_exactly_at_small_scale() {

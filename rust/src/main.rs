@@ -10,6 +10,7 @@
 //!   resources  print the Table 5 resource/power model
 
 use hdreason::bench::figures;
+use hdreason::cache::CacheSpec;
 use hdreason::config::{accel_preset, RunConfig, ACCEL_PRESETS, MODEL_PRESETS};
 use hdreason::coordinator::HdrTrainer;
 use hdreason::engine::{BackendKind, EngineBuilder, KgcEngine, QueryRequest};
@@ -113,8 +114,15 @@ COMMANDS:
                         noisy:(gauss|stuck|saturate):P:SEED+<inner>]
              [--threads 0] [--queries 256] [--batch <preset|B>]
              [--deadline-us 500] [--clients <batch>] [--seed 42]
+             [--cache lru:N|lfu:N|random:N[:SEED]|off] [--min-hit-rate 0]
              Rank a query stream through the KgcEngine micro-batched
              serving path; prints throughput and filtered accuracy.
+             --cache puts an epoch-keyed result cache (policy x capacity
+             in entries) in front of the serving sweep — byte-identical
+             rankings, invalidated wholesale on every mutation epoch; a
+             sharded:N+quant:M backend additionally caches grid-snapped
+             hot rows per shard. --min-hit-rate R fails the run if the
+             result cache's hit rate lands below R (CI smoke assertion).
              sharded[:N] fans the memory-matrix scan over N workers
              (bare sharded = auto-size to the machine); quant:N scores
              on the fix-N grid; sharded:N+(scalar|kernel|quant:M)
@@ -130,7 +138,8 @@ COMMANDS:
   serve      [--model tiny] [--dataset learnable] [--backend <spec>]
              [--threads 0] [--clients 4] [--batch <preset|B>]
              [--deadline-us 500] [--duration-ms 1000] [--ops 4096]
-             [--mutate-batch 16] [--mutate-depth 8] [--seed 42]
+             [--mutate-batch 16] [--mutate-depth 8] [--mutate-pause-us 200]
+             [--cache <spec as for query>] [--min-hit-rate 0] [--seed 42]
              Long-running mixed mutate+query workload: Zipf-skewed clients
              (the dataset's Table 3 skew) stream queries through the
              micro-batched serving path while a mutator thread churns the
@@ -140,7 +149,10 @@ COMMANDS:
              latency and queries/s under churn, an insert-visibility probe
              (rank of a freshly inserted gold), and verifies the memory
              round-trips bit-exactly once the window drains. Accepts every
-             composed --backend spec that `query` does.
+             composed --backend spec that `query` does, and --cache /
+             --min-hit-rate as for query (every churn epoch invalidates
+             the cache wholesale; --mutate-pause-us spaces the mutation
+             batches, trading churn rate against cache lifetime).
   simulate   [--dataset FB15K-237] [--accel u50] [--scale 1.0]
              FPGA cycle simulation of one training batch
   figures    --id <table3|table4|table5|table6|fig8a|fig8b|fig8c|fig8d|
@@ -218,6 +230,7 @@ fn cmd_query(args: &Args) -> hdreason::Result<()> {
     let model = args.get("model", "tiny");
     let dataset = args.get("dataset", "learnable");
     let backend = BackendKind::parse(&args.get("backend", "kernel"))?;
+    let cache = CacheSpec::parse(&args.get("cache", "off"))?;
     let deadline_us = args.get_usize("deadline-us", 500);
     let num_queries = args.get_usize("queries", 256);
 
@@ -229,14 +242,16 @@ fn cmd_query(args: &Args) -> hdreason::Result<()> {
         .threads(args.get_usize("threads", 0))
         .batch_capacity(args.get_usize("batch", 0))
         .deadline(std::time::Duration::from_micros(deadline_us as u64))
+        .cache(cache)
         .build()?;
     let kg = engine.kg();
     println!(
-        "engine: preset {}, backend {}, serving batch {} (deadline {} us)",
+        "engine: preset {}, backend {}, serving batch {} (deadline {} us), cache {}",
         model,
         engine.backend_desc(),
         engine.batch_capacity(),
-        deadline_us
+        deadline_us,
+        cache.map_or_else(|| "off".to_string(), |c| c.to_string())
     );
     println!(
         "dataset: {} ({} vertices, {} relations, {} train triples)",
@@ -270,6 +285,9 @@ fn cmd_query(args: &Args) -> hdreason::Result<()> {
         served as f64 / elapsed
     );
 
+    print_cache_stats(&engine);
+    require_hit_rate(args, &engine)?;
+
     println!("\nsample rankings:");
     for t in triples.iter().take(3) {
         let r = engine.rank(QueryRequest::forward(t.src, t.rel));
@@ -277,6 +295,58 @@ fn cmd_query(args: &Args) -> hdreason::Result<()> {
         println!("  ({}, r{}, ?) -> top3 {:?} (gold {})", t.src, t.rel, ids, t.dst);
     }
     println!("{}", engine.evaluate(&triples)?.row("engine (filtered)"));
+    Ok(())
+}
+
+/// Print serving-cache and row-cache counters after a run (no-op when the
+/// engine serves uncached).
+fn print_cache_stats(engine: &KgcEngine) {
+    if let Some((stats, invalidations)) = engine.cache_stats() {
+        println!(
+            "cache[{}]: {} hits / {} misses ({:.1}% hit rate), {} evictions, {} epoch invalidations",
+            engine.cache_spec().expect("spec exists when stats do"),
+            stats.hits,
+            stats.misses,
+            stats.hit_rate() * 100.0,
+            stats.evictions,
+            invalidations
+        );
+    }
+    if let Some(rows) = engine.row_cache_stats() {
+        println!(
+            "row-cache: {} hits / {} misses ({:.1}% hit rate), {} evictions, {:.2} MB rows re-snapped",
+            rows.hits,
+            rows.misses,
+            rows.hit_rate() * 100.0,
+            rows.evictions,
+            rows.bytes_from_hbm as f64 / 1e6
+        );
+    }
+}
+
+/// Enforce `--min-hit-rate R` on the serving cache — the CI smoke's "the
+/// cache actually engaged" assertion. Absent or zero means no check.
+fn require_hit_rate(args: &Args, engine: &KgcEngine) -> hdreason::Result<()> {
+    let min = args.get_f64("min-hit-rate", 0.0);
+    if min <= 0.0 {
+        return Ok(());
+    }
+    let (stats, _) = engine
+        .cache_stats()
+        .ok_or_else(|| anyhow::anyhow!("--min-hit-rate requires --cache <spec>"))?;
+    anyhow::ensure!(
+        stats.hit_rate() >= min,
+        "serving-cache hit rate {:.4} below --min-hit-rate {:.4} ({} hits / {} accesses)",
+        stats.hit_rate(),
+        min,
+        stats.hits,
+        stats.accesses()
+    );
+    println!(
+        "serving-cache hit rate {:.1}% >= required {:.1}%",
+        stats.hit_rate() * 100.0,
+        min * 100.0
+    );
     Ok(())
 }
 
@@ -298,6 +368,8 @@ fn cmd_serve(args: &Args) -> hdreason::Result<()> {
     let clients = args.get_usize("clients", 4).max(1);
     let mutate_batch = args.get_usize("mutate-batch", 16).max(1);
     let mutate_depth = args.get_usize("mutate-depth", 8).max(1);
+    let mutate_pause_us = args.get_usize("mutate-pause-us", 200);
+    let cache = CacheSpec::parse(&args.get("cache", "off"))?;
     let seed = args.get_usize("seed", 42) as u64;
 
     let engine = EngineBuilder::new(&model)
@@ -308,14 +380,16 @@ fn cmd_serve(args: &Args) -> hdreason::Result<()> {
         .threads(args.get_usize("threads", 0))
         .batch_capacity(args.get_usize("batch", 0))
         .deadline(std::time::Duration::from_micros(deadline_us as u64))
+        .cache(cache)
         .build()?;
     let kg = engine.kg();
     println!(
-        "engine: preset {}, backend {}, serving batch {} (deadline {} us)",
+        "engine: preset {}, backend {}, serving batch {} (deadline {} us), cache {}",
         model,
         engine.backend_desc(),
         engine.batch_capacity(),
-        deadline_us
+        deadline_us,
+        cache.map_or_else(|| "off".to_string(), |c| c.to_string())
     );
     println!(
         "dataset: {} ({} vertices, {} relations, {} live edges)",
@@ -396,7 +470,7 @@ fn cmd_serve(args: &Args) -> hdreason::Result<()> {
                 if window.len() > mutate_depth {
                     rem += e.remove_edges(&window.pop_front().unwrap());
                 }
-                std::thread::sleep(std::time::Duration::from_micros(200));
+                std::thread::sleep(std::time::Duration::from_micros(mutate_pause_us as u64));
             }
             // drain: the run must end on the graph it started with
             while let Some(b) = window.pop_front() {
@@ -437,11 +511,13 @@ fn cmd_serve(args: &Args) -> hdreason::Result<()> {
     });
 
     latencies.sort_unstable();
+    // nearest-rank percentiles, shared with the bench harness (the old
+    // ad-hoc round((n-1)p) closure under-reported the tail)
     let pct = |p: f64| -> f64 {
         if latencies.is_empty() {
             return 0.0;
         }
-        latencies[((latencies.len() - 1) as f64 * p).round() as usize] as f64 / 1e3
+        hdreason::bench::percentile(&latencies, p) as f64 / 1e3
     };
     println!(
         "served {} queries from {} clients in {:.1} ms under churn  ->  {:.0} queries/s",
@@ -470,6 +546,8 @@ fn cmd_serve(args: &Args) -> hdreason::Result<()> {
         kg.train.len()
     );
     println!("memory round-trip after churn: bit-exact OK");
+    print_cache_stats(&engine);
+    require_hit_rate(args, &engine)?;
     Ok(())
 }
 

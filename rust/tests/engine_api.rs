@@ -7,6 +7,7 @@
 //! seeded-fault determinism matrix for `noisy:` backends.
 
 use hdreason::baselines::{DistMult, MarginModel, TransE};
+use hdreason::cache::CacheSpec;
 use hdreason::engine::{
     top_k_of, BackendKind, EngineBuilder, KernelBackend, KgcEngine, MicroBatcher, QuantBackend,
     QueryHandle, QueryRequest, RankPartial, ScalarBackend, ScoreBackend, ShardedBackend,
@@ -821,6 +822,136 @@ fn concurrent_churn_round_trips_memory_under_serving_load() {
     let after = e.score_batch(&pairs);
     for (i, (a, b)) in baseline.iter().zip(&after).enumerate() {
         assert_eq!(a.to_bits(), b.to_bits(), "churn round-trip logit {i}");
+    }
+}
+
+/// Same graph/state/serving knobs as [`engine`], plus a serving cache.
+fn engine_cached(kind: BackendKind, cache: &str) -> KgcEngine {
+    EngineBuilder::new("tiny")
+        .dataset("learnable")
+        .seed(11)
+        .backend(kind)
+        .batch_capacity(8)
+        .deadline(Duration::from_millis(1))
+        .cache(CacheSpec::parse(cache).expect("cache spec parses"))
+        .build()
+        .expect("tiny engine builds")
+}
+
+#[test]
+fn cached_serving_is_bit_identical_to_uncached_across_the_backend_zoo() {
+    // tentpole acceptance pin: the serving cache (and, on sharded+quant,
+    // the per-shard snapped-row cache) may only change WHEN a sweep runs,
+    // never what it returns. Repeated forward+backward streams through
+    // rank / submit / submit_async must equal an uncached twin exactly —
+    // Ranking compares scores, so equality is bit-for-bit — across two
+    // mutation epochs, with the stats proving the cache actually served.
+    for spec in [
+        "scalar",
+        "kernel",
+        "sharded:2+quant:8",
+        "sharded:7+kernel",
+        "noisy:gauss:0.1:42+sharded:2+quant:8",
+    ] {
+        let kind = BackendKind::parse(spec).unwrap();
+        for cache_spec in ["lru:64", "lfu:64", "random:64:7"] {
+            let tag = format!("{spec} / {cache_spec}");
+            let plain = engine(kind, 0, 8);
+            let e = engine_cached(kind, cache_spec);
+            assert!(plain.cache_stats().is_none(), "{tag}: uncached twin grew a cache");
+            // 9 distinct (subject, relation) pairs, each queried both ways:
+            // 18 distinct keys, all resident at capacity 64
+            let reqs: Vec<QueryRequest> = query_pairs(&plain, 9)
+                .into_iter()
+                .flat_map(|(s, r)| [QueryRequest::forward(s, r), QueryRequest::backward(s, r)])
+                .collect();
+            for pass in 0..3 {
+                for &req in &reqs {
+                    assert_eq!(e.rank(req), plain.rank(req), "{tag} pass {pass} req {req:?}");
+                }
+            }
+            let (stats, invalidations) = e.cache_stats().expect("cache is on");
+            assert_eq!(stats.misses, reqs.len() as u64, "{tag}: one cold pass of misses");
+            assert_eq!(stats.hits, 2 * reqs.len() as u64, "{tag}: two passes of pure hits");
+            assert_eq!(stats.evictions, 0, "{tag}: 18 keys fit in 64 entries");
+            assert_eq!(invalidations, 0, "{tag}: no mutations yet");
+            // the batched serving paths read through the same cache
+            for &req in reqs.iter().take(3) {
+                assert_eq!(e.submit(req), plain.rank(req), "{tag} submit {req:?}");
+                assert_eq!(e.submit_async(req).wait(), plain.rank(req), "{tag} async {req:?}");
+            }
+            // mutation epochs: each batch bumps the mem epoch, which must
+            // wholesale-invalidate prior entries on both cache layers
+            let (ins, rem) = mutation_batches(&plain);
+            assert_eq!(e.insert_edges(&ins), plain.insert_edges(&ins), "{tag} insert");
+            for &req in &reqs {
+                assert_eq!(e.rank(req), plain.rank(req), "{tag} post-insert req {req:?}");
+            }
+            assert_eq!(e.remove_edges(&rem), plain.remove_edges(&rem), "{tag} remove");
+            for &req in &reqs {
+                assert_eq!(e.rank(req), plain.rank(req), "{tag} post-remove req {req:?}");
+            }
+            let (stats2, invalidations2) = e.cache_stats().expect("cache is on");
+            assert_eq!(invalidations2, 2, "{tag}: one invalidation per mutation epoch");
+            assert!(
+                stats2.misses >= stats.misses + 2 * reqs.len() as u64,
+                "{tag}: every key re-misses after each epoch bump"
+            );
+            // the row cache exists exactly on the sharded+quant composition
+            // (noisy wrappers must keep rows flowing through fault injection)
+            if spec == "sharded:2+quant:8" {
+                let rows = e.row_cache_stats().expect("row cache wired for sharded+quant");
+                assert!(rows.hits > 0, "{tag}: sweeps re-read snapped rows");
+            } else {
+                assert!(e.row_cache_stats().is_none(), "{tag}: no row cache expected");
+            }
+        }
+    }
+}
+
+#[test]
+fn cached_submit_survives_concurrent_churn_and_round_trips() {
+    // the serving cache under fire: four clients hammer submit while a
+    // mutator cycles a batch in and out (epoch bump per batch). Nothing
+    // may deadlock; after the graph round-trips, rankings must equal an
+    // untouched uncached twin bit-for-bit and some queries must have been
+    // served from cache between epoch bumps.
+    let kind = BackendKind::parse("sharded:2+quant:8").unwrap();
+    let plain = engine(kind, 0, 4);
+    let e = engine_cached(kind, "lfu:128");
+    let (ins, _) = mutation_batches(&e);
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let (e, ins, stop) = (&e, &ins, &stop);
+        scope.spawn(move || {
+            for _ in 0..25 {
+                e.insert_edges(ins);
+                e.remove_edges(ins);
+            }
+            stop.store(true, Ordering::Release);
+        });
+        for c in 0..4usize {
+            scope.spawn(move || {
+                let v = e.num_candidates();
+                let r = e.kg().num_relations;
+                let mut i = 0usize;
+                while !stop.load(Ordering::Acquire) {
+                    // a small key set so concurrent clients collide on keys
+                    let req = QueryRequest::forward((c * 7 + i * 5) % 16 % v, i % r);
+                    let ranking = e.submit(req);
+                    assert_eq!(ranking.request, req, "client {c} query {i}");
+                    i += 1;
+                }
+            });
+        }
+    });
+    assert_eq!(e.mem_epoch(), 50, "25 insert + 25 remove batches");
+    let (stats, _) = e.cache_stats().expect("cache is on");
+    assert!(stats.accesses() > 0, "serving traffic must have probed the cache");
+    for &(s, r) in &query_pairs(&plain, 13) {
+        for req in [QueryRequest::forward(s, r), QueryRequest::backward(s, r)] {
+            assert_eq!(e.rank(req), plain.rank(req), "round-trip req {req:?}");
+        }
     }
 }
 

@@ -443,6 +443,116 @@ fn prop_adjacency_multiset_semantics_match_a_vec_model() {
     }
 }
 
+/// Executable-spec twin of a [`hdreason::cache::PolicyState`]: the same
+/// access stream drives both, and every eviction must name the same
+/// victim. Models are deliberately naive — O(n) scans over a Vec.
+trait NaiveModel {
+    fn touch(&mut self, v: u64);
+    fn evict(&mut self) -> u64;
+}
+
+/// LRU as a recency list: front = least recently touched.
+#[derive(Default)]
+struct LruModel {
+    order: Vec<u64>,
+}
+
+impl NaiveModel for LruModel {
+    fn touch(&mut self, v: u64) {
+        self.order.retain(|&x| x != v);
+        self.order.push(v);
+    }
+
+    fn evict(&mut self) -> u64 {
+        self.order.remove(0)
+    }
+}
+
+/// LFU as a `(id, freq, last_touch)` table: victim is the minimum by
+/// `(freq, last_touch)` — frequency first, LRU tie-break, exactly the
+/// ordering `LfuState`'s BTreeSet key encodes.
+#[derive(Default)]
+struct LfuModel {
+    clock: u64,
+    meta: Vec<(u64, u64, u64)>,
+}
+
+impl NaiveModel for LfuModel {
+    fn touch(&mut self, v: u64) {
+        self.clock += 1;
+        match self.meta.iter_mut().find(|m| m.0 == v) {
+            Some(m) => {
+                m.1 += 1;
+                m.2 = self.clock;
+            }
+            None => self.meta.push((v, 1, self.clock)),
+        }
+    }
+
+    fn evict(&mut self) -> u64 {
+        let at = (0..self.meta.len())
+            .min_by_key(|&i| (self.meta[i].1, self.meta[i].2))
+            .expect("evict from empty LFU model");
+        self.meta.remove(at).0
+    }
+}
+
+/// Drive a bounded cache simulation over a random access stream: hits
+/// touch both sides, misses at capacity must evict the SAME victim from
+/// both, and a final drain must replay the full victim order.
+fn drive_policy_against_model(
+    seed: u64,
+    label: &str,
+    policy: &mut dyn hdreason::cache::PolicyState,
+    model: &mut dyn NaiveModel,
+) {
+    let mut rng = Rng::seed_from_u64(seed * 17 + 3);
+    let cap = 1 + rng.below(16);
+    let universe = cap + 1 + rng.below(48);
+    let mut resident: Vec<u64> = Vec::new();
+    for step in 0..400 {
+        let v = rng.below(universe) as u64;
+        if resident.contains(&v) {
+            policy.on_hit(v);
+            model.touch(v);
+        } else {
+            if resident.len() == cap {
+                let got = policy.evict();
+                let want = model.evict();
+                assert_eq!(got, want, "seed {seed} {label} step {step}: victims diverged");
+                resident.retain(|&x| x != got);
+            }
+            policy.on_insert(v);
+            model.touch(v);
+            resident.push(v);
+        }
+    }
+    while !resident.is_empty() {
+        let got = policy.evict();
+        assert_eq!(got, model.evict(), "seed {seed} {label} drain: victims diverged");
+        assert!(resident.contains(&got), "seed {seed} {label} drain: non-resident victim");
+        resident.retain(|&x| x != got);
+    }
+}
+
+#[test]
+fn prop_lru_state_matches_a_naive_recency_model() {
+    for seed in 0..CASES {
+        let mut policy = hdreason::cache::LruState::new();
+        let mut model = LruModel::default();
+        drive_policy_against_model(seed, "lru", &mut policy, &mut model);
+    }
+}
+
+#[test]
+fn prop_lfu_state_matches_a_naive_frequency_model() {
+    for seed in 0..CASES {
+        let mut policy = hdreason::cache::LfuState::new();
+        let mut model = LfuModel::default();
+        drive_policy_against_model(seed, "lfu", &mut policy, &mut model);
+    }
+}
+
 #[test]
 fn prop_memorize_is_linear_in_bundling() {
     // HDC memorization is a linear operator: memorize(G1 ∪ G2) =
