@@ -6,7 +6,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: check build test bench bench-serving bench-train ci fmt artifacts
+.PHONY: check build test bench bench-serving bench-train ci fmt artifacts lint loom miri tsan
 
 # tier-1: release build + full test suite
 check: build test
@@ -24,6 +24,9 @@ test:
 ci:
 	$(CARGO) fmt --check --manifest-path $(MANIFEST)
 	$(CARGO) clippy --manifest-path $(MANIFEST) --all-targets -- -D warnings
+	$(CARGO) clippy --manifest-path $(MANIFEST) -p xtask --all-targets -- -D warnings
+	$(CARGO) test -q --manifest-path $(MANIFEST) -p xtask
+	$(MAKE) lint
 	$(CARGO) build --release --manifest-path $(MANIFEST)
 	$(CARGO) test -q --manifest-path $(MANIFEST)
 	HDR_THREADS=1 $(CARGO) test -q --manifest-path $(MANIFEST)
@@ -62,6 +65,34 @@ bench-train:
 
 fmt:
 	$(CARGO) fmt --manifest-path $(MANIFEST)
+
+# the concurrency lint pass (see CONCURRENCY.md and rust/xtask/src/main.rs):
+# std::sync outside the sync shim, .lock().unwrap(), hash iteration in the
+# score hot paths, out-of-order LockRank acquisition. Offline and std-only.
+lint:
+	$(CARGO) run --quiet --manifest-path $(MANIFEST) -p xtask -- lint
+
+# exhaustive model checks over the serving protocols: --cfg loom swaps
+# hdreason::sync to the in-crate model checker (rust/src/sync/model.rs)
+# and compiles tests/loom_models.rs non-empty
+loom:
+	RUSTFLAGS="--cfg loom" $(CARGO) test -q --manifest-path $(MANIFEST) --test loom_models
+
+# nightly-only sanitizers — not part of `make ci` (the offline gate runs
+# on stable); CI runs them as separate jobs. Miri interprets the lib unit
+# tests (the protocol + sync layers); isolation is off because the
+# protocol tests read Instant::now.
+miri:
+	MIRIFLAGS="-Zmiri-disable-isolation" \
+		$(CARGO) +nightly miri test -q --manifest-path $(MANIFEST) --lib -- engine::protocol:: sync::
+
+# ThreadSanitizer over the real engine integration tests (needs rust-src
+# for -Zbuild-std so std itself is instrumented)
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" \
+		$(CARGO) +nightly test -q --manifest-path $(MANIFEST) \
+		-Zbuild-std --target x86_64-unknown-linux-gnu \
+		--test engine_api --test concurrency_props
 
 # AOT-compile the python layer to HLO-text artifacts (requires jax; only
 # useful to a `--features pjrt` build — the default stub build skips the

@@ -51,9 +51,9 @@ use hdreason::engine::{
 use hdreason::hdc;
 use hdreason::kg::{generator, Triple, ZipfSampler};
 use hdreason::model::{rank_of, ModelState};
+use hdreason::sync::atomic::{AtomicBool, Ordering};
 use hdreason::util::Rng;
 use std::hint::black_box;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
 
 const QUERIES: usize = 256;

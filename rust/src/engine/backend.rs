@@ -695,7 +695,7 @@ pub struct ShardedBackend {
 struct RowCacheSet {
     /// The fix-N grid of the quant leaf the rows are snapped for.
     fp: FixedPoint,
-    caches: Vec<std::sync::Mutex<RowCache>>,
+    caches: Vec<crate::sync::Mutex<RowCache>>,
 }
 
 struct RowCache {
@@ -781,7 +781,8 @@ impl ShardedBackend {
     /// cache's contract. Takes effect on the epoch-carrying top-k sweeps
     /// (the serving path) only.
     pub fn with_row_cache(mut self, spec: crate::cache::CacheSpec, fp: FixedPoint) -> Self {
-        let caches = (0..self.shards).map(|_| std::sync::Mutex::new(RowCache::new(spec))).collect();
+        let caches =
+            (0..self.shards).map(|_| crate::sync::Mutex::new(RowCache::new(spec))).collect();
         self.row_cache = Some(RowCacheSet { fp, caches });
         self
     }
@@ -864,9 +865,10 @@ impl ShardedBackend {
                             // each worker owns one shard slot's cache;
                             // contention only arises between concurrent
                             // sweeps, never between this sweep's workers
-                            let mut cache = rc.caches[wi]
-                                .lock()
-                                .unwrap_or_else(std::sync::PoisonError::into_inner);
+                            let mut cache = crate::sync::lock_recover_ranked(
+                                &rc.caches[wi],
+                                crate::sync::LockRank::Cache,
+                            );
                             if cache.begin(ep) {
                                 for lj in 0..sv {
                                     let j = lo + lj;
@@ -1142,7 +1144,7 @@ impl ScoreBackend for ShardedBackend {
         let rc = self.row_cache.as_ref()?;
         let mut total = crate::cache::CacheStats::default();
         for slot in &rc.caches {
-            let c = slot.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            let c = crate::sync::lock_recover_ranked(slot, crate::sync::LockRank::Cache);
             total.hits += c.stats.hits;
             total.misses += c.stats.misses;
             total.evictions += c.stats.evictions;
@@ -1390,12 +1392,12 @@ impl ScoreBackend for NoisyBackend {
 /// path; the packed-`q` [`ScoreBackend::score_batch_into`] form has no
 /// artifact equivalent and falls back to the host kernel layer.
 pub struct PjrtBackend {
-    runtime: std::sync::Arc<crate::runtime::HdrRuntime>,
+    runtime: crate::sync::Arc<crate::runtime::HdrRuntime>,
     host: KernelBackend,
 }
 
 impl PjrtBackend {
-    pub fn new(runtime: std::sync::Arc<crate::runtime::HdrRuntime>) -> Self {
+    pub fn new(runtime: crate::sync::Arc<crate::runtime::HdrRuntime>) -> Self {
         Self { runtime, host: KernelBackend::default() }
     }
 }

@@ -66,6 +66,7 @@
 mod backend;
 mod batcher;
 mod model;
+pub mod protocol;
 
 pub use backend::{
     BackendKind, InnerBackendKind, KernelBackend, NoiseModel, NoiseSpec, NoisyBackend,
@@ -74,6 +75,7 @@ pub use backend::{
 };
 pub use batcher::{MicroBatcher, QueryRequest, Ranking};
 pub use model::{evaluate_double, evaluate_forward, KgcModel};
+pub use protocol::{EpochCell, ResultBoard, ServeStep};
 
 use crate::config::{model_preset, ModelConfig};
 use crate::hdc::{self, kernels::KernelConfig};
@@ -81,50 +83,20 @@ use crate::kg::{
     generator, AdjacencyList, Direction, KnowledgeGraph, LabelBatch, SubjectIndex, Triple,
 };
 use crate::model::{ModelState, RankMetrics};
-use std::collections::{HashMap, HashSet};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use crate::sync::{
+    lock_recover, lock_recover_ranked, Arc, Condvar, LockRank, Mutex, PoisonError, RankedGuard,
+};
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
-/// Recover a poisoned mutex instead of propagating the panic: every
-/// engine lock guards plain data whose invariants hold at each store (a
-/// leader that panicked mid-`lead` never leaves half-written rankings —
-/// publication is per-entry), so the data is safe to keep serving. Without
-/// this, one panicking backend call would wedge every subsequent `submit`
-/// behind a `PoisonError`.
-fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
-
 /// Shared serving queue behind [`KgcEngine::submit`] /
-/// [`KgcEngine::submit_async`].
+/// [`KgcEngine::submit_async`]: the coalescing [`MicroBatcher`] plus the
+/// publication [`ResultBoard`] (completed rankings by sequence number,
+/// with the abandoned-handle and failed-leader bookkeeping). Both live
+/// under the one `serve` mutex so claim-vs-flush decisions are atomic.
 struct ServeState {
     batcher: MicroBatcher,
-    results: HashMap<u64, Ranking>,
-    /// Sequence numbers whose [`QueryHandle`] was dropped unresolved while
-    /// a leader was already scoring them (too late for
-    /// [`MicroBatcher::remove`]): publication discards these instead of
-    /// leaking an unclaimable ranking in `results`.
-    abandoned: HashSet<u64>,
-    /// Sequence numbers whose scoring panicked even when retried alone
-    /// (see [`KgcEngine::lead`]): the waiter for such a seq re-raises the
-    /// failure in its own thread instead of blocking forever, and
-    /// innocent batch-mates are unaffected.
-    failed: HashSet<u64>,
-}
-
-/// Epoch-tagged graph memory — the copy-on-write snapshot seam for live
-/// mutation. Readers clone the `Arc` under a microsecond lock hold and
-/// score against that immutable snapshot with no lock held; writers apply
-/// deltas through [`Arc::make_mut`] (in place when no reader snapshot is
-/// outstanding, one RCU-style matrix copy when one is) and bump `epoch`.
-/// An in-flight batch therefore always scores one consistent matrix — it
-/// can never observe a half-applied mutation — and readers never block
-/// writers while scoring.
-struct MemState {
-    /// Bumped once per applied mutation batch.
-    epoch: u64,
-    /// Memorized graph memory, row-major (|V|_kg, D).
-    data: Arc<Vec<f32>>,
+    board: ResultBoard<Ranking>,
 }
 
 /// Filtered-protocol label/subject sets, lazily rebuilt from the live
@@ -150,8 +122,14 @@ pub struct KgcEngine {
     hv: Vec<f32>,
     /// Encoded relation hypervectors, row-major (|R|_preset, D).
     hr: Vec<f32>,
-    /// Epoch-tagged memorized graph memory (see [`MemState`]).
-    mem: Mutex<MemState>,
+    /// Epoch-tagged memorized graph memory, row-major (|V|_kg, D) — the
+    /// copy-on-write snapshot seam for live mutation (see [`EpochCell`]):
+    /// readers clone the `Arc` under a microsecond lock hold and score
+    /// lock-free; writers mutate via `Arc::make_mut` (in place when no
+    /// reader snapshot is outstanding, one RCU-style matrix copy when one
+    /// is) and bump the epoch, so an in-flight batch always scores one
+    /// consistent matrix and readers never block writers while scoring.
+    mem: Mutex<EpochCell<Vec<f32>>>,
     /// Live per-vertex adjacency, kept in lock-step with `mem`: memory
     /// rows are always bit-equal to a from-scratch memorize of this list.
     adj: Mutex<AdjacencyList>,
@@ -205,14 +183,14 @@ impl KgcEngine {
 
     /// The configured serving-cache spec, or `None` when uncached.
     pub fn cache_spec(&self) -> Option<crate::cache::CacheSpec> {
-        self.cache.as_ref().map(|c| lock_recover(c).spec())
+        self.cache.as_ref().map(|c| lock_recover_ranked(c, LockRank::Cache).spec())
     }
 
     /// Result-cache counters plus the number of wholesale epoch
     /// invalidations so far, when a serving cache is configured.
     pub fn cache_stats(&self) -> Option<(crate::cache::CacheStats, u64)> {
         self.cache.as_ref().map(|c| {
-            let c = lock_recover(c);
+            let c = lock_recover_ranked(c, LockRank::Cache);
             (c.stats, c.invalidations())
         })
     }
@@ -240,19 +218,18 @@ impl KgcEngine {
     /// atomically under the same lock hold — the pair the serving cache
     /// keys its validity on.
     fn mem_snapshot_with_epoch(&self) -> (Arc<Vec<f32>>, u64) {
-        let m = lock_recover(&self.mem);
-        (Arc::clone(&m.data), m.epoch)
+        lock_recover_ranked(&self.mem, LockRank::Mem).snapshot()
     }
 
     /// Mutation epoch of the graph memory: 0 at build, +1 per applied
     /// [`Self::insert_edges`]/[`Self::remove_edges`] batch.
     pub fn mem_epoch(&self) -> u64 {
-        lock_recover(&self.mem).epoch
+        lock_recover_ranked(&self.mem, LockRank::Mem).epoch()
     }
 
     /// Live edge count (the memorized multiset, after mutations).
     pub fn num_live_edges(&self) -> usize {
-        lock_recover(&self.adj).num_edges()
+        lock_recover_ranked(&self.adj, LockRank::Adj).num_edges()
     }
 
     /// Panic early on a mutation triple outside the served graph's
@@ -304,23 +281,25 @@ impl KgcEngine {
         for t in edges {
             self.validate_triple(t);
         }
-        let mut mem = lock_recover(&self.mem);
-        let mut adj = lock_recover(&self.adj);
+        // hierarchy order: mem (rank 2) then adj (rank 3) — asserted in
+        // debug builds, documented in CONCURRENCY.md
+        let mut mem = lock_recover_ranked(&self.mem, LockRank::Mem);
+        let mut adj = lock_recover_ranked(&self.adj, LockRank::Adj);
         for t in edges {
             adj.insert(t);
         }
         drop(adj);
-        let data = Arc::make_mut(&mut mem.data);
-        hdc::kernels::memorize_delta_into(
-            data,
-            &self.hv,
-            &self.hr,
-            self.cfg.dim_hd,
-            edges,
-            1.0,
-            &self.kcfg,
-        );
-        mem.epoch += 1;
+        mem.publish_with(|data| {
+            hdc::kernels::memorize_delta_into(
+                data,
+                &self.hv,
+                &self.hr,
+                self.cfg.dim_hd,
+                edges,
+                1.0,
+                &self.kcfg,
+            );
+        });
         edges.len()
     }
 
@@ -345,8 +324,10 @@ impl KgcEngine {
         for t in edges {
             self.validate_triple(t);
         }
-        let mut mem = lock_recover(&self.mem);
-        let mut adj = lock_recover(&self.adj);
+        // hierarchy order: mem (rank 2) then adj (rank 3), as in
+        // [`Self::insert_edges`]
+        let mut mem = lock_recover_ranked(&self.mem, LockRank::Mem);
+        let mut adj = lock_recover_ranked(&self.adj, LockRank::Adj);
         let mut touched: Vec<usize> = Vec::new();
         let mut removed = 0usize;
         for t in edges {
@@ -361,17 +342,17 @@ impl KgcEngine {
         touched.sort_unstable();
         touched.dedup();
         let d = self.cfg.dim_hd;
-        let data = Arc::make_mut(&mut mem.data);
-        for &v in &touched {
-            hdc::kernels::memorize_row_into(
-                &mut data[v * d..(v + 1) * d],
-                adj.neighbors(v),
-                &self.hv,
-                &self.hr,
-            );
-        }
+        mem.publish_with(|data| {
+            for &v in &touched {
+                hdc::kernels::memorize_row_into(
+                    &mut data[v * d..(v + 1) * d],
+                    adj.neighbors(v),
+                    &self.hv,
+                    &self.hr,
+                );
+            }
+        });
         drop(adj);
-        mem.epoch += 1;
         removed
     }
 
@@ -467,37 +448,33 @@ impl KgcEngine {
     /// configured deadline (`Duration::MAX`) out of the platform
     /// condvar's timeout arithmetic — publication wakes us via
     /// `notify_all` long before it matters.
-    fn claim_or_lead<T>(&self, mut claim: impl FnMut(&mut ServeState) -> Option<T>) -> T {
+    fn claim_or_lead<T>(
+        &self,
+        mut claim: impl FnMut(&mut ResultBoard<Ranking>) -> Option<T>,
+    ) -> T {
         loop {
             let mut st = lock_recover(&self.serve);
-            if let Some(out) = claim(&mut st) {
-                return out;
-            }
-            if st.batcher.should_flush(Instant::now()) {
-                // drain EVERY due batch under this one lock acquisition
-                // and lead them as a single flush: with many
-                // simultaneously-due requests (an async client bulk-
-                // waiting on a backlog) one leader scores one combined
-                // batch instead of re-locking per capacity chunk.
-                // Per-query results are unchanged — batching composition
-                // never changes a query's logits.
-                let mut batch = st.batcher.take_batch();
-                while st.batcher.should_flush(Instant::now()) {
-                    batch.extend(st.batcher.take_batch());
+            let state = &mut *st;
+            let board = &mut state.board;
+            let step =
+                protocol::next_serve_step(&mut state.batcher, Instant::now(), self.deadline, || {
+                    claim(board)
+                });
+            match step {
+                ServeStep::Claimed(out) => return out,
+                ServeStep::Lead(batch) => {
+                    // the serve lock is dropped while scoring, so
+                    // submitters keep queueing behind this flush
+                    drop(st);
+                    self.lead(batch);
                 }
-                drop(st);
-                self.lead(batch);
-                continue;
+                ServeStep::Wait(wait) => {
+                    let (_guard, _timeout) = self
+                        .serve_cv
+                        .wait_timeout(st, wait)
+                        .unwrap_or_else(PoisonError::into_inner);
+                }
             }
-            let wait = st
-                .batcher
-                .time_to_deadline(Instant::now())
-                .unwrap_or(self.deadline)
-                .clamp(Duration::from_micros(50), Duration::from_secs(3600));
-            let (_guard, _timeout) = self
-                .serve_cv
-                .wait_timeout(st, wait)
-                .unwrap_or_else(PoisonError::into_inner);
         }
     }
 
@@ -510,13 +487,10 @@ impl KgcEngine {
     /// thread, instead of blocking forever on a result that will never
     /// be published.
     fn await_result(&self, seq: u64) -> Ranking {
-        let got: Result<Ranking, ()> = self.claim_or_lead(|st| {
-            if st.failed.remove(&seq) {
-                return Some(Err(()));
-            }
-            st.results.remove(&seq).map(Ok)
-        });
-        got.unwrap_or_else(|()| panic!("serving query {seq} panicked in the batch leader"))
+        let got = self.claim_or_lead(|board| board.claim(seq));
+        got.unwrap_or_else(|protocol::Failed| {
+            panic!("serving query {seq} panicked in the batch leader")
+        })
     }
 
     /// Block until *any* of `handles` resolves; returns the index of the
@@ -551,19 +525,9 @@ impl KgcEngine {
         // from going quadratic in lock-held work.
         let seq_to_idx: HashMap<u64, usize> =
             handles.iter().enumerate().map(|(i, h)| (h.seq, i)).collect();
-        let (i, r) = self.claim_or_lead(|st| {
-            if let Some((seq, i)) =
-                st.failed.iter().find_map(|seq| seq_to_idx.get(seq).map(|&i| (*seq, i)))
-            {
-                st.failed.remove(&seq);
-                return Some((i, Err(())));
-            }
-            let (seq, i) =
-                st.results.keys().find_map(|seq| seq_to_idx.get(seq).map(|&i| (*seq, i)))?;
-            Some((i, Ok(st.results.remove(&seq).expect("checked present"))))
-        });
+        let (i, r) = self.claim_or_lead(|board| board.claim_any(&seq_to_idx));
         handles[i].resolved = true;
-        let r = r.unwrap_or_else(|()| {
+        let r = r.unwrap_or_else(|protocol::Failed| {
             panic!("serving query {} panicked in the batch leader", handles[i].seq)
         });
         (i, r)
@@ -603,14 +567,10 @@ impl KgcEngine {
         };
         let mut st = lock_recover(&self.serve);
         for (s, r) in ranked {
-            if !st.abandoned.remove(&s) {
-                st.results.insert(s, r);
-            }
+            st.board.publish(s, r);
         }
         for s in failed {
-            if !st.abandoned.remove(&s) {
-                st.failed.insert(s);
-            }
+            st.board.publish_failure(s);
         }
         drop(st);
         self.serve_cv.notify_all();
@@ -624,7 +584,7 @@ impl KgcEngine {
     /// Published rankings no handle has claimed yet (diagnostics; the
     /// abandoned-handle tests pin that this drains back to zero).
     pub fn unclaimed_results(&self) -> usize {
-        lock_recover(&self.serve).results.len()
+        lock_recover(&self.serve).board.unclaimed()
     }
 
     /// Drive a whole request stream through [`Self::submit`] from
@@ -672,11 +632,14 @@ impl KgcEngine {
     /// to the memorized train split) with the untouched valid/test splits
     /// — so a newly inserted fact filters like any other known fact and a
     /// removed one stops filtering.
-    fn filters(&self) -> MutexGuard<'_, Filters> {
+    fn filters(&self) -> RankedGuard<'_, Filters> {
         let epoch = self.mem_epoch();
-        let mut f = lock_recover(&self.filters);
+        // hierarchy order: filters (rank 1) is held across the evaluate
+        // paths, which snapshot mem (rank 2) per chunk; the rebuild below
+        // additionally takes adj (rank 3)
+        let mut f = lock_recover_ranked(&self.filters, LockRank::Filters);
         if f.epoch != epoch {
-            let live = lock_recover(&self.adj).to_triples();
+            let live = lock_recover_ranked(&self.adj, LockRank::Adj).to_triples();
             let all = || live.iter().chain(self.kg.valid.iter()).chain(self.kg.test.iter());
             f.labels = LabelBatch::from_triples(all());
             f.subjects = SubjectIndex::from_triples(all());
@@ -844,43 +807,24 @@ impl KgcEngine {
         let (mv, epoch) = self.mem_snapshot_with_epoch();
         let mut tops: Vec<Vec<(usize, f32)>> = vec![Vec::new(); batch.len()];
 
-        let key_of = |req: &QueryRequest| {
-            crate::cache::query_key(req.node, req.rel, req.direction == Direction::Forward)
-        };
-        let mut missed: Vec<usize> = (0..batch.len()).collect();
-        let mut cache_live = false;
-        if let Some(cache) = &self.cache {
-            let mut c = lock_recover(cache);
-            if c.begin(epoch) {
-                cache_live = true;
-                missed.retain(|&i| match c.get(key_of(&batch[i].1)) {
-                    Some(top) => {
-                        tops[i] = top;
-                        false
+        match &self.cache {
+            None => self.sweep_tops(&mv, epoch, batch, &mut tops),
+            Some(cache) => {
+                let keys: Vec<u64> = batch
+                    .iter()
+                    .map(|(_, r)| {
+                        crate::cache::query_key(r.node, r.rel, r.direction == Direction::Forward)
+                    })
+                    .collect();
+                protocol::serve_via_cache(cache, epoch, &keys, &mut tops, |missed, out| {
+                    if missed.len() == batch.len() {
+                        self.sweep_tops(&mv, epoch, batch, out);
+                    } else {
+                        let sub: Vec<(u64, QueryRequest)> =
+                            missed.iter().map(|&i| batch[i]).collect();
+                        self.sweep_tops(&mv, epoch, &sub, out);
                     }
-                    None => true,
                 });
-            }
-        }
-
-        if missed.len() == batch.len() {
-            self.sweep_tops(&mv, epoch, batch, &mut tops);
-        } else if !missed.is_empty() {
-            let sub: Vec<(u64, QueryRequest)> = missed.iter().map(|&i| batch[i]).collect();
-            let mut side = vec![Vec::new(); sub.len()];
-            self.sweep_tops(&mv, epoch, &sub, &mut side);
-            for (k, &i) in missed.iter().enumerate() {
-                tops[i] = std::mem::take(&mut side[k]);
-            }
-        }
-        if cache_live && !missed.is_empty() {
-            if let Some(cache) = &self.cache {
-                let mut c = lock_recover(cache);
-                if c.begin(epoch) {
-                    for &i in &missed {
-                        c.insert(key_of(&batch[i].1), tops[i].clone());
-                    }
-                }
             }
         }
 
@@ -929,28 +873,34 @@ impl QueryHandle<'_> {
     /// for a result that can never be republished.
     pub fn poll(&mut self) -> Option<Ranking> {
         let mut st = lock_recover(&self.engine.serve);
-        if st.failed.remove(&self.seq) {
-            self.resolved = true;
-            drop(st);
-            panic!("serving query {} panicked in the batch leader", self.seq);
-        }
-        if let Some(r) = st.results.remove(&self.seq) {
-            self.resolved = true;
-            return Some(r);
+        match st.board.claim(self.seq) {
+            Some(Ok(r)) => {
+                self.resolved = true;
+                return Some(r);
+            }
+            Some(Err(protocol::Failed)) => {
+                self.resolved = true;
+                drop(st);
+                panic!("serving query {} panicked in the batch leader", self.seq);
+            }
+            None => {}
         }
         if st.batcher.should_flush(Instant::now()) {
             let batch = st.batcher.take_batch();
             drop(st);
             self.engine.lead(batch);
             let mut st = lock_recover(&self.engine.serve);
-            if st.failed.remove(&self.seq) {
-                self.resolved = true;
-                drop(st);
-                panic!("serving query {} panicked in the batch leader", self.seq);
-            }
-            if let Some(r) = st.results.remove(&self.seq) {
-                self.resolved = true;
-                return Some(r);
+            match st.board.claim(self.seq) {
+                Some(Ok(r)) => {
+                    self.resolved = true;
+                    return Some(r);
+                }
+                Some(Err(protocol::Failed)) => {
+                    self.resolved = true;
+                    drop(st);
+                    panic!("serving query {} panicked in the batch leader", self.seq);
+                }
+                None => {}
             }
         }
         None
@@ -975,14 +925,11 @@ impl Drop for QueryHandle<'_> {
             return;
         }
         let mut st = lock_recover(&self.engine.serve);
-        if st.batcher.remove(self.seq)
-            || st.results.remove(&self.seq).is_some()
-            || st.failed.remove(&self.seq)
-        {
+        if st.batcher.remove(self.seq) || st.board.discard(self.seq) {
             return; // cancelled, claimed-and-discarded, or failure dropped
         }
         // a leader is scoring it right now: discard at publication
-        st.abandoned.insert(self.seq);
+        st.board.abandon_in_flight(self.seq);
     }
 }
 
@@ -1312,9 +1259,7 @@ impl EngineBuilder {
         Ok(KgcEngine {
             serve: Mutex::new(ServeState {
                 batcher: MicroBatcher::new(batch_capacity, self.deadline),
-                results: HashMap::new(),
-                abandoned: HashSet::new(),
-                failed: HashSet::new(),
+                board: ResultBoard::new(),
             }),
             serve_cv: Condvar::new(),
             cfg,
@@ -1322,7 +1267,7 @@ impl EngineBuilder {
             state,
             hv,
             hr,
-            mem: Mutex::new(MemState { epoch: 0, data: Arc::new(mem.data) }),
+            mem: Mutex::new(EpochCell::new(mem.data)),
             adj: Mutex::new(adj),
             filters: Mutex::new(Filters { epoch: 0, labels, subjects }),
             backend,
@@ -1429,10 +1374,9 @@ mod tests {
     fn wait_after_successful_poll_panics_instead_of_hanging() {
         let e = tiny_engine(BackendKind::Kernel);
         let mut h = e.submit_async(QueryRequest::forward(1, 1));
-        // poll until the deadline flush publishes the ranking
-        while h.poll().is_none() {
-            std::thread::sleep(Duration::from_millis(1));
-        }
+        // poll until the deadline flush publishes the ranking; deadline-
+        // bounded so a hang fails loudly even under sanitizer slowdowns
+        let _ranking = crate::util::wait_until(Duration::from_secs(60), || h.poll());
         let _ = h.wait(); // the ranking was already handed over: must panic
     }
 
@@ -1454,12 +1398,12 @@ mod tests {
         let h = e.submit_async(QueryRequest::forward(1, 1));
         // steal the batch exactly as a leader would, so the request is in
         // flight: neither queued nor published when the handle drops
-        let batch = e.serve.lock().unwrap().batcher.take_batch();
+        let batch = lock_recover(&e.serve).batcher.take_batch();
         assert_eq!(batch.len(), 1);
         drop(h);
         e.lead(batch);
         assert_eq!(e.unclaimed_results(), 0, "abandoned ranking must not leak");
-        assert!(e.serve.lock().unwrap().abandoned.is_empty(), "marker consumed");
+        assert!(lock_recover(&e.serve).board.abandoned_is_empty(), "marker consumed");
     }
 
     #[test]
@@ -1489,7 +1433,7 @@ mod tests {
         // order, so results publish in the opposite order of submission
         let mut batches = Vec::new();
         loop {
-            let batch = e.serve.lock().unwrap().batcher.take_batch();
+            let batch = lock_recover(&e.serve).batcher.take_batch();
             if batch.is_empty() {
                 break;
             }
@@ -1524,8 +1468,7 @@ mod tests {
 
     #[test]
     fn wait_any_flushes_all_due_handles_in_a_single_lead() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
-        use std::sync::Arc;
+        use crate::sync::atomic::{AtomicUsize, Ordering};
 
         struct CountingBackend {
             inner: KernelBackend,
@@ -1749,7 +1692,7 @@ mod tests {
         let req = QueryRequest::forward(1, 0);
         assert_eq!(e.submit(req), e.rank(req));
         drop(bad); // never waited: the failure record must not leak
-        assert!(lock_recover(&e.serve).failed.is_empty(), "failed seq leaked");
+        assert!(lock_recover(&e.serve).board.failed_is_empty(), "failed seq leaked");
         assert_eq!(e.unclaimed_results(), 0);
     }
 

@@ -1,0 +1,454 @@
+//! The serving core's synchronization protocols, factored into small
+//! pure units so the loom models (`rust/tests/loom_models.rs`, run via
+//! `make loom`) can check *exactly* the code the engine runs, not a
+//! re-implementation that drifts.
+//!
+//! Each unit owns one protocol from the concurrency inventory in
+//! `CONCURRENCY.md`:
+//!
+//! * [`ResultBoard`] — `QueryHandle` publish-vs-drop: a result published
+//!   for an abandoned (dropped-before-claim) handle must be discarded at
+//!   publication, never parked forever in the results map.
+//! * [`EpochCell`] — the copy-on-write memory epoch protocol: readers
+//!   snapshot `(Arc<data>, epoch)` as one atom under the lock; writers
+//!   `Arc::make_mut` + bump, so a reader can never observe a torn pair
+//!   (new data with old epoch or vice versa).
+//! * [`next_serve_step`] — the `claim_or_lead` decision: claim if your
+//!   result is ready, otherwise lead *every* due batch, otherwise sleep a
+//!   bounded time. A due batch is never left unflushed while a thread is
+//!   awake inside the loop.
+//! * [`serve_via_cache`] — the `ServingCache::begin(epoch)` two-phase
+//!   protocol: probe + sweep misses + insert, where the insert phase
+//!   re-validates the epoch so a sweep that raced with a mutation can
+//!   never install stale rankings.
+//!
+//! Everything here is lock-free *logic* — the locks live in the engine —
+//! except [`serve_via_cache`], which takes the cache mutex itself because
+//! the drop-and-retake between probe and insert *is* the protocol.
+
+use std::collections::{HashMap, HashSet};
+use std::time::{Duration, Instant};
+
+use super::batcher::MicroBatcher;
+use super::QueryRequest;
+use crate::cache::ServingCache;
+use crate::sync::{lock_recover_ranked, Arc, LockRank, Mutex};
+
+/// Marker for a query whose batch leader panicked in the backend: the
+/// board records the failure so exactly one waiter re-raises it instead
+/// of hanging (or every waiter re-raising a shared panic payload).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Failed;
+
+/// The publication side of `submit_async`: maps completed sequence
+/// numbers to their rankings, plus the two defect-tracking sets —
+/// `abandoned` (handle dropped while its query was in flight; its result
+/// must be discarded at publication) and `failed` (leader panicked; the
+/// claimer re-raises).
+///
+/// Invariant checked by the loom model: for every sequence number, the
+/// result is eventually claimed *or* discarded — never parked forever in
+/// `results` — regardless of how `publish` and the handle's drop
+/// interleave.
+#[derive(Debug)]
+pub struct ResultBoard<R> {
+    results: HashMap<u64, R>,
+    abandoned: HashSet<u64>,
+    failed: HashSet<u64>,
+}
+
+impl<R> ResultBoard<R> {
+    pub fn new() -> Self {
+        Self { results: HashMap::new(), abandoned: HashSet::new(), failed: HashSet::new() }
+    }
+
+    /// Publish a completed ranking. Returns `false` — and drops `result`
+    /// — when the handle was abandoned first; the abandonment mark is
+    /// consumed either way.
+    pub fn publish(&mut self, seq: u64, result: R) -> bool {
+        if self.abandoned.remove(&seq) {
+            return false;
+        }
+        self.results.insert(seq, result);
+        true
+    }
+
+    /// Record that `seq`'s batch leader panicked. Same abandonment rule
+    /// as [`Self::publish`].
+    pub fn publish_failure(&mut self, seq: u64) -> bool {
+        if self.abandoned.remove(&seq) {
+            return false;
+        }
+        self.failed.insert(seq);
+        true
+    }
+
+    /// Claim `seq`'s outcome if it has been published. Failures win over
+    /// results: a leader never publishes both for one sequence number.
+    pub fn claim(&mut self, seq: u64) -> Option<Result<R, Failed>> {
+        if self.failed.remove(&seq) {
+            return Some(Err(Failed));
+        }
+        self.results.remove(&seq).map(Ok)
+    }
+
+    /// Claim whichever of `want`'s sequence numbers published first
+    /// (`wait_any`), returning the waiter's index for it. Failures are
+    /// scanned before results so a panic surfaces promptly.
+    pub fn claim_any(&mut self, want: &HashMap<u64, usize>) -> Option<(usize, Result<R, Failed>)> {
+        if let Some((seq, idx)) =
+            self.failed.iter().find_map(|s| want.get(s).map(|&i| (*s, i)))
+        {
+            self.failed.remove(&seq);
+            return Some((idx, Err(Failed)));
+        }
+        let (seq, idx) =
+            self.results.keys().find_map(|s| want.get(s).map(|&i| (*s, i)))?;
+        let r = self.results.remove(&seq).expect("key observed under the same lock hold");
+        Some((idx, Ok(r)))
+    }
+
+    /// A handle is being dropped while its query is still in flight (not
+    /// in the batcher, not yet published): mark it so the eventual
+    /// publication is discarded instead of leaked.
+    pub fn abandon_in_flight(&mut self, seq: u64) {
+        self.abandoned.insert(seq);
+    }
+
+    /// A handle is being dropped after publication: discard the unclaimed
+    /// outcome. Returns whether anything was discarded.
+    pub fn discard(&mut self, seq: u64) -> bool {
+        self.results.remove(&seq).is_some() || self.failed.remove(&seq)
+    }
+
+    /// Published-but-unclaimed results (leak telemetry for tests/stats).
+    pub fn unclaimed(&self) -> usize {
+        self.results.len()
+    }
+
+    pub fn abandoned_is_empty(&self) -> bool {
+        self.abandoned.is_empty()
+    }
+
+    pub fn failed_is_empty(&self) -> bool {
+        self.failed.is_empty()
+    }
+}
+
+impl<R> Default for ResultBoard<R> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Copy-on-write state tagged with a monotonically increasing epoch —
+/// the engine's graph-memory protocol. Readers take an O(1)
+/// [`Self::snapshot`] and drop the lock before sweeping; writers mutate
+/// via [`Self::publish_with`], which clones only when a snapshot is
+/// outstanding (`Arc::make_mut`) and bumps the epoch *after* the data is
+/// fully written, under the same lock hold.
+///
+/// The pairing is the invariant: because snapshot and bump each happen
+/// under one uninterrupted lock hold, `(data, epoch)` is atomic — the
+/// loom model asserts no schedule lets a reader see epoch `N`'s tag on
+/// epoch `N-1`'s bytes or vice versa.
+#[derive(Debug)]
+pub struct EpochCell<T> {
+    epoch: u64,
+    data: Arc<T>,
+}
+
+impl<T: Clone> EpochCell<T> {
+    pub fn new(data: T) -> Self {
+        Self { epoch: 0, data: Arc::new(data) }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The current `(data, epoch)` pair as one atom. O(1): clones the
+    /// `Arc`, not the data.
+    pub fn snapshot(&self) -> (Arc<T>, u64) {
+        (Arc::clone(&self.data), self.epoch)
+    }
+
+    /// Mutate in place (cloning first iff a reader snapshot is still
+    /// alive) and bump the epoch. Returns the new epoch.
+    pub fn publish_with(&mut self, mutate: impl FnOnce(&mut T)) -> u64 {
+        mutate(Arc::make_mut(&mut self.data));
+        self.epoch += 1;
+        self.epoch
+    }
+}
+
+/// One turn of the `claim_or_lead` loop, decided while the serve lock is
+/// held (the caller acts on the verdict after dropping or parking it).
+#[derive(Debug)]
+pub enum ServeStep<T> {
+    /// The claim closure found this waiter's outcome; hand it back.
+    Claimed(T),
+    /// A batch is due and this thread drew leader duty: run the backend
+    /// over these requests (serve lock *dropped*), publish, re-loop.
+    Lead(Vec<(u64, QueryRequest)>),
+    /// Nothing to do yet: park on the serve condvar for at most this
+    /// long (bounded, so a missed wakeup degrades to latency, not hang).
+    Wait(Duration),
+}
+
+/// Decide the next serve step. Claiming is tried first so a waiter whose
+/// result raced in never takes leader duty it no longer needs; otherwise
+/// every *due* batch is drained into one combined flush (`submit_async`
+/// can have piled several capacities' worth behind a slow leader — the
+/// invariant the loom model checks is that no due batch is left behind
+/// when a thread exits this function awake).
+pub fn next_serve_step<T>(
+    batcher: &mut MicroBatcher,
+    now: Instant,
+    default_wait: Duration,
+    claim: impl FnOnce() -> Option<T>,
+) -> ServeStep<T> {
+    if let Some(out) = claim() {
+        return ServeStep::Claimed(out);
+    }
+    if batcher.should_flush(now) {
+        let mut batch = batcher.take_batch();
+        while batcher.should_flush(now) {
+            batch.extend(batcher.take_batch());
+        }
+        return ServeStep::Lead(batch);
+    }
+    // Bounded park: clamp below so a deadline that just elapsed doesn't
+    // spin with zero-length waits, above so a "no deadline" config still
+    // re-checks (and re-arms against missed wakeups) every hour.
+    let wait = batcher
+        .time_to_deadline(now)
+        .unwrap_or(default_wait)
+        .clamp(Duration::from_micros(50), Duration::from_secs(3600));
+    ServeStep::Wait(wait)
+}
+
+/// Serve `keys` through the epoch-keyed [`ServingCache`] two-phase
+/// protocol, filling `tops` (one slot per key, parallel arrays).
+///
+/// Phase 1 probes under the cache lock: [`ServingCache::begin`] with the
+/// sweep's snapshot epoch gates everything — a `false` return means this
+/// sweep's snapshot is already stale (a newer epoch has been served) and
+/// the cache is neither read nor written. Phase 2 runs `sweep` over the
+/// misses with **no lock held** (it's the expensive backend scan), then
+/// re-takes the lock and re-runs `begin(epoch)` before inserting, so a
+/// mutation that landed mid-sweep invalidates the insert instead of the
+/// insert poisoning the table with pre-mutation rankings. That
+/// drop-and-revalidate seam is the protocol the loom model exercises.
+///
+/// `sweep(missed, out)` receives the miss indices into `keys` and a
+/// same-length scratch to fill.
+pub fn serve_via_cache(
+    cache: &Mutex<ServingCache>,
+    epoch: u64,
+    keys: &[u64],
+    tops: &mut [Vec<(usize, f32)>],
+    sweep: impl FnOnce(&[usize], &mut [Vec<(usize, f32)>]),
+) {
+    debug_assert_eq!(keys.len(), tops.len());
+    let mut missed: Vec<usize> = (0..keys.len()).collect();
+    let cache_live = {
+        let mut c = lock_recover_ranked(cache, LockRank::Cache);
+        let live = c.begin(epoch);
+        if live {
+            missed.retain(|&i| match c.get(keys[i]) {
+                Some(top) => {
+                    tops[i] = top;
+                    false
+                }
+                None => true,
+            });
+        }
+        live
+    };
+    if missed.is_empty() {
+        return;
+    }
+    let mut swept = vec![Vec::new(); missed.len()];
+    sweep(&missed, &mut swept);
+    for (slot, &i) in swept.iter_mut().zip(&missed) {
+        tops[i] = std::mem::take(slot);
+    }
+    if cache_live {
+        let mut c = lock_recover_ranked(cache, LockRank::Cache);
+        // Revalidate: only insert if this sweep's epoch is *still*
+        // current. An interleaved mutation makes this a no-op.
+        if c.begin(epoch) {
+            for &i in &missed {
+                c.insert(keys[i], tops[i].clone());
+            }
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use crate::cache::CacheSpec;
+    use crate::engine::batcher::MicroBatcher;
+
+    fn req() -> QueryRequest {
+        QueryRequest::forward(0, 0)
+    }
+
+    #[test]
+    fn board_publish_then_claim_round_trips() {
+        let mut b = ResultBoard::new();
+        assert!(b.publish(7, "r7"));
+        assert_eq!(b.unclaimed(), 1);
+        assert_eq!(b.claim(7), Some(Ok("r7")));
+        assert_eq!(b.unclaimed(), 0);
+        assert_eq!(b.claim(7), None, "claim is linear");
+    }
+
+    #[test]
+    fn board_abandon_before_publish_discards_the_result() {
+        let mut b = ResultBoard::new();
+        b.abandon_in_flight(3);
+        assert!(!b.publish(3, "late"), "publication after abandonment is dropped");
+        assert_eq!(b.unclaimed(), 0, "no leak");
+        assert!(b.abandoned_is_empty(), "mark consumed — seq numbers never recur");
+    }
+
+    #[test]
+    fn board_failures_win_over_results_and_claim_any_finds_them() {
+        let mut b = ResultBoard::new();
+        assert!(b.publish_failure(1));
+        assert!(b.publish(2, "ok"));
+        let want: HashMap<u64, usize> = [(1u64, 10usize), (2, 20)].into_iter().collect();
+        assert_eq!(b.claim_any(&want), Some((10, Err(Failed))));
+        assert_eq!(b.claim_any(&want), Some((20, Ok("ok"))));
+        assert_eq!(b.claim_any(&want), None);
+        assert!(b.failed_is_empty());
+    }
+
+    #[test]
+    fn board_discard_clears_results_and_failures() {
+        let mut b = ResultBoard::new();
+        b.publish(1, "x");
+        b.publish_failure(2);
+        assert!(b.discard(1));
+        assert!(b.discard(2));
+        assert!(!b.discard(3));
+    }
+
+    #[test]
+    fn epoch_cell_snapshot_pairs_data_with_epoch() {
+        let mut c = EpochCell::new(vec![0u8]);
+        let (d0, e0) = c.snapshot();
+        assert_eq!((&d0[..], e0), (&[0u8][..], 0));
+        assert_eq!(c.publish_with(|v| v[0] = 1), 1);
+        // the outstanding snapshot is untouched (copy-on-write)
+        assert_eq!((&d0[..], e0), (&[0u8][..], 0));
+        let (d1, e1) = c.snapshot();
+        assert_eq!((&d1[..], e1), (&[1u8][..], 1));
+    }
+
+    #[test]
+    fn epoch_cell_mutates_in_place_without_readers() {
+        let mut c = EpochCell::new(vec![0u8; 4]);
+        let before = Arc::as_ptr(&c.snapshot().0);
+        // snapshot dropped: make_mut reuses the allocation
+        c.publish_with(|v| v[0] = 9);
+        assert_eq!(Arc::as_ptr(&c.snapshot().0), before);
+    }
+
+    #[test]
+    fn serve_step_prefers_claim_over_leading() {
+        let mut b = MicroBatcher::new(1, Duration::MAX);
+        b.push(req());
+        match next_serve_step(&mut b, Instant::now(), Duration::from_millis(1), || Some(42)) {
+            ServeStep::Claimed(42) => {}
+            other => panic!("expected Claimed, got {other:?}"),
+        }
+        assert_eq!(b.len(), 1, "claiming must not consume the batch");
+    }
+
+    #[test]
+    fn serve_step_drains_every_due_batch_into_one_flush() {
+        let mut b = MicroBatcher::new(2, Duration::MAX);
+        for _ in 0..5 {
+            b.push(req());
+        }
+        match next_serve_step::<()>(&mut b, Instant::now(), Duration::from_millis(1), || None) {
+            // 2 full batches are due; the trailing 1 is not
+            ServeStep::Lead(batch) => assert_eq!(batch.len(), 4),
+            other => panic!("expected Lead, got {other:?}"),
+        }
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn serve_step_waits_bounded_when_idle() {
+        let mut b = MicroBatcher::new(8, Duration::MAX);
+        match next_serve_step::<()>(&mut b, Instant::now(), Duration::from_secs(7200), || None) {
+            ServeStep::Wait(w) => {
+                assert!(w >= Duration::from_micros(50) && w <= Duration::from_secs(3600));
+            }
+            other => panic!("expected Wait, got {other:?}"),
+        }
+    }
+
+    fn test_cache() -> Mutex<ServingCache> {
+        Mutex::new(ServingCache::new(CacheSpec::parse("lru:8").unwrap().unwrap()))
+    }
+
+    #[test]
+    fn cache_protocol_sweeps_misses_then_serves_hits() {
+        let cache = test_cache();
+        let keys = [10u64, 11];
+        let mut tops = vec![Vec::new(), Vec::new()];
+        serve_via_cache(&cache, 0, &keys, &mut tops, |missed, out| {
+            assert_eq!(missed, &[0, 1]);
+            for (k, &i) in out.iter_mut().zip(missed) {
+                *k = vec![(i, 1.0)];
+            }
+        });
+        assert_eq!(tops, vec![vec![(0, 1.0)], vec![(1, 1.0)]]);
+        // second pass: all hits, sweep must not run
+        let mut tops2 = vec![Vec::new(), Vec::new()];
+        serve_via_cache(&cache, 0, &keys, &mut tops2, |_, _| {
+            panic!("sweep ran on a full-hit batch")
+        });
+        assert_eq!(tops2, tops);
+    }
+
+    #[test]
+    fn cache_protocol_never_reads_or_writes_at_a_stale_epoch() {
+        let cache = test_cache();
+        crate::sync::lock_recover(&cache).begin(5); // a newer sweep has been served
+        let keys = [1u64];
+        let mut tops = vec![Vec::new()];
+        let mut swept = false;
+        serve_via_cache(&cache, 3, &keys, &mut tops, |_, out| {
+            swept = true;
+            out[0] = vec![(9, 0.5)];
+        });
+        assert!(swept, "stale sweeps still compute their own answer");
+        assert_eq!(tops[0], vec![(9, 0.5)]);
+        let mut c = crate::sync::lock_recover(&cache);
+        assert!(c.is_empty(), "stale sweep must not populate the table");
+        assert!(c.begin(5) && c.get(1).is_none());
+    }
+
+    #[test]
+    fn cache_protocol_revalidates_epoch_before_insert() {
+        let cache = test_cache();
+        let keys = [1u64];
+        let mut tops = vec![Vec::new()];
+        serve_via_cache(&cache, 0, &keys, &mut tops, |_, out| {
+            // a mutation lands while the sweep runs lock-free
+            crate::sync::lock_recover(&cache).begin(1);
+            out[0] = vec![(2, 0.25)];
+        });
+        assert_eq!(tops[0], vec![(2, 0.25)], "the sweep's own answer is still returned");
+        let mut c = crate::sync::lock_recover(&cache);
+        assert!(c.begin(1), "cache is live at the new epoch");
+        assert!(c.get(1).is_none(), "pre-mutation ranking was not installed");
+    }
+}

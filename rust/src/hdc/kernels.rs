@@ -49,7 +49,7 @@ const WORK_PER_THREAD: usize = 1 << 18;
 /// per process (the CI matrix sets it at spawn), so the serving hot path
 /// never touches the environment lock.
 pub fn env_threads() -> Option<usize> {
-    static ENV_THREADS: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    static ENV_THREADS: crate::sync::OnceLock<Option<usize>> = crate::sync::OnceLock::new();
     *ENV_THREADS.get_or_init(|| {
         std::env::var("HDR_THREADS").ok().and_then(|s| s.trim().parse().ok()).filter(|&n| n > 0)
     })

@@ -71,6 +71,7 @@ pub mod platform;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
+pub mod sync;
 pub mod util;
 
 /// Crate-wide result type (anyhow for rich error context on the CLI path).

@@ -357,7 +357,7 @@ fn require_hit_rate(args: &Args, engine: &KgcEngine) -> hdreason::Result<()> {
 /// Reports p50/p99 latency and queries/sec under churn, plus an
 /// insert-visibility probe and a bit-exact memory round-trip check.
 fn cmd_serve(args: &Args) -> hdreason::Result<()> {
-    use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    use hdreason::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 
     let model = args.get("model", "tiny");
     let dataset = args.get("dataset", "learnable");

@@ -10,9 +10,9 @@
 
 #[cfg(feature = "pjrt")]
 mod imp {
+    use crate::sync::{lock_recover, Arc, Mutex};
     use std::collections::HashMap;
     use std::path::Path;
-    use std::sync::{Arc, Mutex};
 
     /// Concrete PJRT literal type used by the executor's marshalling.
     pub type Literal = xla::Literal;
@@ -65,7 +65,7 @@ mod imp {
             num_outputs: usize,
         ) -> crate::Result<Arc<LoadedComputation>> {
             let key = path.display().to_string();
-            if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            if let Some(hit) = lock_recover(&self.cache).get(&key) {
                 return Ok(hit.clone());
             }
             let proto = xla::HloModuleProto::from_text_file(
@@ -75,7 +75,7 @@ mod imp {
             let exe = self.client.compile(&comp)?;
             let loaded =
                 Arc::new(LoadedComputation { name: name.to_string(), exe, num_outputs });
-            self.cache.lock().unwrap().insert(key, loaded.clone());
+            lock_recover(&self.cache).insert(key, loaded.clone());
             Ok(loaded)
         }
     }
@@ -101,8 +101,8 @@ mod imp {
 
 #[cfg(not(feature = "pjrt"))]
 mod imp {
+    use crate::sync::Arc;
     use std::path::Path;
-    use std::sync::Arc;
 
     const UNAVAILABLE: &str =
         "PJRT runtime unavailable: built without the `pjrt` feature (add the vendored `xla` \

@@ -6,7 +6,7 @@ use super::client::{literal_f32, literal_i32, literal_scalar_f32, Engine, Litera
 use crate::config::ModelConfig;
 use crate::kg::KnowledgeGraph;
 use crate::model::ModelState;
-use std::sync::Arc;
+use crate::sync::Arc;
 
 /// Padded edge arrays in artifact layout: (src, rel, dst) int32 of length
 /// |E|, plus an f32 validity mask (the static-shape padding contract).

@@ -1,0 +1,217 @@
+//! Crate-wide synchronization facade.
+//!
+//! Every module in this crate imports its synchronization primitives from
+//! here instead of `std::sync` (enforced by `cargo xtask lint`). Under the
+//! default build the module is a thin re-export of `std::sync`; under
+//! `RUSTFLAGS="--cfg loom"` the `Mutex`/`Condvar` pair is replaced by the
+//! in-crate exhaustive-interleaving model checker in [`model`], so the
+//! serving-core protocols (micro-batch claim/flush, handle publication,
+//! epoch snapshots, cache epoch sync) can be checked across *every*
+//! schedule instead of the handful a stress test happens to sample
+//! (`make loom`, `rust/tests/loom_models.rs`).
+//!
+//! The real `loom` crate is deliberately not a dependency — the default
+//! build must resolve fully offline (same policy as the vendored-`xla`
+//! `pjrt` feature) — so [`model`] implements the loom-style surface this
+//! crate actually needs: serialized model threads, a DFS scheduler over
+//! every interleaving decision, mutex/condvar blocking with deadlock
+//! detection, `wait_timeout` as an explored branch, and mutex poisoning on
+//! panic. `Arc`, `OnceLock`, and `atomic` pass through to `std` in both
+//! configurations: the protocols under model check are mutex/condvar
+//! based, and serializing model threads already makes every passed-through
+//! atomic op a scheduling-visible step.
+//!
+//! # Lock hierarchy
+//!
+//! The engine's documented lock order is `serve → filters → mem → adj →
+//! cache` (see `CONCURRENCY.md`). [`lock_recover_ranked`] asserts it in
+//! debug builds: acquiring a lock whose [`LockRank`] is not strictly
+//! greater than every rank already held by the current thread panics with
+//! the violating pair.
+
+#[cfg(loom)]
+pub mod model;
+
+#[cfg(loom)]
+pub use model::{thread, Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+#[cfg(loom)]
+pub use std::sync::{atomic, Arc, LockResult, OnceLock, PoisonError};
+
+#[cfg(not(loom))]
+pub use std::sync::{
+    atomic, Arc, Condvar, LockResult, Mutex, MutexGuard, OnceLock, PoisonError,
+    WaitTimeoutResult,
+};
+
+/// Recover a poisoned mutex instead of propagating the panic: every lock
+/// in this crate guards plain data whose invariants hold at each store (a
+/// batch leader that panicked mid-`lead` never leaves half-written
+/// rankings — publication is per-entry), so the data is safe to keep
+/// serving. Without this, one panicking backend call would wedge every
+/// subsequent `submit` behind a `PoisonError`.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Position of a lock in the documented global hierarchy (see
+/// `CONCURRENCY.md`): a thread may only acquire locks in strictly
+/// increasing rank order, which makes cross-thread acquisition cycles —
+/// deadlocks — impossible by construction.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum LockRank {
+    /// `KgcEngine::serve` — the micro-batcher + result board.
+    Serve = 0,
+    /// `KgcEngine::filters` — lazily rebuilt filtered-protocol sets.
+    Filters = 1,
+    /// `KgcEngine::mem` — the epoch-tagged graph memory.
+    Mem = 2,
+    /// `KgcEngine::adj` — the live adjacency list.
+    Adj = 3,
+    /// `KgcEngine::cache` and the backend's per-shard row caches.
+    Cache = 4,
+}
+
+#[cfg(debug_assertions)]
+mod order {
+    use super::LockRank;
+    use std::cell::RefCell;
+
+    thread_local! {
+        static HELD: RefCell<Vec<LockRank>> = const { RefCell::new(Vec::new()) };
+    }
+
+    pub(super) fn push(rank: LockRank) {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(&top) = held.last() {
+                assert!(
+                    rank > top,
+                    "lock-order violation: acquiring {rank:?} while holding {top:?}; \
+                     the documented hierarchy is serve → filters → mem → adj → cache \
+                     (CONCURRENCY.md)"
+                );
+            }
+            held.push(rank);
+        });
+    }
+
+    pub(super) fn pop(rank: LockRank) {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(i) = held.iter().rposition(|&r| r == rank) {
+                held.remove(i);
+            }
+        });
+    }
+}
+
+/// A [`MutexGuard`] that holds its lock's [`LockRank`] on the current
+/// thread's debug-build held-rank stack for as long as it lives.
+pub struct RankedGuard<'a, T> {
+    guard: MutexGuard<'a, T>,
+    rank: LockRank,
+}
+
+impl<T> RankedGuard<'_, T> {
+    /// The hierarchy position this guard was acquired under.
+    pub fn rank(&self) -> LockRank {
+        self.rank
+    }
+}
+
+impl<T> std::ops::Deref for RankedGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T> std::ops::DerefMut for RankedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+impl<T> Drop for RankedGuard<'_, T> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        order::pop(self.rank);
+    }
+}
+
+/// [`lock_recover`] plus a debug-build lock-order assertion: panics (debug
+/// builds only) when `rank` is not strictly greater than every rank the
+/// current thread already holds via other [`RankedGuard`]s. The assertion
+/// fires *before* blocking on the mutex, so an ordering bug reports the
+/// violating pair instead of deadlocking silently.
+pub fn lock_recover_ranked<T>(m: &Mutex<T>, rank: LockRank) -> RankedGuard<'_, T> {
+    #[cfg(debug_assertions)]
+    order::push(rank);
+    RankedGuard { guard: lock_recover(m), rank }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_recover_recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_recover(&m), 7, "data survives the poisoned leader");
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn ranked_guards_allow_hierarchy_order() {
+        let mem = Mutex::new(0u32);
+        let adj = Mutex::new(0u32);
+        let cache = Mutex::new(0u32);
+        let g1 = lock_recover_ranked(&mem, LockRank::Mem);
+        let g2 = lock_recover_ranked(&adj, LockRank::Adj);
+        let g3 = lock_recover_ranked(&cache, LockRank::Cache);
+        assert_eq!(g1.rank(), LockRank::Mem);
+        drop(g3);
+        drop(g2);
+        drop(g1);
+        // ranks released: re-acquiring from the top is fine again
+        let _g = lock_recover_ranked(&mem, LockRank::Mem);
+    }
+
+    #[test]
+    fn sequential_reacquisition_is_not_a_violation() {
+        // drop-then-lower-rank is legal: the stack is about *held* locks
+        let serve = Mutex::new(0u32);
+        let cache = Mutex::new(0u32);
+        drop(lock_recover_ranked(&cache, LockRank::Cache));
+        drop(lock_recover_ranked(&serve, LockRank::Serve));
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "lock-order violation")]
+    fn out_of_order_acquisition_panics_in_debug_builds() {
+        let adj = Mutex::new(0u32);
+        let mem = Mutex::new(0u32);
+        let _g1 = lock_recover_ranked(&adj, LockRank::Adj);
+        let _g2 = lock_recover_ranked(&mem, LockRank::Mem); // Mem < Adj: bug
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "lock-order violation")]
+    fn same_rank_twice_is_a_violation() {
+        // self-deadlock shape: strictly-increasing means no re-entry either
+        let a = Mutex::new(0u32);
+        let b = Mutex::new(0u32);
+        let _g1 = lock_recover_ranked(&a, LockRank::Mem);
+        let _g2 = lock_recover_ranked(&b, LockRank::Mem);
+    }
+}

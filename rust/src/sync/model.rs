@@ -1,0 +1,682 @@
+//! A miniature loom: exhaustive-interleaving model checking for the
+//! crate's `Mutex`/`Condvar` protocols, compiled only under
+//! `RUSTFLAGS="--cfg loom"`.
+//!
+//! [`model`] runs a closure repeatedly, exploring every schedule of the
+//! model threads it spawns via [`thread::spawn`]. Model threads are real
+//! OS threads, but a global scheduler lets exactly one run at a time and
+//! inserts a *decision point* at every synchronization operation (mutex
+//! acquire/release, condvar wait/notify, spawn, join). Each decision —
+//! which runnable thread goes next, whether a `wait_timeout` times out or
+//! sees its notification — is recorded on a path; after an execution
+//! finishes, the deepest decision with unexplored alternatives is advanced
+//! and the closure runs again, depth-first, until the whole tree is
+//! exhausted. Between decision points threads run plain single-threaded
+//! code, which is exactly the granularity at which mutex-protected
+//! protocols can interleave.
+//!
+//! What the checker models:
+//!
+//! * **Mutex** — blocking acquisition with explored acquisition order,
+//!   poisoning on panic (so `lock_recover` recovery paths are explored),
+//!   and release as a scheduling point.
+//! * **Condvar** — `wait` (atomic release-and-sleep, FIFO-fair wakeup via
+//!   `notify_all`/`notify_one`), and `wait_timeout` as a branch: either
+//!   the timeout fires before any notification or the notification wins;
+//!   if a timed waiter would otherwise sleep forever, the scheduler
+//!   converts the wait into a timeout instead of reporting deadlock —
+//!   exactly the guarantee a real timeout provides.
+//! * **Deadlock** — a state where every unfinished thread is blocked
+//!   fails the run with the offending schedule.
+//! * **Panics** — a panicking model thread aborts the execution and the
+//!   original payload is re-raised from [`model`] with the schedule that
+//!   produced it.
+//!
+//! Bounds: explored executions are capped at [`MAX_EXECUTIONS`] and
+//! decision depth at [`MAX_BRANCHES`]; a model that trips either has an
+//! unbounded loop and needs a smaller harness, and fails loudly rather
+//! than silently truncating coverage.
+
+use std::any::Any;
+use std::cell::{RefCell, UnsafeCell};
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc as StdArc, Condvar as StdCondvar, Mutex as StdMutex};
+use std::sync::{LockResult, MutexGuard as StdMutexGuard, PoisonError};
+use std::time::Duration;
+
+/// Hard cap on distinct executions one [`model`] call may explore.
+pub const MAX_EXECUTIONS: usize = 250_000;
+/// Hard cap on scheduling decisions within a single execution.
+pub const MAX_BRANCHES: usize = 8192;
+
+const ABORT_MSG: &str = "sync::model execution aborted";
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Run {
+    /// Schedulable.
+    Ready,
+    /// Waiting on a mutex, a condvar, or a join; only an explicit wake
+    /// (release / notify / target finish) makes it `Ready` again.
+    Blocked,
+    /// In `wait_timeout`: wakeable by notify, or force-timed-out by the
+    /// scheduler when nothing else can run.
+    TimedWait,
+    Finished,
+}
+
+struct SchedState {
+    states: Vec<Run>,
+    /// Set when a `TimedWait` thread was woken by the stall rescue (its
+    /// wait timed out) rather than by a notification.
+    timed_out: Vec<bool>,
+    /// Per-thread list of threads blocked in `join` on it.
+    join_waiters: Vec<Vec<usize>>,
+    /// The one thread currently allowed to run.
+    active: usize,
+    /// DFS decision path: `(choice taken, options available)` per depth.
+    path: Vec<(usize, usize)>,
+    depth: usize,
+    abort: bool,
+    deadlock: bool,
+    panic_payload: Option<Box<dyn Any + Send>>,
+}
+
+struct Sched {
+    inner: StdMutex<SchedState>,
+    cv: StdCondvar,
+}
+
+type Guard<'a> = StdMutexGuard<'a, SchedState>;
+
+thread_local! {
+    static CTX: RefCell<Option<(StdArc<Sched>, usize)>> = const { RefCell::new(None) };
+}
+
+fn ctx() -> Option<(StdArc<Sched>, usize)> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+fn set_ctx(v: Option<(StdArc<Sched>, usize)>) {
+    CTX.with(|c| *c.borrow_mut() = v);
+}
+
+/// Bail out of a dying execution: drops the scheduler guard first so the
+/// unwind never carries it.
+fn check(g: Guard<'_>) -> Guard<'_> {
+    if g.abort {
+        drop(g);
+        panic!("{ABORT_MSG}");
+    }
+    g
+}
+
+impl Sched {
+    fn new(path: Vec<(usize, usize)>) -> Self {
+        Sched {
+            inner: StdMutex::new(SchedState {
+                states: vec![Run::Ready],
+                timed_out: vec![false],
+                join_waiters: vec![Vec::new()],
+                active: 0,
+                path,
+                depth: 0,
+                abort: false,
+                deadlock: false,
+                panic_payload: None,
+            }),
+            cv: StdCondvar::new(),
+        }
+    }
+
+    fn lock(&self) -> Guard<'_> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Replay (from the DFS path prefix) or record one decision with `n`
+    /// options; returns the option taken this execution.
+    fn choose(st: &mut SchedState, n: usize) -> usize {
+        if n <= 1 {
+            return 0;
+        }
+        let d = st.depth;
+        st.depth += 1;
+        if d < st.path.len() {
+            st.path[d].1 = n;
+            st.path[d].0.min(n - 1)
+        } else {
+            assert!(
+                st.path.len() < MAX_BRANCHES,
+                "sync::model: decision depth exceeded {MAX_BRANCHES} — \
+                 unbounded loop in a modeled protocol?"
+            );
+            st.path.push((0, n));
+            0
+        }
+    }
+
+    /// One scheduling point: pick the next thread to run among the Ready
+    /// set (the caller included, when still Ready) and park until this
+    /// thread is scheduled again. Never panics — on abort or deadlock the
+    /// guard comes back with the flags set and the caller decides (user
+    /// paths [`check`] and unwind; drop/finish paths return quietly).
+    fn switch<'a>(&'a self, mut g: Guard<'a>, me: usize) -> Guard<'a> {
+        loop {
+            if g.abort {
+                return g;
+            }
+            let ready: Vec<usize> = g
+                .states
+                .iter()
+                .enumerate()
+                .filter(|&(_, s)| *s == Run::Ready)
+                .map(|(i, _)| i)
+                .collect();
+            if !ready.is_empty() {
+                let c = Self::choose(&mut g, ready.len());
+                g.active = ready[c];
+                self.cv.notify_all();
+                if g.active == me || g.states[me] == Run::Finished {
+                    return g;
+                }
+                while g.active != me && !g.abort {
+                    g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+                }
+                return g;
+            }
+            // Nothing Ready. Timed condvar waiters are not stuck — their
+            // timeouts fire: convert them and re-plan.
+            let timed: Vec<usize> = g
+                .states
+                .iter()
+                .enumerate()
+                .filter(|&(_, s)| *s == Run::TimedWait)
+                .map(|(i, _)| i)
+                .collect();
+            if !timed.is_empty() {
+                for t in timed {
+                    g.states[t] = Run::Ready;
+                    g.timed_out[t] = true;
+                }
+                continue;
+            }
+            if g.states.iter().all(|s| *s == Run::Finished) {
+                self.cv.notify_all();
+                return g;
+            }
+            // Every unfinished thread is Blocked with no timeout to rescue
+            // it: a real deadlock.
+            g.abort = true;
+            g.deadlock = true;
+            self.cv.notify_all();
+            return g;
+        }
+    }
+}
+
+/// Thread `tid` is done (normally or by panic): record it, wake joiners,
+/// and hand the schedule on.
+fn finish(sched: &StdArc<Sched>, tid: usize, panic_payload: Option<Box<dyn Any + Send>>) {
+    let mut g = sched.lock();
+    g.states[tid] = Run::Finished;
+    let joiners = std::mem::take(&mut g.join_waiters[tid]);
+    for w in joiners {
+        g.states[w] = Run::Ready;
+    }
+    if let Some(p) = panic_payload {
+        if !g.abort {
+            // first failure wins; ABORT_MSG cascades from other threads
+            // bailing out are noise, not the bug
+            g.abort = true;
+            g.panic_payload = Some(p);
+        }
+        sched.cv.notify_all();
+        return;
+    }
+    if g.abort {
+        sched.cv.notify_all();
+        return;
+    }
+    let g = sched.switch(g, tid);
+    drop(g);
+}
+
+/// Model-checked mutual exclusion with the `std::sync::Mutex` surface the
+/// crate uses (`new`/`lock`, `LockResult` poisoning semantics). Outside a
+/// [`model`] run it degrades to an uncontended single-threaded lock so
+/// construction-time code paths still work.
+pub struct Mutex<T> {
+    core: UnsafeCell<MutexCore>,
+    data: UnsafeCell<T>,
+}
+
+struct MutexCore {
+    /// `None` free; a model thread id, or `usize::MAX` for the unmodeled
+    /// (outside-`model`) path.
+    owner: Option<usize>,
+    waiters: Vec<usize>,
+    poisoned: bool,
+}
+
+// Safety: `core` is only touched while holding the scheduler's own std
+// mutex (modeled path) or from a single unmodeled thread; `data` is only
+// touched by the guard holder, and the scheduler runs one model thread at
+// a time. Mirrors std's bounds.
+unsafe impl<T: Send> Send for Mutex<T> {}
+unsafe impl<T: Send> Sync for Mutex<T> {}
+
+impl<T> Mutex<T> {
+    pub fn new(data: T) -> Self {
+        Mutex {
+            core: UnsafeCell::new(MutexCore { owner: None, waiters: Vec::new(), poisoned: false }),
+            data: UnsafeCell::new(data),
+        }
+    }
+
+    #[allow(clippy::mut_from_ref)]
+    fn core(&self) -> &mut MutexCore {
+        // Safety: serialized per the struct-level invariant above.
+        unsafe { &mut *self.core.get() }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match ctx() {
+            Some((sched, me)) => {
+                // a decision point *before* the acquire: who wins a
+                // contended lock is an explored choice, not arrival luck
+                let mut g = check(sched.switch(sched.lock(), me));
+                loop {
+                    let core = self.core();
+                    if core.owner.is_none() {
+                        core.owner = Some(me);
+                        break;
+                    }
+                    core.waiters.push(me);
+                    g.states[me] = Run::Blocked;
+                    g = check(sched.switch(g, me));
+                }
+                let poisoned = self.core().poisoned;
+                drop(g);
+                let guard = MutexGuard { lock: self };
+                if poisoned {
+                    Err(PoisonError::new(guard))
+                } else {
+                    Ok(guard)
+                }
+            }
+            None => {
+                let core = self.core();
+                assert!(
+                    core.owner.is_none(),
+                    "sync::model Mutex contended outside sync::model()"
+                );
+                core.owner = Some(usize::MAX);
+                let poisoned = core.poisoned;
+                let guard = MutexGuard { lock: self };
+                if poisoned {
+                    Err(PoisonError::new(guard))
+                } else {
+                    Ok(guard)
+                }
+            }
+        }
+    }
+
+    /// Release while the caller already holds the scheduler lock (condvar
+    /// wait registration): no scheduling point — the atomicity of
+    /// "release and sleep" is the whole contract.
+    fn release_for_wait(&self, g: &mut SchedState, me: usize) {
+        let core = self.core();
+        debug_assert_eq!(core.owner, Some(me), "condvar wait on a mutex this thread holds");
+        core.owner = None;
+        for w in std::mem::take(&mut core.waiters) {
+            g.states[w] = Run::Ready;
+        }
+    }
+
+    fn unlock(&self) {
+        match ctx() {
+            Some((sched, me)) => {
+                let mut g = sched.lock();
+                let core = self.core();
+                debug_assert_eq!(core.owner, Some(me));
+                core.owner = None;
+                if std::thread::panicking() {
+                    core.poisoned = true;
+                }
+                for w in std::mem::take(&mut core.waiters) {
+                    g.states[w] = Run::Ready;
+                }
+                if g.abort || std::thread::panicking() {
+                    // dying execution or unwinding guard drop: release
+                    // without a scheduling point (a Drop must not panic)
+                    return;
+                }
+                let g = sched.switch(g, me);
+                drop(g);
+            }
+            None => {
+                let core = self.core();
+                core.owner = None;
+                if std::thread::panicking() {
+                    core.poisoned = true;
+                }
+            }
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Mutex").finish_non_exhaustive()
+    }
+}
+
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        // Safety: this guard is the exclusive holder (model invariant).
+        unsafe { &*self.lock.data.get() }
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // Safety: as above.
+        unsafe { &mut *self.lock.data.get() }
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        self.lock.unlock();
+    }
+}
+
+/// Mirror of `std::sync::WaitTimeoutResult` (which has no public
+/// constructor) for the modeled [`Condvar::wait_timeout`].
+#[derive(Clone, Copy, Debug)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+/// Model-checked condition variable. Notifications wake registered
+/// waiters FIFO; `wait_timeout`'s timeout-vs-notify race is an explored
+/// branch (see the module docs).
+pub struct Condvar {
+    waiters: UnsafeCell<Vec<usize>>,
+}
+
+// Safety: the waiter list is only touched under the scheduler lock.
+unsafe impl Send for Condvar {}
+unsafe impl Sync for Condvar {}
+
+impl Condvar {
+    pub fn new() -> Self {
+        Condvar { waiters: UnsafeCell::new(Vec::new()) }
+    }
+
+    #[allow(clippy::mut_from_ref)]
+    fn list(&self) -> &mut Vec<usize> {
+        // Safety: serialized under the scheduler lock.
+        unsafe { &mut *self.waiters.get() }
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let lock = guard.lock;
+        std::mem::forget(guard); // released manually below, atomically
+        let (sched, me) = ctx().expect("sync::model Condvar used outside sync::model()");
+        let mut g = sched.lock();
+        self.list().push(me);
+        lock.release_for_wait(&mut g, me);
+        g.states[me] = Run::Blocked;
+        drop(check(sched.switch(g, me)));
+        lock.lock()
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        _dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        let lock = guard.lock;
+        std::mem::forget(guard);
+        let (sched, me) = ctx().expect("sync::model Condvar used outside sync::model()");
+        let mut g = sched.lock();
+        // Both real outcomes are explored: the timeout fires before any
+        // notification (branch 0), or a notification wins (branch 1 — and
+        // if none ever arrives, the scheduler's stall rescue converts the
+        // wait into a timeout, which is what a real timeout guarantees).
+        let timed_out = if Sched::choose(&mut g, 2) == 0 {
+            lock.release_for_wait(&mut g, me);
+            drop(check(sched.switch(g, me)));
+            true
+        } else {
+            self.list().push(me);
+            lock.release_for_wait(&mut g, me);
+            g.states[me] = Run::TimedWait;
+            g.timed_out[me] = false;
+            let g2 = check(sched.switch(g, me));
+            let rescued = g2.timed_out[me];
+            if rescued {
+                self.list().retain(|&w| w != me);
+            }
+            drop(g2);
+            rescued
+        };
+        match lock.lock() {
+            Ok(g) => Ok((g, WaitTimeoutResult(timed_out))),
+            Err(e) => Err(PoisonError::new((e.into_inner(), WaitTimeoutResult(timed_out)))),
+        }
+    }
+
+    pub fn notify_all(&self) {
+        match ctx() {
+            Some((sched, me)) => {
+                let mut g = sched.lock();
+                for w in std::mem::take(self.list()) {
+                    g.states[w] = Run::Ready;
+                    g.timed_out[w] = false;
+                }
+                if g.abort || std::thread::panicking() {
+                    return;
+                }
+                drop(sched.switch(g, me));
+            }
+            None => self.list().clear(),
+        }
+    }
+
+    pub fn notify_one(&self) {
+        match ctx() {
+            Some((sched, me)) => {
+                let mut g = sched.lock();
+                let list = self.list();
+                if !list.is_empty() {
+                    let w = list.remove(0); // FIFO — deterministic wakeup
+                    g.states[w] = Run::Ready;
+                    g.timed_out[w] = false;
+                }
+                if g.abort || std::thread::panicking() {
+                    return;
+                }
+                drop(sched.switch(g, me));
+            }
+            None => {
+                let list = self.list();
+                if !list.is_empty() {
+                    list.remove(0);
+                }
+            }
+        }
+    }
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Condvar").finish_non_exhaustive()
+    }
+}
+
+/// Model-thread spawning for loom models. Only valid inside [`model`].
+pub mod thread {
+    use super::*;
+
+    pub struct JoinHandle<T> {
+        tid: usize,
+        os: Option<std::thread::JoinHandle<Option<T>>>,
+    }
+
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let (sched, me) = ctx().expect("sync::model thread::spawn outside sync::model()");
+        let tid = {
+            let mut g = sched.lock();
+            let tid = g.states.len();
+            g.states.push(Run::Ready);
+            g.timed_out.push(false);
+            g.join_waiters.push(Vec::new());
+            tid
+        };
+        let sched2 = StdArc::clone(&sched);
+        let os = std::thread::spawn(move || run_thread(sched2, tid, f));
+        // decision point: the child may run before the spawner continues
+        drop(check(sched.switch(sched.lock(), me)));
+        JoinHandle { tid, os: Some(os) }
+    }
+
+    fn run_thread<F, T>(sched: StdArc<Sched>, tid: usize, f: F) -> Option<T>
+    where
+        F: FnOnce() -> T,
+    {
+        set_ctx(Some((StdArc::clone(&sched), tid)));
+        {
+            // park until first scheduled
+            let mut g = sched.lock();
+            while g.active != tid && !g.abort {
+                g = sched.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+            }
+            let abort = g.abort;
+            drop(g);
+            if abort {
+                finish(&sched, tid, None);
+                return None;
+            }
+        }
+        match catch_unwind(AssertUnwindSafe(f)) {
+            Ok(v) => {
+                finish(&sched, tid, None);
+                Some(v)
+            }
+            Err(p) => {
+                finish(&sched, tid, Some(p));
+                None
+            }
+        }
+    }
+
+    impl<T> JoinHandle<T> {
+        pub fn join(mut self) -> std::thread::Result<T> {
+            let (sched, me) = ctx().expect("sync::model join outside sync::model()");
+            let mut g = sched.lock();
+            while g.states[self.tid] != Run::Finished {
+                let tid = self.tid;
+                g.join_waiters[tid].push(me);
+                g.states[me] = Run::Blocked;
+                g = check(sched.switch(g, me));
+            }
+            drop(g);
+            let os = self.os.take().expect("join consumes the handle");
+            match os.join() {
+                Ok(Some(v)) => Ok(v),
+                Ok(None) => Err(Box::new(ABORT_MSG) as Box<dyn Any + Send>),
+                Err(e) => Err(e),
+            }
+        }
+    }
+}
+
+/// Advance the DFS path to the next unexplored schedule; `false` when the
+/// tree is exhausted.
+fn advance(path: &mut Vec<(usize, usize)>) -> bool {
+    while let Some((c, n)) = path.pop() {
+        if c + 1 < n {
+            path.push((c + 1, n));
+            return true;
+        }
+    }
+    false
+}
+
+fn run_root<F: FnOnce() + Send + 'static>(sched: StdArc<Sched>, f: F) {
+    set_ctx(Some((StdArc::clone(&sched), 0)));
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(()) => finish(&sched, 0, None),
+        Err(p) => finish(&sched, 0, Some(p)),
+    }
+}
+
+/// Run `f` under every schedule of the model threads it spawns (see the
+/// module docs). Panics — re-raising the original payload, with the
+/// offending schedule on stderr — if any execution panics or deadlocks.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let f = StdArc::new(f);
+    let mut path: Vec<(usize, usize)> = Vec::new();
+    let mut executions = 0usize;
+    loop {
+        executions += 1;
+        assert!(
+            executions <= MAX_EXECUTIONS,
+            "sync::model: more than {MAX_EXECUTIONS} executions — shrink the model"
+        );
+        let sched = StdArc::new(Sched::new(std::mem::take(&mut path)));
+        let sched_root = StdArc::clone(&sched);
+        let f_run = StdArc::clone(&f);
+        let root = std::thread::spawn(move || run_root(sched_root, move || (*f_run)()));
+        let _ = root.join();
+        let (deadlock, payload, final_path) = {
+            let mut g = sched.lock();
+            while !(g.abort || g.states.iter().all(|s| *s == Run::Finished)) {
+                g = sched.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+            }
+            (g.deadlock, g.panic_payload.take(), std::mem::take(&mut g.path))
+        };
+        if deadlock {
+            panic!(
+                "sync::model: deadlock — every live thread is blocked \
+                 (execution {executions}, schedule {final_path:?})"
+            );
+        }
+        if let Some(p) = payload {
+            eprintln!(
+                "sync::model: execution {executions} failed under schedule {final_path:?}"
+            );
+            std::panic::resume_unwind(p);
+        }
+        path = final_path;
+        if !advance(&mut path) {
+            return; // every schedule explored
+        }
+    }
+}

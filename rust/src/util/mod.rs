@@ -14,9 +14,11 @@ pub mod json;
 pub mod rng;
 pub mod timer;
 pub mod tmp;
+pub mod wait;
 
 pub use hash::{FxBuildHasher, FxHashMap};
 pub use json::Json;
 pub use rng::Rng;
 pub use timer::Stopwatch;
 pub use tmp::TempDir;
+pub use wait::wait_until;

@@ -3,8 +3,8 @@
 //! dir and removes it on drop. Used by tests only, but compiled always so
 //! integration tests can reach it.
 
+use crate::sync::atomic::{AtomicU64, Ordering};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
 
 static COUNTER: AtomicU64 = AtomicU64::new(0);
 

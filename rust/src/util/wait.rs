@@ -1,0 +1,54 @@
+//! Deadline-bounded condition polling for concurrency tests.
+//!
+//! Sleep-loop polling (`while cond() { sleep(1ms) }`) hangs forever when
+//! the condition never comes true, and hard-coded iteration counts flake
+//! under ThreadSanitizer / Miri, which run 10–50x slower than native.
+//! [`wait_until`] bounds the wait by wall-clock deadline instead: generous
+//! enough to absorb sanitizer slowdown, but a genuine hang still fails
+//! loudly with a panic instead of wedging the test runner.
+
+use std::time::{Duration, Instant};
+
+/// Poll `poll` until it returns `Some`, sleeping with exponential backoff
+/// (50 µs → 5 ms) between attempts. Panics once `deadline` elapses with
+/// the condition still unmet.
+///
+/// The deadline is a *failure bound*, not an expected latency — pick it
+/// an order of magnitude above the worst native case so sanitizer runs
+/// never trip it spuriously.
+pub fn wait_until<T>(deadline: Duration, mut poll: impl FnMut() -> Option<T>) -> T {
+    let start = Instant::now();
+    let mut backoff = Duration::from_micros(50);
+    loop {
+        if let Some(v) = poll() {
+            return v;
+        }
+        assert!(
+            start.elapsed() < deadline,
+            "wait_until: condition not met within {deadline:?}"
+        );
+        std::thread::sleep(backoff);
+        backoff = (backoff * 2).min(Duration::from_millis(5));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn returns_as_soon_as_the_condition_holds() {
+        let mut calls = 0;
+        let got = wait_until(Duration::from_secs(5), || {
+            calls += 1;
+            (calls >= 3).then_some(calls)
+        });
+        assert_eq!(got, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "condition not met")]
+    fn panics_at_the_deadline_instead_of_hanging() {
+        wait_until::<()>(Duration::from_millis(5), || None);
+    }
+}

@@ -1,0 +1,206 @@
+//! Concurrency-hardening property tests for the serving core.
+//!
+//! Two fault models the loom models (`tests/loom_models.rs`) cannot
+//! cover, because they need the *real* engine end to end rather than an
+//! extracted protocol unit:
+//!
+//! 1. A backend that panics mid-batch: after the leader's panic is
+//!    quarantined and the poisoned serve mutex recovered, the serving
+//!    cache must keep returning answers bit-identical to an uncached
+//!    twin engine — across randomized interleavings of faults, graph
+//!    mutations (epoch bumps), and steady-state queries. Randomness is
+//!    hand-rolled on the crate's own PCG64 (`hdreason::util::Rng`); the
+//!    fixed seed makes every run replay the same schedule.
+//!
+//! 2. Concurrent score sweeps over one shared backend: the kernel
+//!    scratch buffers are function-local (see CONCURRENCY.md, "kernel
+//!    triage"), so parallel callers must be bit-identical to a
+//!    sequential one at any thread count. This is the regression pin
+//!    for the property a ThreadSanitizer run exercises dynamically.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Duration;
+
+use hdreason::cache::CacheSpec;
+use hdreason::engine::{EngineBuilder, KernelBackend, KgcEngine, QueryRequest, ScoreBackend};
+use hdreason::kg::Triple;
+use hdreason::util::Rng;
+
+/// Delegates to the kernel backend but panics whenever the poisoned
+/// node appears in a forward top-k batch — the same fault model as the
+/// in-crate quarantine tests, rebuilt here because integration tests
+/// only see the public [`ScoreBackend`] surface.
+struct PoisonBackend {
+    inner: KernelBackend,
+    poison_node: usize,
+}
+
+impl ScoreBackend for PoisonBackend {
+    fn name(&self) -> &'static str {
+        "poison"
+    }
+    fn score_batch_into(&self, mv: &[f32], dim_hd: usize, q: &[f32], bias: f32, out: &mut [f32]) {
+        self.inner.score_batch_into(mv, dim_hd, q, bias, out);
+    }
+    fn dot_scores_into(&self, mat: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
+        self.inner.dot_scores_into(mat, dim, q, out);
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn top_k_pairs_into(
+        &self,
+        mv: &[f32],
+        hr: &[f32],
+        dim_hd: usize,
+        pairs: &[(usize, usize)],
+        bias: f32,
+        k: usize,
+        out: &mut [Vec<(usize, f32)>],
+    ) {
+        assert!(!pairs.iter().any(|&(s, _)| s == self.poison_node), "injected backend fault");
+        self.inner.top_k_pairs_into(mv, hr, dim_hd, pairs, bias, k, out);
+    }
+}
+
+fn poison_engine(poison_node: usize, cache: Option<&str>) -> KgcEngine {
+    let mut b = EngineBuilder::new("tiny")
+        .dataset("learnable")
+        .seed(11)
+        .custom_backend(Box::new(PoisonBackend {
+            inner: KernelBackend::with_threads(1),
+            poison_node,
+        }))
+        .batch_capacity(4)
+        .deadline(Duration::from_millis(1))
+        .top_k(10_000);
+    if let Some(spec) = cache {
+        b = b.cache(CacheSpec::parse(spec).expect("cache spec parses"));
+    }
+    b.build().expect("tiny engine builds")
+}
+
+/// Property: under a randomized stream of injected backend panics,
+/// epoch-bumping graph mutations, and steady-state queries, a cached
+/// engine (a) never wedges, (b) never strands a pending query or an
+/// unclaimed result, and (c) stays bit-identical to an uncached twin
+/// holding the same graph — i.e. poison recovery never lets a stale or
+/// partial ranking survive in the [`hdreason::cache::ServingCache`].
+#[test]
+fn poisoned_batches_leave_the_serving_cache_consistent() {
+    const POISON: usize = 3;
+    let cached = poison_engine(POISON, Some("lru:32"));
+    let plain = poison_engine(POISON, None);
+    let n = cached.num_candidates();
+    let r = cached.kg().num_relations;
+    let train: Vec<Triple> = cached.kg().train.clone();
+    let mut rng = Rng::seed_from_u64(0x00C0_FFEE);
+    let mut removed: Vec<Triple> = Vec::new();
+
+    for round in 0..60 {
+        if rng.bool(0.25) {
+            // fault injection: a good query coalesces with a poisoned
+            // one; the leader's panic must be quarantined to the
+            // poisoned sequence and re-raised only in its own waiter
+            let good = QueryRequest::forward((POISON + 1 + rng.below(n - 1)) % n, rng.below(r));
+            let mate = cached.submit_async(good);
+            let boom = catch_unwind(AssertUnwindSafe(|| {
+                cached.submit(QueryRequest::forward(POISON, rng.below(r)))
+            }));
+            assert!(boom.is_err(), "round {round}: poisoned query must re-raise in its waiter");
+            assert_eq!(mate.wait(), plain.rank(good), "round {round}: batch-mate lost");
+        }
+        if rng.bool(0.2) {
+            // epoch bump, mirrored on the twin: the cache must drop its
+            // pre-mutation entries (the begin(epoch) protocol) and both
+            // engines must agree on the resulting memory epoch
+            if removed.is_empty() || rng.bool(0.5) {
+                let t = train[rng.below(train.len())];
+                if cached.remove_edges(&[t]) == 1 {
+                    assert_eq!(plain.remove_edges(&[t]), 1, "round {round}: twins diverged");
+                    removed.push(t);
+                }
+            } else {
+                let t = removed.swap_remove(rng.below(removed.len()));
+                assert_eq!(cached.insert_edges(&[t]), plain.insert_edges(&[t]));
+            }
+            assert_eq!(cached.mem_epoch(), plain.mem_epoch(), "round {round}: epoch skew");
+        }
+        for _ in 0..3 {
+            // steady state, both directions; re-query immediately so the
+            // second serve exercises the post-recovery cache-hit path
+            let node = (POISON + 1 + rng.below(n - 1)) % n;
+            let rel = rng.below(r);
+            let req = if rng.bool(0.5) {
+                QueryRequest::forward(node, rel)
+            } else {
+                QueryRequest::backward(node, rel)
+            };
+            let fresh = cached.submit(req);
+            assert_eq!(fresh, plain.rank(req), "round {round}: cached diverged from twin");
+            assert_eq!(cached.submit(req), fresh, "round {round}: cache hit diverged");
+        }
+        assert_eq!(cached.pending_queries(), 0, "round {round}: stranded pending query");
+        assert_eq!(cached.unclaimed_results(), 0, "round {round}: stranded unclaimed result");
+    }
+
+    let (stats, _invalidations) = cached.cache_stats().expect("cache is enabled");
+    assert_eq!(stats.accesses(), stats.hits + stats.misses, "cache ledger out of balance");
+    assert!(stats.hits > 0, "the property run never exercised the cache-hit path");
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Regression pin for the kernel-scratch triage: every scratch buffer
+/// in the score/top-k sweeps is function-local and the row-sharded
+/// parallel path assigns disjoint `chunks_mut` ranges, so (a) thread
+/// count never changes the output bits and (b) many threads sweeping
+/// one shared backend concurrently are bit-identical to a sequential
+/// sweep. A data race on shared scratch would fail (b) — this is the
+/// deterministic stand-in for the TSan job in environments without a
+/// sanitizer-enabled nightly toolchain.
+#[test]
+fn concurrent_kernel_sweeps_are_bit_identical_to_sequential() {
+    let mut rng = Rng::seed_from_u64(42);
+    let (v, d, b) = (96usize, 64usize, 8usize);
+    let mv: Vec<f32> = (0..v * d).map(|_| rng.normal_f32()).collect();
+    let q: Vec<f32> = (0..b * d).map(|_| rng.normal_f32()).collect();
+    let bias = 2.5f32;
+
+    let single = KernelBackend::with_threads(1);
+    let threaded = KernelBackend::with_threads(4);
+    let baseline = single.score_batch(&mv, d, &q, bias);
+    assert_eq!(baseline.len(), v * b);
+    assert_eq!(
+        bits(&threaded.score_batch(&mv, d, &q, bias)),
+        bits(&baseline),
+        "thread count changed the score bits"
+    );
+
+    std::thread::scope(|s| {
+        let sweeps: Vec<_> =
+            (0..8).map(|_| s.spawn(|| threaded.score_batch(&mv, d, &q, bias))).collect();
+        for h in sweeps {
+            let got = h.join().expect("scorer thread panicked");
+            assert_eq!(bits(&got), bits(&baseline), "concurrent sweep diverged from sequential");
+        }
+    });
+
+    let mut expect = vec![Vec::new(); b];
+    threaded.top_k_batch_into(&mv, d, &q, bias, 5, &mut expect);
+    std::thread::scope(|s| {
+        let sweeps: Vec<_> = (0..8)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut out = vec![Vec::new(); b];
+                    threaded.top_k_batch_into(&mv, d, &q, bias, 5, &mut out);
+                    out
+                })
+            })
+            .collect();
+        for h in sweeps {
+            let got = h.join().expect("top-k thread panicked");
+            assert_eq!(got, expect, "concurrent top-k diverged from sequential");
+        }
+    });
+}

@@ -14,8 +14,8 @@ use hdreason::engine::{
 };
 use hdreason::kg::Triple;
 use hdreason::model::{evaluate_ranking_batched, merged_rank, rank_counts, rank_of, RankMetrics};
+use hdreason::sync::atomic::{AtomicBool, Ordering};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
 
 fn close(a: f32, b: f32) -> bool {
@@ -501,15 +501,10 @@ fn async_poll_resolves_without_blocking() {
     let req = QueryRequest::forward(3, 1);
     let want = e.rank(req);
     let mut h = e.submit_async(req);
-    let start = Instant::now();
-    loop {
-        if let Some(r) = h.poll() {
-            assert_eq!(r, want);
-            break;
-        }
-        assert!(start.elapsed() < Duration::from_secs(30), "poll never resolved");
-        std::thread::yield_now();
-    }
+    // deadline-bounded, backoff-sleeping wait: generous enough for TSan/
+    // Miri slowdowns, and a genuine hang still fails loudly
+    let r = hdreason::util::wait_until(Duration::from_secs(60), || h.poll());
+    assert_eq!(r, want);
 }
 
 #[test]

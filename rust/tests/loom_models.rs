@@ -1,0 +1,317 @@
+//! Exhaustive model checks for the serving core's synchronization
+//! protocols, run under the in-crate model checker:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --manifest-path rust/Cargo.toml --test loom_models
+//! ```
+//!
+//! (`make loom` from the repo root.) Under the default build this file is
+//! empty — `hdreason::sync` re-exports `std::sync` and the checker does
+//! not exist. Under `--cfg loom`, `hdreason::sync::{Mutex, Condvar,
+//! thread}` are the model-checked versions, so every test here runs the
+//! *production* protocol units from `hdreason::engine::protocol` across
+//! every thread interleaving, not the handful a stress test samples.
+//!
+//! Each model is deliberately tiny (2–3 threads, 1–2 operations each):
+//! the checker explores every schedule, so one writer racing one reader
+//! already covers every ordering a fleet of them could produce, and
+//! small harnesses keep the DFS tree enumerable. Two `#[should_panic]`
+//! controls at the bottom prove the checker actually catches races and
+//! deadlocks — without them a vacuously-passing checker would look
+//! identical to a working one.
+
+#![cfg(loom)]
+
+use std::time::{Duration, Instant};
+
+use hdreason::cache::{CacheSpec, ServingCache};
+use hdreason::engine::protocol::{next_serve_step, serve_via_cache};
+use hdreason::engine::{EpochCell, MicroBatcher, QueryRequest, ResultBoard, ServeStep};
+use hdreason::sync::model::model;
+use hdreason::sync::{lock_recover, thread, Arc, Condvar, Mutex, PoisonError};
+
+// ---------------------------------------------------------------------------
+// EpochCell: the graph-memory snapshot protocol
+// ---------------------------------------------------------------------------
+
+/// A reader's `(data, epoch)` snapshot is one atom: under no schedule may
+/// it observe epoch `N`'s tag on epoch `N-1`'s bytes — including *after*
+/// dropping the lock, while the writer keeps publishing (copy-on-write
+/// isolation via `Arc::make_mut`). The data encodes its own epoch
+/// (`v[0]` is incremented by exactly the publish that bumps the epoch) so
+/// a torn pair is directly visible.
+#[test]
+fn epoch_snapshot_is_never_torn() {
+    model(|| {
+        let cell = Arc::new(Mutex::new(EpochCell::new(vec![0u64])));
+        let writer = thread::spawn({
+            let cell = Arc::clone(&cell);
+            move || {
+                for _ in 0..2 {
+                    let mut g = lock_recover(&cell);
+                    let epoch = g.publish_with(|v| v[0] += 1);
+                    assert_eq!(g.snapshot().0[0], epoch, "publish left data behind its epoch");
+                }
+            }
+        });
+        for _ in 0..2 {
+            // lock dropped at end of statement: the sweep reads `data`
+            // lock-free while the writer may be publishing
+            let (data, epoch) = lock_recover(&cell).snapshot();
+            assert_eq!(data[0], epoch, "torn (data, epoch) snapshot");
+        }
+        writer.join().unwrap();
+        let (data, epoch) = lock_recover(&cell).snapshot();
+        assert_eq!((data[0], epoch), (2, 2), "both publishes landed exactly once");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// ServingCache: the begin(epoch) two-phase protocol
+// ---------------------------------------------------------------------------
+
+/// A sweep serving epoch 0 races a mutation that advances the cache to
+/// epoch 1. Wherever the mutation lands — before the probe, between
+/// probe and insert, or after the insert — the epoch-1 table must never
+/// contain the epoch-0 sweep's ranking, and the sweep must still return
+/// its own (snapshot-consistent) answer to its caller.
+#[test]
+fn stale_epoch_rankings_never_enter_the_cache() {
+    model(|| {
+        let cache = Arc::new(Mutex::new(ServingCache::new(
+            CacheSpec::parse("lru:8").unwrap().unwrap(),
+        )));
+        let mutator = thread::spawn({
+            let cache = Arc::clone(&cache);
+            move || {
+                let mut c = lock_recover(&cache);
+                c.begin(1);
+                c.insert(99, vec![(1, 1.0)]);
+            }
+        });
+        let keys = [7u64];
+        let mut tops = vec![Vec::new()];
+        serve_via_cache(&cache, 0, &keys, &mut tops, |missed, out| {
+            assert_eq!(missed, &[0]);
+            out[0] = vec![(0, 0.5)];
+        });
+        assert_eq!(tops[0], vec![(0, 0.5)], "the sweep's own answer always comes back");
+        mutator.join().unwrap();
+        let mut c = lock_recover(&cache);
+        assert!(c.begin(1), "epoch 1 is current once both threads quiesce");
+        assert!(c.get(7).is_none(), "epoch-0 ranking leaked into the epoch-1 table");
+        assert_eq!(c.get(99), Some(vec![(1, 1.0)]), "the epoch-1 entry survives the race");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// next_serve_step + condvar: the claim_or_lead loop
+// ---------------------------------------------------------------------------
+
+struct Serve {
+    batcher: MicroBatcher,
+    board: ResultBoard<u64>,
+}
+
+/// One waiter's turn of the engine's `claim_or_lead` loop, against the
+/// real [`next_serve_step`]. The "backend" publishes each query's own
+/// sequence number as its ranking, so a claim that returns the wrong
+/// waiter's result is directly visible.
+fn submit_and_claim(shared: &(Mutex<Serve>, Condvar)) -> u64 {
+    let (lock, cv) = shared;
+    let seq = lock_recover(lock).batcher.push(QueryRequest::forward(0, 0));
+    // The engine parks with a bounded wait_timeout. The first park here
+    // does too — both sides of the timeout-vs-notify race are explored —
+    // but later parks wait untimed so the DFS path stays finite (an
+    // unbounded timeout-retry loop has infinitely many schedules).
+    let mut timed_parks_left = 1u32;
+    loop {
+        let mut g = lock_recover(lock);
+        let Serve { batcher, board } = &mut *g;
+        let step = next_serve_step(batcher, Instant::now(), Duration::from_secs(1), || {
+            board.claim(seq)
+        });
+        match step {
+            ServeStep::Claimed(got) => {
+                let got = got.expect("no leader panics in this model");
+                assert_eq!(got, seq, "claimed another waiter's ranking");
+                return got;
+            }
+            ServeStep::Lead(batch) => {
+                drop(g);
+                // backend scan (no serve lock held), then publish + wake
+                let mut g = lock_recover(lock);
+                for (s, _req) in batch {
+                    g.board.publish(s, s);
+                }
+                drop(g);
+                cv.notify_all();
+            }
+            ServeStep::Wait(wait) => {
+                if timed_parks_left > 0 {
+                    timed_parks_left -= 1;
+                    let _ = cv.wait_timeout(g, wait).unwrap_or_else(PoisonError::into_inner);
+                } else {
+                    let _ = cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+                }
+            }
+        }
+    }
+}
+
+/// Two concurrent submitters over a capacity-1 batcher (deadline `MAX`,
+/// so flushing is size-driven and schedule-deterministic): whichever
+/// thread leads may drain *both* due batches, leaving the other to park.
+/// The invariants: no due batch is ever left unflushed (the checker's
+/// deadlock detector fails any schedule where a waiter sleeps forever —
+/// i.e. any missed-wakeup window between claim-check and park), every
+/// waiter gets exactly its own result, and the board ends fully drained.
+#[test]
+fn claim_or_lead_flushes_every_due_batch_and_never_misses_a_wakeup() {
+    model(|| {
+        let shared = Arc::new((
+            Mutex::new(Serve {
+                batcher: MicroBatcher::new(1, Duration::MAX),
+                board: ResultBoard::new(),
+            }),
+            Condvar::new(),
+        ));
+        let worker = thread::spawn({
+            let shared = Arc::clone(&shared);
+            move || submit_and_claim(&shared)
+        });
+        let mine = submit_and_claim(&shared);
+        let theirs = worker.join().unwrap();
+        assert_ne!(mine, theirs, "two waiters claimed the same sequence number");
+        let g = lock_recover(&shared.0);
+        assert!(g.batcher.is_empty(), "a due batch was left unflushed");
+        assert_eq!(g.board.unclaimed(), 0, "a published ranking was never claimed");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// ResultBoard: QueryHandle publish-vs-drop
+// ---------------------------------------------------------------------------
+
+/// A handle is dropped while its query is in flight, racing the leader's
+/// publication — the exact seam in `QueryHandle::drop`. Whichever side
+/// wins, the published ranking must be discarded (never parked forever
+/// in the results map) and the abandonment mark consumed.
+#[test]
+fn dropped_handles_never_leak_published_rankings() {
+    model(|| {
+        let board = Arc::new(Mutex::new(ResultBoard::new()));
+        let leader = thread::spawn({
+            let board = Arc::clone(&board);
+            move || {
+                lock_recover(&board).publish(0u64, 7u32);
+            }
+        });
+        {
+            // QueryHandle::drop, in-flight arm: the request is no longer
+            // in the batcher, so discard a published result or mark the
+            // sequence abandoned for the leader to discard at publication
+            let mut g = lock_recover(&board);
+            if !g.discard(0) {
+                g.abandon_in_flight(0);
+            }
+        }
+        leader.join().unwrap();
+        let g = lock_recover(&board);
+        assert_eq!(g.unclaimed(), 0, "dropped handle leaked its published ranking");
+        assert!(g.abandoned_is_empty(), "abandonment mark was not consumed by publication");
+    });
+}
+
+/// Same race as above, but the leader panicked in the backend and
+/// publishes a failure: the failure marker must not outlive the dropped
+/// handle either (nobody is left to re-raise it).
+#[test]
+fn dropped_handles_never_leak_failure_markers() {
+    model(|| {
+        let board = Arc::new(Mutex::new(ResultBoard::<u32>::new()));
+        let leader = thread::spawn({
+            let board = Arc::clone(&board);
+            move || {
+                lock_recover(&board).publish_failure(0);
+            }
+        });
+        {
+            let mut g = lock_recover(&board);
+            if !g.discard(0) {
+                g.abandon_in_flight(0);
+            }
+        }
+        leader.join().unwrap();
+        let g = lock_recover(&board);
+        assert!(g.failed_is_empty(), "dropped handle leaked its failure marker");
+        assert!(g.abandoned_is_empty(), "abandonment mark was not consumed by the failure");
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Controls: the checker itself must be able to fail
+// ---------------------------------------------------------------------------
+
+/// Positive control: read-modify-write under a single lock hold is
+/// race-free under every schedule.
+#[test]
+fn single_hold_increments_are_race_free() {
+    model(|| {
+        let counter = Arc::new(Mutex::new(0u32));
+        let t = thread::spawn({
+            let counter = Arc::clone(&counter);
+            move || *lock_recover(&counter) += 1
+        });
+        *lock_recover(&counter) += 1;
+        t.join().unwrap();
+        assert_eq!(*lock_recover(&counter), 2);
+    });
+}
+
+/// Negative control: the classic check-then-act bug — read under one
+/// lock hold, write under another — loses an update under some schedule,
+/// and the checker must find it. If this test ever stops panicking, the
+/// checker has gone vacuous and every green model above is meaningless.
+#[test]
+#[should_panic(expected = "lost update")]
+fn the_checker_catches_check_then_act_races() {
+    model(|| {
+        let counter = Arc::new(Mutex::new(0u32));
+        let t = thread::spawn({
+            let counter = Arc::clone(&counter);
+            move || {
+                let read = *lock_recover(&counter); // check: first hold
+                *lock_recover(&counter) = read + 1; // act: second hold — racy
+            }
+        });
+        let read = *lock_recover(&counter);
+        *lock_recover(&counter) = read + 1;
+        t.join().unwrap();
+        assert_eq!(*lock_recover(&counter), 2, "lost update");
+    });
+}
+
+/// Negative control: opposite-order acquisition of two locks deadlocks
+/// under some schedule, and the checker's deadlock detector must report
+/// it (this is the bug class the `LockRank` hierarchy outlaws statically).
+#[test]
+#[should_panic(expected = "deadlock")]
+fn the_checker_catches_lock_order_deadlocks() {
+    model(|| {
+        let a = Arc::new(Mutex::new(()));
+        let b = Arc::new(Mutex::new(()));
+        let t = thread::spawn({
+            let (a, b) = (Arc::clone(&a), Arc::clone(&b));
+            move || {
+                let _ga = lock_recover(&a);
+                let _gb = lock_recover(&b);
+            }
+        });
+        let _gb = lock_recover(&b);
+        let _ga = lock_recover(&a);
+        drop(_ga);
+        drop(_gb);
+        t.join().unwrap();
+    });
+}

@@ -1,0 +1,469 @@
+//! `cargo xtask lint` — the repo's concurrency lint pass.
+//!
+//! Four text-level rules enforce the conventions that keep the serving
+//! core model-checkable (`CONCURRENCY.md`, `src/sync/`):
+//!
+//! * **std-sync** — no `std::sync` imports outside `src/sync/`. Every
+//!   consumer must go through the `crate::sync` facade, or the loom
+//!   build (`make loom`) silently checks a different lock than
+//!   production runs.
+//! * **lock-unwrap** — no `.lock().unwrap()` / `.lock().expect(...)`.
+//!   Poison recovery via `crate::sync::lock_recover` is the serving
+//!   core's contract: one panicking batch leader must not wedge every
+//!   subsequent submit behind a `PoisonError`.
+//! * **hash-iteration** — no iteration over `HashMap`/`HashSet`
+//!   bindings in the scoring hot paths (`src/hdc/`,
+//!   `src/engine/backend.rs`). Hash iteration order is
+//!   nondeterministic, and rankings are specified to be deterministic
+//!   across backends; keyed lookup is fine, traversal is not.
+//! * **lock-order** — within one function, `LockRank` acquisitions
+//!   must not go down the `serve → filters → mem → adj → cache`
+//!   hierarchy. This is the static mirror of the debug-build assertion
+//!   in `crate::sync::lock_recover_ranked`; a legitimate
+//!   drop-and-reacquire that the text scan cannot see can be waived
+//!   with `// lint: allow-lock-order` on the acquiring line.
+//!
+//! The pass is deliberately textual (no syn, no rustc plugin): it runs
+//! offline, in milliseconds, with zero dependencies, and the rules are
+//! about *names on lines* — imports, method-call spellings, rank
+//! literals — which survive a text scan fine. Line comments are
+//! stripped before matching so prose about `std::sync` doesn't trip it;
+//! `src/sync/` itself (which wraps std and deliberately tests ordering
+//! violations) and this tool (whose rule table spells the forbidden
+//! patterns) are exempt.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") => lint(),
+        _ => {
+            eprintln!("usage: cargo xtask lint");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn lint() -> ExitCode {
+    let mut violations = Vec::new();
+    let mut files = 0usize;
+    for (rel, text) in collect_repo_files() {
+        files += 1;
+        violations.extend(check_file(&rel, &text));
+    }
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    if violations.is_empty() {
+        println!("xtask lint: {files} files clean");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("xtask lint: {} violation(s) in {files} files", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// Every `.rs` file the rules apply to, as `(repo-relative path, text)`.
+/// Scanned roots: the crate's `src`/`tests`/`benches` and the repo-root
+/// `examples/` (which the crate builds via explicit `[[example]]`
+/// paths). `src/sync/` files are collected — [`check_file`] exempts
+/// them — but `xtask/` itself is not.
+fn collect_repo_files() -> Vec<(String, String)> {
+    let rust_dir = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives one level under the rust crate")
+        .to_path_buf();
+    let repo_root = rust_dir.parent().expect("rust crate lives one level under the repo root");
+    let roots = [
+        rust_dir.join("src"),
+        rust_dir.join("tests"),
+        rust_dir.join("benches"),
+        repo_root.join("examples"),
+    ];
+    let mut paths = Vec::new();
+    for root in &roots {
+        rs_files(root, &mut paths);
+    }
+    paths
+        .into_iter()
+        .filter_map(|p| {
+            let rel = p
+                .strip_prefix(repo_root)
+                .expect("scanned file under the repo root")
+                .to_string_lossy()
+                .replace('\\', "/");
+            fs::read_to_string(&p).ok().map(|text| (rel, text))
+        })
+        .collect()
+}
+
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            rs_files(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+struct Violation {
+    rel: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.rel, self.line, self.rule, self.msg)
+    }
+}
+
+const RANKS: [&str; 5] = ["Serve", "Filters", "Mem", "Adj", "Cache"];
+
+/// Run every rule over one file. `rel` is the repo-relative path with
+/// forward slashes (e.g. `rust/src/engine/backend.rs`); rules key off it
+/// for exemptions and hot-path scoping.
+fn check_file(rel: &str, text: &str) -> Vec<Violation> {
+    let mut out = Vec::new();
+    if rel.starts_with("rust/src/sync/") {
+        // the facade wraps std::sync by design, and its tests
+        // deliberately violate the lock order to pin the runtime assert
+        return out;
+    }
+    let hot_path = rel.starts_with("rust/src/hdc/") || rel == "rust/src/engine/backend.rs";
+    let mut hash_names: Vec<String> = Vec::new();
+    if hot_path {
+        for line in text.lines() {
+            if let Some(name) = hash_binding_name(strip_comment(line)) {
+                if !hash_names.contains(&name) {
+                    hash_names.push(name);
+                }
+            }
+        }
+    }
+    // (rank index, rank name, line) of the last ranked acquisition in
+    // the current function
+    let mut last_rank: Option<(usize, &'static str, usize)> = None;
+    for (i, raw) in text.lines().enumerate() {
+        let n = i + 1;
+        let line = strip_comment(raw);
+        if line.contains("std::sync") {
+            out.push(Violation {
+                rel: rel.to_string(),
+                line: n,
+                rule: "std-sync",
+                msg: "imports std::sync directly — use the crate::sync facade so the loom \
+                      build checks the same lock production runs"
+                    .to_string(),
+            });
+        }
+        for pat in [".lock().unwrap()", ".lock().expect("] {
+            if line.contains(pat) {
+                out.push(Violation {
+                    rel: rel.to_string(),
+                    line: n,
+                    rule: "lock-unwrap",
+                    msg: "panics on a poisoned lock — use crate::sync::lock_recover; poison \
+                          recovery is the serving core's contract"
+                        .to_string(),
+                });
+            }
+        }
+        if hot_path {
+            for name in &hash_names {
+                if iterates_hash(line, name) {
+                    out.push(Violation {
+                        rel: rel.to_string(),
+                        line: n,
+                        rule: "hash-iteration",
+                        msg: format!(
+                            "iterates the hash collection `{name}` in a scoring hot path — \
+                             iteration order is nondeterministic and rankings must be \
+                             deterministic; use keyed lookup or a sorted/dense structure"
+                        ),
+                    });
+                }
+            }
+        }
+        if find_word(line, "fn").is_some() {
+            last_rank = None;
+        }
+        let mut rest = line;
+        while let Some(p) = rest.find("LockRank::") {
+            rest = &rest[p + "LockRank::".len()..];
+            let ident: String = rest.chars().take_while(|&c| is_ident_char(c)).collect();
+            if let Some(rank) = RANKS.iter().position(|&r| r == ident) {
+                if let Some((prev, prev_name, prev_line)) = last_rank {
+                    if rank < prev && !raw.contains("lint: allow-lock-order") {
+                        out.push(Violation {
+                            rel: rel.to_string(),
+                            line: n,
+                            rule: "lock-order",
+                            msg: format!(
+                                "acquires {} after {} (line {prev_line}), against the \
+                                 serve → filters → mem → adj → cache hierarchy \
+                                 (CONCURRENCY.md); waive a drop-and-reacquire with \
+                                 `// lint: allow-lock-order`",
+                                RANKS[rank], prev_name
+                            ),
+                        });
+                    }
+                }
+                last_rank = Some((rank, RANKS[rank], n));
+            }
+        }
+    }
+    out
+}
+
+/// Truncate a line at its `//` comment. Naive about `//` inside string
+/// literals, which can only hide text from the rules (a false negative
+/// on a line that embeds a URL), never invent a violation.
+fn strip_comment(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// First occurrence of `needle` in `hay` delimited by non-identifier
+/// characters on both sides.
+fn find_word(hay: &str, needle: &str) -> Option<usize> {
+    let mut start = 0;
+    while let Some(pos) = hay[start..].find(needle) {
+        let i = start + pos;
+        let before_ok = !hay[..i].chars().next_back().is_some_and(is_ident_char);
+        let after_ok = !hay[i + needle.len()..].chars().next().is_some_and(is_ident_char);
+        if before_ok && after_ok {
+            return Some(i);
+        }
+        start = i + needle.len();
+    }
+    None
+}
+
+/// The identifier a `let` binding or struct field introduces on this
+/// line, when its type or initializer names a `HashMap`/`HashSet`
+/// (including the crate's `FxHashMap`).
+fn hash_binding_name(line: &str) -> Option<String> {
+    if !(line.contains("HashMap") || line.contains("HashSet")) {
+        return None;
+    }
+    let t = line.trim_start();
+    let t = t.strip_prefix("pub ").unwrap_or(t);
+    let t = t.strip_prefix("pub(crate) ").unwrap_or(t);
+    let t = match t.strip_prefix("let ") {
+        Some(r) => r.strip_prefix("mut ").unwrap_or(r),
+        None => t,
+    };
+    let name: String = t.chars().take_while(|&c| is_ident_char(c)).collect();
+    if name.is_empty() {
+        return None;
+    }
+    // only `name: Type` or `name = init` forms introduce a binding
+    let after = t[name.len()..].trim_start();
+    if (after.starts_with(':') && !after.starts_with("::")) || after.starts_with('=') {
+        Some(name)
+    } else {
+        None
+    }
+}
+
+/// Does this line traverse `name` — by iterator method or `for … in`?
+/// Keyed access (`get`/`insert`/`contains_key`/`remove`) is allowed.
+fn iterates_hash(line: &str, name: &str) -> bool {
+    const METHODS: [&str; 8] = [
+        ".iter()",
+        ".iter_mut()",
+        ".keys()",
+        ".values()",
+        ".values_mut()",
+        ".drain(",
+        ".retain(",
+        ".into_iter()",
+    ];
+    if let Some(i) = find_word(line, name) {
+        let rest = &line[i + name.len()..];
+        if METHODS.iter().any(|m| rest.starts_with(m)) {
+            return true;
+        }
+    }
+    if line.contains("for ") {
+        if let Some(j) = line.find(" in ") {
+            let tail = line[j + 4..].trim_start().trim_start_matches('&');
+            let tail = tail.strip_prefix("mut ").unwrap_or(tail);
+            let word: String = tail.chars().take_while(|&c| is_ident_char(c)).collect();
+            if word == name {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(rel: &str, text: &str) -> Vec<&'static str> {
+        check_file(rel, text).into_iter().map(|v| v.rule).collect()
+    }
+
+    // -- std-sync ----------------------------------------------------------
+
+    #[test]
+    fn seeded_std_sync_import_fails_the_lint() {
+        let fixture = "use std::sync::Mutex;\n";
+        assert_eq!(rules("rust/src/engine/mod.rs", fixture), ["std-sync"]);
+    }
+
+    #[test]
+    fn the_sync_facade_itself_is_exempt() {
+        let fixture = "pub use std::sync::{Arc, Mutex};\n";
+        assert!(rules("rust/src/sync/mod.rs", fixture).is_empty());
+    }
+
+    #[test]
+    fn prose_about_std_sync_in_comments_is_not_a_violation() {
+        let fixture = "//! re-exports `std::sync` under the default build\n\
+                       use crate::sync::Mutex;\n";
+        assert!(rules("rust/src/engine/mod.rs", fixture).is_empty());
+    }
+
+    // -- lock-unwrap -------------------------------------------------------
+
+    #[test]
+    fn seeded_lock_unwrap_fails_the_lint() {
+        let fixture = "let g = self.serve.lock().unwrap();\n";
+        assert_eq!(rules("rust/src/engine/mod.rs", fixture), ["lock-unwrap"]);
+        let fixture = "let g = self.serve.lock().expect(\"poisoned\");\n";
+        assert_eq!(rules("rust/src/engine/mod.rs", fixture), ["lock-unwrap"]);
+    }
+
+    #[test]
+    fn lock_recover_is_the_blessed_spelling() {
+        let fixture = "let g = lock_recover(&self.serve);\n\
+                       let h = m.lock().unwrap_or_else(PoisonError::into_inner);\n";
+        assert!(rules("rust/src/engine/mod.rs", fixture).is_empty());
+    }
+
+    // -- hash-iteration ----------------------------------------------------
+
+    #[test]
+    fn seeded_hash_iteration_in_a_hot_path_fails_the_lint() {
+        let fixture = "let mut acc: FxHashMap<u32, f32> = FxHashMap::default();\n\
+                       for (k, v) in &acc {\n    scores[*k as usize] += v;\n}\n";
+        assert_eq!(rules("rust/src/hdc/kernels.rs", fixture), ["hash-iteration"]);
+    }
+
+    #[test]
+    fn hash_method_iteration_in_a_hot_path_fails_the_lint() {
+        let fixture = "rows: crate::util::FxHashMap<u32, Vec<f32>>,\n\
+                       let total: f32 = self.rows.values().map(|r| r[0]).sum();\n";
+        assert_eq!(rules("rust/src/engine/backend.rs", fixture), ["hash-iteration"]);
+    }
+
+    #[test]
+    fn keyed_lookup_in_a_hot_path_is_allowed() {
+        let fixture = "rows: crate::util::FxHashMap<u32, Vec<f32>>,\n\
+                       if self.rows.contains_key(&j) {\n    return self.rows.get(&j);\n}\n\
+                       self.rows.entry(j).or_insert(rowq)\n";
+        assert!(rules("rust/src/engine/backend.rs", fixture).is_empty());
+    }
+
+    #[test]
+    fn hash_iteration_outside_hot_paths_is_allowed() {
+        let fixture = "let mut acc: FxHashMap<u32, f32> = FxHashMap::default();\n\
+                       for (k, v) in &acc {\n}\n";
+        assert!(rules("rust/src/kg/mod.rs", fixture).is_empty());
+    }
+
+    #[test]
+    fn identifier_matching_respects_word_boundaries() {
+        // `borrows.iter()` must not match the binding `rows`
+        let fixture = "rows: crate::util::FxHashMap<u32, Vec<f32>>,\n\
+                       let n = borrows.iter().count();\n";
+        assert!(rules("rust/src/engine/backend.rs", fixture).is_empty());
+    }
+
+    // -- lock-order --------------------------------------------------------
+
+    #[test]
+    fn seeded_out_of_order_acquisition_fails_the_lint() {
+        let fixture = "fn broken(&self) {\n\
+                           let adj = lock_recover_ranked(&self.adj, LockRank::Adj);\n\
+                           let mem = lock_recover_ranked(&self.mem, LockRank::Mem);\n\
+                       }\n";
+        assert_eq!(rules("rust/src/engine/mod.rs", fixture), ["lock-order"]);
+    }
+
+    #[test]
+    fn hierarchy_order_acquisition_passes() {
+        let fixture = "fn fine(&self) {\n\
+                           let mem = lock_recover_ranked(&self.mem, LockRank::Mem);\n\
+                           let adj = lock_recover_ranked(&self.adj, LockRank::Adj);\n\
+                       }\n";
+        assert!(rules("rust/src/engine/mod.rs", fixture).is_empty());
+    }
+
+    #[test]
+    fn equal_rank_reacquisition_passes() {
+        // drop-and-retake of the same lock (the serve_via_cache seam)
+        let fixture = "fn probe_then_insert(cache: &Mutex<ServingCache>) {\n\
+                           drop(lock_recover_ranked(cache, LockRank::Cache));\n\
+                           drop(lock_recover_ranked(cache, LockRank::Cache));\n\
+                       }\n";
+        assert!(rules("rust/src/engine/protocol.rs", fixture).is_empty());
+    }
+
+    #[test]
+    fn function_boundaries_reset_the_rank_sequence() {
+        let fixture = "fn high(&self) {\n\
+                           let c = lock_recover_ranked(&self.cache, LockRank::Cache);\n\
+                       }\n\
+                       fn low(&self) {\n\
+                           let s = lock_recover_ranked(&self.serve, LockRank::Serve);\n\
+                       }\n";
+        assert!(rules("rust/src/engine/mod.rs", fixture).is_empty());
+    }
+
+    #[test]
+    fn allow_marker_waives_a_drop_and_reacquire() {
+        let fixture = "fn waived(&self) {\n\
+                           drop(lock_recover_ranked(&self.adj, LockRank::Adj));\n\
+                           let m = lock_recover_ranked(&self.mem, LockRank::Mem); \
+                       // lint: allow-lock-order\n\
+                       }\n";
+        assert!(rules("rust/src/engine/mod.rs", fixture).is_empty());
+    }
+
+    // -- the real tree -----------------------------------------------------
+
+    /// The production tree must be clean: this is the same scan `make ci`
+    /// runs, so a regression fails both the lint step and the test suite.
+    #[test]
+    fn the_checked_in_tree_is_clean() {
+        let mut violations = Vec::new();
+        let mut files = 0;
+        for (rel, text) in collect_repo_files() {
+            files += 1;
+            violations.extend(check_file(&rel, &text));
+        }
+        assert!(files > 30, "scan found only {files} files — roots misconfigured?");
+        let rendered: Vec<String> = violations.iter().map(|v| v.to_string()).collect();
+        assert!(rendered.is_empty(), "lint violations in the tree:\n{}", rendered.join("\n"));
+    }
+}
