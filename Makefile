@@ -6,7 +6,7 @@
 CARGO ?= cargo
 MANIFEST := rust/Cargo.toml
 
-.PHONY: check build test bench bench-serving bench-train ci fmt artifacts lint loom miri tsan
+.PHONY: check build test bench bench-serving bench-train ci fmt artifacts lint analyze loom miri tsan
 
 # tier-1: release build + full test suite
 check: build test
@@ -27,6 +27,7 @@ ci:
 	$(CARGO) clippy --manifest-path $(MANIFEST) -p xtask --all-targets -- -D warnings
 	$(CARGO) test -q --manifest-path $(MANIFEST) -p xtask
 	$(MAKE) lint
+	$(MAKE) analyze
 	$(CARGO) build --release --manifest-path $(MANIFEST)
 	$(CARGO) test -q --manifest-path $(MANIFEST)
 	HDR_THREADS=1 $(CARGO) test -q --manifest-path $(MANIFEST)
@@ -71,6 +72,14 @@ fmt:
 # score hot paths, out-of-order LockRank acquisition. Offline and std-only.
 lint:
 	$(CARGO) run --quiet --manifest-path $(MANIFEST) -p xtask -- lint
+
+# whole-crate static analysis (see ANALYSIS.md): HDR-PANIC (no panics
+# reachable from the serving entry points), HDR-ALLOC (no allocation in
+# #[hdr_hot_path] kernels), HDR-FLOAT (no order-sensitive reductions
+# outside the blocked helpers), HDR-EPOCH (epoch-disciplined cache writes
+# and snapshot reads). Offline and std-only, like the lint pass.
+analyze:
+	$(CARGO) run --quiet --manifest-path $(MANIFEST) -p xtask -- analyze
 
 # exhaustive model checks over the serving protocols: --cfg loom swaps
 # hdreason::sync to the in-crate model checker (rust/src/sync/model.rs)

@@ -1,0 +1,20 @@
+//! Marker attributes for the static analyzer (`cargo xtask analyze`).
+//!
+//! Dependency-free by design: only the compiler-provided `proc_macro`
+//! crate, so the offline build stays offline.
+
+use proc_macro::TokenStream;
+
+/// Marks a function as an allocation-free hot-path kernel.
+///
+/// Semantically a no-op at compile time — the item passes through
+/// unchanged. `cargo xtask analyze` keys the **HDR-ALLOC** pass off the
+/// attribute's presence: annotated functions must not allocate
+/// (`Vec::new` / `vec!` / `collect` / `to_vec` / `to_owned` / `clone` /
+/// `format!` / `Box::new`), which is the paper's fixed-shape datapath
+/// contract enforced at the source level. The runtime twin is the
+/// counting-allocator harness in `rust/tests/alloc_hotpath.rs`.
+#[proc_macro_attribute]
+pub fn hdr_hot_path(_attr: TokenStream, item: TokenStream) -> TokenStream {
+    item
+}

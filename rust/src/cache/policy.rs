@@ -52,6 +52,7 @@ impl PolicyState for LruState {
     }
 
     fn evict(&mut self) -> u64 {
+        // analyze: allow(HDR-PANIC) caller evicts only when non-empty; the capacity >= 1 invariant holds
         let &(stamp, v) = self.order.iter().next().expect("evict from empty LRU");
         self.order.remove(&(stamp, v));
         self.stamp.remove(&v);
@@ -102,6 +103,7 @@ impl PolicyState for LfuState {
     }
 
     fn evict(&mut self) -> u64 {
+        // analyze: allow(HDR-PANIC) caller evicts only when non-empty; the capacity >= 1 invariant holds
         let &(f, l, v) = self.order.iter().next().expect("evict from empty LFU");
         self.order.remove(&(f, l, v));
         self.meta.remove(&v);
@@ -169,6 +171,7 @@ impl PolicyState for FifoState {
     fn on_hit(&mut self, _v: u64) {}
 
     fn evict(&mut self) -> u64 {
+        // analyze: allow(HDR-PANIC) caller evicts only when non-empty; the capacity >= 1 invariant holds
         self.queue.pop_front().expect("evict from empty FIFO")
     }
 }

@@ -583,6 +583,7 @@ impl ScoreBackend for ScalarBackend {
         "scalar"
     }
 
+    #[crate::hdr_hot_path]
     fn score_batch_into(&self, mv: &[f32], dim_hd: usize, q: &[f32], bias: f32, out: &mut [f32]) {
         let v = mv.len() / dim_hd.max(1);
         let b = q.len() / dim_hd.max(1);
@@ -595,10 +596,12 @@ impl ScoreBackend for ScalarBackend {
         }
     }
 
+    #[crate::hdr_hot_path]
     fn dot_scores_into(&self, mat: &[f32], dim: usize, q: &[f32], out: &mut [f32]) {
         let n = mat.len() / dim.max(1);
         assert_eq!(out.len(), n, "dot_scores_into: out must be (N,)");
         for (j, o) in out.iter_mut().enumerate() {
+            // analyze: allow(HDR-FLOAT) strict left-to-right reference order is the spec; parity pinned by tests
             *o = q.iter().zip(&mat[j * dim..(j + 1) * dim]).map(|(a, b)| a * b).sum();
         }
     }
@@ -897,7 +900,7 @@ impl ShardedBackend {
                     })
                 })
                 .collect();
-            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+            handles.into_iter().map(|h| crate::sync::join_propagate(h.join())).collect()
         });
         for (row, o) in out.iter_mut().enumerate() {
             let lists = parts.iter_mut().map(|p| std::mem::take(&mut p[row])).collect();
@@ -943,7 +946,7 @@ impl ScoreBackend for ShardedBackend {
                     })
                 })
                 .collect();
-            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+            handles.into_iter().map(|h| crate::sync::join_propagate(h.join())).collect()
         });
         for (lo, part) in parts {
             let sv = part.len() / b.max(1);
@@ -977,7 +980,7 @@ impl ScoreBackend for ShardedBackend {
                     })
                 })
                 .collect();
-            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+            handles.into_iter().map(|h| crate::sync::join_propagate(h.join())).collect()
         });
         for (lo, part) in parts {
             out[lo..lo + part.len()].copy_from_slice(&part);
@@ -1046,7 +1049,7 @@ impl ScoreBackend for ShardedBackend {
                     })
                 })
                 .collect();
-            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+            handles.into_iter().map(|h| crate::sync::join_propagate(h.join())).collect()
         });
         for (row, o) in out.iter_mut().enumerate() {
             let (mut better, mut equal) = (0usize, 0usize);
@@ -1355,6 +1358,7 @@ impl ScoreBackend for NoisyBackend {
                             rate,
                             self.spec.seed,
                         );
+                        // analyze: allow(HDR-FLOAT) mirrors the scalar leaf's strict left-to-right order
                         *o = q.iter().zip(&rowq).map(|(a, b)| a * b).sum();
                     }
                 } else {
@@ -1454,6 +1458,7 @@ impl ScoreBackend for PjrtBackend {
             let logits = self
                 .runtime
                 .score(&mv_pad, &hr_pad, &qs, &qr, bias)
+                // analyze: allow(HDR-PANIC) a hard runtime fault in a preflighted artifact, not a recoverable path
                 .expect("pjrt score artifact execution failed");
             for i in 0..chunk.len() {
                 out[(done + i) * live_v..(done + i + 1) * live_v]

@@ -396,7 +396,13 @@ impl KgcEngine {
     /// graph.
     pub fn rank(&self, req: QueryRequest) -> Ranking {
         self.validate_request(req);
-        self.rank_requests(&[(0, req)]).pop().expect("one ranking per request").1
+        match self.rank_requests(&[(0, req)]).pop() {
+            Some((_, ranking)) => ranking,
+            // rank_requests returns one ranking per request by contract;
+            // an empty result degrades to an empty ranking rather than a
+            // panic on the serving path
+            None => Ranking { request: req, top: Vec::new() },
+        }
     }
 
     /// Submit a query to the serving path and block until its ranking is
@@ -489,6 +495,7 @@ impl KgcEngine {
     fn await_result(&self, seq: u64) -> Ranking {
         let got = self.claim_or_lead(|board| board.claim(seq));
         got.unwrap_or_else(|protocol::Failed| {
+            // analyze: allow(HDR-PANIC) deliberate re-raise of a quarantined backend failure in the owning waiter
             panic!("serving query {seq} panicked in the batch leader")
         })
     }
@@ -622,7 +629,7 @@ impl KgcEngine {
                     })
                 })
                 .collect();
-            handles.into_iter().map(|h| h.join().expect("serving client thread")).sum()
+            handles.into_iter().map(|h| crate::sync::join_propagate(h.join())).sum()
         })
     }
 
@@ -732,8 +739,11 @@ impl KgcEngine {
         tops: &mut [Vec<(usize, f32)>],
     ) {
         let d = self.cfg.dim_hd;
-        let fwd_rows: Vec<usize> = (0..batch.len())
-            .filter(|&i| batch[i].1.direction == Direction::Forward)
+        let fwd_rows: Vec<usize> = batch
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, r))| r.direction == Direction::Forward)
+            .map(|(i, _)| i)
             .collect();
         let all_pairs =
             || batch.iter().map(|&(_, r)| (r.node, r.rel)).collect::<Vec<(usize, usize)>>();
@@ -754,7 +764,10 @@ impl KgcEngine {
             // mixed directions: sweep each side into a staging list and
             // scatter rows back to their submission positions
             let pairs_of = |rows: &[usize]| {
-                rows.iter().map(|&i| (batch[i].1.node, batch[i].1.rel)).collect::<Vec<_>>()
+                rows.iter()
+                    .filter_map(|&i| batch.get(i))
+                    .map(|&(_, r)| (r.node, r.rel))
+                    .collect::<Vec<_>>()
             };
             let fwd_pairs = pairs_of(&fwd_rows);
             let mut side = vec![Vec::new(); fwd_pairs.len()];
@@ -768,17 +781,24 @@ impl KgcEngine {
                 self.top_k,
                 &mut side,
             );
-            for (k, &i) in fwd_rows.iter().enumerate() {
-                tops[i] = std::mem::take(&mut side[k]);
+            for (&i, s) in fwd_rows.iter().zip(side.iter_mut()) {
+                if let Some(t) = tops.get_mut(i) {
+                    *t = std::mem::take(s);
+                }
             }
-            let bwd_rows: Vec<usize> = (0..batch.len())
-                .filter(|&i| batch[i].1.direction == Direction::Backward)
+            let bwd_rows: Vec<usize> = batch
+                .iter()
+                .enumerate()
+                .filter(|(_, (_, r))| r.direction == Direction::Backward)
+                .map(|(i, _)| i)
                 .collect();
             let bwd_pairs = pairs_of(&bwd_rows);
             let mut side = vec![Vec::new(); bwd_pairs.len()];
             self.top_k_backward_into(mv, epoch, &bwd_pairs, &mut side);
-            for (k, &i) in bwd_rows.iter().enumerate() {
-                tops[i] = std::mem::take(&mut side[k]);
+            for (&i, s) in bwd_rows.iter().zip(side.iter_mut()) {
+                if let Some(t) = tops.get_mut(i) {
+                    *t = std::mem::take(s);
+                }
             }
         }
     }
@@ -821,7 +841,7 @@ impl KgcEngine {
                         self.sweep_tops(&mv, epoch, batch, out);
                     } else {
                         let sub: Vec<(u64, QueryRequest)> =
-                            missed.iter().map(|&i| batch[i]).collect();
+                            missed.iter().filter_map(|&i| batch.get(i).copied()).collect();
                         self.sweep_tops(&mv, epoch, &sub, out);
                     }
                 });

@@ -104,7 +104,7 @@ impl<R> ResultBoard<R> {
         }
         let (seq, idx) =
             self.results.keys().find_map(|s| want.get(s).map(|&i| (*s, i)))?;
-        let r = self.results.remove(&seq).expect("key observed under the same lock hold");
+        let r = self.results.remove(&seq)?;
         Some((idx, Ok(r)))
     }
 
@@ -251,17 +251,22 @@ pub fn serve_via_cache(
     sweep: impl FnOnce(&[usize], &mut [Vec<(usize, f32)>]),
 ) {
     debug_assert_eq!(keys.len(), tops.len());
-    let mut missed: Vec<usize> = (0..keys.len()).collect();
+    let mut missed: Vec<usize> = (0..keys.len().min(tops.len())).collect();
     let cache_live = {
         let mut c = lock_recover_ranked(cache, LockRank::Cache);
         let live = c.begin(epoch);
         if live {
-            missed.retain(|&i| match c.get(keys[i]) {
-                Some(top) => {
-                    tops[i] = top;
-                    false
+            missed.retain(|&i| {
+                let (Some(&key), Some(slot)) = (keys.get(i), tops.get_mut(i)) else {
+                    return false;
+                };
+                match c.get(key) {
+                    Some(top) => {
+                        *slot = top;
+                        false
+                    }
+                    None => true,
                 }
-                None => true,
             });
         }
         live
@@ -272,7 +277,9 @@ pub fn serve_via_cache(
     let mut swept = vec![Vec::new(); missed.len()];
     sweep(&missed, &mut swept);
     for (slot, &i) in swept.iter_mut().zip(&missed) {
-        tops[i] = std::mem::take(slot);
+        if let Some(t) = tops.get_mut(i) {
+            *t = std::mem::take(slot);
+        }
     }
     if cache_live {
         let mut c = lock_recover_ranked(cache, LockRank::Cache);
@@ -280,7 +287,9 @@ pub fn serve_via_cache(
         // current. An interleaved mutation makes this a no-op.
         if c.begin(epoch) {
             for &i in &missed {
-                c.insert(keys[i], tops[i].clone());
+                if let (Some(&key), Some(top)) = (keys.get(i), tops.get(i)) {
+                    c.insert(key, top.clone());
+                }
             }
         }
     }

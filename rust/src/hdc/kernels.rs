@@ -109,6 +109,7 @@ impl KernelConfig {
 /// Binding into a caller buffer: `out = a ∘ b`. The zero-allocation form of
 /// [`super::ops::bind`].
 #[inline]
+#[crate::hdr_hot_path]
 pub fn bind_into(out: &mut [f32], a: &[f32], b: &[f32]) {
     debug_assert_eq!(out.len(), a.len());
     debug_assert_eq!(out.len(), b.len());
@@ -121,6 +122,7 @@ pub fn bind_into(out: &mut [f32], a: &[f32], b: &[f32]) {
 /// the Memorization Computing IP's multiply-accumulate. Element-wise, so
 /// bit-identical to `bind` followed by `bundle_into`.
 #[inline]
+#[crate::hdr_hot_path]
 pub fn bind_bundle_into(acc: &mut [f32], a: &[f32], b: &[f32]) {
     debug_assert_eq!(acc.len(), a.len());
     debug_assert_eq!(acc.len(), b.len());
@@ -133,6 +135,7 @@ pub fn bind_bundle_into(acc: &mut [f32], a: &[f32], b: &[f32]) {
 /// reduction vectorizes (the strict-order scalar sum in
 /// [`super::ops::l1_distance`] cannot).
 #[inline]
+#[crate::hdr_hot_path]
 pub fn l1_distance_blocked(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let main = a.len() - a.len() % LANES;
@@ -154,6 +157,7 @@ pub fn l1_distance_blocked(a: &[f32], b: &[f32]) -> f32 {
 
 /// Blocked dot product (DistMult / R-GCN decoder inner loop).
 #[inline]
+#[crate::hdr_hot_path]
 pub fn dot_blocked(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let main = a.len() - a.len() % LANES;
@@ -175,6 +179,7 @@ pub fn dot_blocked(a: &[f32], b: &[f32]) -> f32 {
 
 /// Blocked cosine similarity (three interleaved reductions).
 #[inline]
+#[crate::hdr_hot_path]
 pub fn cosine_blocked(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let main = a.len() - a.len() % LANES;
@@ -241,6 +246,7 @@ where
 /// (`KgcEngine::remove_edges`) can rebuild only the touched rows — the
 /// result is bit-identical to a from-scratch memorize of the same
 /// adjacency, because the accumulation order is the list order both ways.
+#[crate::hdr_hot_path]
 pub fn memorize_row_into(row: &mut [f32], neighbors: &[(u32, u32)], hv: &[f32], hr: &[f32]) {
     let dim_hd = row.len();
     row.fill(0.0);
@@ -471,6 +477,7 @@ pub fn l1_scores_batch_into(
 
 /// Max |x| over a slice, blocked like the other reductions (max is
 /// associative, so lane order does not matter — this is exact).
+#[crate::hdr_hot_path]
 pub fn max_abs_blocked(a: &[f32]) -> f32 {
     let main = a.len() - a.len() % LANES;
     let mut acc = [0f32; LANES];
@@ -496,6 +503,7 @@ pub fn max_abs_blocked(a: &[f32]) -> f32 {
 /// *same* grid snap the fused quant kernels apply, keeping cached scoring
 /// bit-identical to the fused path.
 #[inline]
+#[crate::hdr_hot_path]
 pub fn quantize_row_into(out: &mut [f32], row: &[f32], fp: FixedPoint) {
     let scale = fp.scale_for(max_abs_blocked(row));
     for (o, &x) in out.iter_mut().zip(row) {
@@ -657,6 +665,7 @@ pub fn add_read_noise_into(
 /// drawn in ascending-dimension order, so the fault mask is a pure
 /// function of (row content, global seed). `rate == 0` reduces exactly to
 /// per-row quantization (one Bernoulli draw per dimension, no bit draws).
+#[crate::hdr_hot_path]
 pub fn stuck_row_into(out: &mut [f32], row: &[f32], fp: FixedPoint, rate: f32, seed: u64) {
     debug_assert_eq!(out.len(), row.len());
     let scale = fp.scale_for(max_abs_blocked(row));
@@ -954,7 +963,7 @@ pub fn l1_scores_batch_backward_into(
                 })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("train backward worker panicked")).collect()
+        handles.into_iter().map(|h| crate::sync::join_propagate(h.join())).collect()
     });
     for p in partials {
         for (o, &x) in g_q.iter_mut().zip(&p) {
@@ -1018,7 +1027,7 @@ pub fn top_k_select(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
         let e = TopKEntry { idx, score };
         if heap.len() < k {
             heap.push(e);
-        } else if e < *heap.peek().expect("non-empty heap") {
+        } else if heap.peek().is_some_and(|&top| e < top) {
             heap.pop();
             heap.push(e);
         }
@@ -1047,6 +1056,7 @@ pub fn merge_top_k(parts: Vec<Vec<(usize, f32)>>, k: usize) -> Vec<(usize, f32)>
         })
         .collect();
     let mut cursors = vec![1usize; parts.len()];
+    // analyze: allow(HDR-FLOAT) integer length arithmetic, not a float reduction
     let mut out = Vec::with_capacity(k.min(parts.iter().map(Vec::len).sum()));
     while out.len() < k {
         let Some(std::cmp::Reverse((e, p))) = heap.pop() else { break };

@@ -59,6 +59,7 @@ pub fn hamming(a: &[f32], b: &[f32]) -> usize {
 
 /// L1 distance — the TransE score metric of Eq. 10.
 pub fn l1_distance(a: &[f32], b: &[f32]) -> f32 {
+    // analyze: allow(HDR-FLOAT) this IS the strict-order scalar reference the blocked kernels are tested against
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
 }
 

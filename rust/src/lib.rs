@@ -74,5 +74,11 @@ pub mod sim;
 pub mod sync;
 pub mod util;
 
+/// Marks a function as an allocation-free hot-path kernel: a no-op at
+/// compile time, a contract for `cargo xtask analyze` (HDR-ALLOC) and the
+/// counting-allocator harness in `rust/tests/alloc_hotpath.rs`. Annotate
+/// as `#[crate::hdr_hot_path]`. See `ANALYSIS.md`.
+pub use hdr_macros::hdr_hot_path;
+
 /// Crate-wide result type (anyhow for rich error context on the CLI path).
 pub type Result<T> = anyhow::Result<T>;

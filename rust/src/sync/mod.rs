@@ -53,6 +53,16 @@ pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
+/// Unwrap a `JoinHandle::join` result, re-raising the child thread's
+/// panic **with its original payload** instead of wrapping it in a fresh
+/// `expect` message. The serving fan-outs (`serve_all`, the sharded
+/// backend's scoped workers) must forward worker panics verbatim so the
+/// leader's quarantine logic (`KgcEngine::lead`) sees the real payload,
+/// and HDR-PANIC keeps the serving paths free of ad-hoc `expect`s.
+pub fn join_propagate<T>(res: std::thread::Result<T>) -> T {
+    res.unwrap_or_else(|payload| std::panic::resume_unwind(payload))
+}
+
 /// Position of a lock in the documented global hierarchy (see
 /// `CONCURRENCY.md`): a thread may only acquire locks in strictly
 /// increasing rank order, which makes cross-thread acquisition cycles —
@@ -213,5 +223,22 @@ mod tests {
         let b = Mutex::new(0u32);
         let _g1 = lock_recover_ranked(&a, LockRank::Mem);
         let _g2 = lock_recover_ranked(&b, LockRank::Mem);
+    }
+
+    #[test]
+    fn join_propagate_returns_the_value_on_success() {
+        let h = std::thread::spawn(|| 41 + 1);
+        assert_eq!(join_propagate(h.join()), 42);
+    }
+
+    #[test]
+    fn join_propagate_reraises_the_original_payload() {
+        let h = std::thread::spawn(|| panic!("worker exploded"));
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            join_propagate(h.join());
+        }))
+        .expect_err("the child panic must re-raise");
+        let msg = caught.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "worker exploded", "payload must survive verbatim");
     }
 }

@@ -1,0 +1,172 @@
+//! Runtime twin of `cargo xtask analyze`'s **HDR-ALLOC** pass (see
+//! `ANALYSIS.md`): the static pass proves the `#[hdr_hot_path]`-annotated
+//! kernels contain no allocation *tokens*; this harness proves the same
+//! property dynamically with a counting `#[global_allocator]`, so an
+//! allocation smuggled in through a helper call (which the per-function
+//! static pass deliberately does not chase) still fails CI.
+//!
+//! Two tiers:
+//!
+//! * **strict zero** — the annotated leaf kernels, driven with
+//!   caller-provided buffers, must perform literally no heap allocation;
+//! * **steady-state plateau** — `rank_requests` on the
+//!   `sharded:2+quant:8` composition cannot be allocation-free (scoped
+//!   worker threads and the per-call scratch are real), but once the
+//!   snapped-row cache is warm, repeated identical sweeps must allocate
+//!   no more than the first post-warmup sweep and take zero new
+//!   row-cache misses — i.e. no O(|V| * D) re-quantization per call.
+//!
+//! The counters are process-global, so every test here serializes on one
+//! mutex; the file stays its own integration-test binary for the same
+//! reason.
+
+use hdreason::engine::{BackendKind, EngineBuilder, QueryRequest, ScalarBackend, ScoreBackend};
+use hdreason::hdc::kernels;
+use hdreason::hdc::quant::FixedPoint;
+use hdreason::sync::atomic::{AtomicU64, Ordering};
+use hdreason::sync::Mutex;
+use std::alloc::{GlobalAlloc, Layout, System};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+/// All tests share the process-global counters: serialize them.
+static SERIAL: Mutex<()> = Mutex::new(());
+
+/// Run `f` and return `(result, allocation count, bytes requested)`
+/// attributable to it. Only meaningful under the [`SERIAL`] lock.
+fn measured<T>(f: impl FnOnce() -> T) -> (T, u64, u64) {
+    let a0 = ALLOCS.load(Ordering::SeqCst);
+    let b0 = BYTES.load(Ordering::SeqCst);
+    let out = f();
+    let a1 = ALLOCS.load(Ordering::SeqCst);
+    let b1 = BYTES.load(Ordering::SeqCst);
+    (out, a1 - a0, b1 - b0)
+}
+
+fn filled(n: usize, phase: f32) -> Vec<f32> {
+    (0..n).map(|i| (i as f32 * 0.37 + phase).sin()).collect()
+}
+
+#[test]
+fn annotated_leaf_kernels_allocate_nothing() {
+    let _g = hdreason::sync::lock_recover(&SERIAL);
+    let d = 515; // deliberately not a multiple of LANES: tail paths too
+    let a = filled(d, 0.0);
+    let b = filled(d, 1.3);
+    let mut out = vec![0f32; d];
+    let neighbors: Vec<(u32, u32)> = vec![(0, 0), (1, 1), (2, 0)];
+    let hv = filled(3 * d, 2.1);
+    let hr = filled(2 * d, 0.7);
+    let fp = FixedPoint::new(8);
+    // one warm pass outside the measurement (lazy statics, first-touch)
+    let mut sink = kernels::l1_distance_blocked(&a, &b);
+    let (_, allocs, bytes) = measured(|| {
+        for _ in 0..16 {
+            sink += kernels::l1_distance_blocked(&a, &b);
+            sink += kernels::dot_blocked(&a, &b);
+            sink += kernels::cosine_blocked(&a, &b);
+            sink += kernels::max_abs_blocked(&a);
+            kernels::bind_into(&mut out, &a, &b);
+            kernels::bind_bundle_into(&mut out, &a, &b);
+            kernels::quantize_row_into(&mut out, &a, fp);
+            kernels::stuck_row_into(&mut out, &a, fp, 0.25, 42);
+            kernels::memorize_row_into(&mut out, &neighbors, &hv, &hr);
+        }
+    });
+    assert!(sink.is_finite(), "kernels must actually run");
+    assert_eq!(allocs, 0, "hot-path leaf kernels allocated {allocs} times ({bytes} bytes)");
+}
+
+#[test]
+fn annotated_scalar_backend_entry_points_allocate_nothing() {
+    let _g = hdreason::sync::lock_recover(&SERIAL);
+    let d = 64;
+    let v = 17;
+    let batch = 3;
+    let mv = filled(v * d, 0.0);
+    let q = filled(batch * d, 0.9);
+    let mut scores = vec![0f32; batch * v];
+    let mut dots = vec![0f32; v];
+    let backend = ScalarBackend;
+    backend.score_batch_into(&mv, d, &q, 0.5, &mut scores); // warm
+    let (_, allocs, bytes) = measured(|| {
+        for _ in 0..8 {
+            backend.score_batch_into(&mv, d, &q, 0.5, &mut scores);
+            backend.dot_scores_into(&mv, d, &q[..d], &mut dots);
+        }
+    });
+    assert_eq!(allocs, 0, "scalar scoring allocated {allocs} times ({bytes} bytes)");
+    assert!(scores.iter().chain(dots.iter()).all(|s| s.is_finite()));
+}
+
+#[test]
+fn steady_state_sharded_quant_serving_reaches_an_allocation_plateau() {
+    let _g = hdreason::sync::lock_recover(&SERIAL);
+    let e = EngineBuilder::new("tiny")
+        .dataset("learnable")
+        .seed(11)
+        .backend(BackendKind::parse("sharded:2+quant:8").expect("spec parses"))
+        .threads(1)
+        .build()
+        .expect("tiny engine builds");
+    let v = e.num_candidates();
+    let reqs: Vec<QueryRequest> = (0..4)
+        .flat_map(|i| [QueryRequest::forward(i % v, 0), QueryRequest::backward((i + 1) % v, 0)])
+        .collect();
+    // warmup: quantize + cache every touched memory row
+    for _ in 0..4 {
+        for &req in &reqs {
+            let _ = e.rank(req);
+        }
+    }
+    let warm = e.row_cache_stats().expect("row cache wired for sharded+quant");
+    // measure each post-warmup pass independently
+    let mut per_pass: Vec<(u64, u64)> = Vec::with_capacity(6);
+    for _ in 0..6 {
+        let ((), allocs, bytes) = measured(|| {
+            for &req in &reqs {
+                let _ = e.rank(req);
+            }
+        });
+        per_pass.push((allocs, bytes));
+    }
+    let done = e.row_cache_stats().expect("row cache still wired");
+    assert_eq!(
+        done.misses, warm.misses,
+        "steady state must serve every sweep from the snapped-row cache"
+    );
+    assert!(done.hits > warm.hits, "the measured passes must actually hit the row cache");
+    let (first_allocs, first_bytes) = per_pass[0];
+    assert!(first_allocs > 0, "scoped workers make a literally-zero pass impossible");
+    for (i, &(allocs, bytes)) in per_pass.iter().enumerate() {
+        assert!(
+            allocs <= first_allocs && bytes <= first_bytes,
+            "pass {i} grew: {allocs} allocs / {bytes} bytes vs plateau \
+             {first_allocs} allocs / {first_bytes} bytes — per-call state is leaking"
+        );
+    }
+}

@@ -1,0 +1,404 @@
+//! The four `cargo xtask analyze` passes.
+//!
+//! - **HDR-PANIC** — no `unwrap` / `expect` / `panic!` / control-plane
+//!   indexing in functions reachable from the serving entry points.
+//!   `assert!` / `debug_assert!` / `unreachable!` are *not* flagged: the
+//!   fail-fast contract layer is deliberate and test-pinned.
+//! - **HDR-ALLOC** — no allocating calls inside `#[hdr_hot_path]`
+//!   functions or manifest entries. Per-function (non-transitive): an
+//!   annotated leaf must itself be allocation-free; its callers are not
+//!   implicitly annotated.
+//! - **HDR-FLOAT** — no iterator `.sum()` / `.product()` reductions in
+//!   the kernel float scope outside the blessed `*_blocked` accumulator
+//!   helpers (order-insensitive folds like `max` are exempt by design).
+//! - **HDR-EPOCH** — a function that takes the `Cache` rank and inserts
+//!   must call `begin(epoch)` before the insert; serving-reachable code
+//!   must read memory through `mem_snapshot_with_epoch`, never the bare
+//!   `mem_snapshot`.
+//!
+//! Findings are waivable inline: `// analyze: allow(HDR-XXXX) reason`
+//! on the finding's line or the line above. A waiver with no reason text
+//! becomes an HDR-WAIVER finding (which is itself not waivable).
+
+use crate::diag::Diagnostic;
+use crate::index::{self, Index, KEYWORDS};
+use crate::lexer::{Kind, Lexed, Tok};
+
+/// Serving entry points the HDR-PANIC / HDR-EPOCH reachability starts from.
+pub const ROOTS: [&str; 5] = ["submit", "submit_async", "rank_requests", "serve", "serve_all"];
+
+/// Control-plane files where indexing-without-`get` is flagged. The data
+/// plane (kernels, backends) indexes dense matrices by computed offset as
+/// its core idiom; shape mismatches there are covered by `assert!`
+/// contracts and the parity suites instead.
+const CONTROL_PLANE: [&str; 3] = [
+    "rust/src/engine/mod.rs",
+    "rust/src/engine/protocol.rs",
+    "rust/src/engine/batcher.rs",
+];
+
+/// Hot-path manifest: functions held to HDR-ALLOC in addition to the
+/// `#[hdr_hot_path]`-annotated set (for code that cannot carry the
+/// attribute, e.g. functions also compiled by doctests).
+const HOT_MANIFEST: [&str; 1] = ["l1_distance"];
+
+/// File prefixes forming the HDR-FLOAT scope (the deterministic-reduction
+/// kernel surface; mirrors the lint's hash-iteration hot-path scope).
+const FLOAT_SCOPE: [&str; 2] = ["rust/src/hdc/", "rust/src/engine/backend.rs"];
+
+pub struct Outcome {
+    pub diags: Vec<Diagnostic>,
+    /// `(file, line)` of waivers that suppressed nothing (warned, not fatal).
+    pub unused_waivers: Vec<(String, usize)>,
+}
+
+struct Waiver {
+    line: usize,
+    code: String,
+    reason: String,
+    used: bool,
+}
+
+fn collect_waivers(lx: &Lexed) -> Vec<Waiver> {
+    let mut out = Vec::new();
+    for &(line, ref text) in &lx.comments {
+        let mut rest = text.as_str();
+        while let Some(p) = rest.find("analyze: allow(") {
+            let after = &rest[p + "analyze: allow(".len()..];
+            let Some(q) = after.find(')') else { break };
+            let code = after[..q].trim().to_string();
+            let reason = after[q + 1..]
+                .trim()
+                .trim_start_matches(|c: char| c == '-' || c == ':' || c == '—')
+                .trim()
+                .to_string();
+            out.push(Waiver { line, code, reason, used: false });
+            rest = &after[q + 1..];
+        }
+    }
+    out
+}
+
+pub fn run(files: Vec<(String, String)>) -> Outcome {
+    let idx = index::build(files);
+    let (reach, parent) = idx.reachable_from(&ROOTS);
+    let owners: Vec<Vec<Option<usize>>> =
+        (0..idx.files.len()).map(|fi| idx.owners(fi)).collect();
+    let mut diags = Vec::new();
+
+    hdr_panic(&idx, &owners, &reach, &parent, &mut diags);
+    hdr_alloc(&idx, &owners, &mut diags);
+    hdr_float(&idx, &owners, &mut diags);
+    hdr_epoch(&idx, &owners, &reach, &parent, &mut diags);
+
+    // apply waivers per file
+    let mut waivers: Vec<Vec<Waiver>> =
+        idx.files.iter().map(|(_, lx)| collect_waivers(lx)).collect();
+    let file_of = |rel: &str| idx.files.iter().position(|(f, _)| f == rel);
+    let mut kept: Vec<Diagnostic> = Vec::new();
+    for d in diags {
+        let Some(fi) = file_of(&d.file) else {
+            kept.push(d);
+            continue;
+        };
+        let mut waived = false;
+        for w in waivers[fi].iter_mut() {
+            if w.code == d.code && (w.line == d.line || w.line + 1 == d.line) {
+                w.used = true;
+                if w.reason.is_empty() {
+                    kept.push(Diagnostic {
+                        code: "HDR-WAIVER".to_string(),
+                        file: d.file.clone(),
+                        line: w.line,
+                        function: d.function.clone(),
+                        message: format!(
+                            "waiver for {} has no reason — `// analyze: allow({}) <why>`",
+                            d.code, d.code
+                        ),
+                        note: String::new(),
+                    });
+                }
+                waived = true;
+                break;
+            }
+        }
+        if !waived {
+            kept.push(d);
+        }
+    }
+    let mut unused = Vec::new();
+    for (fi, ws) in waivers.iter().enumerate() {
+        for w in ws {
+            if !w.used {
+                unused.push((idx.files[fi].0.clone(), w.line));
+            }
+        }
+    }
+    kept.sort_by(|a, b| (&a.file, a.line, &a.code).cmp(&(&b.file, b.line, &b.code)));
+    kept.dedup();
+    Outcome { diags: kept, unused_waivers: unused }
+}
+
+fn is_punct(t: &[Tok], p: usize, s: &str) -> bool {
+    t.get(p).is_some_and(|x| x.kind == Kind::Punct && x.text == s)
+}
+
+fn is_ident(t: &[Tok], p: usize, s: &str) -> bool {
+    t.get(p).is_some_and(|x| x.kind == Kind::Ident && x.text == s)
+}
+
+/// Walk every token of `file_idx`, handing positions inside eligible
+/// function bodies to `visit(func_index, token_position)`.
+fn for_each_pos_in(
+    owners: &[Option<usize>],
+    eligible: &dyn Fn(usize) -> bool,
+    visit: &mut dyn FnMut(usize, usize),
+) {
+    for (pos, own) in owners.iter().enumerate() {
+        if let Some(k) = *own {
+            if eligible(k) {
+                visit(k, pos);
+            }
+        }
+    }
+}
+
+fn reach_note(idx: &Index, parent: &[Option<usize>], k: usize) -> String {
+    format!("reachable from serving: {}", idx.chain(parent, k))
+}
+
+fn hdr_panic(
+    idx: &Index,
+    owners: &[Vec<Option<usize>>],
+    reach: &[bool],
+    parent: &[Option<usize>],
+    diags: &mut Vec<Diagnostic>,
+) {
+    for fi in 0..idx.files.len() {
+        let rel = idx.files[fi].0.clone();
+        let control_plane = CONTROL_PLANE.contains(&rel.as_str());
+        let toks = &idx.files[fi].1.toks;
+        let eligible = |k: usize| reach[k] && !idx.funcs[k].is_test;
+        let mut visit = |k: usize, p: usize| {
+            let f = &idx.funcs[k];
+            let line = toks[p].line;
+            let mut push = |msg: String| {
+                diags.push(Diagnostic {
+                    code: "HDR-PANIC".to_string(),
+                    file: rel.clone(),
+                    line,
+                    function: f.name.clone(),
+                    message: msg,
+                    note: reach_note(idx, parent, k),
+                });
+            };
+            if is_punct(toks, p, ".")
+                && (is_ident(toks, p + 1, "unwrap") || is_ident(toks, p + 1, "expect"))
+                && is_punct(toks, p + 2, "(")
+            {
+                push(format!(
+                    "`.{}()` on the serving path — poison and `None` must flow through \
+                     `lock_recover` / error returns, not panic",
+                    toks[p + 1].text
+                ));
+            }
+            if is_ident(toks, p, "panic") && is_punct(toks, p + 1, "!") {
+                push("`panic!` on the serving path".to_string());
+            }
+            if control_plane && is_punct(toks, p, "[") && p > 0 {
+                let prev = &toks[p - 1];
+                let indexes = match prev.kind {
+                    Kind::Ident => !KEYWORDS.contains(&prev.text.as_str()),
+                    Kind::Punct => prev.text == ")" || prev.text == "]",
+                    _ => false,
+                };
+                if indexes {
+                    push(
+                        "slice indexing in the serving control plane — use `get` and \
+                         handle the miss"
+                            .to_string(),
+                    );
+                }
+            }
+        };
+        for_each_pos_in(&owners[fi], &eligible, &mut visit);
+    }
+}
+
+fn hdr_alloc(idx: &Index, owners: &[Vec<Option<usize>>], diags: &mut Vec<Diagnostic>) {
+    for fi in 0..idx.files.len() {
+        let rel = idx.files[fi].0.clone();
+        let toks = &idx.files[fi].1.toks;
+        let eligible = |k: usize| {
+            let f = &idx.funcs[k];
+            !f.is_test && (f.hot_path || HOT_MANIFEST.contains(&f.name.as_str()))
+        };
+        let mut visit = |k: usize, p: usize| {
+            let f = &idx.funcs[k];
+            let line = toks[p].line;
+            let mut hit: Option<String> = None;
+            if (is_ident(toks, p, "vec") || is_ident(toks, p, "format"))
+                && is_punct(toks, p + 1, "!")
+            {
+                hit = Some(format!("`{}!` allocates", toks[p].text));
+            }
+            if (is_ident(toks, p, "Vec") || is_ident(toks, p, "Box") || is_ident(toks, p, "String"))
+                && is_punct(toks, p + 1, ":")
+                && is_punct(toks, p + 2, ":")
+                && toks
+                    .get(p + 3)
+                    .is_some_and(|x| matches!(x.text.as_str(), "new" | "with_capacity" | "from"))
+                && is_punct(toks, p + 4, "(")
+            {
+                hit = Some(format!("`{}::{}` allocates", toks[p].text, toks[p + 3].text));
+            }
+            if is_punct(toks, p, ".")
+                && toks.get(p + 1).is_some_and(|x| {
+                    x.kind == Kind::Ident
+                        && matches!(
+                            x.text.as_str(),
+                            "collect" | "to_vec" | "to_owned" | "clone"
+                        )
+                })
+                && is_punct(toks, p + 2, "(")
+            {
+                hit = Some(format!("`.{}()` allocates or copies an owned buffer", toks[p + 1].text));
+            }
+            if let Some(what) = hit {
+                diags.push(Diagnostic {
+                    code: "HDR-ALLOC".to_string(),
+                    file: rel.clone(),
+                    line,
+                    function: f.name.clone(),
+                    message: format!("{what} inside `#[hdr_hot_path]` fn `{}`", f.name),
+                    note: "hot-path kernels take caller-provided buffers; hoist the \
+                           allocation to the setup phase"
+                        .to_string(),
+                });
+            }
+        };
+        for_each_pos_in(&owners[fi], &eligible, &mut visit);
+    }
+}
+
+fn hdr_float(idx: &Index, owners: &[Vec<Option<usize>>], diags: &mut Vec<Diagnostic>) {
+    for fi in 0..idx.files.len() {
+        let rel = idx.files[fi].0.clone();
+        if !FLOAT_SCOPE.iter().any(|s| rel.starts_with(s)) {
+            continue;
+        }
+        let toks = &idx.files[fi].1.toks;
+        let eligible = |k: usize| {
+            let f = &idx.funcs[k];
+            !f.is_test && !f.name.ends_with("_blocked")
+        };
+        let mut visit = |k: usize, p: usize| {
+            if is_punct(toks, p, ".")
+                && (is_ident(toks, p + 1, "sum") || is_ident(toks, p + 1, "product"))
+                && is_punct(toks, p + 2, "(")
+            {
+                let f = &idx.funcs[k];
+                diags.push(Diagnostic {
+                    code: "HDR-FLOAT".to_string(),
+                    file: rel.clone(),
+                    line: toks[p].line,
+                    function: f.name.clone(),
+                    message: format!(
+                        "iterator `.{}()` in the kernel float scope — reduction order is \
+                         not tiling-stable",
+                        toks[p + 1].text
+                    ),
+                    note: "use the blessed `*_blocked` 8-lane accumulators so shard and \
+                           batch splits stay bit-identical"
+                        .to_string(),
+                });
+            }
+        };
+        for_each_pos_in(&owners[fi], &eligible, &mut visit);
+    }
+}
+
+fn hdr_epoch(
+    idx: &Index,
+    owners: &[Vec<Option<usize>>],
+    reach: &[bool],
+    parent: &[Option<usize>],
+    diags: &mut Vec<Diagnostic>,
+) {
+    // Rule 1: a function that acquires the Cache rank and inserts must
+    // have called `.begin(` before the insert (epoch domination).
+    for (k, f) in idx.funcs.iter().enumerate() {
+        if f.is_test {
+            continue;
+        }
+        let toks = &idx.files[f.file_idx].1.toks;
+        let (lo, hi) = f.body;
+        let hi = hi.min(toks.len());
+        let mut takes_cache_rank = false;
+        let mut begin_at: Option<usize> = None;
+        for p in lo..hi {
+            if owners[f.file_idx][p] != Some(k) {
+                continue;
+            }
+            if is_ident(toks, p, "LockRank")
+                && is_punct(toks, p + 1, ":")
+                && is_punct(toks, p + 2, ":")
+                && is_ident(toks, p + 3, "Cache")
+            {
+                takes_cache_rank = true;
+            }
+            if is_punct(toks, p, ".") && is_ident(toks, p + 1, "begin") && is_punct(toks, p + 2, "(")
+            {
+                begin_at.get_or_insert(p);
+            }
+            if takes_cache_rank
+                && is_punct(toks, p, ".")
+                && is_ident(toks, p + 1, "insert")
+                && is_punct(toks, p + 2, "(")
+                && !matches!(begin_at, Some(b) if b < p)
+            {
+                diags.push(Diagnostic {
+                    code: "HDR-EPOCH".to_string(),
+                    file: f.file.clone(),
+                    line: toks[p].line,
+                    function: f.name.clone(),
+                    message: "cache insert under `LockRank::Cache` is not dominated by a \
+                              `begin(epoch)` in this function"
+                        .to_string(),
+                    note: "revalidate the epoch after the un-locked sweep so stale \
+                           rankings never enter the cache"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    // Rule 2: serving-reachable code reads memory only through the
+    // epoch-carrying snapshot accessor.
+    for fi in 0..idx.files.len() {
+        let rel = idx.files[fi].0.clone();
+        let toks = &idx.files[fi].1.toks;
+        let eligible = |k: usize| reach[k] && !idx.funcs[k].is_test;
+        let mut visit = |k: usize, p: usize| {
+            let f = &idx.funcs[k];
+            if f.name == "mem_snapshot" {
+                return; // the accessor's own definition
+            }
+            if is_ident(toks, p, "mem_snapshot") && is_punct(toks, p + 1, "(") {
+                diags.push(Diagnostic {
+                    code: "HDR-EPOCH".to_string(),
+                    file: rel.clone(),
+                    line: toks[p].line,
+                    function: f.name.clone(),
+                    message: "bare `mem_snapshot()` on the serving path drops the epoch"
+                        .to_string(),
+                    note: format!(
+                        "use `mem_snapshot_with_epoch()` and thread the epoch to the \
+                         cache ({})",
+                        reach_note(idx, parent, k)
+                    ),
+                });
+            }
+        };
+        for_each_pos_in(&owners[fi], &eligible, &mut visit);
+    }
+}

@@ -1,0 +1,291 @@
+//! Diagnostic records, rustc-style human rendering, JSON machine output,
+//! and the grandfathered-findings baseline.
+//!
+//! The baseline (`rust/analyze-baseline.json`) is a checked-in JSON array
+//! of `{code, file, function}` entries. A finding matching an entry is
+//! reported as *baselined* (exit 0); an entry matching no finding is
+//! *stale* and fails the run — the baseline may only shrink, never grow.
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub code: String,
+    pub file: String,
+    pub line: usize,
+    pub function: String,
+    pub message: String,
+    /// Secondary context, e.g. the reachability chain. Empty when absent.
+    pub note: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "error[{}]: {}", self.code, self.message)?;
+        write!(f, "  --> {}:{} (in `{}`)", self.file, self.line, self.function)?;
+        if !self.note.is_empty() {
+            write!(f, "\n  = note: {}", self.note)?;
+        }
+        Ok(())
+    }
+}
+
+fn json_quote(s: &str) -> String {
+    let mut q = String::from("\"");
+    for c in s.chars() {
+        match c {
+            '"' => q.push_str("\\\""),
+            '\\' => q.push_str("\\\\"),
+            '\n' => q.push_str("\\n"),
+            '\t' => q.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                q.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => q.push(c),
+        }
+    }
+    q.push('"');
+    q
+}
+
+/// Render findings as a JSON array. `baselined` marks entries suppressed
+/// by the checked-in baseline (reported for the artifact, not the gate).
+pub fn to_json(fresh: &[Diagnostic], baselined: &[Diagnostic]) -> String {
+    let mut s = String::from("[");
+    let mut first = true;
+    for (d, base) in fresh
+        .iter()
+        .map(|d| (d, false))
+        .chain(baselined.iter().map(|d| (d, true)))
+    {
+        if !first {
+            s.push(',');
+        }
+        first = false;
+        s.push_str("\n  {");
+        s.push_str(&format!("\"code\":{},", json_quote(&d.code)));
+        s.push_str(&format!("\"file\":{},", json_quote(&d.file)));
+        s.push_str(&format!("\"line\":{},", d.line));
+        s.push_str(&format!("\"function\":{},", json_quote(&d.function)));
+        s.push_str(&format!("\"message\":{},", json_quote(&d.message)));
+        s.push_str(&format!("\"note\":{},", json_quote(&d.note)));
+        s.push_str(&format!("\"baselined\":{}", base));
+        s.push('}');
+    }
+    if !first {
+        s.push('\n');
+    }
+    s.push_str("]\n");
+    s
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BaselineEntry {
+    pub code: String,
+    pub file: String,
+    pub function: String,
+}
+
+/// Parse the baseline file: a JSON array of flat objects with string
+/// values. Minimal by design — the analyzer writes this shape and xtask
+/// stays dependency-free.
+pub fn parse_baseline(text: &str) -> Result<Vec<BaselineEntry>, String> {
+    let b = text.as_bytes();
+    let mut i = 0usize;
+    let skip_ws = |i: &mut usize| {
+        while *i < b.len() && (b[*i] as char).is_whitespace() {
+            *i += 1;
+        }
+    };
+    let mut out = Vec::new();
+    skip_ws(&mut i);
+    if i >= b.len() || b[i] != b'[' {
+        return Err("baseline: expected a JSON array".to_string());
+    }
+    i += 1;
+    loop {
+        skip_ws(&mut i);
+        if i < b.len() && b[i] == b']' {
+            return Ok(out);
+        }
+        if i < b.len() && b[i] == b',' {
+            i += 1;
+            continue;
+        }
+        if i >= b.len() || b[i] != b'{' {
+            return Err(format!("baseline: expected an object at byte {i}"));
+        }
+        i += 1;
+        let mut code = String::new();
+        let mut file = String::new();
+        let mut function = String::new();
+        loop {
+            skip_ws(&mut i);
+            if i < b.len() && b[i] == b'}' {
+                i += 1;
+                break;
+            }
+            if i < b.len() && (b[i] == b',' || b[i] == b':') {
+                i += 1;
+                continue;
+            }
+            if i < b.len() && b[i] == b'"' {
+                let key = parse_json_string(b, &mut i)?;
+                skip_ws(&mut i);
+                if i < b.len() && b[i] == b':' {
+                    i += 1;
+                }
+                skip_ws(&mut i);
+                if i < b.len() && b[i] == b'"' {
+                    let val = parse_json_string(b, &mut i)?;
+                    match key.as_str() {
+                        "code" => code = val,
+                        "file" => file = val,
+                        "function" => function = val,
+                        _ => {}
+                    }
+                } else {
+                    // non-string value (a number, bool): skip the scalar
+                    while i < b.len() && !matches!(b[i], b',' | b'}') {
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+            return Err(format!("baseline: unexpected byte at {i}"));
+        }
+        if code.is_empty() || file.is_empty() || function.is_empty() {
+            return Err("baseline: entries need code, file, and function".to_string());
+        }
+        out.push(BaselineEntry { code, file, function });
+    }
+}
+
+fn parse_json_string(b: &[u8], i: &mut usize) -> Result<String, String> {
+    debug_assert_eq!(b[*i], b'"');
+    *i += 1;
+    let mut s = String::new();
+    while *i < b.len() {
+        match b[*i] {
+            b'"' => {
+                *i += 1;
+                return Ok(s);
+            }
+            b'\\' => {
+                *i += 1;
+                if *i < b.len() {
+                    match b[*i] {
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        other => s.push(other as char),
+                    }
+                    *i += 1;
+                }
+            }
+            other => {
+                s.push(other as char);
+                *i += 1;
+            }
+        }
+    }
+    Err("baseline: unterminated string".to_string())
+}
+
+/// Split findings into `(fresh, baselined)` and report stale entries.
+/// An entry covers every finding with the same `(code, file, function)`
+/// (line numbers shift too easily to key on).
+pub fn apply_baseline(
+    diags: Vec<Diagnostic>,
+    base: &[BaselineEntry],
+) -> (Vec<Diagnostic>, Vec<Diagnostic>, Vec<BaselineEntry>) {
+    let mut fresh = Vec::new();
+    let mut grandfathered = Vec::new();
+    let mut used = vec![false; base.len()];
+    for d in diags {
+        let hit = base
+            .iter()
+            .position(|e| e.code == d.code && e.file == d.file && e.function == d.function);
+        match hit {
+            Some(k) => {
+                used[k] = true;
+                grandfathered.push(d);
+            }
+            None => fresh.push(d),
+        }
+    }
+    let stale = base
+        .iter()
+        .zip(&used)
+        .filter(|&(_, &u)| !u)
+        .map(|(e, _)| e.clone())
+        .collect();
+    (fresh, grandfathered, stale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(code: &str, file: &str, function: &str) -> Diagnostic {
+        Diagnostic {
+            code: code.to_string(),
+            file: file.to_string(),
+            line: 7,
+            function: function.to_string(),
+            message: "msg".to_string(),
+            note: String::new(),
+        }
+    }
+
+    #[test]
+    fn human_rendering_is_rustc_style() {
+        let mut diag = d("HDR-PANIC", "rust/src/engine/mod.rs", "lead");
+        diag.note = "reachable from submit via lead".to_string();
+        let s = diag.to_string();
+        assert!(s.starts_with("error[HDR-PANIC]: msg"));
+        assert!(s.contains("--> rust/src/engine/mod.rs:7 (in `lead`)"));
+        assert!(s.contains("= note: reachable from submit via lead"));
+    }
+
+    #[test]
+    fn json_escapes_and_round_trips_through_the_baseline_parser() {
+        let mut diag = d("HDR-ALLOC", "rust/src/hdc/kernels.rs", "f");
+        diag.message = "quote \" backslash \\ newline \n done".to_string();
+        let js = to_json(&[diag], &[]);
+        // the writer's object shape is a superset of a baseline entry
+        let parsed = parse_baseline(&js).unwrap();
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].code, "HDR-ALLOC");
+        assert_eq!(parsed[0].file, "rust/src/hdc/kernels.rs");
+        assert_eq!(parsed[0].function, "f");
+    }
+
+    #[test]
+    fn empty_finding_list_serializes_as_an_empty_array() {
+        assert_eq!(to_json(&[], &[]), "[]\n");
+        assert_eq!(parse_baseline("[]\n").unwrap(), Vec::new());
+    }
+
+    #[test]
+    fn baseline_suppresses_matches_and_reports_stale_entries() {
+        let base = vec![
+            BaselineEntry {
+                code: "HDR-PANIC".to_string(),
+                file: "a.rs".to_string(),
+                function: "f".to_string(),
+            },
+            BaselineEntry {
+                code: "HDR-FLOAT".to_string(),
+                file: "gone.rs".to_string(),
+                function: "g".to_string(),
+            },
+        ];
+        let (fresh, grand, stale) =
+            apply_baseline(vec![d("HDR-PANIC", "a.rs", "f"), d("HDR-PANIC", "b.rs", "h")], &base);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh[0].file, "b.rs");
+        assert_eq!(grand.len(), 1);
+        assert_eq!(stale.len(), 1);
+        assert_eq!(stale[0].file, "gone.rs");
+    }
+}

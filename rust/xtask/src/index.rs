@@ -1,0 +1,389 @@
+//! Per-crate function index and conservative intra-crate call graph.
+//!
+//! Built on the token stream from [`crate::lexer`]. The index records
+//! every `fn` item (including nested fns, trait defaults, and methods)
+//! with its body token range, whether it lives under test configuration
+//! (`#[test]` / an enclosing `#[cfg(test)]` scope), and whether it is
+//! annotated `#[hdr_hot_path]`.
+//!
+//! The call graph is name-based and deliberately over-approximate:
+//! `ident(` resolves to *every* non-test function of that name in the
+//! crate, so reachability never misses a real edge at the cost of some
+//! spurious ones. A stoplist of ubiquitous std/collection method names
+//! keeps the spurious edges from swallowing the whole crate.
+
+use crate::lexer::{self, Kind, Lexed, Tok};
+
+#[derive(Debug)]
+pub struct Func {
+    pub name: String,
+    pub file: String,
+    pub is_test: bool,
+    pub hot_path: bool,
+    /// Token-index range of the body `[start, end)`, braces included;
+    /// `start == end` for bodyless trait method declarations.
+    pub body: (usize, usize),
+    pub file_idx: usize,
+}
+
+pub struct Index {
+    /// `(repo-relative path, lexed file)`, in input order.
+    pub files: Vec<(String, Lexed)>,
+    pub funcs: Vec<Func>,
+}
+
+/// Keywords that can directly precede `(` or `[` without being a call or
+/// an indexing expression.
+pub const KEYWORDS: [&str; 33] = [
+    "if", "else", "match", "while", "for", "loop", "return", "in", "let", "mut", "fn", "pub",
+    "use", "mod", "impl", "struct", "enum", "trait", "where", "as", "move", "ref", "break",
+    "continue", "unsafe", "static", "const", "type", "dyn", "async", "await", "true", "false",
+];
+
+/// Ubiquitous method/constructor names that never resolve to crate
+/// functions for call-graph purposes. Without this, `ident(` matching
+/// would connect every `.insert(` or `.get(` to same-named crate fns and
+/// the reachable set would swallow the whole crate.
+pub const STOPLIST: [&str; 57] = [
+    "new", "default", "len", "is_empty", "get", "get_mut", "insert", "remove", "push", "pop",
+    "clone", "clear", "contains", "contains_key", "iter", "iter_mut", "into_iter", "next", "take",
+    "drop", "fmt", "eq", "cmp", "hash", "from", "into", "as_ref", "as_mut", "to_string", "write",
+    "read", "min", "max", "clamp", "abs", "map", "unwrap_or", "flush", "extend", "split", "score",
+    "sum", "collect", "filter", "zip", "enumerate", "count", "position", "find", "copied",
+    "spawn", "join", "unwrap", "expect", "peek", "parse", "with_capacity",
+];
+
+pub fn build(files: Vec<(String, String)>) -> Index {
+    let mut lexed = Vec::new();
+    let mut funcs = Vec::new();
+    for (file_idx, (rel, text)) in files.into_iter().enumerate() {
+        let lx = lexer::lex(&text);
+        scan_items(&lx, &rel, file_idx, &mut funcs);
+        lexed.push((rel, lx));
+    }
+    Index { files: lexed, funcs }
+}
+
+fn is_punct(t: &[Tok], p: usize, s: &str) -> bool {
+    t.get(p).is_some_and(|x| x.kind == Kind::Punct && x.text == s)
+}
+
+fn scan_items(lx: &Lexed, rel: &str, file_idx: usize, funcs: &mut Vec<Func>) {
+    let t = &lx.toks;
+    let n = t.len();
+    // one bool per open brace scope: true when the scope (or an ancestor)
+    // was opened under a #[cfg(test)] item
+    let mut scopes: Vec<bool> = Vec::new();
+    let mut pending_cfg_test = false; // #[cfg(test)] seen, next item pending
+    let mut pending_test_fn = false; // #[test] seen
+    let mut pending_hot = false; // #[hdr_hot_path] (any path spelling) seen
+    let mut item_cfg_test = false; // cfg(test) carried to an item's `{`
+    let mut i = 0usize;
+    while i < n {
+        // attribute group: collect idents up to the matching `]`
+        if is_punct(t, i, "#") && is_punct(t, i + 1, "[") {
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            let mut first: Option<&str> = None;
+            let mut any_test = false;
+            let mut any_hot = false;
+            while j < n {
+                let s = &t[j];
+                if s.kind == Kind::Punct && s.text == "[" {
+                    depth += 1;
+                } else if s.kind == Kind::Punct && s.text == "]" {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                } else if s.kind == Kind::Ident {
+                    if first.is_none() {
+                        first = Some(&s.text);
+                    }
+                    if s.text == "test" {
+                        any_test = true;
+                    }
+                    if s.text == "hdr_hot_path" {
+                        any_hot = true;
+                    }
+                }
+                j += 1;
+            }
+            if first == Some("cfg") && any_test {
+                pending_cfg_test = true;
+            }
+            if first == Some("test") {
+                pending_test_fn = true;
+            }
+            if any_hot {
+                pending_hot = true;
+            }
+            i = j + 1;
+            continue;
+        }
+        let tok = &t[i];
+        match (tok.kind, tok.text.as_str()) {
+            // items whose body scope should inherit a pending cfg(test)
+            (Kind::Ident, "mod") | (Kind::Ident, "impl") | (Kind::Ident, "struct")
+            | (Kind::Ident, "enum") | (Kind::Ident, "trait") => {
+                item_cfg_test = item_cfg_test || pending_cfg_test;
+                pending_cfg_test = false;
+                pending_test_fn = false;
+                i += 1;
+            }
+            (Kind::Ident, "fn") => {
+                // an fn item iff followed by a name (excludes `fn(..)`
+                // pointer types and `Fn(..)` bounds)
+                if t.get(i + 1).is_some_and(|x| x.kind == Kind::Ident) {
+                    let name = t[i + 1].text.clone();
+                    let in_test_scope = scopes.last().copied().unwrap_or(false);
+                    // body: first `{` (or `;` — bodyless) at paren depth 0
+                    let mut j = i + 2;
+                    let mut paren = 0i32;
+                    let mut body = (0usize, 0usize);
+                    while j < n {
+                        let s = &t[j];
+                        if s.kind == Kind::Punct {
+                            match s.text.as_str() {
+                                "(" => paren += 1,
+                                ")" => paren -= 1,
+                                ";" if paren == 0 => break,
+                                "{" if paren == 0 => {
+                                    body = (j, find_close_brace(t, j));
+                                    break;
+                                }
+                                _ => {}
+                            }
+                        }
+                        j += 1;
+                    }
+                    funcs.push(Func {
+                        name,
+                        file: rel.to_string(),
+                        is_test: in_test_scope || pending_test_fn || pending_cfg_test,
+                        hot_path: pending_hot,
+                        body,
+                        file_idx,
+                    });
+                    pending_cfg_test = false;
+                    pending_test_fn = false;
+                    pending_hot = false;
+                    // keep scanning inside the body so nested fns index too
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            (Kind::Punct, "{") => {
+                scopes.push(item_cfg_test || scopes.last().copied().unwrap_or(false));
+                item_cfg_test = false;
+                pending_cfg_test = false;
+                pending_test_fn = false;
+                pending_hot = false;
+                i += 1;
+            }
+            (Kind::Punct, "}") => {
+                scopes.pop();
+                i += 1;
+            }
+            (Kind::Punct, ";") => {
+                pending_cfg_test = false;
+                pending_test_fn = false;
+                pending_hot = false;
+                item_cfg_test = false;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+}
+
+fn find_close_brace(t: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = open;
+    while j < t.len() {
+        if t[j].kind == Kind::Punct {
+            if t[j].text == "{" {
+                depth += 1;
+            } else if t[j].text == "}" {
+                depth -= 1;
+                if depth == 0 {
+                    return j + 1;
+                }
+            }
+        }
+        j += 1;
+    }
+    t.len()
+}
+
+impl Index {
+    /// Per-token owner map for one file: `owners[pos]` is the innermost
+    /// function whose body contains token `pos`. One pass per file instead
+    /// of an O(|funcs|) probe per token.
+    pub fn owners(&self, file_idx: usize) -> Vec<Option<usize>> {
+        let n = self.files[file_idx].1.toks.len();
+        let mut own: Vec<Option<usize>> = vec![None; n];
+        for (k, f) in self.funcs.iter().enumerate() {
+            if f.file_idx != file_idx {
+                continue;
+            }
+            let span = f.body.1 - f.body.0;
+            let hi = f.body.1.min(n);
+            for slot in own[f.body.0..hi].iter_mut() {
+                let better = match *slot {
+                    None => true,
+                    Some(prev) => {
+                        let pf = &self.funcs[prev];
+                        span < pf.body.1 - pf.body.0
+                    }
+                };
+                if better {
+                    *slot = Some(k);
+                }
+            }
+        }
+        own
+    }
+
+    /// Names called from `f`'s body: any `ident(` where the ident is not a
+    /// keyword, not stoplisted, and not the name in an `fn name(` item.
+    pub fn callees(&self, f: &Func) -> Vec<String> {
+        let toks = &self.files[f.file_idx].1.toks;
+        let hi = f.body.1.min(toks.len());
+        let mut out: Vec<String> = Vec::new();
+        let mut p = f.body.0;
+        while p + 1 < hi {
+            let a = &toks[p];
+            let b = &toks[p + 1];
+            if a.kind == Kind::Ident
+                && b.kind == Kind::Punct
+                && b.text == "("
+                && !KEYWORDS.contains(&a.text.as_str())
+                && !STOPLIST.contains(&a.text.as_str())
+                && !(p > 0 && toks[p - 1].kind == Kind::Ident && toks[p - 1].text == "fn")
+                && !out.contains(&a.text)
+            {
+                out.push(a.text.clone());
+            }
+            p += 1;
+        }
+        out
+    }
+
+    /// BFS over the name-resolved call graph from the serving entry
+    /// points. Returns `(reachable, parent)` per function index; `parent`
+    /// chains render the "reachable via" note in diagnostics.
+    pub fn reachable_from(&self, roots: &[&str]) -> (Vec<bool>, Vec<Option<usize>>) {
+        let mut by_name: std::collections::HashMap<&str, Vec<usize>> =
+            std::collections::HashMap::new();
+        for (k, f) in self.funcs.iter().enumerate() {
+            if !f.is_test {
+                by_name.entry(f.name.as_str()).or_default().push(k);
+            }
+        }
+        let mut reach = vec![false; self.funcs.len()];
+        let mut parent: Vec<Option<usize>> = vec![None; self.funcs.len()];
+        let mut queue: Vec<usize> = Vec::new();
+        for (k, f) in self.funcs.iter().enumerate() {
+            if !f.is_test && roots.contains(&f.name.as_str()) {
+                reach[k] = true;
+                queue.push(k);
+            }
+        }
+        let mut qi = 0usize;
+        while qi < queue.len() {
+            let k = queue[qi];
+            qi += 1;
+            let names = self.callees(&self.funcs[k]);
+            for name in names {
+                if let Some(targets) = by_name.get(name.as_str()) {
+                    for &tgt in targets {
+                        if !reach[tgt] {
+                            reach[tgt] = true;
+                            parent[tgt] = Some(k);
+                            queue.push(tgt);
+                        }
+                    }
+                }
+            }
+        }
+        (reach, parent)
+    }
+
+    /// Root-to-function call chain, e.g. `rank_requests → sweep_tops → f`.
+    pub fn chain(&self, parent: &[Option<usize>], mut k: usize) -> String {
+        let mut names = vec![self.funcs[k].name.clone()];
+        while let Some(p) = parent[k] {
+            names.push(self.funcs[p].name.clone());
+            k = p;
+        }
+        names.reverse();
+        names.join(" → ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idx(src: &str) -> Index {
+        build(vec![("rust/src/fixture.rs".to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn fns_in_cfg_test_modules_are_marked_test() {
+        let ix = idx(
+            "fn live() {}\n\
+             #[cfg(test)]\nmod tests {\n    fn helper() {}\n    #[test]\n    fn t() {}\n}\n",
+        );
+        let get = |n: &str| ix.funcs.iter().find(|f| f.name == n).unwrap();
+        assert!(!get("live").is_test);
+        assert!(get("helper").is_test);
+        assert!(get("t").is_test);
+    }
+
+    #[test]
+    fn hot_path_attribute_is_recorded() {
+        let ix = idx("#[crate::hdr_hot_path]\nfn kernel(x: &mut [f32]) { x[0] = 1.0; }\n");
+        assert!(ix.funcs[0].hot_path);
+    }
+
+    #[test]
+    fn fn_pointer_types_are_not_items() {
+        let ix = idx("fn takes(f: fn(u32) -> u32) -> u32 { f(1) }\n");
+        assert_eq!(ix.funcs.len(), 1);
+        assert_eq!(ix.funcs[0].name, "takes");
+    }
+
+    #[test]
+    fn reachability_follows_call_chains_not_stoplisted_names() {
+        let ix = idx(
+            "fn serve() { step_one(); }\n\
+             fn step_one() { v.insert(1); step_two(); }\n\
+             fn step_two() {}\n\
+             fn insert() {}\n\
+             fn unrelated() {}\n",
+        );
+        let (reach, parent) = ix.reachable_from(&["serve"]);
+        let r = |n: &str| {
+            let k = ix.funcs.iter().position(|f| f.name == n).unwrap();
+            reach[k]
+        };
+        assert!(r("serve") && r("step_one") && r("step_two"));
+        assert!(!r("insert"), "stoplisted names must not resolve");
+        assert!(!r("unrelated"));
+        let k2 = ix.funcs.iter().position(|f| f.name == "step_two").unwrap();
+        assert_eq!(ix.chain(&parent, k2), "serve → step_one → step_two");
+    }
+
+    #[test]
+    fn owner_map_attributes_nested_fns_to_the_innermost() {
+        let ix = idx("fn outer() {\n    fn inner() { x.unwrap(); }\n}\n");
+        let inner = ix.funcs.iter().position(|f| f.name == "inner").unwrap();
+        let owners = ix.owners(0);
+        let pos = ix.funcs[inner].body.0 + 1;
+        assert_eq!(owners[pos], Some(inner));
+        assert_eq!(owners[ix.funcs[inner].body.0 - 1], Some(1 - inner));
+    }
+}

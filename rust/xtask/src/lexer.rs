@@ -1,0 +1,288 @@
+//! Minimal full-fidelity Rust lexer for the analysis passes.
+//!
+//! Produces a flat token stream with line numbers, plus every comment
+//! (line and block) keyed by its starting line. String, raw-string,
+//! byte-string, char, and lifetime literals each become a single token,
+//! so the downstream rules never match text inside a literal or a
+//! comment — exactly the false-positive/negative classes the old
+//! per-line text scan suffered from.
+//!
+//! Deliberately not `syn`: xtask is dependency-free by policy (the repo
+//! builds fully offline), and the analyses key off token shapes —
+//! method-call spellings, attribute names, rank literals — which a
+//! hand-rolled lexer preserves exactly.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Life,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// `(starting line, full comment text)`, in file order.
+    pub comments: Vec<(usize, String)>,
+}
+
+impl Lexed {
+    /// Concatenated text of every comment that starts on `line`.
+    pub fn comment_on(&self, line: usize) -> Option<String> {
+        let mut hit = String::new();
+        for &(l, ref c) in &self.comments {
+            if l == line {
+                hit.push_str(c);
+                hit.push(' ');
+            }
+        }
+        if hit.is_empty() {
+            None
+        } else {
+            Some(hit)
+        }
+    }
+}
+
+pub fn lex(src: &str) -> Lexed {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut out = Lexed::default();
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment (includes /// and //! doc comments)
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            out.comments.push((line, b[start..i].iter().collect()));
+            continue;
+        }
+        // block comment, nested
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            i += 2;
+            let mut depth = 1usize;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            out.comments.push((start_line, b[start..i].iter().collect()));
+            continue;
+        }
+        // raw strings r"..." / r#"..."# and their br variants; r#ident
+        if (c == 'r' && i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '#'))
+            || (c == 'b' && i + 2 < n && b[i + 1] == 'r' && (b[i + 2] == '"' || b[i + 2] == '#'))
+        {
+            let mut j = if c == 'r' { i + 1 } else { i + 2 };
+            let mut hashes = 0usize;
+            while j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                j += 1;
+                let tok_line = line;
+                while j < n {
+                    if b[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                    } else if b[j] == '"' {
+                        let mut k = j + 1;
+                        let mut seen = 0usize;
+                        while k < n && b[k] == '#' && seen < hashes {
+                            seen += 1;
+                            k += 1;
+                        }
+                        j = k;
+                        if seen == hashes {
+                            break;
+                        }
+                    } else {
+                        j += 1;
+                    }
+                }
+                out.toks.push(Tok { kind: Kind::Str, text: String::new(), line: tok_line });
+                i = j;
+                continue;
+            }
+            if c == 'r' && hashes == 1 {
+                // r#ident raw identifier: drop the marker, lex the bare ident
+                i += 2;
+                continue;
+            }
+            // `r #...` with no string start: fall through to ident handling
+        }
+        // byte string b"..." / byte char b'x': skip the prefix and let the
+        // plain string / char cases below consume the literal
+        if c == 'b' && i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '\'') {
+            i += 1;
+            continue;
+        }
+        if c == '"' {
+            let tok_line = line;
+            i += 1;
+            while i < n {
+                match b[i] {
+                    '\\' => i += 2,
+                    '"' => {
+                        i += 1;
+                        break;
+                    }
+                    '\n' => {
+                        line += 1;
+                        i += 1;
+                    }
+                    _ => i += 1,
+                }
+            }
+            out.toks.push(Tok { kind: Kind::Str, text: String::new(), line: tok_line });
+            continue;
+        }
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // escaped char literal: '\n', '\'', '\u{1F600}'
+                let mut j = i + 3;
+                while j < n && b[j] != '\'' {
+                    j += 1;
+                }
+                out.toks.push(Tok { kind: Kind::Char, text: String::new(), line });
+                i = (j + 1).min(n);
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' {
+                out.toks.push(Tok { kind: Kind::Char, text: String::new(), line });
+                i += 3;
+                continue;
+            }
+            // lifetime: 'a, 'static, '_
+            let mut j = i + 1;
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                j += 1;
+            }
+            out.toks.push(Tok { kind: Kind::Life, text: String::new(), line });
+            i = j.max(i + 1);
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            out.toks.push(Tok { kind: Kind::Ident, text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            // include a fraction only when a digit follows the dot, so the
+            // range `0..n` lexes as Num(0) Punct(.) Punct(.) Ident(n)
+            if i + 1 < n && b[i] == '.' && b[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+            }
+            out.toks.push(Tok { kind: Kind::Num, text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        // everything else: one punct char per token (`::` is two `:`)
+        out.toks.push(Tok { kind: Kind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn strings_and_comments_do_not_produce_idents() {
+        let lx = lex("let a = \"std::sync .unwrap()\"; // std::sync too\n");
+        assert!(lx.toks.iter().all(|t| t.text != "sync" && t.text != "unwrap"));
+        assert_eq!(lx.comments.len(), 1);
+        assert!(lx.comments[0].1.contains("std::sync"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_are_single_tokens() {
+        let lx = lex("let s = r#\"a \" quote .unwrap() \"#; x()");
+        assert!(lx.toks.iter().all(|t| t.text != "unwrap"));
+        assert!(lx.toks.iter().any(|t| t.text == "x"));
+    }
+
+    #[test]
+    fn char_literals_are_not_lifetimes() {
+        let lx = lex("let c = '_'; let d = '\\''; fn f<'a>(x: &'a u32) {}");
+        let chars = lx.toks.iter().filter(|t| t.kind == Kind::Char).count();
+        let lifes = lx.toks.iter().filter(|t| t.kind == Kind::Life).count();
+        assert_eq!(chars, 2);
+        assert_eq!(lifes, 2);
+    }
+
+    #[test]
+    fn ranges_keep_integer_tokens_separate() {
+        assert_eq!(texts("0..n"), vec!["0", ".", ".", "n"]);
+        assert_eq!(texts("1.5"), vec!["1.5"]);
+    }
+
+    #[test]
+    fn block_comments_track_lines() {
+        let lx = lex("/* a\nb\nc */ fn f() {}\n");
+        assert_eq!(lx.comments[0].0, 1);
+        let f = lx.toks.iter().find(|t| t.text == "fn").unwrap();
+        assert_eq!(f.line, 3);
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let lx = lex("/* outer /* inner */ still */ x");
+        assert_eq!(lx.toks.len(), 1);
+        assert_eq!(lx.toks[0].text, "x");
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_the_bare_ident() {
+        assert_eq!(texts("r#match"), vec!["match"]);
+    }
+}

@@ -1,37 +1,43 @@
-//! `cargo xtask lint` — the repo's concurrency lint pass.
+//! `cargo xtask` — the repo's offline static-analysis tool.
 //!
-//! Four text-level rules enforce the conventions that keep the serving
-//! core model-checkable (`CONCURRENCY.md`, `src/sync/`):
+//! Two subcommands share one token-level engine (`lexer`/`index`):
 //!
-//! * **std-sync** — no `std::sync` imports outside `src/sync/`. Every
-//!   consumer must go through the `crate::sync` facade, or the loom
-//!   build (`make loom`) silently checks a different lock than
-//!   production runs.
-//! * **lock-unwrap** — no `.lock().unwrap()` / `.lock().expect(...)`.
-//!   Poison recovery via `crate::sync::lock_recover` is the serving
-//!   core's contract: one panicking batch leader must not wedge every
-//!   subsequent submit behind a `PoisonError`.
-//! * **hash-iteration** — no iteration over `HashMap`/`HashSet`
-//!   bindings in the scoring hot paths (`src/hdc/`,
-//!   `src/engine/backend.rs`). Hash iteration order is
-//!   nondeterministic, and rankings are specified to be deterministic
-//!   across backends; keyed lookup is fine, traversal is not.
-//! * **lock-order** — within one function, `LockRank` acquisitions
-//!   must not go down the `serve → filters → mem → adj → cache`
-//!   hierarchy. This is the static mirror of the debug-build assertion
-//!   in `crate::sync::lock_recover_ranked`; a legitimate
-//!   drop-and-reacquire that the text scan cannot see can be waived
-//!   with `// lint: allow-lock-order` on the acquiring line.
+//! * `cargo xtask lint` — the four PR-9 conventions, now matched on the
+//!   token stream instead of raw lines (string literals, comments, and
+//!   multiline call chains are no longer false-positive/negative
+//!   classes):
+//!   - **std-sync** — no `std::sync` outside `src/sync/`; everything
+//!     else imports `crate::sync` so the loom build checks the same
+//!     lock production runs.
+//!   - **lock-unwrap** — no `.lock().unwrap()` / `.lock().expect(…)`;
+//!     poison recovery via `crate::sync::lock_recover` is the serving
+//!     core's contract.
+//!   - **hash-iteration** — no iterating `HashMap`/`HashSet` bindings
+//!     in the scoring hot paths (`src/hdc/`, `src/engine/backend.rs`);
+//!     keyed lookup is fine, traversal is not.
+//!   - **lock-order** — `LockRank` acquisitions within one function
+//!     must follow the serve → filters → mem → adj → cache hierarchy;
+//!     waive a drop-and-reacquire with `// lint: allow-lock-order` on
+//!     the acquiring line.
 //!
-//! The pass is deliberately textual (no syn, no rustc plugin): it runs
-//! offline, in milliseconds, with zero dependencies, and the rules are
-//! about *names on lines* — imports, method-call spellings, rank
-//! literals — which survive a text scan fine. Line comments are
-//! stripped before matching so prose about `std::sync` doesn't trip it;
-//! `src/sync/` itself (which wraps std and deliberately tests ordering
-//! violations) and this tool (whose rule table spells the forbidden
-//! patterns) are exempt.
+//! * `cargo xtask analyze [--format json]` — the four deeper analyses
+//!   (HDR-PANIC, HDR-ALLOC, HDR-FLOAT, HDR-EPOCH) over a function index
+//!   and a conservative intra-crate call graph, gated by the
+//!   checked-in `rust/analyze-baseline.json`. See `ANALYSIS.md`.
+//!
+//! Deliberately dependency-free (no syn, no rustc plugin): it runs
+//! offline, in milliseconds, and the rules key off token shapes —
+//! imports, method-call spellings, rank literals — which the
+//! hand-rolled lexer preserves exactly. `src/sync/` itself (which wraps
+//! `std::sync` and deliberately tests ordering violations) and this
+//! tool are exempt.
 
+mod analyses;
+mod diag;
+mod index;
+mod lexer;
+
+use lexer::{Kind, Tok};
 use std::fmt;
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -41,8 +47,13 @@ fn main() -> ExitCode {
     let mut args = std::env::args().skip(1);
     match args.next().as_deref() {
         Some("lint") => lint(),
+        Some("analyze") => {
+            let json = matches!(args.next().as_deref(), Some("--format"))
+                && matches!(args.next().as_deref(), Some("json"));
+            analyze(json)
+        }
         _ => {
-            eprintln!("usage: cargo xtask lint");
+            eprintln!("usage: cargo xtask <lint | analyze [--format json]>");
             ExitCode::FAILURE
         }
     }
@@ -63,6 +74,78 @@ fn lint() -> ExitCode {
         ExitCode::SUCCESS
     } else {
         eprintln!("xtask lint: {} violation(s) in {files} files", violations.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// The `analyze` input set: the crate's `src/` minus the `sync/` facade
+/// (which wraps `std::sync` by design and is covered by loom, not by
+/// these analyses).
+fn analyze_files() -> Vec<(String, String)> {
+    collect_repo_files()
+        .into_iter()
+        .filter(|(rel, _)| rel.starts_with("rust/src/") && !rel.starts_with("rust/src/sync/"))
+        .collect()
+}
+
+fn baseline_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives one level under the rust crate")
+        .join("analyze-baseline.json")
+}
+
+fn load_baseline() -> Result<Vec<diag::BaselineEntry>, String> {
+    match fs::read_to_string(baseline_path()) {
+        Ok(text) => diag::parse_baseline(&text),
+        Err(_) => Ok(Vec::new()), // no baseline file: nothing grandfathered
+    }
+}
+
+fn analyze(json: bool) -> ExitCode {
+    let outcome = analyses::run(analyze_files());
+    let base = match load_baseline() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("xtask analyze: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let (fresh, grandfathered, stale) = diag::apply_baseline(outcome.diags, &base);
+    if json {
+        print!("{}", diag::to_json(&fresh, &grandfathered));
+    } else {
+        for d in &fresh {
+            eprintln!("{d}\n");
+        }
+    }
+    for (file, line) in &outcome.unused_waivers {
+        eprintln!("warning: unused waiver at {file}:{line}");
+    }
+    for e in &stale {
+        eprintln!(
+            "error: stale baseline entry [{}] {} `{}` — the finding is gone; \
+             shrink rust/analyze-baseline.json",
+            e.code, e.file, e.function
+        );
+    }
+    if fresh.is_empty() && stale.is_empty() {
+        if !json {
+            println!(
+                "xtask analyze: clean ({} grandfathered, {} waiver(s) unused)",
+                grandfathered.len(),
+                outcome.unused_waivers.len()
+            );
+        }
+        ExitCode::SUCCESS
+    } else {
+        if !json {
+            eprintln!(
+                "xtask analyze: {} new finding(s), {} stale baseline entr(ies)",
+                fresh.len(),
+                stale.len()
+            );
+        }
         ExitCode::FAILURE
     }
 }
@@ -129,9 +212,21 @@ impl fmt::Display for Violation {
 
 const RANKS: [&str; 5] = ["Serve", "Filters", "Mem", "Adj", "Cache"];
 
-/// Run every rule over one file. `rel` is the repo-relative path with
-/// forward slashes (e.g. `rust/src/engine/backend.rs`); rules key off it
-/// for exemptions and hot-path scoping.
+fn is_punct(t: &[Tok], p: usize, s: &str) -> bool {
+    t.get(p).is_some_and(|x| x.kind == Kind::Punct && x.text == s)
+}
+
+fn is_ident(t: &[Tok], p: usize, s: &str) -> bool {
+    t.get(p).is_some_and(|x| x.kind == Kind::Ident && x.text == s)
+}
+
+fn is_hash_type_name(s: &str) -> bool {
+    s.ends_with("HashMap") || s.ends_with("HashSet")
+}
+
+/// Run every lint rule over one file. `rel` is the repo-relative path
+/// with forward slashes (e.g. `rust/src/engine/backend.rs`); rules key
+/// off it for exemptions and hot-path scoping.
 fn check_file(rel: &str, text: &str) -> Vec<Violation> {
     let mut out = Vec::new();
     if rel.starts_with("rust/src/sync/") {
@@ -139,179 +234,219 @@ fn check_file(rel: &str, text: &str) -> Vec<Violation> {
         // deliberately violate the lock order to pin the runtime assert
         return out;
     }
+    let lx = lexer::lex(text);
+    let t = &lx.toks;
     let hot_path = rel.starts_with("rust/src/hdc/") || rel == "rust/src/engine/backend.rs";
-    let mut hash_names: Vec<String> = Vec::new();
-    if hot_path {
-        for line in text.lines() {
-            if let Some(name) = hash_binding_name(strip_comment(line)) {
-                if !hash_names.contains(&name) {
-                    hash_names.push(name);
-                }
-            }
-        }
-    }
+    let hash_names: Vec<String> = if hot_path { hash_bindings(t) } else { Vec::new() };
     // (rank index, rank name, line) of the last ranked acquisition in
     // the current function
     let mut last_rank: Option<(usize, &'static str, usize)> = None;
-    for (i, raw) in text.lines().enumerate() {
-        let n = i + 1;
-        let line = strip_comment(raw);
-        if line.contains("std::sync") {
+    for p in 0..t.len() {
+        if is_ident(t, p, "std") && is_punct(t, p + 1, ":") && is_punct(t, p + 2, ":")
+            && is_ident(t, p + 3, "sync")
+        {
             out.push(Violation {
                 rel: rel.to_string(),
-                line: n,
+                line: t[p].line,
                 rule: "std-sync",
                 msg: "imports std::sync directly — use the crate::sync facade so the loom \
                       build checks the same lock production runs"
                     .to_string(),
             });
         }
-        for pat in [".lock().unwrap()", ".lock().expect("] {
-            if line.contains(pat) {
+        if is_punct(t, p, ".") && is_ident(t, p + 1, "lock") && is_punct(t, p + 2, "(")
+            && is_punct(t, p + 3, ")")
+            && is_punct(t, p + 4, ".")
+            && (is_ident(t, p + 5, "unwrap") || is_ident(t, p + 5, "expect"))
+            && is_punct(t, p + 6, "(")
+        {
+            out.push(Violation {
+                rel: rel.to_string(),
+                line: t[p].line,
+                rule: "lock-unwrap",
+                msg: "panics on a poisoned lock — use crate::sync::lock_recover; poison \
+                      recovery is the serving core's contract"
+                    .to_string(),
+            });
+        }
+        if hot_path {
+            if let Some(name) = iterated_hash_name(t, p, &hash_names) {
                 out.push(Violation {
                     rel: rel.to_string(),
-                    line: n,
-                    rule: "lock-unwrap",
-                    msg: "panics on a poisoned lock — use crate::sync::lock_recover; poison \
-                          recovery is the serving core's contract"
-                        .to_string(),
+                    line: t[p].line,
+                    rule: "hash-iteration",
+                    msg: format!(
+                        "iterates the hash collection `{name}` in a scoring hot path — \
+                         iteration order is nondeterministic and rankings must be \
+                         deterministic; use keyed lookup or a sorted/dense structure"
+                    ),
                 });
             }
         }
-        if hot_path {
-            for name in &hash_names {
-                if iterates_hash(line, name) {
-                    out.push(Violation {
-                        rel: rel.to_string(),
-                        line: n,
-                        rule: "hash-iteration",
-                        msg: format!(
-                            "iterates the hash collection `{name}` in a scoring hot path — \
-                             iteration order is nondeterministic and rankings must be \
-                             deterministic; use keyed lookup or a sorted/dense structure"
-                        ),
-                    });
-                }
-            }
-        }
-        if find_word(line, "fn").is_some() {
+        if is_ident(t, p, "fn") {
             last_rank = None;
         }
-        let mut rest = line;
-        while let Some(p) = rest.find("LockRank::") {
-            rest = &rest[p + "LockRank::".len()..];
-            let ident: String = rest.chars().take_while(|&c| is_ident_char(c)).collect();
-            if let Some(rank) = RANKS.iter().position(|&r| r == ident) {
-                if let Some((prev, prev_name, prev_line)) = last_rank {
-                    if rank < prev && !raw.contains("lint: allow-lock-order") {
-                        out.push(Violation {
-                            rel: rel.to_string(),
-                            line: n,
-                            rule: "lock-order",
-                            msg: format!(
-                                "acquires {} after {} (line {prev_line}), against the \
-                                 serve → filters → mem → adj → cache hierarchy \
-                                 (CONCURRENCY.md); waive a drop-and-reacquire with \
-                                 `// lint: allow-lock-order`",
-                                RANKS[rank], prev_name
-                            ),
-                        });
+        if is_ident(t, p, "LockRank") && is_punct(t, p + 1, ":") && is_punct(t, p + 2, ":") {
+            if let Some(name) = t.get(p + 3).filter(|x| x.kind == Kind::Ident) {
+                if let Some(rank) = RANKS.iter().position(|&r| r == name.text) {
+                    let line = t[p].line;
+                    if let Some((prev, prev_name, prev_line)) = last_rank {
+                        let waived = lx
+                            .comment_on(line)
+                            .is_some_and(|c| c.contains("lint: allow-lock-order"));
+                        if rank < prev && !waived {
+                            out.push(Violation {
+                                rel: rel.to_string(),
+                                line,
+                                rule: "lock-order",
+                                msg: format!(
+                                    "acquires {} after {} (line {prev_line}), against the \
+                                     serve → filters → mem → adj → cache hierarchy \
+                                     (CONCURRENCY.md); waive a drop-and-reacquire with \
+                                     `// lint: allow-lock-order`",
+                                    RANKS[rank], prev_name
+                                ),
+                            });
+                        }
                     }
+                    last_rank = Some((rank, RANKS[rank], line));
                 }
-                last_rank = Some((rank, RANKS[rank], n));
             }
         }
     }
     out
 }
 
-/// Truncate a line at its `//` comment. Naive about `//` inside string
-/// literals, which can only hide text from the rules (a false negative
-/// on a line that embeds a URL), never invent a violation.
-fn strip_comment(line: &str) -> &str {
-    match line.find("//") {
-        Some(i) => &line[..i],
-        None => line,
-    }
-}
-
-fn is_ident_char(c: char) -> bool {
-    c.is_alphanumeric() || c == '_'
-}
-
-/// First occurrence of `needle` in `hay` delimited by non-identifier
-/// characters on both sides.
-fn find_word(hay: &str, needle: &str) -> Option<usize> {
-    let mut start = 0;
-    while let Some(pos) = hay[start..].find(needle) {
-        let i = start + pos;
-        let before_ok = !hay[..i].chars().next_back().is_some_and(is_ident_char);
-        let after_ok = !hay[i + needle.len()..].chars().next().is_some_and(is_ident_char);
-        if before_ok && after_ok {
-            return Some(i);
+/// Identifiers bound (by `let`) or declared (as a field / parameter) with
+/// a `HashMap`/`HashSet` type or initializer anywhere in the file.
+fn hash_bindings(t: &[Tok]) -> Vec<String> {
+    let mut names: Vec<String> = Vec::new();
+    let mut p = 0usize;
+    while p < t.len() {
+        // let [mut] name … ;  — type or initializer names a hash type
+        if is_ident(t, p, "let") {
+            let mut q = p + 1;
+            if is_ident(t, q, "mut") {
+                q += 1;
+            }
+            if t.get(q).is_some_and(|x| x.kind == Kind::Ident) {
+                let name = t[q].text.clone();
+                let mut depth = 0i32;
+                let mut r = q + 1;
+                let mut found = false;
+                while r < t.len() {
+                    let s = &t[r];
+                    if s.kind == Kind::Punct {
+                        match s.text.as_str() {
+                            "(" | "[" | "{" => depth += 1,
+                            ")" | "]" | "}" => {
+                                if depth == 0 {
+                                    break;
+                                }
+                                depth -= 1;
+                            }
+                            ";" if depth == 0 => break,
+                            _ => {}
+                        }
+                    } else if s.kind == Kind::Ident && is_hash_type_name(&s.text) {
+                        found = true;
+                    }
+                    r += 1;
+                }
+                if found && !names.contains(&name) {
+                    names.push(name);
+                }
+            }
+            p += 1;
+            continue;
         }
-        start = i + needle.len();
-    }
-    None
-}
-
-/// The identifier a `let` binding or struct field introduces on this
-/// line, when its type or initializer names a `HashMap`/`HashSet`
-/// (including the crate's `FxHashMap`).
-fn hash_binding_name(line: &str) -> Option<String> {
-    if !(line.contains("HashMap") || line.contains("HashSet")) {
-        return None;
-    }
-    let t = line.trim_start();
-    let t = t.strip_prefix("pub ").unwrap_or(t);
-    let t = t.strip_prefix("pub(crate) ").unwrap_or(t);
-    let t = match t.strip_prefix("let ") {
-        Some(r) => r.strip_prefix("mut ").unwrap_or(r),
-        None => t,
-    };
-    let name: String = t.chars().take_while(|&c| is_ident_char(c)).collect();
-    if name.is_empty() {
-        return None;
-    }
-    // only `name: Type` or `name = init` forms introduce a binding
-    let after = t[name.len()..].trim_start();
-    if (after.starts_with(':') && !after.starts_with("::")) || after.starts_with('=') {
-        Some(name)
-    } else {
-        None
-    }
-}
-
-/// Does this line traverse `name` — by iterator method or `for … in`?
-/// Keyed access (`get`/`insert`/`contains_key`/`remove`) is allowed.
-fn iterates_hash(line: &str, name: &str) -> bool {
-    const METHODS: [&str; 8] = [
-        ".iter()",
-        ".iter_mut()",
-        ".keys()",
-        ".values()",
-        ".values_mut()",
-        ".drain(",
-        ".retain(",
-        ".into_iter()",
-    ];
-    if let Some(i) = find_word(line, name) {
-        let rest = &line[i + name.len()..];
-        if METHODS.iter().any(|m| rest.starts_with(m)) {
-            return true;
-        }
-    }
-    if line.contains("for ") {
-        if let Some(j) = line.find(" in ") {
-            let tail = line[j + 4..].trim_start().trim_start_matches('&');
-            let tail = tail.strip_prefix("mut ").unwrap_or(tail);
-            let word: String = tail.chars().take_while(|&c| is_ident_char(c)).collect();
-            if word == name {
-                return true;
+        // name: Type — struct field or parameter typed as a hash type
+        // (`:` but not `::`); the type ends at `,` `;` `=` `{` `)` at
+        // angle-bracket depth 0
+        if t[p].kind == Kind::Ident
+            && is_punct(t, p + 1, ":")
+            && !is_punct(t, p + 2, ":")
+        {
+            let name = t[p].text.clone();
+            let mut angle = 0i32;
+            let mut r = p + 2;
+            let mut found = false;
+            while r < t.len() {
+                let s = &t[r];
+                if s.kind == Kind::Punct {
+                    match s.text.as_str() {
+                        "<" => angle += 1,
+                        ">" => angle -= 1,
+                        "," | ";" | "=" | "{" | ")" if angle <= 0 => break,
+                        _ => {}
+                    }
+                } else if s.kind == Kind::Ident && is_hash_type_name(&s.text) {
+                    found = true;
+                } else if s.kind != Kind::Ident && s.kind != Kind::Life {
+                    // numbers/strings end a type position
+                    break;
+                }
+                r += 1;
+            }
+            if found && !names.contains(&name) {
+                names.push(name);
             }
         }
+        p += 1;
     }
-    false
+    names
+}
+
+const HASH_ITER_METHODS: [&str; 8] =
+    ["iter", "iter_mut", "keys", "values", "values_mut", "drain", "retain", "into_iter"];
+
+/// Does position `p` traverse one of `names` — by iterator method or
+/// `for … in`? Keyed access (`get`/`insert`/`contains_key`/…) is allowed.
+fn iterated_hash_name(t: &[Tok], p: usize, names: &[String]) -> Option<String> {
+    // name.iter() and friends
+    if t[p].kind == Kind::Ident && names.contains(&t[p].text) {
+        if is_punct(t, p + 1, ".")
+            && t.get(p + 2)
+                .is_some_and(|x| {
+                    x.kind == Kind::Ident && HASH_ITER_METHODS.contains(&x.text.as_str())
+                })
+            && is_punct(t, p + 3, "(")
+        {
+            return Some(t[p].text.clone());
+        }
+    }
+    // for … in [&][mut] name {
+    if is_ident(t, p, "for") {
+        let mut q = p + 1;
+        let mut depth = 0i32;
+        while q < t.len() {
+            let s = &t[q];
+            if s.kind == Kind::Punct {
+                match s.text.as_str() {
+                    "(" | "[" => depth += 1,
+                    ")" | "]" => depth -= 1,
+                    "{" => return None, // loop body reached: no `in`
+                    _ => {}
+                }
+            } else if s.kind == Kind::Ident && s.text == "in" && depth == 0 {
+                break;
+            }
+            q += 1;
+        }
+        let mut r = q + 1;
+        while is_punct(t, r, "&") {
+            r += 1;
+        }
+        if is_ident(t, r, "mut") {
+            r += 1;
+        }
+        if t.get(r).is_some_and(|x| x.kind == Kind::Ident && names.contains(&x.text))
+            && is_punct(t, r + 1, "{")
+        {
+            return Some(t[r].text.clone());
+        }
+    }
+    None
 }
 
 #[cfg(test)]
@@ -343,6 +478,13 @@ mod tests {
         assert!(rules("rust/src/engine/mod.rs", fixture).is_empty());
     }
 
+    #[test]
+    fn std_sync_inside_a_string_literal_is_not_a_violation() {
+        // the old text scan could not tell literals from code
+        let fixture = "let msg = \"std::sync is forbidden\";\n";
+        assert!(rules("rust/src/engine/mod.rs", fixture).is_empty());
+    }
+
     // -- lock-unwrap -------------------------------------------------------
 
     #[test]
@@ -358,6 +500,13 @@ mod tests {
         let fixture = "let g = lock_recover(&self.serve);\n\
                        let h = m.lock().unwrap_or_else(PoisonError::into_inner);\n";
         assert!(rules("rust/src/engine/mod.rs", fixture).is_empty());
+    }
+
+    #[test]
+    fn multiline_lock_unwrap_chains_are_caught() {
+        // rustfmt loves to split long chains — the old line scan missed these
+        let fixture = "let g = self\n    .serve\n    .lock()\n    .unwrap();\n";
+        assert_eq!(rules("rust/src/engine/mod.rs", fixture), ["lock-unwrap"]);
     }
 
     // -- hash-iteration ----------------------------------------------------
@@ -450,6 +599,238 @@ mod tests {
         assert!(rules("rust/src/engine/mod.rs", fixture).is_empty());
     }
 
+    // -- analyze: shared fixture plumbing ----------------------------------
+
+    fn run_analyses(files: &[(&str, &str)]) -> Vec<(String, String)> {
+        let owned = files.iter().map(|&(a, b)| (a.to_string(), b.to_string())).collect();
+        analyses::run(owned)
+            .diags
+            .into_iter()
+            .map(|d| (d.code, d.function))
+            .collect()
+    }
+
+    // -- analyze: HDR-PANIC ------------------------------------------------
+
+    #[test]
+    fn seeded_unwrap_reachable_from_serving_fires_hdr_panic() {
+        let src = "pub fn submit(&self) { helper(); }\n\
+                   fn helper(&self) { self.q.front().unwrap(); }\n\
+                   fn offline(&self) { self.q.front().unwrap(); }\n";
+        let got = run_analyses(&[("rust/src/engine/mod.rs", src)]);
+        assert_eq!(got, [("HDR-PANIC".to_string(), "helper".to_string())]);
+    }
+
+    #[test]
+    fn panics_behind_error_returns_are_silent() {
+        let src = "pub fn submit(&self) -> Option<u32> { helper() }\n\
+                   fn helper(&self) -> Option<u32> { self.q.front().copied() }\n";
+        assert!(run_analyses(&[("rust/src/engine/mod.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn control_plane_indexing_fires_and_get_is_blessed() {
+        let bad = "pub fn submit(&self, batch: &[u32], i: usize) -> u32 { batch[i] }\n";
+        let got = run_analyses(&[("rust/src/engine/mod.rs", bad)]);
+        assert_eq!(got, [("HDR-PANIC".to_string(), "submit".to_string())]);
+        let good =
+            "pub fn submit(&self, batch: &[u32], i: usize) -> u32 { \
+             batch.get(i).copied().unwrap_or(0) }\n";
+        assert!(run_analyses(&[("rust/src/engine/mod.rs", good)]).is_empty());
+    }
+
+    #[test]
+    fn data_plane_indexing_is_not_flagged() {
+        // dense matrix offsets are the kernels' core idiom
+        let src = "pub fn rank_requests(mv: &[f32], j: usize) -> f32 { mv[j] }\n";
+        assert!(run_analyses(&[("rust/src/engine/backend.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn test_functions_are_outside_the_reachable_set() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn submit() { x.unwrap(); }\n}\n";
+        assert!(run_analyses(&[("rust/src/engine/mod.rs", src)]).is_empty());
+    }
+
+    // -- analyze: HDR-ALLOC ------------------------------------------------
+
+    #[test]
+    fn seeded_allocation_in_a_hot_path_fn_fires_hdr_alloc() {
+        let src = "#[crate::hdr_hot_path]\n\
+                   fn bind_rows(xs: &[f32]) -> f32 { let v: Vec<f32> = xs.iter().collect(); v[0] }\n";
+        let got = run_analyses(&[("rust/src/hdc/kernels.rs", src)]);
+        assert_eq!(got, [("HDR-ALLOC".to_string(), "bind_rows".to_string())]);
+    }
+
+    #[test]
+    fn preallocated_buffers_in_a_hot_path_fn_are_silent() {
+        let src = "#[crate::hdr_hot_path]\n\
+                   fn bind_rows(xs: &[f32], out: &mut [f32]) { out[0] = xs[0]; }\n";
+        assert!(run_analyses(&[("rust/src/hdc/kernels.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn the_hot_path_manifest_covers_unannotated_fns() {
+        // l1_distance is manifest-listed: no attribute needed
+        let src = "pub fn l1_distance(a: &[f32]) -> Vec<f32> { a.to_vec() }\n";
+        let got = run_analyses(&[("rust/src/hdc/ops.rs", src)]);
+        assert_eq!(got, [("HDR-ALLOC".to_string(), "l1_distance".to_string())]);
+    }
+
+    #[test]
+    fn allocation_outside_annotated_fns_is_silent() {
+        let src = "fn setup(xs: &[f32]) -> Vec<f32> { xs.to_vec() }\n";
+        assert!(run_analyses(&[("rust/src/hdc/kernels.rs", src)]).is_empty());
+    }
+
+    // -- analyze: HDR-FLOAT ------------------------------------------------
+
+    #[test]
+    fn seeded_iterator_sum_in_the_float_scope_fires_hdr_float() {
+        let src = "pub fn l1(a: &[f32], b: &[f32]) -> f32 {\n\
+                       a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()\n\
+                   }\n";
+        let got = run_analyses(&[("rust/src/hdc/ops.rs", src)]);
+        assert_eq!(got, [("HDR-FLOAT".to_string(), "l1".to_string())]);
+    }
+
+    #[test]
+    fn blessed_blocked_accumulators_are_silent() {
+        let src = "pub fn l1_blocked(a: &[f32], b: &[f32]) -> f32 {\n\
+                       a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()\n\
+                   }\n";
+        assert!(run_analyses(&[("rust/src/hdc/ops.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn sums_outside_the_float_scope_are_silent() {
+        let src = "pub fn total(xs: &[usize]) -> usize { xs.iter().sum() }\n";
+        assert!(run_analyses(&[("rust/src/kg/mod.rs", src)]).is_empty());
+    }
+
+    // -- analyze: HDR-EPOCH ------------------------------------------------
+
+    #[test]
+    fn seeded_insert_without_begin_fires_hdr_epoch() {
+        let src = "fn fill(cache: &M, k: u64, v: u32) {\n\
+                       let mut c = lock_recover_ranked(cache, LockRank::Cache);\n\
+                       c.insert(k, v);\n\
+                   }\n";
+        let got = run_analyses(&[("rust/src/engine/protocol.rs", src)]);
+        assert_eq!(got, [("HDR-EPOCH".to_string(), "fill".to_string())]);
+    }
+
+    #[test]
+    fn begin_dominating_the_insert_is_silent() {
+        let src = "fn fill(cache: &M, epoch: u64, k: u64, v: u32) {\n\
+                       let mut c = lock_recover_ranked(cache, LockRank::Cache);\n\
+                       if c.begin(epoch) {\n        c.insert(k, v);\n    }\n\
+                   }\n";
+        assert!(run_analyses(&[("rust/src/engine/protocol.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn bare_mem_snapshot_on_the_serving_path_fires_hdr_epoch() {
+        let src = "pub fn rank_requests(&self) { let mv = self.mem_snapshot(); }\n";
+        let got = run_analyses(&[("rust/src/engine/mod.rs", src)]);
+        assert_eq!(got, [("HDR-EPOCH".to_string(), "rank_requests".to_string())]);
+    }
+
+    #[test]
+    fn epoch_carrying_snapshot_reads_are_silent() {
+        let src =
+            "pub fn rank_requests(&self) { let (mv, ep) = self.mem_snapshot_with_epoch(); }\n";
+        assert!(run_analyses(&[("rust/src/engine/mod.rs", src)]).is_empty());
+    }
+
+    // -- analyze: waivers --------------------------------------------------
+
+    #[test]
+    fn a_reasoned_waiver_suppresses_the_finding() {
+        let src = "pub fn submit(&self) {\n\
+                       // analyze: allow(HDR-PANIC) deliberate re-raise of a quarantined panic\n\
+                       self.q.front().unwrap();\n\
+                   }\n";
+        assert!(run_analyses(&[("rust/src/engine/mod.rs", src)]).is_empty());
+    }
+
+    #[test]
+    fn a_waiver_without_a_reason_is_itself_a_finding() {
+        let src = "pub fn submit(&self) {\n\
+                       // analyze: allow(HDR-PANIC)\n\
+                       self.q.front().unwrap();\n\
+                   }\n";
+        let got = run_analyses(&[("rust/src/engine/mod.rs", src)]);
+        assert_eq!(got, [("HDR-WAIVER".to_string(), "submit".to_string())]);
+    }
+
+    #[test]
+    fn a_waiver_for_the_wrong_code_does_not_suppress() {
+        let src = "pub fn submit(&self) {\n\
+                       // analyze: allow(HDR-FLOAT) wrong code entirely\n\
+                       self.q.front().unwrap();\n\
+                   }\n";
+        let got = run_analyses(&[("rust/src/engine/mod.rs", src)]);
+        assert_eq!(got, [("HDR-PANIC".to_string(), "submit".to_string())]);
+    }
+
+    #[test]
+    fn unused_waivers_are_reported() {
+        let src = "// analyze: allow(HDR-PANIC) nothing here needs this\n\
+                   pub fn quiet() {}\n";
+        let outcome =
+            analyses::run(vec![("rust/src/engine/mod.rs".to_string(), src.to_string())]);
+        assert!(outcome.diags.is_empty());
+        assert_eq!(outcome.unused_waivers, [("rust/src/engine/mod.rs".to_string(), 1)]);
+    }
+
+    // -- analyze: baseline + JSON ------------------------------------------
+
+    #[test]
+    fn baseline_entries_suppress_known_findings_but_stale_entries_fail() {
+        let src = "pub fn submit(&self) { self.q.front().unwrap(); }\n";
+        let outcome =
+            analyses::run(vec![("rust/src/engine/mod.rs".to_string(), src.to_string())]);
+        let base = vec![
+            diag::BaselineEntry {
+                code: "HDR-PANIC".to_string(),
+                file: "rust/src/engine/mod.rs".to_string(),
+                function: "submit".to_string(),
+            },
+            diag::BaselineEntry {
+                code: "HDR-PANIC".to_string(),
+                file: "rust/src/engine/gone.rs".to_string(),
+                function: "ghost".to_string(),
+            },
+        ];
+        let (fresh, grandfathered, stale) = diag::apply_baseline(outcome.diags, &base);
+        assert!(fresh.is_empty(), "baselined finding must not gate");
+        assert_eq!(grandfathered.len(), 1);
+        assert_eq!(stale.len(), 1, "the baseline may only shrink");
+        assert_eq!(stale[0].function, "ghost");
+    }
+
+    #[test]
+    fn json_output_golden() {
+        let d = diag::Diagnostic {
+            code: "HDR-PANIC".to_string(),
+            file: "rust/src/engine/mod.rs".to_string(),
+            line: 42,
+            function: "lead".to_string(),
+            message: "`.unwrap()` on the serving path".to_string(),
+            note: "reachable from serving: submit → lead".to_string(),
+        };
+        let expected = "[\n  {\"code\":\"HDR-PANIC\",\
+                        \"file\":\"rust/src/engine/mod.rs\",\
+                        \"line\":42,\
+                        \"function\":\"lead\",\
+                        \"message\":\"`.unwrap()` on the serving path\",\
+                        \"note\":\"reachable from serving: submit → lead\",\
+                        \"baselined\":false}\n]\n";
+        assert_eq!(diag::to_json(&[d], &[]), expected);
+        assert_eq!(diag::to_json(&[], &[]), "[]\n");
+    }
+
     // -- the real tree -----------------------------------------------------
 
     /// The production tree must be clean: this is the same scan `make ci`
@@ -465,5 +846,25 @@ mod tests {
         assert!(files > 30, "scan found only {files} files — roots misconfigured?");
         let rendered: Vec<String> = violations.iter().map(|v| v.to_string()).collect();
         assert!(rendered.is_empty(), "lint violations in the tree:\n{}", rendered.join("\n"));
+    }
+
+    /// Same gate as `cargo xtask analyze`: every finding is fixed, waived
+    /// with a reason, or grandfathered in the baseline; no waiver is
+    /// unused; no baseline entry is stale.
+    #[test]
+    fn the_checked_in_tree_is_analyze_clean() {
+        let files = analyze_files();
+        assert!(files.len() > 10, "analyze scan found only {} files", files.len());
+        let outcome = analyses::run(files);
+        let base = load_baseline().expect("baseline parses");
+        let (fresh, _grandfathered, stale) = diag::apply_baseline(outcome.diags, &base);
+        let rendered: Vec<String> = fresh.iter().map(|d| d.to_string()).collect();
+        assert!(rendered.is_empty(), "analyze findings in the tree:\n{}", rendered.join("\n"));
+        assert!(stale.is_empty(), "stale baseline entries: {stale:?}");
+        assert!(
+            outcome.unused_waivers.is_empty(),
+            "unused waivers: {:?}",
+            outcome.unused_waivers
+        );
     }
 }
